@@ -1,0 +1,231 @@
+//! Scheduler-design ablations (the §5.6 / §7.1.3 choices DESIGN.md calls
+//! out), all on the simulated clock:
+//!
+//! A. autoscaling target-concurrency sweep — instances provisioned and
+//!    GPU-hours consumed for a fixed offered load;
+//! B. routing policy — random (the paper's choice) vs round-robin vs
+//!    least-loaded, measured by load imbalance across instances;
+//! C. scale-to-zero on a fixed day/night schedule (§7.1.3's cron design) —
+//!    GPU-seconds saved vs the morning cold-start penalty;
+//! D. renewal margin — availability gaps across walltime expiry with and
+//!    without proactive job renewal.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use chat_hpc::scheduler::{
+    BackendKind, MockLauncher, RoutingTable, SchedulerConfig, ServiceScheduler, ServiceSpec,
+};
+use chat_hpc::slurm::{ClusterSpec, SlurmSim};
+use chat_hpc::util::bench::{table_header, table_row};
+use chat_hpc::util::clock::{Clock, SimClock};
+use chat_hpc::util::metrics::Registry;
+use chat_hpc::util::rng::Rng;
+
+fn spec(target: f64, walltime_secs: u64) -> ServiceSpec {
+    ServiceSpec {
+        name: "m".into(),
+        min_instances: 1,
+        max_instances: 8,
+        target_concurrency: target,
+        gpus: 4,
+        cpus: 8,
+        mem_gb: 64,
+        walltime: Duration::from_secs(walltime_secs),
+        backend: BackendKind::Sim { profile: "llama3-70b".into(), time_scale: 0.0 },
+    }
+}
+
+fn build(
+    spec_: ServiceSpec,
+    cfg: SchedulerConfig,
+) -> (ServiceScheduler, Arc<SimClock>, Arc<MockLauncher>, Arc<Mutex<SlurmSim>>) {
+    let slurm = Arc::new(Mutex::new(SlurmSim::new(ClusterSpec::kisski())));
+    let clock = SimClock::new();
+    let launcher = MockLauncher::new();
+    let sched = ServiceScheduler::new(
+        slurm.clone(),
+        clock.clone(),
+        launcher.clone(),
+        vec![spec_],
+        cfg,
+        Registry::new(),
+    );
+    (sched, clock, launcher, slurm)
+}
+
+fn main() {
+    // ---------------- A: target-concurrency sweep -------------------------
+    table_header(
+        "Ablation A — autoscaling target concurrency (offered load: 16 concurrent)",
+        &["target/instance", "instances provisioned", "GPU-seconds (1h)", "avg load/instance"],
+    );
+    for target in [2.0, 4.0, 8.0] {
+        let (sched, clock, launcher, slurm) = build(spec(target, 12 * 3600), SchedulerConfig::default());
+        let _guards: Vec<_> = (0..16).map(|_| sched.demand.begin("m")).collect();
+        for _ in 0..720 {
+            // one hour of 5 s keepalives
+            clock.advance(Duration::from_secs(5));
+            sched.run_once();
+            launcher.all_healthy();
+        }
+        let instances = sched.routing.instances("m").len();
+        // Account GPU time by finishing the hour.
+        let usage_gpu_secs = {
+            let mut s = slurm.lock().unwrap();
+            let now = clock.now_us();
+            let ids: Vec<_> = s.squeue().iter().map(|j| j.id).collect();
+            for id in ids {
+                s.scancel(id, now);
+            }
+            s.account_usage("svc-chat-ai").gpu_secs
+        };
+        table_row(&[
+            format!("{target}"),
+            instances.to_string(),
+            format!("{usage_gpu_secs:.0}"),
+            format!("{:.1}", 16.0 / instances as f64),
+        ]);
+    }
+    println!("trade-off: lower target = more headroom, more GPUs burned (paper picks a middle threshold)");
+
+    // ---------------- B: routing policy ----------------------------------
+    table_header(
+        "Ablation B — load-balancing policy across 4 instances (10k requests)",
+        &["policy", "max/min load ratio", "p99 queue depth"],
+    );
+    for policy in ["random", "round-robin", "least-loaded"] {
+        let table = RoutingTable::new();
+        for j in 0..4 {
+            table.upsert(chat_hpc::scheduler::Instance {
+                job_id: j,
+                service: "m".into(),
+                node: format!("n{j}"),
+                port: 20000 + j as u16,
+                addr: String::new(),
+                ready: true,
+                started_us: 0,
+            });
+        }
+        let mut rng = Rng::new(42);
+        let mut inflight = [0i64; 4];
+        let mut totals = [0u64; 4];
+        let mut depth_samples = Vec::new();
+        let mut rr = 0usize;
+        // Discrete-event-ish: each arrival lasts `dur` ticks; drain one per
+        // step from each instance (service rate 1/tick).
+        for _ in 0..10_000 {
+            let target = match policy {
+                "random" => table.pick("m", &mut rng).unwrap().job_id as usize,
+                "round-robin" => {
+                    rr = (rr + 1) % 4;
+                    rr
+                }
+                _ => {
+                    // Least-loaded with random tie-break (otherwise index 0
+                    // hoards every tie and the totals column is meaningless).
+                    let min = *inflight.iter().min().unwrap();
+                    let candidates: Vec<usize> =
+                        (0..4).filter(|&i| inflight[i] == min).collect();
+                    *rng.choose(&candidates).unwrap()
+                }
+            };
+            inflight[target] += 1 + rng.below(3) as i64; // bursty work units
+            totals[target] += 1;
+            for load in inflight.iter_mut() {
+                *load = (*load - 1).max(0);
+            }
+            depth_samples.push(*inflight.iter().max().unwrap() as f64);
+        }
+        depth_samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = depth_samples[(depth_samples.len() as f64 * 0.99) as usize];
+        let ratio =
+            *totals.iter().max().unwrap() as f64 / (*totals.iter().min().unwrap()).max(1) as f64;
+        table_row(&[policy.into(), format!("{ratio:.2}"), format!("{p99:.0}")]);
+    }
+    println!("random is within a hair of least-loaded at this scale — the paper's choice is justified");
+
+    // ---------------- C: scale-to-zero day/night cron (§7.1.3) ------------
+    table_header(
+        "Ablation C — scale-to-zero via day/night config swap (24h sim)",
+        &["policy", "GPU-seconds", "saving", "morning cold-start (s)"],
+    );
+    let mut always_on_gpu_secs = 0.0;
+    for scale_to_zero in [false, true] {
+        let (sched, clock, launcher, slurm) = build(spec(4.0, 14 * 3600), SchedulerConfig::default());
+        let mut cold_start_secs = 0.0;
+        // 24 hours of 1-minute scheduling ticks (coarser for speed).
+        for minute in 0..(24 * 60) {
+            clock.advance(Duration::from_secs(60));
+            let hour = minute / 60;
+            if scale_to_zero {
+                // Night shift 20:00-06:00: cron swaps in an empty config.
+                if hour < 6 || hour >= 20 {
+                    sched.upsert_service(ServiceSpec { min_instances: 0, max_instances: 0, ..spec(4.0, 14 * 3600) });
+                } else {
+                    sched.upsert_service(spec(4.0, 14 * 3600));
+                }
+            }
+            sched.run_once();
+            launcher.all_healthy();
+            // Cold start measurement: first minutes after 06:00 without a
+            // ready instance.
+            if scale_to_zero && hour == 6 && sched.routing.ready_instances("m").is_empty() {
+                cold_start_secs += 60.0;
+            }
+        }
+        let gpu_secs = {
+            let mut s = slurm.lock().unwrap();
+            let now = clock.now_us();
+            let ids: Vec<_> = s.squeue().iter().map(|j| j.id).collect();
+            for id in ids {
+                s.scancel(id, now);
+            }
+            s.account_usage("svc-chat-ai").gpu_secs
+        };
+        if !scale_to_zero {
+            always_on_gpu_secs = gpu_secs;
+        }
+        table_row(&[
+            if scale_to_zero { "day/night cron".into() } else { "always-on".to_string() },
+            format!("{gpu_secs:.0}"),
+            format!("{:.0}%", 100.0 * (1.0 - gpu_secs / always_on_gpu_secs.max(1.0))),
+            format!("{cold_start_secs:.0}"),
+        ]);
+    }
+    println!("the §7.1.3 trade: ~40% GPU time back for a bounded morning cold start");
+
+    // ---------------- D: renewal margin ----------------------------------
+    table_header(
+        "Ablation D — walltime renewal (1h walltime, 6h sim)",
+        &["renew margin", "availability gaps (ticks with 0 ready)", "jobs used"],
+    );
+    for margin_secs in [0u64, 300] {
+        let cfg = SchedulerConfig {
+            renew_margin: Duration::from_secs(margin_secs),
+            ..SchedulerConfig::default()
+        };
+        let (sched, clock, launcher, _slurm) = build(spec(4.0, 3600), cfg);
+        let mut gaps = 0u64;
+        let mut jobs = std::collections::BTreeSet::new();
+        for _ in 0..(6 * 720) {
+            clock.advance(Duration::from_secs(5));
+            sched.run_once();
+            launcher.all_healthy();
+            // An extra cycle so fresh instances get their ready probe.
+            sched.run_once();
+            if sched.routing.ready_instances("m").is_empty() {
+                gaps += 1;
+            }
+            for i in sched.routing.instances("m") {
+                jobs.insert(i.job_id);
+            }
+        }
+        table_row(&[
+            format!("{margin_secs}s"),
+            gaps.to_string(),
+            jobs.len().to_string(),
+        ]);
+    }
+    println!("renewal before expiry removes the availability gap at each walltime boundary (§4)");
+}

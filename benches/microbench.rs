@@ -1,0 +1,166 @@
+//! Hot-path microbenchmarks — the §Perf profiling substrate.
+//!
+//! Times the individual building blocks so the end-to-end numbers in
+//! Tables 1–2 can be attributed: JSON codec, HTTP round-trip, SSH exec
+//! round-trip (crypto + framing), routing-table pick, KV-cache ops, and
+//! the PJRT prefill/decode steps of the real tiny model.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chat_hpc::llmserver::kvcache::BlockAllocator;
+use chat_hpc::runtime::{artifacts_dir, ModelRuntime};
+use chat_hpc::scheduler::{Instance, RoutingTable};
+use chat_hpc::sshsim::{AuthorizedKey, AuthorizedKeys, CommandHandler, KeyPair, SshClient, SshServer};
+use chat_hpc::util::bench::{stats, table_header, table_row, time_n};
+use chat_hpc::util::http::{self, Reply, Request, Response, Server};
+use chat_hpc::util::json::Json;
+use chat_hpc::util::rng::Rng;
+
+fn row(name: &str, samples: &[f64]) {
+    let s = stats(samples);
+    table_row(&[
+        name.to_string(),
+        format!("{:.1}", s.mean * 1e6),
+        format!("{:.1}", s.p50 * 1e6),
+        format!("{:.1}", s.p99 * 1e6),
+        format!("{:.0}", 1.0 / s.mean),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    table_header(
+        "Microbenchmarks (per-op)",
+        &["op", "mean us", "p50 us", "p99 us", "ops/s"],
+    );
+
+    // --- JSON ---
+    let payload = Json::obj()
+        .set("model", "tiny")
+        .set(
+            "messages",
+            vec![Json::obj().set("role", "user").set("content", "count from 1 to 10")],
+        )
+        .set("stream", true)
+        .dump();
+    row("json parse chat body", &time_n(100, 2000, || {
+        let _ = std::hint::black_box(Json::parse(&payload).unwrap());
+    }));
+
+    // --- HTTP round-trip ---
+    let server = Server::start(Arc::new(|_req: &Request| {
+        Reply::full(Response::text(200, "ok"))
+    }))?;
+    let url = format!("{}/x", server.url());
+    row("http GET roundtrip (loopback)", &time_n(20, 300, || {
+        let _ = http::get(&url).unwrap();
+    }));
+    row("http GET pooled keep-alive", &time_n(20, 2000, || {
+        let _ = http::pooled_request("GET", &url, &[], &[]).unwrap();
+    }));
+
+    // --- SSH exec round-trip (handshake amortized) ---
+    let kp = KeyPair::generate(1);
+    let mut ak = AuthorizedKeys::new();
+    ak.add(AuthorizedKey {
+        fingerprint: kp.fingerprint(),
+        force_command: Some("/ci".into()),
+        options: vec![],
+        comment: String::new(),
+    });
+    let handler: Arc<dyn CommandHandler> = Arc::new(
+        |_c: &str, _o: &str, _i: &[u8], out: &mut dyn FnMut(&[u8]) -> anyhow::Result<()>| {
+            let _ = out(b"status: 200\n\nok");
+            0
+        },
+    );
+    let sshd = SshServer::start(ak, vec![kp.clone()], vec![("/ci".into(), handler)])?;
+    let ssh = SshClient::connect(&sshd.addr.to_string(), &kp)?;
+    row("ssh exec roundtrip (AES+HMAC framing)", &time_n(20, 300, || {
+        let _ = ssh.exec("probe m", b"").unwrap();
+    }));
+    row("ssh keepalive ping", &time_n(20, 300, || {
+        let _ = ssh.ping().unwrap();
+    }));
+
+    // --- routing table ---
+    let table = RoutingTable::new();
+    for j in 0..32 {
+        table.upsert(Instance {
+            job_id: j,
+            service: "m".into(),
+            node: format!("n{j}"),
+            port: 20000 + j as u16,
+            addr: String::new(),
+            ready: true,
+            started_us: 0,
+        });
+    }
+    let mut rng = Rng::new(7);
+    row("routing pick (32 ready instances)", &time_n(1000, 20000, || {
+        let _ = std::hint::black_box(table.pick("m", &mut rng));
+    }));
+
+    // --- KV cache ---
+    let mut alloc = BlockAllocator::new(512, 16, 32);
+    row("kvcache create+grow+free seq (64 tok)", &time_n(100, 5000, || {
+        let mut seq = alloc.create_seq(1, 16).unwrap();
+        for _ in 0..48 {
+            let _ = alloc.append_token(&mut seq).unwrap();
+        }
+        alloc.free_seq(&seq);
+    }));
+
+    // --- PJRT model steps (the real compute) ---
+    println!("\nloading PJRT tiny model (compile + weights)...");
+    let t = std::time::Instant::now();
+    let rt = ModelRuntime::load_from_dir(&artifacts_dir(), "tiny")?;
+    println!("model load: {:.2}s", t.elapsed().as_secs_f64());
+    let spec = rt.spec.clone();
+    let mut bt = vec![0i32; spec.batch * spec.max_blocks];
+    let mut next = 1;
+    for row_i in bt.iter_mut() {
+        *row_i = next;
+        next += 1;
+        if next as usize >= spec.n_blocks {
+            next = 1;
+        }
+    }
+    let tokens = vec![1i32; spec.batch * spec.prefill_len];
+    let lens = vec![8i32; spec.batch];
+    let mut kv = rt.fresh_kv()?;
+
+    table_header(
+        "PJRT model steps (tiny: 427k params, batch 4)",
+        &["op", "mean ms", "p50 ms", "p99 ms", "tokens/s (batch)"],
+    );
+    let prefill_t = time_n(3, 30, || {
+        let _ = rt.prefill(&mut kv, &tokens, &lens, &bt).unwrap();
+    });
+    let s = stats(&prefill_t);
+    table_row(&[
+        "prefill (4 x 64 tokens)".into(),
+        format!("{:.2}", s.mean * 1e3),
+        format!("{:.2}", s.p50 * 1e3),
+        format!("{:.2}", s.p99 * 1e3),
+        format!("{:.0}", (spec.batch * spec.prefill_len) as f64 / s.mean),
+    ]);
+    let step_tokens = vec![5i32; spec.batch];
+    let mut pos = 8i32;
+    let decode_t = time_n(3, 50, || {
+        let positions = vec![pos; spec.batch];
+        let _ = rt.decode(&mut kv, &step_tokens, &positions, &bt).unwrap();
+        pos = (pos + 1) % (spec.max_seq as i32 - 1);
+    });
+    let s = stats(&decode_t);
+    table_row(&[
+        "decode step (batch 4)".into(),
+        format!("{:.2}", s.mean * 1e3),
+        format!("{:.2}", s.p50 * 1e3),
+        format!("{:.2}", s.p99 * 1e3),
+        format!("{:.0}", spec.batch as f64 / s.mean),
+    ]);
+
+    std::thread::sleep(Duration::from_millis(10));
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Table 1 reproduction: per-component latency on the user-request path.
+//!
+//! Paper rows (avg over 50 identical probes, idle system):
+//!
+//! | Component        | Operation         | Agg. Avg. (std) ms | Diff ms |
+//! | ESX Machine      | Probe local proxy | 2.59 (0.56)        | 2.59    |
+//! | HPC Service Node | SSH Command       | 13.12 (0.59)       | 10.54   |
+//! | HPC Service Node | Probe GPU node    | 18.43 (1.86)       | 5.30    |
+//! | HPC GPU Node     | LLM First Token   | 51.06 (2.03)       | 32.63   |
+//!
+//! Our substrate is loopback TCP instead of a datacenter LAN, so absolute
+//! values are smaller; the *shape* to reproduce is the ordering and the
+//! "architecture overhead ≈ 23 ms ≪ LLM compute" conclusion (§6.3.1).
+
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{ChatAiStack, StackConfig};
+use chat_hpc::util::bench::{fmt_ms, table_header, table_row};
+use chat_hpc::util::http;
+use chat_hpc::util::json::Json;
+use chat_hpc::workload::probe_stage;
+
+const N: usize = 50; // same sample count as the paper
+
+fn main() -> anyhow::Result<()> {
+    // Sim profile with realistic per-token pacing scaled so the LLM stage
+    // visibly dominates, like the paper's H100 first-token compute.
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("intel-neural-7b", 0.5)],
+        load_time_scale: 0.001,
+        keepalive: Duration::from_millis(100),
+        with_external: false,
+        // Same emulated wire pacing as the Table 2 bench (≈5 ms per SSH
+        // exec round), mirroring the paper's measured 10.5 ms SSH leg.
+        ssh_link_frame_delay: Duration::from_micros(1700),
+        ..Default::default()
+    })?;
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(20))?;
+    let proxy_url = stack.proxy_http.url();
+
+    // Stage 1 — ESX machine probes its local HPC proxy over HTTP.
+    let s1 = probe_stage("ESX Machine", "Probe local proxy", N, 0.0, || {
+        let r = http::get(&format!("{proxy_url}/health")).unwrap();
+        assert_eq!(r.status, 200);
+    });
+
+    // Stage 2 — proxy hop + an SSH command round-trip to the service node
+    // (the ForceCommand-pinned cloud interface). Cumulative with stage 1,
+    // like the paper's "Agg. Avg." column.
+    let s2 = probe_stage("HPC Service Node", "SSH Command", N, s1.agg_avg_ms, || {
+        let r = http::request("POST", &format!("{proxy_url}/tick"), &[], &[]).unwrap();
+        assert_eq!(r.status, 200);
+    });
+
+    // Stage 3 — stage 2 + HTTP probe of the GPU-node health endpoint.
+    let s3 = probe_stage("HPC Service Node", "Probe GPU node", N, s2.agg_avg_ms, || {
+        let r = http::get(&format!("{proxy_url}/probe/intel-neural-7b")).unwrap();
+        assert_eq!(r.status, 200);
+    });
+
+    // Stage 4 — full path to the LLM's first streamed token.
+    let body = Json::obj()
+        .set(
+            "messages",
+            vec![Json::obj().set("role", "user").set("content", "count from 1 to 10")],
+        )
+        .set("stream", true)
+        .set("max_tokens", 4u64)
+        .dump();
+    let url = format!("{}/v1/m/intel-neural-7b/", stack.gateway_url());
+    let auth = format!("Bearer {}", stack.api_key);
+    let s4 = probe_stage("HPC GPU Node", "LLM First Token", N, s3.agg_avg_ms, || {
+        let mut first_token_seen = false;
+        http::request_stream(
+            "POST",
+            &url,
+            &[("authorization", &auth), ("content-type", "application/json")],
+            body.as_bytes(),
+            |_chunk| {
+                first_token_seen = true;
+            },
+        )
+        .unwrap();
+        assert!(first_token_seen);
+    });
+
+    table_header(
+        "Table 1 — Latency measurements from the ESX machine (50 probes each)",
+        &["Component", "Operation", "Agg. Avg. (std.) in ms", "Diff. in ms"],
+    );
+    let mut overhead = 0.0;
+    for s in [&s1, &s2, &s3, &s4] {
+        table_row(&[
+            s.component.clone(),
+            s.operation.clone(),
+            fmt_ms(&s.stats),
+            format!("{:.2}", s.diff_ms),
+        ]);
+    }
+    overhead += s1.diff_ms + s2.diff_ms + s3.diff_ms;
+    println!(
+        "\narchitecture overhead (stages 1-3): {overhead:.2} ms; LLM stage adds {:.2} ms",
+        s4.diff_ms
+    );
+    println!(
+        "paper shape check: overhead {} LLM-dominated path -> {}",
+        if s4.diff_ms > overhead { "<" } else { ">=" },
+        if s4.diff_ms > overhead { "REPRODUCED" } else { "DIVERGED (see EXPERIMENTS.md)" }
+    );
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Autoscaling demo (§5.6/§7.1.1): watch the scheduler react to a demand
+//! spike — scale-up on windowed average concurrency, cold-start lag, then
+//! scale-down when the spike passes.
+//!
+//! Runs against a simulated clock, so "minutes" elapse in milliseconds.
+//!
+//! ```bash
+//! cargo run --release --example autoscale_demo
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use chat_hpc::scheduler::{
+    MockLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec, BackendKind,
+};
+use chat_hpc::slurm::{ClusterSpec, SlurmSim};
+use chat_hpc::util::clock::SimClock;
+use chat_hpc::util::metrics::Registry;
+
+fn main() -> anyhow::Result<()> {
+    println!("autoscale_demo — demand spike against the Slurm-native scheduler\n");
+
+    let slurm = Arc::new(Mutex::new(SlurmSim::new(ClusterSpec::kisski())));
+    let clock = SimClock::new();
+    let launcher = MockLauncher::new();
+    let service = ServiceSpec {
+        name: "llama3-70b".into(),
+        min_instances: 1,
+        max_instances: 6,
+        target_concurrency: 4.0,
+        gpus: 4,
+        cpus: 16,
+        mem_gb: 256,
+        walltime: Duration::from_secs(12 * 3600),
+        backend: BackendKind::Sim { profile: "llama3-70b".into(), time_scale: 0.0 },
+    };
+    let sched = ServiceScheduler::new(
+        slurm.clone(),
+        clock.clone(),
+        launcher.clone(),
+        vec![service],
+        SchedulerConfig::default(),
+        Registry::new(),
+    );
+
+    println!("phase 1: idle — the scheduler holds min_instances=1");
+    let mut guards = Vec::new();
+    let mut print_state = |label: &str, sched: &ServiceScheduler, t_min: f64| {
+        let total = sched.routing.instances("llama3-70b").len();
+        let ready = sched.routing.ready_instances("llama3-70b").len();
+        let avg = sched.demand.average("llama3-70b");
+        println!(
+            "  t={t_min:>5.1}min  {label:<22} instances={total} ready={ready} avg_concurrency={avg:.1}"
+        );
+    };
+
+    // Each loop iteration = one 5 s keepalive tick.
+    let mut tick = |sched: &ServiceScheduler, launcher: &MockLauncher, n: u32, ready: bool| {
+        for _ in 0..n {
+            clock.advance(Duration::from_secs(5));
+            sched.run_once();
+            if ready {
+                launcher.all_healthy();
+            }
+        }
+    };
+
+    tick(&sched, &launcher, 12, true); // 1 minute
+    print_state("idle", &sched, 1.0);
+
+    println!("\nphase 2: spike — 20 concurrent requests arrive and stay");
+    for _ in 0..20 {
+        guards.push(sched.demand.begin("llama3-70b"));
+    }
+    for minute in [2.0, 3.0, 4.0, 5.0] {
+        tick(&sched, &launcher, 12, false); // cold start: not healthy yet
+        print_state("spike (cold start)", &sched, minute);
+    }
+    println!("  (instances exist but aren't READY: the 70B cold start, §7.1.1)");
+
+    println!("\nphase 3: models finish loading");
+    launcher.all_healthy();
+    tick(&sched, &launcher, 12, true);
+    print_state("spike (warm)", &sched, 6.0);
+
+    println!("\nphase 4: spike ends — scale-down after the demand window drains");
+    guards.clear();
+    for minute in [7.0, 8.0, 9.0, 10.0, 12.0] {
+        tick(&sched, &launcher, 12, true);
+        print_state("drain", &sched, minute);
+    }
+
+    let free = slurm.lock().unwrap().free_gpus();
+    println!("\nGPUs returned to the batch pool: {free}/40 free");
+    println!("autoscale_demo OK");
+    Ok(())
+}

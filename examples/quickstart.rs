@@ -1,0 +1,66 @@
+//! Quickstart: boot the whole Chat AI stack in-process and chat with a
+//! model through the full request path (gateway → SSH ForceCommand →
+//! cloud interface → vLLM-like engine).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{ChatAiStack, StackConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("chat-hpc quickstart — booting the Figure-1 stack in-process\n");
+
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("intel-neural-7b", 0.02)],
+        load_time_scale: 0.01, // 30 s model load -> 300 ms
+        keepalive: Duration::from_millis(100),
+        ..Default::default()
+    })?;
+
+    println!("gateway listening on {}", stack.gateway_url());
+    println!("waiting for the scheduler to bring up an instance (cold start)...");
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(30))?;
+    println!("instance ready; routing table:");
+    for inst in stack.scheduler.routing.instances("intel-neural-7b") {
+        println!(
+            "  job {} on {} port {} ready={}",
+            inst.job_id, inst.node, inst.port, inst.ready
+        );
+    }
+
+    println!("\n>>> user: count from 1 to 10");
+    let (status, body) = stack.chat("intel-neural-7b", "count from 1 to 10")?;
+    let text = body
+        .at(&["choices", "0", "message", "content"])
+        .and_then(|c| c.as_str())
+        .unwrap_or("<no content>");
+    println!("<<< assistant ({status}): {text}");
+
+    print!("\n>>> streaming the same prompt: ");
+    let streamed = stack.chat_stream("intel-neural-7b", "count from 1 to 10")?;
+    println!("{streamed}");
+
+    println!("\nSlurm view of the service:");
+    for job in stack.slurm.lock().unwrap().squeue() {
+        println!(
+            "  job {} {} [{}] on {:?} ({})",
+            job.id,
+            job.name,
+            job.state.as_str(),
+            job.nodes,
+            job.comment
+        );
+    }
+
+    println!("\nusage log (the ONLY per-request data the server keeps):");
+    for e in stack.log.entries() {
+        println!("  ts={}us user={} model={}", e.ts_us, e.user, e.model);
+    }
+
+    println!("\nquickstart OK");
+    Ok(())
+}

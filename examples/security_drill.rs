@@ -1,0 +1,108 @@
+//! Security drill (§6.1): run the paper's attack scenarios against a live
+//! stack and print the defense-in-depth scorecard.
+//!
+//! ```bash
+//! cargo run --release --example security_drill
+//! ```
+
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::sshsim::{KeyPair, SshClient};
+use chat_hpc::stack::{ChatAiStack, StackConfig};
+use chat_hpc::util::http;
+
+fn verdict(ok: bool) -> &'static str {
+    if ok {
+        "DEFENDED"
+    } else {
+        "BREACHED !!"
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("security_drill — §6.1 attack scenarios against a live stack\n");
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("intel-neural-7b", 0.0)],
+        ..Default::default()
+    })?;
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(15))?;
+
+    // -- scenario 1: anonymous internet user probes the gateway ----------
+    println!("scenario 1: unauthenticated access to the inference API");
+    let r = http::request(
+        "POST",
+        &format!("{}/v1/m/intel-neural-7b/", stack.gateway_url()),
+        &[],
+        b"{}",
+    )?;
+    println!("  gateway answered {} -> {}\n", r.status, verdict(r.status == 401));
+
+    // -- scenario 2: compromised web server, stolen SSH key ---------------
+    println!("scenario 2: web server fully compromised; attacker holds the SSH key");
+    let stolen = KeyPair::generate(0xE5C); // the stack's key material
+    let ssh = SshClient::connect(&stack.ssh_server.addr.to_string(), &stolen)?;
+    let attacks = [
+        "/bin/bash -i",
+        "cat ~/.ssh/id_rsa",
+        "srun --gres=gpu:4 ./cryptominer",
+        "scancel --all",
+    ];
+    let mut all_blocked = true;
+    for attempt in attacks {
+        let reply = ssh.exec(attempt, b"")?;
+        let blocked = reply.exit_code == 2;
+        all_blocked &= blocked;
+        println!("  exec {attempt:?} -> exit {} ({})", reply.exit_code, verdict(blocked));
+    }
+    println!(
+        "  ForceCommand interceptions recorded by sshd: {}\n",
+        stack
+            .ssh_server
+            .stats
+            .forced_commands
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    assert!(all_blocked);
+
+    // -- scenario 3: injection through the permitted verbs ----------------
+    println!("scenario 3: command injection inside permitted verbs");
+    for attempt in
+        ["infer intel-neural-7b; scancel --all", "infer $(reboot)", "probe x|sh"]
+    {
+        let reply = ssh.exec(attempt, b"{}")?;
+        println!(
+            "  {attempt:?} -> exit {} ({})",
+            reply.exit_code,
+            verdict(reply.exit_code == 2)
+        );
+    }
+
+    // -- scenario 4: rogue key without authorized_keys entry --------------
+    println!("\nscenario 4: attacker-generated key (not in authorized_keys)");
+    let rogue = KeyPair::generate(0xDEAD);
+    let rejected = SshClient::connect(&stack.ssh_server.addr.to_string(), &rogue).is_err();
+    println!("  handshake -> {}\n", verdict(rejected));
+
+    // -- scenario 5: data theft -------------------------------------------
+    println!("scenario 5: attacker dumps all server-side state hunting conversations");
+    let secret = "TOP-SECRET-RESEARCH-IDEA";
+    let _ = stack.chat("intel-neural-7b", secret)?;
+    let mut leaked = false;
+    leaked |= stack.log.entries().iter().any(|e| format!("{e:?}").contains(secret));
+    leaked |= stack.metrics.render().contains(secret);
+    leaked |= stack
+        .slurm
+        .lock()
+        .unwrap()
+        .squeue()
+        .iter()
+        .any(|j| j.comment.contains(secret));
+    println!("  prompt text found in logs/metrics/slurm state? {}", verdict(!leaked));
+    println!(
+        "  stored per-request fields: user id, timestamp, model — nothing else (§6.2)\n"
+    );
+
+    println!("security_drill OK — all scenarios defended");
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""AOT compile path: lower the L2 model to HLO *text* + emit weights/manifest.
+
+Runs once at build time (`make artifacts`); the Rust runtime loads the HLO
+text via `HloModuleProto::from_text_file` and executes it through PJRT.
+Python never appears on the request path.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    CONFIGS,
+    decode_step,
+    example_args_decode,
+    example_args_prefill,
+    init_params,
+    make_decode_fn,
+    make_prefill_fn,
+    param_count,
+    prefill,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(cfg, out_dir: str) -> dict:
+    """Lower prefill + decode for `cfg`, write artifacts, return manifest entry."""
+    prefill_lowered = jax.jit(make_prefill_fn(cfg)).lower(*example_args_prefill(cfg))
+    decode_lowered = jax.jit(make_decode_fn(cfg)).lower(*example_args_decode(cfg))
+
+    files = {}
+    for tag, lowered in [("prefill", prefill_lowered), ("decode", decode_lowered)]:
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[tag] = fname
+
+    weights = init_params(cfg)
+    wname = f"{cfg.name}.weights.bin"
+    weights.tofile(os.path.join(out_dir, wname))
+    digest = hashlib.sha256(weights.tobytes()).hexdigest()
+
+    return {
+        "name": cfg.name,
+        "files": {**files, "weights": wname},
+        "weights_sha256": digest,
+        "param_count": param_count(cfg),
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "d_ff": cfg.d_ff,
+        "batch": cfg.batch,
+        "prefill_len": cfg.prefill_len,
+        "block_size": cfg.block_size,
+        "n_blocks": cfg.n_blocks,
+        "max_blocks": cfg.max_blocks,
+        "max_seq": cfg.max_seq,
+        "seed": cfg.seed,
+    }
+
+
+def make_golden(cfg) -> dict:
+    """Run the real model in JAX and record outputs for the Rust runtime to
+    reproduce bit-for-bit(ish): the cross-language correctness anchor.
+
+    Scenario: prefill a fixed prompt per batch row, then three greedy decode
+    steps. Records the first 8 logits of each step.
+    """
+    w = jnp.asarray(init_params(cfg))
+    pool_shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size, cfg.n_heads, cfg.head_dim)
+    k_pools = jnp.zeros(pool_shape, jnp.float32)
+    v_pools = jnp.zeros(pool_shape, jnp.float32)
+    # Same deterministic block-table allocation the Rust test uses:
+    # row b owns blocks [1 + b*max_blocks, 1 + (b+1)*max_blocks).
+    bt = np.zeros((cfg.batch, cfg.max_blocks), np.int32)
+    nxt = 1
+    for b in range(cfg.batch):
+        for j in range(cfg.max_blocks):
+            bt[b, j] = nxt
+            nxt += 1
+    bt = jnp.asarray(bt)
+
+    prompts = [
+        [2 + ((7 * i + b * 13) % (cfg.vocab - 4)) for i in range(5 + b)]
+        for b in range(cfg.batch)
+    ]
+    tokens = np.zeros((cfg.batch, cfg.prefill_len), np.int32)
+    lens = np.zeros((cfg.batch,), np.int32)
+    for b, prompt in enumerate(prompts):
+        tokens[b, : len(prompt)] = prompt
+        lens[b] = len(prompt)
+
+    logits, k_pools, v_pools = prefill(
+        cfg, w, jnp.asarray(tokens), jnp.asarray(lens), k_pools, v_pools, bt
+    )
+    steps = [{"logits8": np.asarray(logits)[:, :8].tolist()}]
+    next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+    positions = lens.copy()
+    for _ in range(3):
+        logits, k_pools, v_pools = decode_step(
+            cfg,
+            w,
+            jnp.asarray(next_tokens),
+            jnp.asarray(positions),
+            k_pools,
+            v_pools,
+            bt,
+        )
+        steps.append(
+            {
+                "fed_tokens": next_tokens.tolist(),
+                "positions": positions.tolist(),
+                "logits8": np.asarray(logits)[:, :8].tolist(),
+            }
+        )
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        positions += 1
+
+    return {
+        "model": cfg.name,
+        "prompts": prompts,
+        "prompt_lens": lens.tolist(),
+        "block_tables": np.asarray(bt).tolist(),
+        "steps": steps,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--models",
+        default="tiny",
+        help="comma-separated config names to export (default: tiny)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        entry = export_model(cfg, args.out)
+        golden = make_golden(cfg)
+        gname = f"{cfg.name}.golden.json"
+        with open(os.path.join(args.out, gname), "w") as f:
+            json.dump(golden, f)
+        entry["files"]["golden"] = gname
+        entries.append(entry)
+        print(
+            f"exported {name}: {entry['param_count']} params, "
+            f"batch={cfg.batch}, max_seq={cfg.max_seq}"
+        )
+
+    manifest = {"version": 1, "models": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""L1: paged decode-attention as a Pallas kernel (flash-decode style).
+
+This is the TPU rethink of vLLM's CUDA PagedAttention (DESIGN.md
+§Hardware-Adaptation):
+
+- vLLM's *block table indirection through GPU shared memory* becomes
+  dynamic `pl.load` gathers of KV pages from the pool ref — on real TPU
+  hardware that is the HBM→VMEM DMA schedule; a page (`block_size × n_heads
+  × head_dim`) is the VMEM tile unit.
+- vLLM's *warp-per-sequence reduction* becomes a `grid=(batch,)` Pallas grid
+  with an **online-softmax accumulator** carried across pages
+  (flash-decode): each page contributes a partial max / partial sum /
+  partial weighted-V which are merged in registers, so the full score row is
+  never materialised.
+- The score (`q·kᵀ`) and value (`w·v`) contractions are MXU-shaped
+  matmuls: `head_dim` and `block_size` are kept at multiples that pad to
+  the 128-lane MXU tile on real hardware.
+
+`interpret=True` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO ops. Numeric
+behaviour is identical; TPU performance is estimated analytically in
+`compile/roofline.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_decode_kernel(
+    q_ref,  # [1, n_heads, head_dim]
+    bt_ref,  # [1, max_blocks] int32 block table row
+    len_ref,  # [1] int32 context length
+    k_pool_ref,  # [n_blocks, block_size, n_heads, head_dim]
+    v_pool_ref,  # [n_blocks, block_size, n_heads, head_dim]
+    o_ref,  # [1, n_heads, head_dim]
+    *,
+    max_blocks: int,
+    block_size: int,
+):
+    q = q_ref[0].astype(jnp.float32)  # [H, D]
+    n_heads, head_dim = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    ctx_len = len_ref[0]
+
+    # Online-softmax accumulators, carried across KV pages.
+    m = jnp.full((n_heads, 1), -1e30, jnp.float32)  # running max
+    l = jnp.zeros((n_heads, 1), jnp.float32)  # running sum
+    acc = jnp.zeros((n_heads, head_dim), jnp.float32)  # running weighted V
+
+    # Static unrolled loop over pages: page j covers global positions
+    # [j*block_size, (j+1)*block_size). Pages past the context contribute
+    # nothing (their scores are masked to -inf).
+    for j in range(max_blocks):
+        block_id = bt_ref[0, j]
+        k = pl.load(k_pool_ref, (block_id,))  # [bs, H, D]
+        v = pl.load(v_pool_ref, (block_id,))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+        # scores[h, i] = q[h, :] . k[i, h, :]
+        scores = jnp.einsum("hd,ihd->hi", q, k) * scale
+        gpos = j * block_size + jnp.arange(block_size)
+        valid = (gpos < ctx_len)[None, :]
+        scores = jnp.where(valid, scores, -1e30)
+
+        # Merge this page into the online softmax state.
+        page_max = jnp.max(scores, axis=-1, keepdims=True)  # [H, 1]
+        new_m = jnp.maximum(m, page_max)
+        correction = jnp.exp(m - new_m)
+        p = jnp.exp(scores - new_m)  # [H, bs]
+        l = l * correction + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * correction + jnp.einsum("hi,ihd->hd", p, v)
+        m = new_m
+
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, context_lens, interpret=True):
+    """Paged decode attention via Pallas.
+
+    Args:
+      q: [batch, n_heads, head_dim] — newest-token queries.
+      k_pool, v_pool: [n_blocks, block_size, n_heads, head_dim] KV pools.
+      block_tables: [batch, max_blocks] int32.
+      context_lens: [batch] int32, each >= 1.
+    Returns:
+      [batch, n_heads, head_dim] attention output.
+    """
+    batch, n_heads, head_dim = q.shape
+    n_blocks, block_size, _, _ = k_pool.shape
+    max_blocks = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _paged_decode_kernel, max_blocks=max_blocks, block_size=block_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            # One query row per grid step: the VMEM-resident operand.
+            pl.BlockSpec((1, n_heads, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, max_blocks), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            # Pools stay unblocked: pages are gathered with dynamic loads —
+            # on TPU this is the HBM→VMEM DMA the block table drives.
+            pl.BlockSpec((n_blocks, block_size, n_heads, head_dim), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((n_blocks, block_size, n_heads, head_dim), lambda b: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_heads, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_heads, head_dim), q.dtype),
+        interpret=interpret,
+    )(q, block_tables, context_lens, k_pool, v_pool)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: slow, obvious implementations with no
+paging tricks. `test_kernel.py` sweeps shapes/dtypes with hypothesis and
+asserts the Pallas kernel matches these to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_kv(k_pool, v_pool, block_tables):
+    """Gather paged KV pools into contiguous per-sequence caches.
+
+    Args:
+      k_pool, v_pool: [n_blocks, block_size, n_heads, head_dim]
+      block_tables: [batch, max_blocks] int32 indices into the pool
+    Returns:
+      k, v: [batch, max_blocks * block_size, n_heads, head_dim]
+    """
+    bsz, max_blocks = block_tables.shape
+    _, block_size, n_heads, head_dim = k_pool.shape
+    k = k_pool[block_tables.reshape(-1)]  # [bsz*max_blocks, bs, H, D]
+    v = v_pool[block_tables.reshape(-1)]
+    k = k.reshape(bsz, max_blocks * block_size, n_heads, head_dim)
+    v = v.reshape(bsz, max_blocks * block_size, n_heads, head_dim)
+    return k, v
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, context_lens):
+    """Reference paged decode attention (one query token per sequence).
+
+    Args:
+      q: [batch, n_heads, head_dim] query for the newest token
+      k_pool, v_pool: [n_blocks, block_size, n_heads, head_dim]
+      block_tables: [batch, max_blocks] int32
+      context_lens: [batch] int32 — number of valid KV positions (>= 1)
+    Returns:
+      out: [batch, n_heads, head_dim]
+    """
+    _, _, head_dim = q.shape
+    block_size = k_pool.shape[1]
+    max_blocks = block_tables.shape[1]
+    k, v = gather_kv(k_pool, v_pool, block_tables)  # [B, S, H, D]
+    s = max_blocks * block_size
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    scores = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(s)[None, None, :]
+    mask = pos < context_lens[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    weights = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", weights, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def causal_attention_ref(q, k, v, valid_lens):
+    """Reference full causal attention for the prefill path.
+
+    Args:
+      q, k, v: [batch, seq, n_heads, head_dim]
+      valid_lens: [batch] int32 — tokens beyond this are padding
+    Returns:
+      out: [batch, seq, n_heads, head_dim]
+    """
+    _, seq, _, head_dim = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qpos = jnp.arange(seq)[None, None, :, None]
+    kpos = jnp.arange(seq)[None, None, None, :]
+    causal = kpos <= qpos
+    valid = kpos < valid_lens[:, None, None, None]
+    scores = jnp.where(causal & valid, scores, -1e30)
+    weights = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", weights, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,89 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization estimates for the
+paged-attention Pallas kernel, per BlockSpec.
+
+CPU interpret-mode wallclock is NOT a TPU proxy (DESIGN.md §Perf), so the
+kernel is optimized structurally: this tool computes, for a given model
+geometry and page size, what one grid step moves through VMEM and how well
+the contractions feed the MXU — the numbers a TPU deployment would tune
+block_size against.
+
+Run: cd python && python -m compile.roofline
+"""
+
+import dataclasses
+
+from .model import CONFIGS, ModelConfig
+
+# TPU v5e-ish single-core envelope (order-of-magnitude planning numbers).
+VMEM_BYTES = 16 * 1024 * 1024
+HBM_GBPS = 800.0
+MXU_TFLOPS_BF16 = 200.0
+MXU_TILE = 128  # systolic array edge
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    block_size: int
+    vmem_per_step: int
+    flops_per_page: int
+    bytes_per_page: int
+    intensity: float
+    mxu_lane_util: float
+    est_bound: str
+
+
+def estimate(cfg: ModelConfig, block_size: int, ctx_len: int) -> KernelEstimate:
+    h, d = cfg.n_heads, cfg.head_dim
+    f32 = 4
+
+    # Per grid step (one batch row), the kernel holds in VMEM:
+    #   q tile [H, D], one KV page x2 [bs, H, D], block-table row,
+    #   online-softmax accumulators m/l [H,1] and acc [H, D].
+    q_tile = h * d * f32
+    page = block_size * h * d * f32
+    acc = (h * d + 2 * h) * f32
+    vmem = q_tile + 2 * page + acc + cfg.max_blocks * 4
+
+    # Per page processed: scores q.k^T (2*H*D*bs flops) + softmax merge
+    # (~6*H*bs) + weighted V (2*H*bs*D flops); bytes moved HBM->VMEM: the
+    # K and V page (q stays resident).
+    flops = 2 * h * d * block_size + 6 * h * block_size + 2 * h * block_size * d
+    bytes_moved = 2 * page
+    intensity = flops / bytes_moved
+
+    # MXU feeding: the contraction shapes are [H,D]x[D,bs] and [H,bs]x[bs,D].
+    # Lane utilization ~ how much of the 128-wide tile the short edges fill.
+    lane = min(1.0, d / MXU_TILE) * min(1.0, block_size / MXU_TILE)
+
+    # Bound check at this intensity vs the machine balance point.
+    balance = MXU_TFLOPS_BF16 * 1e12 / (HBM_GBPS * 1e9)
+    bound = "memory-bound" if intensity < balance else "compute-bound"
+    return KernelEstimate(block_size, vmem, flops, bytes_moved, intensity, lane, bound)
+
+
+def main() -> None:
+    print("paged-attention kernel roofline estimates (per grid step = one batch row)\n")
+    for name, cfg in CONFIGS.items():
+        print(f"model config '{name}': H={cfg.n_heads} D={cfg.head_dim} max_seq={cfg.max_seq}")
+        print("| block_size | VMEM/step | flops/page | bytes/page | intensity (F/B) | MXU lane util | bound |")
+        print("|---|---|---|---|---|---|---|")
+        for bs in (8, 16, 32, 64, 128):
+            e = estimate(cfg, bs, cfg.max_seq)
+            print(
+                f"| {e.block_size} | {e.vmem_per_step/1024:.1f} KiB | {e.flops_per_page} |"
+                f" {e.bytes_per_page} | {e.intensity:.2f} | {e.mxu_lane_util:.2%} | {e.est_bound} |"
+            )
+        chosen = estimate(cfg, cfg.block_size, cfg.max_seq)
+        print(
+            f"shipped block_size={cfg.block_size}: VMEM/step {chosen.vmem_per_step/1024:.1f} KiB"
+            f" of {VMEM_BYTES/1024/1024:.0f} MiB ({chosen.vmem_per_step/VMEM_BYTES:.3%}),"
+            f" {chosen.est_bound}"
+        )
+        # Decode attention is always memory-bound (intensity ~= 1 flop/byte):
+        # the win of paging is zero *wasted* bytes — only pages holding live
+        # tokens ever cross HBM->VMEM, vLLM's PagedAttention insight.
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,346 @@
+//! The adoption-trace generator behind Figures 3–5.
+//!
+//! Calibration targets from §6.4:
+//! - ~6 000 registered users after three months, ~9 000 by end of June;
+//! - 400–500 active users on a typical work day, ~100 of them new;
+//! - >350 000 total messages by July 30;
+//! - visible weekday/weekend cycle, German holidays, a university-wide
+//!   advertisement bump on April 8, a slight dip at the July summer break;
+//! - GPT-4 added ~Mar 1; Qwen + Mixtral during March/April; API access
+//!   (≈100 heavy users) from late May, drastically increasing open-model
+//!   request volume; despite free GPT-4, internal models dominate.
+
+use super::RequestLog;
+use crate::util::rng::Rng;
+
+pub const DAY_US: u64 = 86_400_000_000;
+
+/// Feb 22 2024 (the release date) is day 0 and a Thursday.
+pub fn weekday(day: u32) -> u32 {
+    (3 + day) % 7 // Mon=0 .. Sun=6; day0 = Thursday = 3
+}
+
+pub fn is_weekend(day: u32) -> bool {
+    weekday(day) >= 5
+}
+
+/// Calendar label for a day index (Feb 22 2024 epoch).
+pub fn date_label(day: u32) -> String {
+    // Days remaining in each month from Feb 22 2024 (leap year).
+    let months = [
+        (2024, 2, 22, 8),   // Feb 22..29
+        (2024, 3, 1, 31),
+        (2024, 4, 1, 30),
+        (2024, 5, 1, 31),
+        (2024, 6, 1, 30),
+        (2024, 7, 1, 31),
+        (2024, 8, 1, 31),
+        (2024, 9, 1, 30),
+    ];
+    let mut rem = day;
+    for (y, m, d0, len) in months {
+        if rem < len {
+            return format!("{y}-{m:02}-{:02}", d0 + rem);
+        }
+        rem -= len;
+    }
+    format!("day+{day}")
+}
+
+/// German public holidays in the window (day indices from Feb 22).
+/// Mar 29 Good Friday=36, Apr 1 Easter Monday=39, May 1=69, May 9
+/// Ascension=77, May 20 Whit Monday=88.
+const HOLIDAYS: &[u32] = &[36, 39, 69, 77, 88];
+
+pub fn is_holiday(day: u32) -> bool {
+    HOLIDAYS.contains(&day)
+}
+
+/// Event timeline (day indices).
+pub const DAY_GPT4_LAUNCH: u32 = 8; // ~Mar 1: GPT-4 route added
+pub const DAY_QWEN_LAUNCH: u32 = 26; // mid-March
+pub const DAY_MIXTRAL_LAUNCH: u32 = 40; // early April
+pub const DAY_AD_CAMPAIGN: u32 = 46; // April 8 advertisement
+pub const DAY_UI_REDESIGN: u32 = 80; // mid-May React/Vite redesign
+pub const DAY_API_LAUNCH: u32 = 95; // late May API access
+pub const DAY_SUMMER_BREAK: u32 = 130; // July onset
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct AdoptionConfig {
+    pub seed: u64,
+    /// Feb 22 .. Jul 30 2024 inclusive = 160 days.
+    pub days: u32,
+    /// Scale factor on user counts (1.0 = paper scale; smaller for quick
+    /// tests).
+    pub scale: f64,
+}
+
+impl Default for AdoptionConfig {
+    fn default() -> AdoptionConfig {
+        AdoptionConfig { seed: 2024, days: 160, scale: 1.0 }
+    }
+}
+
+struct SimUser {
+    id: u32,
+    /// Per-user daily activity propensity.
+    propensity: f64,
+    /// API users fire large request volumes (§6.4).
+    api_user: bool,
+}
+
+/// The generator.
+pub struct AdoptionSim {
+    cfg: AdoptionConfig,
+    rng: Rng,
+    users: Vec<SimUser>,
+}
+
+impl AdoptionSim {
+    pub fn new(cfg: AdoptionConfig) -> AdoptionSim {
+        let rng = Rng::new(cfg.seed);
+        AdoptionSim { cfg, rng, users: Vec::new() }
+    }
+
+    /// Expected new registrations for a day (before weekday modulation).
+    fn registration_rate(&self, day: u32) -> f64 {
+        // Launch interest, steady growth, ad bump, summer slowdown.
+        let base = if day < 7 {
+            90.0 // launch week spike
+        } else {
+            40.0 + 35.0 * (day as f64 / 60.0).min(1.6)
+        };
+        let ad = if (DAY_AD_CAMPAIGN..DAY_AD_CAMPAIGN + 7).contains(&day) {
+            // The paper's "slight jump following a university-wide
+            // advertisement on April 8".
+            80.0 * (1.0 - (day - DAY_AD_CAMPAIGN) as f64 / 7.0)
+        } else {
+            0.0
+        };
+        let summer = if day >= DAY_SUMMER_BREAK { 0.75 } else { 1.0 };
+        (base + ad) * summer * self.cfg.scale
+    }
+
+    fn activity_factor(day: u32) -> f64 {
+        let mut f = if is_weekend(day) { 0.30 } else { 1.0 };
+        if is_holiday(day) {
+            f *= 0.35;
+        }
+        if day >= DAY_SUMMER_BREAK {
+            // Summer-break dip (§6.4): strong enough that daily actives
+            // fall in absolute terms even though registrations keep coming.
+            f *= 0.60;
+        }
+        f
+    }
+
+    /// Mean requests per active web user per day (UI improvements help).
+    fn requests_per_user(day: u32) -> f64 {
+        let mut r = 6.0;
+        if day >= DAY_UI_REDESIGN {
+            r += 2.0;
+        }
+        r
+    }
+
+    /// Model mix for one request (returns a model/route name).
+    fn pick_model(&mut self, day: u32, api: bool) -> &'static str {
+        if api {
+            // API access targets the open-source models only (§6.4).
+            return if self.rng.chance(0.5) {
+                "llama3-70b"
+            } else if self.rng.chance(0.5) {
+                "intel-neural-7b"
+            } else {
+                "mixtral-8x7b"
+            };
+        }
+        // Web mix: GPT-4 available from its launch, capped share; internal
+        // share grows as models are added (the paper's headline: open
+        // models dominate despite free GPT-4).
+        let gpt4_share = if day < DAY_GPT4_LAUNCH {
+            0.0
+        } else if day < DAY_QWEN_LAUNCH {
+            0.45
+        } else if day < DAY_API_LAUNCH {
+            0.35
+        } else {
+            0.25
+        };
+        if self.rng.chance(gpt4_share) {
+            return if self.rng.chance(0.8) { "gpt-4" } else { "gpt-3.5" };
+        }
+        let roll = self.rng.f64();
+        if day >= DAY_MIXTRAL_LAUNCH && roll < 0.25 {
+            "mixtral-8x7b"
+        } else if day >= DAY_QWEN_LAUNCH && roll < 0.5 {
+            "qwen1.5-72b"
+        } else if roll < 0.75 {
+            "llama3-70b"
+        } else {
+            "intel-neural-7b"
+        }
+    }
+
+    /// Generate the full trace into `log`.
+    pub fn run(mut self, log: &RequestLog) -> AdoptionSummary {
+        let days = self.cfg.days;
+        for day in 0..days {
+            // Registrations (new users who also make requests today).
+            let reg_mean = self.registration_rate(day) * Self::activity_factor(day).max(0.25);
+            let n_new = self.rng.poisson(reg_mean);
+            for _ in 0..n_new {
+                let id = self.users.len() as u32;
+                let api_user = day >= DAY_API_LAUNCH && self.rng.chance(0.02);
+                let propensity = 0.03 + self.rng.f64() * 0.12;
+                self.users.push(SimUser { id, propensity, api_user });
+            }
+
+            // Existing-user activity.
+            let act = Self::activity_factor(day);
+            let rpu = Self::requests_per_user(day);
+            let mut todays: Vec<(u32, bool, u64)> = Vec::new();
+            // (Borrow dance: collect activity decisions first.)
+            let decisions: Vec<(u32, bool, f64)> = self
+                .users
+                .iter()
+                .map(|u| (u.id, u.api_user, u.propensity))
+                .collect();
+            for (id, api_user, propensity) in decisions {
+                let p_active = if api_user {
+                    // API scripts run on weekdays and weekends alike.
+                    (propensity * 8.0).min(0.9)
+                } else {
+                    (propensity * act).min(1.0)
+                };
+                if self.rng.chance(p_active) {
+                    let n = if api_user {
+                        // §6.4: API users "drastically increased" volume.
+                        10 + self.rng.poisson(rpu * 12.0)
+                    } else {
+                        1 + self.rng.poisson(rpu)
+                    };
+                    todays.push((id, api_user, n));
+                }
+            }
+
+            for (id, api_user, n) in todays {
+                for _ in 0..n {
+                    let ts = day as u64 * DAY_US + self.rng.below(DAY_US);
+                    let model = self.pick_model(day, api_user);
+                    log.record_at(ts, &format!("user{id}"), model);
+                }
+            }
+        }
+        AdoptionSummary { total_users: self.users.len() as u64, total_requests: log.len() as u64 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AdoptionSummary {
+    pub total_users: u64,
+    pub total_requests: u64,
+}
+
+/// External-model names for the Fig 5 split.
+pub const EXTERNAL_MODELS: &[&str] = &["gpt-4", "gpt-3.5"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::aggregate_daily;
+
+    fn run_small() -> (RequestLog, Vec<crate::analytics::DayStats>, AdoptionSummary) {
+        let log = RequestLog::new();
+        let cfg = AdoptionConfig { seed: 7, days: 160, scale: 0.15 };
+        let summary = AdoptionSim::new(cfg).run(&log);
+        let days = aggregate_daily(&log, 160, EXTERNAL_MODELS, date_label);
+        (log, days, summary)
+    }
+
+    #[test]
+    fn calendar_helpers() {
+        assert_eq!(weekday(0), 3, "Feb 22 2024 is a Thursday");
+        assert!(is_weekend(2), "Feb 24 is a Saturday");
+        assert_eq!(date_label(0), "2024-02-22");
+        assert_eq!(date_label(8), "2024-03-01");
+        assert_eq!(date_label(46), "2024-04-08", "ad-campaign day");
+        assert!(is_holiday(69), "May 1");
+    }
+
+    #[test]
+    fn growth_is_monotone_and_substantial() {
+        let (_log, days, summary) = run_small();
+        for w in days.windows(2) {
+            assert!(w[1].total_users >= w[0].total_users, "cumulative curve dips");
+        }
+        assert!(summary.total_users > 500, "got {}", summary.total_users);
+        assert!(summary.total_requests > 10_000, "got {}", summary.total_requests);
+    }
+
+    #[test]
+    fn weekday_weekend_cycle_visible() {
+        let (_log, days, _) = run_small();
+        // Compare mean weekday vs weekend daily users over May.
+        let may: Vec<_> = days.iter().filter(|d| (69..99).contains(&d.day)).collect();
+        let wd: Vec<u64> =
+            may.iter().filter(|d| !is_weekend(d.day)).map(|d| d.daily_users()).collect();
+        let we: Vec<u64> =
+            may.iter().filter(|d| is_weekend(d.day)).map(|d| d.daily_users()).collect();
+        let mean = |v: &[u64]| v.iter().sum::<u64>() as f64 / v.len().max(1) as f64;
+        assert!(
+            mean(&wd) > 2.0 * mean(&we),
+            "weekday {} vs weekend {}",
+            mean(&wd),
+            mean(&we)
+        );
+    }
+
+    #[test]
+    fn ad_campaign_bumps_registrations() {
+        let (_log, days, _) = run_small();
+        let before: u64 = (39..46).map(|d| days[d as usize].new_users).sum();
+        let after: u64 = (46..53).map(|d| days[d as usize].new_users).sum();
+        assert!(after as f64 > before as f64 * 1.3, "before={before} after={after}");
+    }
+
+    #[test]
+    fn internal_requests_dominate_despite_free_gpt4() {
+        let (_log, days, _) = run_small();
+        let internal: u64 = days.iter().map(|d| d.internal_requests).sum();
+        let external: u64 = days.iter().map(|d| d.external_requests).sum();
+        assert!(internal > external * 2, "internal={internal} external={external}");
+        // But GPT-4 is genuinely used once launched.
+        assert!(external > 0);
+        let before_launch: u64 = (0..DAY_GPT4_LAUNCH as usize)
+            .map(|d| days[d].external_requests)
+            .sum();
+        assert_eq!(before_launch, 0, "no external requests before the route existed");
+    }
+
+    #[test]
+    fn api_launch_increases_request_volume() {
+        let (_log, days, _) = run_small();
+        let may_reqs: u64 = (70..95).map(|d| days[d as usize].total_requests()).sum();
+        let june_reqs: u64 = (100..125).map(|d| days[d as usize].total_requests()).sum();
+        assert!(
+            june_reqs as f64 > may_reqs as f64 * 1.3,
+            "may={may_reqs} june={june_reqs}"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let l1 = RequestLog::new();
+        let l2 = RequestLog::new();
+        AdoptionSim::new(AdoptionConfig { seed: 3, days: 30, scale: 0.1 }).run(&l1);
+        AdoptionSim::new(AdoptionConfig { seed: 3, days: 30, scale: 0.1 }).run(&l2);
+        assert_eq!(l1.len(), l2.len());
+        let (a, b) = (l1.entries(), l2.entries());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!((x.ts_us, &x.user, &x.model), (y.ts_us, &y.user, &y.model));
+        }
+    }
+}

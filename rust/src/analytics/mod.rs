@@ -1,0 +1,184 @@
+//! Usage analytics (§5.9, §6.4) — the minimal-logging pipeline and the
+//! adoption simulator behind Figures 3–5.
+//!
+//! The service records exactly three things per request: user id,
+//! timestamp, selected model (§6.2 — never prompts or responses). Figures
+//! 3–5 are aggregations over that log. The *pipeline* is the reproducible
+//! artifact; the five months of production traffic are not, so
+//! [`AdoptionSim`] generates a demand trace with the paper's qualitative
+//! structure: sustained registration growth with an advertisement jump on
+//! April 8, weekday/weekend/holiday activity cycles, the GPT-4 +
+//! open-model launch timeline, the May UI redesign, the API-access launch
+//! driving request volume, and the July summer-break dip.
+
+pub mod adoption;
+
+pub use adoption::{AdoptionConfig, AdoptionSim};
+
+use std::sync::{Arc, Mutex};
+
+/// One request-log record — the complete set of stored fields.
+#[derive(Debug, Clone)]
+pub struct LogEntry {
+    /// Microseconds since the trace epoch (Feb 22 2024 for sims).
+    pub ts_us: u64,
+    pub user: String,
+    pub model: String,
+}
+
+/// Append-only usage log shared by the gateway and the analytics jobs.
+#[derive(Clone, Default)]
+pub struct RequestLog {
+    entries: Arc<Mutex<Vec<LogEntry>>>,
+}
+
+impl RequestLog {
+    pub fn new() -> RequestLog {
+        RequestLog::default()
+    }
+
+    /// Record with the current wall time (gateway path).
+    pub fn record(&self, user: &str, model: &str) {
+        let ts = crate::util::clock::unix_now_secs() * 1_000_000;
+        self.record_at(ts, user, model);
+    }
+
+    /// Record with an explicit timestamp (simulation path).
+    pub fn record_at(&self, ts_us: u64, user: &str, model: &str) {
+        self.entries
+            .lock()
+            .unwrap()
+            .push(LogEntry { ts_us, user: user.to_string(), model: model.to_string() });
+    }
+
+    pub fn entries(&self) -> Vec<LogEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One day of aggregated usage (the rows behind Figures 3–5).
+#[derive(Debug, Clone, Default)]
+pub struct DayStats {
+    pub day: u32,
+    /// Calendar label like "2024-03-01".
+    pub date: String,
+    /// Users active this day who had never appeared before.
+    pub new_users: u64,
+    /// Users active this day seen on an earlier day.
+    pub returning_users: u64,
+    /// Running total of distinct users ever seen (Fig 3's curve).
+    pub total_users: u64,
+    /// Requests served by self-hosted models (Fig 5, "internal").
+    pub internal_requests: u64,
+    /// Requests proxied to commercial models (Fig 5, "external").
+    pub external_requests: u64,
+}
+
+impl DayStats {
+    pub fn daily_users(&self) -> u64 {
+        self.new_users + self.returning_users
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.internal_requests + self.external_requests
+    }
+}
+
+/// Aggregate a log into per-day stats. `external_models` classifies Fig 5's
+/// split; `date_of_day` labels day indices.
+pub fn aggregate_daily(
+    log: &RequestLog,
+    days: u32,
+    external_models: &[&str],
+    date_of_day: impl Fn(u32) -> String,
+) -> Vec<DayStats> {
+    let mut out: Vec<DayStats> = (0..days)
+        .map(|d| DayStats { day: d, date: date_of_day(d), ..Default::default() })
+        .collect();
+    let mut seen: std::collections::BTreeSet<String> = Default::default();
+    let mut seen_today: std::collections::BTreeSet<(u32, String)> = Default::default();
+
+    let mut entries = log.entries();
+    entries.sort_by_key(|e| e.ts_us);
+    let mut total_users = 0u64;
+    for e in entries {
+        let day = (e.ts_us / 86_400_000_000) as u32;
+        if day >= days {
+            continue;
+        }
+        if seen_today.insert((day, e.user.clone())) {
+            if seen.insert(e.user.clone()) {
+                out[day as usize].new_users += 1;
+                total_users += 1;
+            } else {
+                out[day as usize].returning_users += 1;
+            }
+        }
+        if external_models.contains(&e.model.as_str()) {
+            out[day as usize].external_requests += 1;
+        } else {
+            out[day as usize].internal_requests += 1;
+        }
+        out[day as usize].total_users = total_users;
+    }
+    // Forward-fill the cumulative curve through request-free days.
+    let mut running = 0;
+    for d in out.iter_mut() {
+        if d.total_users == 0 {
+            d.total_users = running;
+        } else {
+            running = d.total_users;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DAY_US: u64 = 86_400_000_000;
+
+    #[test]
+    fn log_records_only_minimal_fields() {
+        let log = RequestLog::new();
+        log.record_at(5, "u1", "tiny");
+        let e = &log.entries()[0];
+        assert_eq!((e.ts_us, e.user.as_str(), e.model.as_str()), (5, "u1", "tiny"));
+    }
+
+    #[test]
+    fn aggregation_new_vs_returning() {
+        let log = RequestLog::new();
+        log.record_at(0, "a", "tiny"); // day 0: a new
+        log.record_at(100, "a", "tiny"); // same day, same user: 1 daily user
+        log.record_at(DAY_US, "a", "tiny"); // day 1: a returning
+        log.record_at(DAY_US + 1, "b", "gpt-4"); // day 1: b new, external
+        let days = aggregate_daily(&log, 3, &["gpt-4"], |d| format!("day{d}"));
+        assert_eq!(days[0].new_users, 1);
+        assert_eq!(days[0].returning_users, 0);
+        assert_eq!(days[0].internal_requests, 2);
+        assert_eq!(days[1].new_users, 1);
+        assert_eq!(days[1].returning_users, 1);
+        assert_eq!(days[1].external_requests, 1);
+        assert_eq!(days[1].total_users, 2);
+        assert_eq!(days[2].total_users, 2, "cumulative forward-fill");
+        assert_eq!(days[1].daily_users(), 2);
+    }
+
+    #[test]
+    fn out_of_range_entries_ignored() {
+        let log = RequestLog::new();
+        log.record_at(10 * DAY_US, "x", "tiny");
+        let days = aggregate_daily(&log, 3, &[], |d| d.to_string());
+        assert!(days.iter().all(|d| d.total_requests() == 0));
+    }
+}

@@ -1,0 +1,119 @@
+//! SSO authentication layer (§5.1).
+//!
+//! The paper fronts the stack with an Apache reverse proxy doing OpenIDC
+//! against the Academic Cloud SSO. This module reproduces the *contract*:
+//! a session store that exchanges credentials for bearer tokens and a
+//! validator the gateway calls to turn a token into the user id (email)
+//! that gets attached to every forwarded request — the only per-user datum
+//! the backend ever sees (§6.2 data-minimisation).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use sha2::{Digest, Sha256};
+
+/// A registered SSO user.
+#[derive(Debug, Clone)]
+pub struct User {
+    pub email: String,
+    password_hash: [u8; 32],
+}
+
+/// The simulated identity provider.
+#[derive(Clone, Default)]
+pub struct SsoProvider {
+    inner: Arc<Mutex<SsoInner>>,
+}
+
+#[derive(Default)]
+struct SsoInner {
+    users: BTreeMap<String, User>,
+    /// token -> email
+    sessions: BTreeMap<String, String>,
+    counter: u64,
+}
+
+fn hash_password(pw: &str) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(b"chat-hpc-sso");
+    h.update(pw.as_bytes());
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&h.finalize());
+    out
+}
+
+impl SsoProvider {
+    pub fn new() -> SsoProvider {
+        SsoProvider::default()
+    }
+
+    pub fn register(&self, email: &str, password: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.users.insert(
+            email.to_string(),
+            User { email: email.to_string(), password_hash: hash_password(password) },
+        );
+    }
+
+    /// OAuth2 password exchange, reduced: credentials -> session token.
+    pub fn login(&self, email: &str, password: &str) -> Option<String> {
+        let mut inner = self.inner.lock().unwrap();
+        let user = inner.users.get(email)?;
+        if user.password_hash != hash_password(password) {
+            return None;
+        }
+        inner.counter += 1;
+        let mut h = Sha256::new();
+        h.update(email.as_bytes());
+        h.update(inner.counter.to_le_bytes());
+        let token = format!("sso-{}", crate::sshsim::hex(&h.finalize()));
+        inner.sessions.insert(token.clone(), email.to_string());
+        Some(token)
+    }
+
+    /// Token -> user email (what Apache+OpenIDC attaches as the user id).
+    pub fn validate(&self, token: &str) -> Option<String> {
+        self.inner.lock().unwrap().sessions.get(token).cloned()
+    }
+
+    pub fn logout(&self, token: &str) {
+        self.inner.lock().unwrap().sessions.remove(token);
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.inner.lock().unwrap().sessions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn login_validate_logout() {
+        let sso = SsoProvider::new();
+        sso.register("ada@uni-goettingen.de", "hunter2");
+        assert!(sso.login("ada@uni-goettingen.de", "wrong").is_none());
+        assert!(sso.login("nobody@x", "pw").is_none());
+        let token = sso.login("ada@uni-goettingen.de", "hunter2").unwrap();
+        assert_eq!(sso.validate(&token).as_deref(), Some("ada@uni-goettingen.de"));
+        sso.logout(&token);
+        assert!(sso.validate(&token).is_none());
+    }
+
+    #[test]
+    fn tokens_are_unique_per_login() {
+        let sso = SsoProvider::new();
+        sso.register("a@b", "pw");
+        let t1 = sso.login("a@b", "pw").unwrap();
+        let t2 = sso.login("a@b", "pw").unwrap();
+        assert_ne!(t1, t2);
+        assert_eq!(sso.session_count(), 2);
+    }
+
+    #[test]
+    fn invalid_token_rejected() {
+        let sso = SsoProvider::new();
+        assert!(sso.validate("sso-forged").is_none());
+    }
+}

@@ -1,0 +1,86 @@
+//! External Proxy (§5.8): the optional wrapper route for commercial models.
+//!
+//! The paper exposes OpenAI's GPT-4 through the same gateway, behind strict
+//! rate limits and group restrictions, using a single shared API key so
+//! individual users are not attributable to OpenAI. Offline, the external
+//! endpoint itself is simulated: an OpenAI-shaped server with realistic
+//! latency that tags its responses so tests can tell internal from
+//! external serving apart.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::http::{Handler, Reply, Request, Response, Server};
+use crate::util::json::Json;
+
+/// A stand-in for api.openai.com.
+pub struct ExternalLlmService {
+    pub server: Server,
+}
+
+impl ExternalLlmService {
+    pub fn start(model: &str, latency: Duration) -> Result<ExternalLlmService> {
+        let model = model.to_string();
+        let handler: Handler = Arc::new(move |req: &Request| -> Reply {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("POST", "/v1/chat/completions") => {
+                    std::thread::sleep(latency);
+                    let content = "As an external commercial model, I can confirm: \
+                                   1 2 3 4 5 6 7 8 9 10";
+                    let choice = Json::obj()
+                        .set("index", 0u64)
+                        .set(
+                            "message",
+                            Json::obj().set("role", "assistant").set("content", content),
+                        )
+                        .set("finish_reason", "stop");
+                    Reply::full(Response::json(
+                        200,
+                        &Json::obj()
+                            .set("id", "chatcmpl-ext")
+                            .set("object", "chat.completion")
+                            .set("model", model.as_str())
+                            .set("served_by", "external")
+                            .set("choices", vec![choice]),
+                    ))
+                }
+                ("GET", "/health") => {
+                    Reply::full(Response::json(200, &Json::obj().set("status", "ok")))
+                }
+                _ => Reply::full(Response::json(404, &Json::obj().set("error", "not found"))),
+            }
+        });
+        Ok(ExternalLlmService { server: Server::start(handler)? })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::http;
+
+    #[test]
+    fn external_service_responds_openai_shaped() {
+        let ext = ExternalLlmService::start("gpt-4", Duration::from_millis(1)).unwrap();
+        let r = http::post_json(
+            &format!("{}/v1/chat/completions", ext.url()),
+            &Json::obj().set("messages", vec![Json::obj().set("content", "hi")]),
+        )
+        .unwrap();
+        assert_eq!(r.status, 200);
+        let j = r.json_body().unwrap();
+        assert_eq!(j.str_or("served_by", ""), "external");
+        assert!(j
+            .at(&["choices", "0", "message", "content"])
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("external"));
+    }
+}

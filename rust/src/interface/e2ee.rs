@@ -1,0 +1,160 @@
+//! §7.1.4 — end-to-end payload encryption ("future work" in the paper,
+//! implemented here).
+//!
+//! Threat model: an attacker who compromises the web server (gateway / web
+//! interface / HPC proxy) can man-in-the-middle plaintext prompts in
+//! flight. Countermeasure: the client seals the request body so that it is
+//! only decrypted *on the HPC platform*, inside the Cloud Interface — every
+//! ESX-side component forwards opaque bytes. Replies are sealed with a
+//! response key derived from the same session nonce, so the path back is
+//! covered too.
+//!
+//! Envelope format (versioned):
+//!
+//! ```text
+//! b"E2EE1" | nonce(16) | ciphertext | hmac-sha256 tag(32)
+//! ```
+//!
+//! Key schedule: the platform publishes a key identity ([`KeyPair`] — the
+//! simulated asymmetric identity used across sshsim, see DESIGN.md ledger);
+//! request/response keys are derived per nonce with distinct labels, and
+//! AES-128-CTR + HMAC (encrypt-then-MAC) seal the payload — the same
+//! primitives as the SSH channel, reviewed once.
+
+use crate::sshsim::KeyPair;
+
+const MAGIC: &[u8; 5] = b"E2EE1";
+
+/// Does a body carry the E2EE envelope?
+pub fn is_sealed(body: &[u8]) -> bool {
+    body.len() >= MAGIC.len() + 16 + 32 && body.starts_with(MAGIC)
+}
+
+fn session(platform: &KeyPair, nonce: &[u8; 16], label_nonce: u8) -> crate::sshsim::SessionCrypto {
+    // Derive a directional session from (platform key, nonce, label): the
+    // client "sends", the platform "receives" (is_client toggles roles).
+    let mut server_nonce = [label_nonce; 16];
+    server_nonce[..15].copy_from_slice(&nonce[..15]);
+    platform.derive_session(nonce, &server_nonce, true)
+}
+
+fn open_session(platform: &KeyPair, nonce: &[u8; 16], label_nonce: u8) -> crate::sshsim::SessionCrypto {
+    let mut server_nonce = [label_nonce; 16];
+    server_nonce[..15].copy_from_slice(&nonce[..15]);
+    // The opener takes the server role: its receive keys are the sealer's
+    // send keys.
+    platform.derive_session(nonce, &server_nonce, false)
+}
+
+fn seal_with(platform: &KeyPair, nonce: [u8; 16], label: u8, plaintext: &[u8]) -> Vec<u8> {
+    let mut crypto = session(platform, &nonce, label);
+    let sealed = crypto.seal(plaintext);
+    let mut out = Vec::with_capacity(MAGIC.len() + 16 + sealed.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&nonce);
+    out.extend_from_slice(&sealed);
+    out
+}
+
+fn open_with(platform: &KeyPair, label: u8, envelope: &[u8]) -> Result<Vec<u8>, String> {
+    if !is_sealed(envelope) {
+        return Err("not an E2EE envelope".into());
+    }
+    let mut nonce = [0u8; 16];
+    nonce.copy_from_slice(&envelope[MAGIC.len()..MAGIC.len() + 16]);
+    let mut crypto = open_session(platform, &nonce, label);
+    crypto.open(&envelope[MAGIC.len() + 16..])
+}
+
+/// Extract the nonce from an envelope (the platform replies under it).
+pub fn envelope_nonce(envelope: &[u8]) -> Option<[u8; 16]> {
+    if !is_sealed(envelope) {
+        return None;
+    }
+    let mut nonce = [0u8; 16];
+    nonce.copy_from_slice(&envelope[MAGIC.len()..MAGIC.len() + 16]);
+    Some(nonce)
+}
+
+// Labels separate the two directions.
+const REQ: u8 = 0xA1;
+const RESP: u8 = 0xB2;
+
+/// Client side: seal a request body for the platform.
+pub fn seal_request(platform: &KeyPair, nonce: [u8; 16], plaintext: &[u8]) -> Vec<u8> {
+    seal_with(platform, nonce, REQ, plaintext)
+}
+
+/// Platform side: open a sealed request.
+pub fn open_request(platform: &KeyPair, envelope: &[u8]) -> Result<Vec<u8>, String> {
+    open_with(platform, REQ, envelope)
+}
+
+/// Platform side: seal a response under the request's nonce.
+pub fn seal_response(platform: &KeyPair, nonce: [u8; 16], plaintext: &[u8]) -> Vec<u8> {
+    seal_with(platform, nonce, RESP, plaintext)
+}
+
+/// Client side: open a sealed response.
+pub fn open_response(platform: &KeyPair, envelope: &[u8]) -> Result<Vec<u8>, String> {
+    open_with(platform, RESP, envelope)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> KeyPair {
+        KeyPair::generate(0x2EE)
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let p = platform();
+        let sealed = seal_request(&p, [7u8; 16], b"{\"messages\":[...]}");
+        assert!(is_sealed(&sealed));
+        assert_eq!(open_request(&p, &sealed).unwrap(), b"{\"messages\":[...]}");
+    }
+
+    #[test]
+    fn response_uses_distinct_key() {
+        let p = platform();
+        let nonce = [9u8; 16];
+        let req = seal_request(&p, nonce, b"hello");
+        // A response sealed under the same nonce cannot be opened as a
+        // request (direction separation).
+        let resp = seal_response(&p, nonce, b"world");
+        assert!(open_request(&p, &resp).is_err());
+        assert_eq!(open_response(&p, &resp).unwrap(), b"world");
+        let _ = req;
+    }
+
+    #[test]
+    fn ciphertext_hides_plaintext_and_tamper_detected() {
+        let p = platform();
+        let secret = b"SECRET-MEDICAL-DATA";
+        let mut sealed = seal_request(&p, [3u8; 16], secret);
+        // The envelope never contains the plaintext bytes.
+        assert!(!sealed
+            .windows(secret.len())
+            .any(|w| w == secret));
+        // Flipping any ciphertext bit fails the MAC.
+        let n = sealed.len();
+        sealed[n - 40] ^= 1;
+        assert!(open_request(&p, &sealed).is_err());
+    }
+
+    #[test]
+    fn wrong_platform_key_cannot_open() {
+        let sealed = seal_request(&platform(), [1u8; 16], b"x");
+        let other = KeyPair::generate(0xFFF);
+        assert!(open_request(&other, &sealed).is_err());
+    }
+
+    #[test]
+    fn non_envelope_rejected() {
+        assert!(!is_sealed(b"{\"plain\":true}"));
+        assert!(open_request(&platform(), b"short").is_err());
+        assert!(envelope_nonce(b"E2EE1tooshort").is_none());
+    }
+}

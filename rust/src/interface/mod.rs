@@ -1,0 +1,621 @@
+//! The Cloud Interface Script (§5.5) — the single entrypoint ForceCommand
+//! pins the web server's SSH key to.
+//!
+//! Every request from the HPC Proxy arrives here as `SSH_ORIGINAL_COMMAND`
+//! plus a stdin body. Parsing is deliberately strict (§6.1.2): a fixed verb
+//! whitelist, a service-name character whitelist, no shell, no `eval` —
+//! anything outside the preset paths is rejected with a non-zero exit.
+//!
+//! Verbs:
+//! - `tick`                       — keepalive: run the scheduler script once;
+//! - `infer <service>`            — forward the stdin JSON body to a random
+//!                                  ready instance, stream the response back;
+//! - `probe <service>`            — health summary for a service;
+//! - `models`                     — routing-table summary (the gateway's
+//!                                  `/v1/models` aggregation).
+//!
+//! Reply framing over the SSH channel: the first line is `status: <code>`,
+//! then a blank line, then the body (streamed chunk-by-chunk for SSE).
+
+pub mod e2ee;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::scheduler::ServiceScheduler;
+use crate::sshsim::CommandHandler;
+use crate::util::http;
+use crate::util::json::Json;
+use crate::util::metrics::Registry;
+use crate::util::rng::Rng;
+
+/// Exit codes mirror shell conventions so the proxy can distinguish
+/// transport-level failures from service-level ones.
+pub const EXIT_OK: i32 = 0;
+pub const EXIT_NO_INSTANCE: i32 = 3;
+pub const EXIT_BAD_REQUEST: i32 = 2;
+
+pub struct CloudInterface {
+    scheduler: Arc<ServiceScheduler>,
+    metrics: Registry,
+    rng: std::sync::Mutex<Rng>,
+    /// §7.1.3 scale-to-zero: how long an `infer` waits for an instance to
+    /// cold-start before giving up. The in-flight demand guard is held for
+    /// the whole wait, which is exactly what drives the autoscaler from 0.
+    queue_timeout: Duration,
+    /// §7.1.4 E2EE: the platform key sealed request bodies are opened with.
+    platform_key: Option<crate::sshsim::KeyPair>,
+}
+
+impl CloudInterface {
+    pub fn new(scheduler: Arc<ServiceScheduler>, metrics: Registry) -> Arc<CloudInterface> {
+        Arc::new(CloudInterface {
+            scheduler,
+            metrics,
+            rng: std::sync::Mutex::new(Rng::new(0xc1)),
+            queue_timeout: Duration::from_secs(30),
+            platform_key: None,
+        })
+    }
+
+    /// Builder: scale-to-zero queue wait (0 = fail fast, the paper's
+    /// §5.6 behaviour).
+    pub fn with_queue_timeout(self: Arc<Self>, timeout: Duration) -> Arc<CloudInterface> {
+        let mut this = Arc::try_unwrap(self).unwrap_or_else(|a| CloudInterface {
+            scheduler: a.scheduler.clone(),
+            metrics: a.metrics.clone(),
+            rng: std::sync::Mutex::new(Rng::new(0xc1)),
+            queue_timeout: a.queue_timeout,
+            platform_key: a.platform_key.clone(),
+        });
+        this.queue_timeout = timeout;
+        Arc::new(this)
+    }
+
+    /// Builder: enable E2EE with the platform key.
+    pub fn with_platform_key(
+        self: Arc<Self>,
+        key: crate::sshsim::KeyPair,
+    ) -> Arc<CloudInterface> {
+        let mut this = Arc::try_unwrap(self).unwrap_or_else(|a| CloudInterface {
+            scheduler: a.scheduler.clone(),
+            metrics: a.metrics.clone(),
+            rng: std::sync::Mutex::new(Rng::new(0xc1)),
+            queue_timeout: a.queue_timeout,
+            platform_key: a.platform_key.clone(),
+        });
+        this.platform_key = Some(key);
+        Arc::new(this)
+    }
+
+    /// Validate a service name: the injection chokepoint. Anything that is
+    /// not `[a-z0-9._-]` is rejected before it can influence routing.
+    fn valid_service(name: &str) -> bool {
+        !name.is_empty()
+            && name.len() <= 64
+            && name
+                .bytes()
+                .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || matches!(b, b'.' | b'_' | b'-'))
+    }
+
+    fn reply_status(out: &mut dyn FnMut(&[u8]) -> Result<()>, code: u16) -> Result<()> {
+        out(format!("status: {code}\n\n").as_bytes())
+    }
+
+    fn handle_tick(&self, out: &mut dyn FnMut(&[u8]) -> Result<()>) -> i32 {
+        let report = self.scheduler.run_once();
+        let body = Json::obj()
+            .set("skipped_locked", report.skipped_locked)
+            .set("submitted", report.submitted.len())
+            .set("became_ready", report.became_ready.len());
+        let _ = Self::reply_status(out, 200);
+        let _ = out(body.dump().as_bytes());
+        EXIT_OK
+    }
+
+    fn handle_models(&self, out: &mut dyn FnMut(&[u8]) -> Result<()>) -> i32 {
+        let mut list = Vec::new();
+        for s in self.scheduler.routing.services() {
+            let ready = self.scheduler.routing.ready_instances(&s).len();
+            let total = self.scheduler.routing.instances(&s).len();
+            list.push(Json::obj().set("id", s.as_str()).set("ready", ready).set("total", total));
+        }
+        let _ = Self::reply_status(out, 200);
+        let _ = out(Json::obj().set("object", "list").set("data", list).dump().as_bytes());
+        EXIT_OK
+    }
+
+    fn handle_probe(&self, service: &str, out: &mut dyn FnMut(&[u8]) -> Result<()>) -> i32 {
+        // Like the paper's Table 1 "Probe GPU node" stage: pick a ready
+        // instance and actually HTTP-probe its health endpoint on the
+        // compute node, so the reply proves end-to-end reachability.
+        let ready = self.scheduler.routing.ready_instances(service);
+        let healthy = ready.first().map(|inst| {
+            http::request_timeout(
+                "GET",
+                &format!("http://{}/health", inst.addr),
+                &[],
+                &[],
+                std::time::Duration::from_millis(500),
+            )
+            .map(|r| r.status == 200)
+            .unwrap_or(false)
+        });
+        let ok = healthy == Some(true);
+        let body = Json::obj()
+            .set("service", service)
+            .set("ready_instances", ready.len())
+            .set("status", if ok { "ok" } else { "unavailable" });
+        let _ = Self::reply_status(out, if ok { 200 } else { 503 });
+        let _ = out(body.dump().as_bytes());
+        if ok {
+            EXIT_OK
+        } else {
+            EXIT_NO_INSTANCE
+        }
+    }
+
+    fn handle_infer(
+        &self,
+        service: &str,
+        stdin: &[u8],
+        out: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> i32 {
+        // Demand tracking for the autoscaler: in-flight from the moment the
+        // request arrives — held across the cold-start wait, so queued
+        // requests are what pull a scaled-to-zero service back up (§7.1.3).
+        let _guard = self.scheduler.demand.begin(service);
+        self.metrics.counter("ci_infer_total", &[("service", service)]).inc();
+
+        // §7.1.4: sealed bodies are opened HERE, on the HPC platform; no
+        // ESX-side component ever saw the plaintext.
+        let mut e2ee_nonce: Option<[u8; 16]> = None;
+        let opened;
+        let stdin: &[u8] = if e2ee::is_sealed(stdin) {
+            let Some(key) = &self.platform_key else {
+                let _ = Self::reply_status(out, 400);
+                let _ = out(Json::obj().set("error", "E2EE not enabled").dump().as_bytes());
+                return EXIT_BAD_REQUEST;
+            };
+            match e2ee::open_request(key, stdin) {
+                Ok(plain) => {
+                    e2ee_nonce = e2ee::envelope_nonce(stdin);
+                    self.metrics.counter("ci_e2ee_total", &[("service", service)]).inc();
+                    opened = plain;
+                    &opened
+                }
+                Err(e) => {
+                    let _ = Self::reply_status(out, 400);
+                    let _ = out(Json::obj().set("error", format!("E2EE: {e}")).dump().as_bytes());
+                    return EXIT_BAD_REQUEST;
+                }
+            }
+        } else {
+            stdin
+        };
+
+        // Random load balancing over ready instances (§5.6), waiting out a
+        // cold start up to queue_timeout (§7.1.3 scale-to-zero queueing).
+        let deadline = std::time::Instant::now() + self.queue_timeout;
+        let inst = loop {
+            let picked = {
+                let mut rng = self.rng.lock().unwrap();
+                self.scheduler.routing.pick(service, &mut rng)
+            };
+            match picked {
+                Some(i) => break Some(i),
+                None if std::time::Instant::now() < deadline => {
+                    self.metrics.gauge("ci_queued_requests", &[("service", service)]).add(1);
+                    std::thread::sleep(Duration::from_millis(20));
+                    self.metrics.gauge("ci_queued_requests", &[("service", service)]).add(-1);
+                }
+                None => break None,
+            }
+        };
+        let Some(inst) = inst else {
+            let _ = Self::reply_status(out, 503);
+            let _ = out(
+                Json::obj().set("error", format!("no ready instance for {service}")).dump().as_bytes(),
+            );
+            return EXIT_NO_INSTANCE;
+        };
+
+        let url = format!("http://{}/v1/chat/completions", inst.addr);
+        let is_stream = Json::parse(std::str::from_utf8(stdin).unwrap_or(""))
+            .map(|j| j.bool_or("stream", false))
+            .unwrap_or(false)
+            // Streaming replies are not sealed (chunk-level E2EE is future
+            // work even here); sealed requests get buffered replies.
+            && e2ee_nonce.is_none();
+
+        if is_stream {
+            let mut sent_status = false;
+            let result = http::request_stream(
+                "POST",
+                &url,
+                &[("content-type", "application/json")],
+                stdin,
+                |chunk| {
+                    if !sent_status {
+                        sent_status = true;
+                        let _ = Self::reply_status(out, 200);
+                    }
+                    let _ = out(chunk);
+                },
+            );
+            match result {
+                Ok(_) => {
+                    if !sent_status {
+                        let _ = Self::reply_status(out, 200);
+                    }
+                    EXIT_OK
+                }
+                Err(e) => {
+                    if !sent_status {
+                        let _ = Self::reply_status(out, 502);
+                        let _ = out(Json::obj().set("error", e.to_string()).dump().as_bytes());
+                    }
+                    EXIT_NO_INSTANCE
+                }
+            }
+        } else {
+            match http::pooled_request("POST", &url, &[("content-type", "application/json")], stdin) {
+                Ok(resp) => {
+                    let _ = Self::reply_status(out, resp.status);
+                    match (&self.platform_key, e2ee_nonce) {
+                        (Some(key), Some(nonce)) => {
+                            let _ = out(&e2ee::seal_response(key, nonce, &resp.body));
+                        }
+                        _ => {
+                            let _ = out(&resp.body);
+                        }
+                    }
+                    EXIT_OK
+                }
+                Err(e) => {
+                    let _ = Self::reply_status(out, 502);
+                    let _ = out(Json::obj().set("error", e.to_string()).dump().as_bytes());
+                    EXIT_NO_INSTANCE
+                }
+            }
+        }
+    }
+}
+
+impl CommandHandler for CloudInterface {
+    fn exec(
+        &self,
+        _command: &str,
+        original_command: &str,
+        stdin: &[u8],
+        out: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> i32 {
+        // Strict tokenization: whitespace split only, fixed arity, no shell
+        // interpretation of any kind.
+        let tokens: Vec<&str> = original_command.split_whitespace().collect();
+        match tokens.as_slice() {
+            ["tick"] => self.handle_tick(out),
+            ["models"] => self.handle_models(out),
+            ["probe", service] if Self::valid_service(service) => {
+                self.handle_probe(service, out)
+            }
+            ["infer", service] if Self::valid_service(service) => {
+                self.handle_infer(service, stdin, out)
+            }
+            _ => {
+                self.metrics.counter("ci_rejected_total", &[]).inc();
+                let _ = Self::reply_status(out, 400);
+                let _ = out(
+                    Json::obj()
+                        .set("error", "request does not match any permitted path")
+                        .dump()
+                        .as_bytes(),
+                );
+                EXIT_BAD_REQUEST
+            }
+        }
+    }
+}
+
+/// Parse the `status: <code>\n\n<body>` reply framing.
+pub fn parse_reply(raw: &[u8]) -> (u16, Vec<u8>) {
+    let text_prefix = &raw[..raw.len().min(64)];
+    let s = String::from_utf8_lossy(text_prefix);
+    if let Some(rest) = s.strip_prefix("status: ") {
+        if let Some(nl) = rest.find('\n') {
+            if let Ok(code) = rest[..nl].trim().parse::<u16>() {
+                let header_len = "status: ".len() + nl + 1;
+                let body_start = if raw.get(header_len) == Some(&b'\n') {
+                    header_len + 1
+                } else {
+                    header_len
+                };
+                return (code, raw[body_start..].to_vec());
+            }
+        }
+    }
+    (200, raw.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{
+        BackendKind, MockLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec,
+    };
+    use crate::slurm::{ClusterSpec, SlurmSim};
+    use crate::util::clock::SimClock;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    fn collect_out() -> (Vec<u8>, impl FnMut(&[u8]) -> Result<()>) {
+        (Vec::new(), |_c: &[u8]| Ok(()))
+    }
+
+    fn make(scheduler_services: Vec<ServiceSpec>) -> (Arc<CloudInterface>, Arc<ServiceScheduler>) {
+        let slurm = Arc::new(Mutex::new(SlurmSim::new(ClusterSpec::kisski())));
+        let sched = Arc::new(ServiceScheduler::new(
+            slurm,
+            SimClock::new(),
+            MockLauncher::new(),
+            scheduler_services,
+            SchedulerConfig::default(),
+            Registry::new(),
+        ));
+        let ci = CloudInterface::new(sched.clone(), Registry::new())
+            .with_queue_timeout(std::time::Duration::ZERO);
+        (ci, sched)
+    }
+
+    fn run(ci: &CloudInterface, cmd: &str, stdin: &[u8]) -> (i32, Vec<u8>) {
+        let mut buf = Vec::new();
+        let mut out = |c: &[u8]| {
+            buf.extend_from_slice(c);
+            Ok(())
+        };
+        let code = ci.exec("/opt/saia/cloud_interface", cmd, stdin, &mut out);
+        (code, buf)
+    }
+
+    fn svc(name: &str) -> ServiceSpec {
+        ServiceSpec {
+            name: name.into(),
+            min_instances: 1,
+            max_instances: 2,
+            target_concurrency: 4.0,
+            gpus: 1,
+            cpus: 4,
+            mem_gb: 16,
+            walltime: Duration::from_secs(3600),
+            backend: BackendKind::Sim { profile: "intel-neural-7b".into(), time_scale: 0.0 },
+        }
+    }
+
+    #[test]
+    fn injection_attempts_rejected() {
+        let (ci, _) = make(vec![]);
+        for evil in [
+            "infer m; rm -rf /",
+            "infer $(cat /etc/passwd)",
+            "infer ../../../etc/shadow",
+            "eval ls",
+            "infer m extra-arg",
+            "probe M|sh",
+            "tick; reboot",
+            "",
+            "infer",
+        ] {
+            let (code, out) = run(&ci, evil, b"{}");
+            assert_eq!(code, EXIT_BAD_REQUEST, "accepted: {evil:?}");
+            let (status, _) = parse_reply(&out);
+            assert_eq!(status, 400, "evil={evil:?}");
+        }
+        // Path-traversal-free, lowercase service names pass validation.
+        assert!(CloudInterface::valid_service("llama3-70b"));
+        assert!(CloudInterface::valid_service("qwen1.5-72b"));
+        assert!(!CloudInterface::valid_service("Llama"));
+        assert!(!CloudInterface::valid_service("a/b"));
+        assert!(!CloudInterface::valid_service(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn tick_runs_scheduler() {
+        let (ci, sched) = make(vec![svc("m")]);
+        let (code, out) = run(&ci, "tick", b"");
+        assert_eq!(code, EXIT_OK);
+        let (status, body) = parse_reply(&out);
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.u64_or("submitted", 99), 1, "min_instances=1 submitted");
+        assert_eq!(sched.routing.instances("m").len(), 1);
+    }
+
+    #[test]
+    fn probe_reports_unavailable_then_ok() {
+        let (ci, sched) = make(vec![svc("m")]);
+        let (code, out) = run(&ci, "probe m", b"");
+        assert_eq!(code, EXIT_NO_INSTANCE);
+        assert_eq!(parse_reply(&out).0, 503);
+        // A ready instance with a live /health endpoint flips the probe.
+        let health = crate::util::http::Server::start(Arc::new(|_req: &_| {
+            crate::util::http::Reply::full(crate::util::http::Response::text(200, "ok"))
+        }))
+        .unwrap();
+        sched.routing.upsert(crate::scheduler::Instance {
+            job_id: 1,
+            service: "m".into(),
+            node: "n".into(),
+            port: health.addr.port(),
+            addr: health.addr.to_string(),
+            ready: true,
+            started_us: 0,
+        });
+        let (code, out) = run(&ci, "probe m", b"");
+        assert_eq!(code, EXIT_OK);
+        assert_eq!(parse_reply(&out).0, 200);
+    }
+
+    #[test]
+    fn infer_without_instances_is_503() {
+        let (ci, _) = make(vec![svc("m")]);
+        let (code, out) = run(&ci, "infer m", b"{\"messages\":[]}");
+        assert_eq!(code, EXIT_NO_INSTANCE);
+        assert_eq!(parse_reply(&out).0, 503);
+    }
+
+    #[test]
+    fn infer_forwards_to_real_instance() {
+        // Boot a real LLM HTTP server and point the routing table at it.
+        let engine = crate::llmserver::Engine::start(
+            Box::new(crate::llmserver::SimBackend::by_name("intel-neural-7b", 0.0).unwrap()),
+            crate::llmserver::EngineConfig::default(),
+            Registry::new(),
+        );
+        let server = crate::llmserver::LlmHttpServer::start(engine).unwrap();
+        let (ci, sched) = make(vec![svc("intel-neural-7b")]);
+        sched.routing.upsert(crate::scheduler::Instance {
+            job_id: 1,
+            service: "intel-neural-7b".into(),
+            node: "n".into(),
+            port: server.server.addr.port(),
+            addr: server.server.addr.to_string(),
+            ready: true,
+            started_us: 0,
+        });
+        let body = Json::obj()
+            .set(
+                "messages",
+                vec![Json::obj().set("role", "user").set("content", "count")],
+            )
+            .dump();
+        let (code, out) = run(&ci, "infer intel-neural-7b", body.as_bytes());
+        assert_eq!(code, EXIT_OK);
+        let (status, body) = parse_reply(&out);
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(
+            j.at(&["choices", "0", "message", "content"]).unwrap().as_str().unwrap(),
+            "1 2 3 4 5 6 7 8 9 10"
+        );
+    }
+
+    #[test]
+    fn models_lists_routing_table() {
+        let (ci, sched) = make(vec![svc("m")]);
+        sched.run_once();
+        let (code, out) = run(&ci, "models", b"");
+        assert_eq!(code, EXIT_OK);
+        let j = Json::parse(std::str::from_utf8(&parse_reply(&out).1).unwrap()).unwrap();
+        assert_eq!(j.at(&["data", "0", "id"]).unwrap().as_str().unwrap(), "m");
+    }
+
+    #[test]
+    fn parse_reply_framing() {
+        let (code, body) = parse_reply(b"status: 503\n\n{\"error\":\"x\"}");
+        assert_eq!(code, 503);
+        assert_eq!(body, b"{\"error\":\"x\"}");
+        let (code, body) = parse_reply(b"raw body no header");
+        assert_eq!(code, 200);
+        assert_eq!(body, b"raw body no header");
+    }
+
+    #[test]
+    fn infer_queues_through_a_cold_start() {
+        // §7.1.3: with a queue timeout, a request arriving while the model
+        // is still loading waits and then succeeds.
+        let engine = crate::llmserver::Engine::start(
+            Box::new(crate::llmserver::SimBackend::by_name("intel-neural-7b", 0.0).unwrap()),
+            crate::llmserver::EngineConfig::default(),
+            Registry::new(),
+        );
+        let server = crate::llmserver::LlmHttpServer::start(engine).unwrap();
+        let (ci, sched) = make(vec![svc("intel-neural-7b")]);
+        let ci = ci.with_queue_timeout(std::time::Duration::from_secs(5));
+
+        // The instance becomes ready 150 ms into the wait.
+        let sched2 = sched.clone();
+        let port = server.server.addr.port();
+        let addr = server.server.addr.to_string();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            sched2.routing.upsert(crate::scheduler::Instance {
+                job_id: 9,
+                service: "intel-neural-7b".into(),
+                node: "n".into(),
+                port,
+                addr,
+                ready: true,
+                started_us: 0,
+            });
+        });
+        let body = Json::obj()
+            .set("messages", vec![Json::obj().set("role", "user").set("content", "x")])
+            .dump();
+        let t = std::time::Instant::now();
+        let (code, out) = run(&ci, "infer intel-neural-7b", body.as_bytes());
+        assert_eq!(code, EXIT_OK, "{:?}", String::from_utf8_lossy(&out));
+        assert!(t.elapsed() >= std::time::Duration::from_millis(140), "did not wait");
+        assert_eq!(parse_reply(&out).0, 200);
+    }
+
+    #[test]
+    fn e2ee_sealed_request_roundtrip() {
+        // §7.1.4: sealed body in, sealed body out; plaintext only on the
+        // platform side.
+        let engine = crate::llmserver::Engine::start(
+            Box::new(crate::llmserver::SimBackend::by_name("intel-neural-7b", 0.0).unwrap()),
+            crate::llmserver::EngineConfig::default(),
+            Registry::new(),
+        );
+        let server = crate::llmserver::LlmHttpServer::start(engine).unwrap();
+        let key = crate::sshsim::KeyPair::generate(0x2EE);
+        let (ci, sched) = make(vec![svc("intel-neural-7b")]);
+        let ci = ci.with_platform_key(key.clone());
+        sched.routing.upsert(crate::scheduler::Instance {
+            job_id: 1,
+            service: "intel-neural-7b".into(),
+            node: "n".into(),
+            port: server.server.addr.port(),
+            addr: server.server.addr.to_string(),
+            ready: true,
+            started_us: 0,
+        });
+        let plaintext = Json::obj()
+            .set(
+                "messages",
+                vec![Json::obj().set("role", "user").set("content", "SECRET count")],
+            )
+            .dump();
+        let sealed = e2ee::seal_request(&key, [5u8; 16], plaintext.as_bytes());
+        let (code, out) = run(&ci, "infer intel-neural-7b", &sealed);
+        assert_eq!(code, EXIT_OK);
+        let (status, body) = parse_reply(&out);
+        assert_eq!(status, 200);
+        // The reply is sealed: not parseable JSON, no plaintext content.
+        assert!(e2ee::is_sealed(&body));
+        assert!(!body.windows(5).any(|w| w == b"1 2 3"));
+        let plain = e2ee::open_response(&key, &body).unwrap();
+        let j = Json::parse(std::str::from_utf8(&plain).unwrap()).unwrap();
+        assert_eq!(
+            j.at(&["choices", "0", "message", "content"]).unwrap().as_str().unwrap(),
+            "1 2 3 4 5 6 7 8 9 10"
+        );
+    }
+
+    #[test]
+    fn e2ee_rejected_when_not_enabled_or_garbled() {
+        let (ci, _) = make(vec![svc("intel-neural-7b")]);
+        let key = crate::sshsim::KeyPair::generate(0x2EE);
+        let sealed = e2ee::seal_request(&key, [1u8; 16], b"{}");
+        // Platform key not configured -> 400.
+        let (code, out) = run(&ci, "infer intel-neural-7b", &sealed);
+        assert_eq!(code, EXIT_BAD_REQUEST);
+        assert_eq!(parse_reply(&out).0, 400);
+        // Wrong key -> 400.
+        let ci = ci.with_platform_key(crate::sshsim::KeyPair::generate(0xFFF));
+        let (code, _) = run(&ci, "infer intel-neural-7b", &sealed);
+        assert_eq!(code, EXIT_BAD_REQUEST);
+    }
+}

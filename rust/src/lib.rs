@@ -1,0 +1,50 @@
+//! # chat-hpc
+//!
+//! A from-scratch reproduction of *"Chat AI: A Seamless Slurm-Native Solution
+//! for HPC-Based Services"* (Doosthosseini, Decker, Nolte, Kunkel — GWDG,
+//! 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! - [`util`] — substrates this offline build owns outright: JSON, PRNG,
+//!   HTTP/1.1 (server + client with chunked/SSE streaming), a
+//!   Prometheus-style metrics registry, a wall/sim clock abstraction, a tiny
+//!   property-test driver.
+//! - [`slurm`] — a Slurm simulator (nodes, GRES GPUs, partitions,
+//!   `sbatch`/`squeue`/`scancel`, priority + backfill scheduling, failure
+//!   injection) that exposes exactly the contract the paper's scheduler
+//!   script consumes.
+//! - [`sshsim`] — an SSH-shaped encrypted channel with `authorized_keys`
+//!   ForceCommand enforcement: the paper's circuit breaker (§5.4–5.5).
+//! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas model
+//!   (`artifacts/*.hlo.txt`) via the `xla` crate.
+//! - [`llmserver`] — a vLLM-like inference server: paged KV cache,
+//!   continuous batching, OpenAI-compatible streaming API.
+//! - [`scheduler`] + [`interface`] — the paper's core contribution: the
+//!   Slurm-native service scheduler and the Cloud Interface Script.
+//! - [`hpcproxy`], [`gateway`], [`auth`], [`webapp`], [`external`] — the
+//!   ESX-server side of Figure 1.
+//! - [`analytics`] — the usage-logging pipeline plus an adoption simulator
+//!   used to regenerate Figures 3–5.
+//! - [`workload`] — Locust-like load generation and the latency prober used
+//!   for Tables 1–2.
+//!
+//! Python (JAX + Pallas) participates only at build time: `make artifacts`
+//! lowers the model to HLO text which the Rust binary loads through PJRT.
+//! Nothing on the request path imports Python.
+
+pub mod util;
+pub mod slurm;
+pub mod sshsim;
+pub mod runtime;
+pub mod llmserver;
+pub mod scheduler;
+pub mod interface;
+pub mod hpcproxy;
+pub mod gateway;
+pub mod auth;
+pub mod webapp;
+pub mod external;
+pub mod analytics;
+pub mod workload;
+pub mod stack;

@@ -1,0 +1,320 @@
+//! OpenAI-compatible HTTP API over the engine (vLLM's `api_server`).
+//!
+//! Implements the subset of the API the Chat AI stack uses: streaming and
+//! non-streaming `/v1/chat/completions`, `/v1/models`, and the `/health`
+//! probe the paper's scheduler script polls before marking an instance
+//! ready in the routing table (§5.6).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::engine::{Engine, GenEvent, GenRequest};
+use crate::util::http::{Handler, Reply, Request, Response, Server};
+use crate::util::json::Json;
+
+static COMPLETION_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The HTTP face of one LLM server instance.
+pub struct LlmHttpServer {
+    pub server: Server,
+    pub model: String,
+}
+
+impl LlmHttpServer {
+    /// Serve `engine` on an ephemeral port.
+    pub fn start(engine: Engine) -> Result<LlmHttpServer> {
+        Self::start_on("127.0.0.1:0", engine)
+    }
+
+    /// Serve on an explicit `host:port` (the scheduler picks random ports
+    /// for service jobs, §5.6).
+    pub fn start_on(bind: &str, engine: Engine) -> Result<LlmHttpServer> {
+        let model = engine.model.clone();
+        let handler = make_handler(engine);
+        let server = Server::start_on(bind, handler)?;
+        Ok(LlmHttpServer { server, model })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+/// Flatten chat messages into the model prompt (the paper's §6.4 "custom
+/// system prompts" feature rides on the same template).
+pub fn render_prompt(messages: &[Json]) -> String {
+    let mut out = String::new();
+    for m in messages {
+        let role = m.str_or("role", "user");
+        let content = m.str_or("content", "");
+        out.push_str(role);
+        out.push_str(": ");
+        out.push_str(content);
+        out.push('\n');
+    }
+    out.push_str("assistant:");
+    out
+}
+
+fn parse_gen_request(body: &Json) -> GenRequest {
+    let prompt = match body.get("messages").and_then(|m| m.as_arr()) {
+        Some(msgs) if !msgs.is_empty() => render_prompt(msgs),
+        _ => body.str_or("prompt", "").to_string(),
+    };
+    GenRequest {
+        prompt,
+        max_tokens: body.u64_or("max_tokens", 64) as usize,
+        temperature: body.f64_or("temperature", 0.0),
+        top_k: body.u64_or("top_k", 0) as usize,
+        seed: body.u64_or("seed", 0),
+    }
+}
+
+fn make_handler(engine: Engine) -> Handler {
+    let engine = Arc::new(engine);
+    Arc::new(move |req: &Request| -> Reply {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => Reply::full(Response::json(
+                200,
+                &Json::obj().set("status", "ok").set("model", engine.model.as_str()),
+            )),
+            ("GET", "/v1/models") => {
+                let entry = Json::obj()
+                    .set("id", engine.model.as_str())
+                    .set("object", "model")
+                    .set("owned_by", "chat-hpc");
+                Reply::full(Response::json(
+                    200,
+                    &Json::obj().set("object", "list").set("data", vec![entry]),
+                ))
+            }
+            ("GET", "/metrics") => {
+                Reply::full(Response::text(200, &engine.metrics().render()))
+            }
+            ("POST", "/v1/chat/completions") | ("POST", "/v1/completions") => {
+                let body = match Json::parse(req.body_str()) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        return Reply::full(Response::json(
+                            400,
+                            &Json::obj().set("error", format!("invalid json: {e}")),
+                        ))
+                    }
+                };
+                let gen_req = parse_gen_request(&body);
+                if gen_req.prompt.is_empty() {
+                    return Reply::full(Response::json(
+                        400,
+                        &Json::obj().set("error", "empty prompt"),
+                    ));
+                }
+                let stream = body.bool_or("stream", false);
+                let id = format!(
+                    "chatcmpl-{}",
+                    COMPLETION_ID.fetch_add(1, Ordering::Relaxed)
+                );
+                let model = engine.model.clone();
+                let generation = engine.submit(gen_req);
+
+                if stream {
+                    Reply::sse(move |sink| {
+                        loop {
+                            match generation.rx.recv() {
+                                Ok(GenEvent::Token(text)) => {
+                                    let chunk = stream_chunk(&id, &model, Some(&text), None);
+                                    sink.send_event(&chunk.dump())?;
+                                }
+                                Ok(GenEvent::Done(usage)) => {
+                                    let chunk = stream_chunk(
+                                        &id,
+                                        &model,
+                                        None,
+                                        Some(usage.finish_reason),
+                                    );
+                                    sink.send_event(&chunk.dump())?;
+                                    sink.send_event("[DONE]")?;
+                                    return Ok(());
+                                }
+                                Ok(GenEvent::Error(e)) => {
+                                    sink.send_event(
+                                        &Json::obj().set("error", e.as_str()).dump(),
+                                    )?;
+                                    return Ok(());
+                                }
+                                Err(_) => return Ok(()),
+                            }
+                        }
+                    })
+                } else {
+                    match generation.collect() {
+                        Ok((text, usage)) => {
+                            let message = Json::obj()
+                                .set("role", "assistant")
+                                .set("content", text);
+                            let choice = Json::obj()
+                                .set("index", 0u64)
+                                .set("message", message)
+                                .set("finish_reason", usage.finish_reason);
+                            let resp = Json::obj()
+                                .set("id", id.as_str())
+                                .set("object", "chat.completion")
+                                .set("model", model.as_str())
+                                .set("choices", vec![choice])
+                                .set(
+                                    "usage",
+                                    Json::obj()
+                                        .set("prompt_tokens", usage.prompt_tokens)
+                                        .set("completion_tokens", usage.completion_tokens)
+                                        .set(
+                                            "total_tokens",
+                                            usage.prompt_tokens + usage.completion_tokens,
+                                        ),
+                                );
+                            Reply::full(Response::json(200, &resp))
+                        }
+                        Err(e) => Reply::full(Response::json(
+                            503,
+                            &Json::obj().set("error", e.to_string()),
+                        )),
+                    }
+                }
+            }
+            _ => Reply::full(Response::json(404, &Json::obj().set("error", "not found"))),
+        }
+    })
+}
+
+fn stream_chunk(id: &str, model: &str, content: Option<&str>, finish: Option<&str>) -> Json {
+    let mut delta = Json::obj();
+    if let Some(c) = content {
+        delta = delta.set("content", c);
+    }
+    let choice = Json::obj().set("index", 0u64).set("delta", delta).set(
+        "finish_reason",
+        match finish {
+            Some(f) => Json::Str(f.to_string()),
+            None => Json::Null,
+        },
+    );
+    Json::obj()
+        .set("id", id)
+        .set("object", "chat.completion.chunk")
+        .set("model", model)
+        .set("choices", vec![choice])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llmserver::backend::SimBackend;
+    use crate::llmserver::engine::EngineConfig;
+    use crate::util::http::{self, SseParser};
+    use crate::util::metrics::Registry;
+
+    fn server() -> LlmHttpServer {
+        let engine = Engine::start(
+            Box::new(SimBackend::by_name("intel-neural-7b", 0.0).unwrap()),
+            EngineConfig::default(),
+            Registry::new(),
+        );
+        LlmHttpServer::start(engine).unwrap()
+    }
+
+    fn chat_body(stream: bool) -> Json {
+        let msg = Json::obj().set("role", "user").set("content", "count from 1 to 10");
+        Json::obj()
+            .set("model", "intel-neural-7b")
+            .set("messages", vec![msg])
+            .set("stream", stream)
+    }
+
+    #[test]
+    fn health_and_models() {
+        let s = server();
+        let h = http::get(&format!("{}/health", s.url())).unwrap();
+        assert_eq!(h.status, 200);
+        assert_eq!(h.json_body().unwrap().str_or("status", ""), "ok");
+        let m = http::get(&format!("{}/v1/models", s.url())).unwrap();
+        let body = m.json_body().unwrap();
+        assert_eq!(
+            body.at(&["data", "0", "id"]).unwrap().as_str().unwrap(),
+            "intel-neural-7b"
+        );
+    }
+
+    #[test]
+    fn non_streaming_completion() {
+        let s = server();
+        let r = http::post_json(
+            &format!("{}/v1/chat/completions", s.url()),
+            &chat_body(false),
+        )
+        .unwrap();
+        assert_eq!(r.status, 200);
+        let body = r.json_body().unwrap();
+        assert_eq!(
+            body.at(&["choices", "0", "message", "content"]).unwrap().as_str().unwrap(),
+            "1 2 3 4 5 6 7 8 9 10"
+        );
+        assert!(body.at(&["usage", "completion_tokens"]).unwrap().as_u64().unwrap() > 10);
+    }
+
+    #[test]
+    fn streaming_completion_sse() {
+        let s = server();
+        let mut parser = SseParser::default();
+        let mut events = Vec::new();
+        let status = http::request_stream(
+            "POST",
+            &format!("{}/v1/chat/completions", s.url()),
+            &[("content-type", "application/json")],
+            chat_body(true).dump().as_bytes(),
+            |chunk| events.extend(parser.push(chunk)),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(events.last().map(|s| s.as_str()), Some("[DONE]"));
+        let text: String = events
+            .iter()
+            .filter_map(|e| Json::parse(e).ok())
+            .filter_map(|j| {
+                j.at(&["choices", "0", "delta", "content"])
+                    .and_then(|c| c.as_str().map(String::from))
+            })
+            .collect();
+        assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let s = server();
+        let r = http::request(
+            "POST",
+            &format!("{}/v1/chat/completions", s.url()),
+            &[],
+            b"{not json",
+        )
+        .unwrap();
+        assert_eq!(r.status, 400);
+        let r = http::post_json(
+            &format!("{}/v1/chat/completions", s.url()),
+            &Json::obj().set("messages", Vec::<Json>::new()),
+        )
+        .unwrap();
+        assert_eq!(r.status, 400);
+        let r = http::get(&format!("{}/nope", s.url())).unwrap();
+        assert_eq!(r.status, 404);
+    }
+
+    #[test]
+    fn prompt_template_includes_system() {
+        let msgs = vec![
+            Json::obj().set("role", "system").set("content", "be terse"),
+            Json::obj().set("role", "user").set("content", "hi"),
+        ];
+        let p = render_prompt(&msgs);
+        assert_eq!(p, "system: be terse\nuser: hi\nassistant:");
+    }
+}

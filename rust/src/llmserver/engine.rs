@@ -1,0 +1,550 @@
+//! Continuous-batching inference engine (vLLM's core serving loop).
+//!
+//! One engine thread owns the backend and runs the loop:
+//!
+//! 1. drain newly-submitted requests into the waiting queue;
+//! 2. **admit**: move waiting requests into free batch slots if the paged
+//!    KV allocator can hold their prompt — one `prefill` call covers all
+//!    admissions this iteration;
+//! 3. **step**: one `decode` call advances every active slot; sampled
+//!    tokens stream to each request's channel immediately.
+//!
+//! Requests therefore join and leave the running batch at token
+//! granularity — no head-of-line blocking behind long generations, which
+//! is exactly the property the paper buys by deploying vLLM (§2, §5.7).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::kvcache::{BlockAllocator, SeqBlocks};
+use super::sampler::{sample, SamplingParams};
+use super::tokenizer::{self, StreamDecoder};
+use crate::util::metrics::Registry;
+use crate::util::rng::Rng;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for GenRequest {
+    fn default() -> GenRequest {
+        GenRequest { prompt: String::new(), max_tokens: 64, temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// Completion accounting (OpenAI `usage` block + serving latencies).
+#[derive(Debug, Clone, Default)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    /// Time to first token.
+    pub ttft: Duration,
+    pub total: Duration,
+    /// Why generation stopped: "stop" (EOS), "length", or "kv_exhausted".
+    pub finish_reason: &'static str,
+}
+
+/// Streamed generation events.
+#[derive(Debug)]
+pub enum GenEvent {
+    Token(String),
+    Done(Usage),
+    Error(String),
+}
+
+/// Handle to an in-flight generation.
+pub struct Generation {
+    pub rx: Receiver<GenEvent>,
+}
+
+impl Generation {
+    /// Drain to completion, concatenating token text.
+    pub fn collect(self) -> Result<(String, Usage)> {
+        let mut text = String::new();
+        loop {
+            match self.rx.recv() {
+                Ok(GenEvent::Token(t)) => text.push_str(&t),
+                Ok(GenEvent::Done(usage)) => return Ok((text, usage)),
+                Ok(GenEvent::Error(e)) => anyhow::bail!("generation failed: {e}"),
+                Err(_) => anyhow::bail!("engine dropped the generation"),
+            }
+        }
+    }
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Max requests queued beyond the running batch before rejections.
+    pub max_queue: usize,
+    /// Poll interval when completely idle.
+    pub idle_wait: Duration,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { max_queue: 256, idle_wait: Duration::from_millis(2) }
+    }
+}
+
+enum Msg {
+    Submit(GenRequest, Sender<GenEvent>),
+    Stop,
+}
+
+/// Public engine handle (clone-cheap).
+pub struct Engine {
+    tx: Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub model: String,
+    metrics: Registry,
+}
+
+struct Slot {
+    seq: SeqBlocks,
+    tx: Sender<GenEvent>,
+    rng: Rng,
+    params: SamplingParams,
+    decoder: StreamDecoder,
+    /// Token to feed at the next decode step.
+    next_token: i32,
+    completion_tokens: usize,
+    max_tokens: usize,
+    prompt_tokens: usize,
+    started: Instant,
+    first_token_at: Option<Instant>,
+}
+
+struct Waiting {
+    req: GenRequest,
+    tx: Sender<GenEvent>,
+    enqueued: Instant,
+}
+
+impl Engine {
+    /// Spawn the engine thread around a backend.
+    pub fn start(mut backend: Box<dyn Backend>, cfg: EngineConfig, metrics: Registry) -> Engine {
+        let (tx, rx) = channel::<Msg>();
+        let model = backend.model_name().to_string();
+        let m = metrics.clone();
+        let model2 = model.clone();
+        let handle = std::thread::spawn(move || {
+            run_loop(&mut *backend, cfg, rx, m, &model2);
+        });
+        Engine { tx, handle: Some(handle), model, metrics }
+    }
+
+    /// Submit a request; events stream on the returned handle.
+    pub fn submit(&self, req: GenRequest) -> Generation {
+        let (tx, rx) = channel();
+        if self.tx.send(Msg::Submit(req, tx.clone())).is_err() {
+            let _ = tx.send(GenEvent::Error("engine stopped".into()));
+        }
+        Generation { rx }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn generate(&self, req: GenRequest) -> Result<(String, Usage)> {
+        self.submit(req).collect()
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn stop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn run_loop(
+    backend: &mut dyn Backend,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    metrics: Registry,
+    model: &str,
+) {
+    let geo = backend.geometry().clone();
+    let mut alloc = BlockAllocator::new(geo.n_blocks, geo.block_size, geo.max_blocks);
+    let mut slots: Vec<Option<Slot>> = (0..geo.batch).map(|_| None).collect();
+    let mut waiting: VecDeque<Waiting> = VecDeque::new();
+    let mut next_seq_id = 1u64;
+
+    let queue_gauge = metrics.gauge("llm_waiting_requests", &[("model", model)]);
+    let running_gauge = metrics.gauge("llm_running_requests", &[("model", model)]);
+    let tokens_ctr = metrics.counter("llm_tokens_generated_total", &[("model", model)]);
+    let req_ctr = metrics.counter("llm_requests_total", &[("model", model)]);
+    let rejected_ctr = metrics.counter("llm_requests_rejected_total", &[("model", model)]);
+    let step_hist = metrics.histogram("llm_decode_step_seconds", &[("model", model)]);
+    let ttft_hist = metrics.histogram("llm_ttft_seconds", &[("model", model)]);
+
+    'outer: loop {
+        // --- 1. intake ------------------------------------------------
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(req, tx)) => {
+                    req_ctr.inc();
+                    if waiting.len() >= cfg.max_queue {
+                        rejected_ctr.inc();
+                        let _ = tx.send(GenEvent::Error("queue full".into()));
+                    } else {
+                        waiting.push_back(Waiting { req, tx, enqueued: Instant::now() });
+                    }
+                }
+                Ok(Msg::Stop) => break 'outer,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'outer,
+            }
+        }
+        queue_gauge.set(waiting.len() as i64);
+
+        // --- 2. admission ----------------------------------------------
+        let free_slots: Vec<usize> =
+            (0..geo.batch).filter(|&i| slots[i].is_none()).collect();
+        if !free_slots.is_empty() && !waiting.is_empty() {
+            let mut admissions: Vec<(usize, Waiting, Vec<i32>)> = Vec::new();
+            for &slot_idx in &free_slots {
+                let Some(w) = waiting.front() else { break };
+                // Tokenize; truncate oversized prompts to the last chunk
+                // (prefill HLO shape is fixed).
+                let mut toks = tokenizer::encode_prompt(&w.req.prompt);
+                if toks.len() > geo.prefill_len {
+                    toks.drain(..toks.len() - geo.prefill_len);
+                }
+                if !alloc.can_admit(toks.len()) {
+                    break; // KV pressure: leave in queue (FIFO order kept)
+                }
+                let w = waiting.pop_front().unwrap();
+                admissions.push((slot_idx, w, toks));
+            }
+            if !admissions.is_empty() {
+                // Build one batched prefill over all admitted rows.
+                let mut tokens = vec![0i32; geo.batch * geo.prefill_len];
+                let mut lens = vec![0i32; geo.batch];
+                let mut tables = vec![0i32; geo.batch * geo.max_blocks];
+                // Existing rows keep scratch tables for prefill (nothing is
+                // written for len=0 rows).
+                let mut new_slots: Vec<(usize, Waiting, SeqBlocks, Vec<i32>)> = Vec::new();
+                for (slot_idx, w, toks) in admissions {
+                    let seq = match alloc.create_seq(next_seq_id, toks.len()) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            let _ = w.tx.send(GenEvent::Error(e.to_string()));
+                            continue;
+                        }
+                    };
+                    next_seq_id += 1;
+                    for (i, &t) in toks.iter().enumerate() {
+                        tokens[slot_idx * geo.prefill_len + i] = t;
+                    }
+                    lens[slot_idx] = toks.len() as i32;
+                    let row = alloc.table_row(&seq);
+                    tables[slot_idx * geo.max_blocks..(slot_idx + 1) * geo.max_blocks]
+                        .copy_from_slice(&row);
+                    new_slots.push((slot_idx, w, seq, toks));
+                }
+                if !new_slots.is_empty() {
+                    match backend.prefill(&tokens, &lens, &tables) {
+                        Ok(logits) => {
+                            for (slot_idx, w, seq, toks) in new_slots {
+                                let params = SamplingParams {
+                                    temperature: w.req.temperature,
+                                    top_k: w.req.top_k,
+                                    seed: w.req.seed,
+                                };
+                                let mut rng = Rng::new(w.req.seed ^ seq.seq_id);
+                                let row =
+                                    &logits[slot_idx * geo.vocab..(slot_idx + 1) * geo.vocab];
+                                let first = sample(row, &params, &mut rng);
+                                let mut slot = Slot {
+                                    seq,
+                                    tx: w.tx,
+                                    rng,
+                                    params,
+                                    decoder: StreamDecoder::default(),
+                                    next_token: first,
+                                    completion_tokens: 1,
+                                    max_tokens: w.req.max_tokens.max(1),
+                                    prompt_tokens: toks.len(),
+                                    started: w.enqueued,
+                                    first_token_at: Some(Instant::now()),
+                                };
+                                ttft_hist
+                                    .observe(w.enqueued.elapsed().as_secs_f64());
+                                tokens_ctr.inc();
+                                if first == tokenizer::EOS {
+                                    finish(&mut alloc, slot, "stop");
+                                } else {
+                                    let text = slot.decoder.push(first);
+                                    if !text.is_empty() {
+                                        let _ = slot.tx.send(GenEvent::Token(text));
+                                    }
+                                    if slot.completion_tokens >= slot.max_tokens {
+                                        finish(&mut alloc, slot, "length");
+                                    } else {
+                                        slots[slot_idx] = Some(slot);
+                                    }
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            for (_, w, seq, _) in new_slots {
+                                alloc.free_seq(&seq);
+                                let _ = w.tx.send(GenEvent::Error(e.to_string()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- 3. decode step ---------------------------------------------
+        let active: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
+        let n_active = active.iter().filter(|&&a| a).count();
+        running_gauge.set(n_active as i64);
+        if n_active == 0 {
+            if waiting.is_empty() {
+                // Idle: block briefly for new work.
+                match rx.recv_timeout(cfg.idle_wait) {
+                    Ok(Msg::Submit(req, tx)) => {
+                        req_ctr.inc();
+                        waiting.push_back(Waiting { req, tx, enqueued: Instant::now() });
+                    }
+                    Ok(Msg::Stop) => break 'outer,
+                    Err(_) => {}
+                }
+            }
+            continue;
+        }
+
+        let mut tokens = vec![0i32; geo.batch];
+        let mut positions = vec![0i32; geo.batch];
+        let mut tables = vec![0i32; geo.batch * geo.max_blocks];
+        let mut oom: Vec<usize> = Vec::new();
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            // The fed token occupies position seq.len; grow the page table.
+            match alloc.append_token(&mut s.seq) {
+                Ok(true) => {
+                    tokens[i] = s.next_token;
+                    positions[i] = (s.seq.len - 1) as i32;
+                    let row = alloc.table_row(&s.seq);
+                    tables[i * geo.max_blocks..(i + 1) * geo.max_blocks].copy_from_slice(&row);
+                }
+                Ok(false) | Err(_) => oom.push(i),
+            }
+        }
+        for i in oom {
+            if let Some(s) = slots[i].take() {
+                finish(&mut alloc, s, "kv_exhausted");
+            }
+        }
+
+        let active: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
+        if !active.iter().any(|&a| a) {
+            continue;
+        }
+        let t0 = Instant::now();
+        let logits = match backend.decode(&tokens, &positions, &tables, &active) {
+            Ok(l) => l,
+            Err(e) => {
+                for slot in slots.iter_mut() {
+                    if let Some(s) = slot.take() {
+                        alloc.free_seq(&s.seq);
+                        let _ = s.tx.send(GenEvent::Error(e.to_string()));
+                    }
+                }
+                continue;
+            }
+        };
+        step_hist.observe(t0.elapsed().as_secs_f64());
+
+        for i in 0..geo.batch {
+            let Some(mut s) = slots[i].take() else { continue };
+            let row = &logits[i * geo.vocab..(i + 1) * geo.vocab];
+            let tok = sample(row, &s.params, &mut s.rng);
+            s.completion_tokens += 1;
+            tokens_ctr.inc();
+            if tok == tokenizer::EOS {
+                finish(&mut alloc, s, "stop");
+            } else {
+                let text = s.decoder.push(tok);
+                if !text.is_empty() {
+                    let _ = s.tx.send(GenEvent::Token(text));
+                }
+                s.next_token = tok;
+                if s.completion_tokens >= s.max_tokens {
+                    finish(&mut alloc, s, "length");
+                } else {
+                    slots[i] = Some(s);
+                }
+            }
+        }
+    }
+
+    // Engine stopping: fail the stragglers.
+    for slot in slots.iter_mut() {
+        if let Some(s) = slot.take() {
+            alloc.free_seq(&s.seq);
+            let _ = s.tx.send(GenEvent::Error("engine stopped".into()));
+        }
+    }
+    for w in waiting {
+        let _ = w.tx.send(GenEvent::Error("engine stopped".into()));
+    }
+}
+
+fn finish(alloc: &mut BlockAllocator, mut slot: Slot, reason: &'static str) {
+    let tail = slot.decoder.finish();
+    if !tail.is_empty() {
+        let _ = slot.tx.send(GenEvent::Token(tail));
+    }
+    alloc.free_seq(&slot.seq);
+    let usage = Usage {
+        prompt_tokens: slot.prompt_tokens,
+        completion_tokens: slot.completion_tokens,
+        ttft: slot
+            .first_token_at
+            .map(|t| t.duration_since(slot.started))
+            .unwrap_or_default(),
+        total: slot.started.elapsed(),
+        finish_reason: reason,
+    };
+    let _ = slot.tx.send(GenEvent::Done(usage));
+}
+
+/// Build an engine for a simulated model profile.
+pub fn sim_engine(model: &str, time_scale: f64, metrics: Registry) -> Option<Engine> {
+    let backend = super::backend::SimBackend::by_name(model, time_scale)?;
+    Some(Engine::start(Box::new(backend), EngineConfig::default(), metrics))
+}
+
+/// Build an engine around the real PJRT `tiny` model.
+pub fn pjrt_engine(artifacts_dir: &std::path::Path, model: &str, metrics: Registry) -> Result<Engine> {
+    let backend = super::backend::PjrtBackend::load(artifacts_dir, model)?;
+    Ok(Engine::start(Box::new(backend), EngineConfig::default(), metrics))
+}
+
+pub use self::sim_engine as engine_for_profile;
+
+#[derive(Debug)]
+pub struct EngineInfo {
+    pub model: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llmserver::backend::SimBackend;
+    use std::sync::Arc;
+
+    fn sim() -> Engine {
+        Engine::start(
+            Box::new(SimBackend::by_name("intel-neural-7b", 0.0).unwrap()),
+            EngineConfig::default(),
+            Registry::new(),
+        )
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let engine = sim();
+        let (text, usage) = engine
+            .generate(GenRequest { prompt: "count from 1 to 10".into(), ..Default::default() })
+            .unwrap();
+        assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
+        assert_eq!(usage.finish_reason, "stop");
+        assert!(usage.prompt_tokens > 10);
+        assert_eq!(usage.completion_tokens, 21, "20 bytes + EOS");
+    }
+
+    #[test]
+    fn max_tokens_truncates() {
+        let engine = sim();
+        let (text, usage) = engine
+            .generate(GenRequest { prompt: "x".into(), max_tokens: 5, ..Default::default() })
+            .unwrap();
+        assert_eq!(text, "1 2 3");
+        assert_eq!(usage.finish_reason, "length");
+        assert_eq!(usage.completion_tokens, 5);
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let engine = Arc::new(sim());
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let e = engine.clone();
+                std::thread::spawn(move || {
+                    let (text, usage) = e
+                        .generate(GenRequest {
+                            prompt: format!("req {i}"),
+                            ..Default::default()
+                        })
+                        .unwrap();
+                    assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
+                    assert_eq!(usage.finish_reason, "stop");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = engine.metrics().render();
+        assert!(m.contains("llm_requests_total{model=\"intel-neural-7b\"} 32"), "{m}");
+    }
+
+    #[test]
+    fn tokens_stream_incrementally() {
+        let engine = sim();
+        let gen = engine.submit(GenRequest { prompt: "hi".into(), ..Default::default() });
+        let mut events = Vec::new();
+        while let Ok(ev) = gen.rx.recv() {
+            let done = matches!(ev, GenEvent::Done(_));
+            events.push(ev);
+            if done {
+                break;
+            }
+        }
+        let token_events =
+            events.iter().filter(|e| matches!(e, GenEvent::Token(_))).count();
+        assert!(token_events >= 10, "got {token_events} token events");
+    }
+
+    #[test]
+    fn engine_stop_fails_inflight_cleanly() {
+        let mut engine = sim();
+        let gen = engine.submit(GenRequest { prompt: "x".into(), ..Default::default() });
+        engine.stop();
+        // Either completed before the stop or errored; never hangs.
+        let mut done = false;
+        while let Ok(ev) = gen.rx.recv() {
+            if matches!(ev, GenEvent::Done(_) | GenEvent::Error(_)) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done || gen.rx.recv().is_err());
+    }
+
+
+}

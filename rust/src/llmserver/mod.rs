@@ -1,0 +1,32 @@
+//! vLLM-like LLM inference server (§5.7 of the paper).
+//!
+//! The paper serves models with vLLM; this module rebuilds the pieces of
+//! vLLM the evaluation touches, sized to this testbed:
+//!
+//! - [`kvcache`] — the paged KV-cache block allocator (PagedAttention's
+//!   memory manager): pages from a shared pool are assigned to sequences on
+//!   demand and recycled on completion, near-zero fragmentation.
+//! - [`engine`] — continuous batching: waiting requests are admitted into
+//!   free batch slots between decode steps; every step serves every active
+//!   sequence.
+//! - [`backend`] — the compute: [`backend::PjrtBackend`] executes the real
+//!   AOT-compiled JAX/Pallas model (the `tiny` artifact) through PJRT;
+//!   [`backend::SimBackend`] is a timing model calibrated to Table 2's
+//!   throughput rows for the paper's production models (7B/8x7B/72B — no
+//!   open checkpoints offline, and no H100s).
+//! - [`tokenizer`] — byte-level tokenizer matching the Python model's vocab.
+//! - [`sampler`] — greedy / temperature / top-k sampling.
+//! - [`api`] — the OpenAI-compatible HTTP surface (`/v1/chat/completions`
+//!   with SSE streaming, `/v1/models`, `/health`) that makes the server a
+//!   drop-in target for the gateway, exactly vLLM's role in Figure 1.
+
+pub mod api;
+pub mod backend;
+pub mod engine;
+pub mod kvcache;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use api::LlmHttpServer;
+pub use backend::{Backend, PjrtBackend, SimBackend, SimProfile};
+pub use engine::{Engine, EngineConfig, GenEvent, GenRequest, Generation, Usage};

@@ -1,0 +1,108 @@
+//! Token sampling: greedy, temperature, top-k.
+
+use crate::util::rng::Rng;
+
+/// Per-request sampling parameters (OpenAI API surface).
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax.
+    pub temperature: f64,
+    /// 0 = no truncation.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// Sample one token id from a logits row.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Collect (logit, id), optionally truncate to top-k, then softmax-sample.
+    let mut items: Vec<(f32, usize)> =
+        logits.iter().copied().zip(0..logits.len()).collect();
+    if params.top_k > 0 && params.top_k < items.len() {
+        items.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        items.truncate(params.top_k);
+    }
+    let inv_t = 1.0 / params.temperature as f32;
+    let max = items.iter().map(|(l, _)| *l).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> =
+        items.iter().map(|(l, _)| (((l - max) * inv_t) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut target = rng.f64() * total;
+    for ((_, id), w) in items.iter().zip(&weights) {
+        target -= w;
+        if target <= 0.0 {
+            return *id as i32;
+        }
+    }
+    items.last().map(|(_, id)| *id as i32).unwrap_or(0)
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 5.0, -2.0, 4.9];
+        assert_eq!(sample(&logits, &SamplingParams::default(), &mut Rng::new(0)), 1);
+    }
+
+    #[test]
+    fn temperature_zero_matches_argmax() {
+        let logits: Vec<f32> = (0..100).map(|i| ((i * 37) % 83) as f32).collect();
+        assert_eq!(
+            sample(&logits, &SamplingParams::default(), &mut Rng::new(1)),
+            argmax(&logits)
+        );
+    }
+
+    #[test]
+    fn high_temperature_explores() {
+        let logits = vec![1.0f32; 50];
+        let mut rng = Rng::new(2);
+        let p = SamplingParams { temperature: 1.0, top_k: 0, seed: 0 };
+        let seen: std::collections::BTreeSet<i32> =
+            (0..200).map(|_| sample(&logits, &p, &mut rng)).collect();
+        assert!(seen.len() > 20, "uniform logits must sample many ids, got {}", seen.len());
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut logits = vec![0.0f32; 20];
+        logits[3] = 10.0;
+        logits[7] = 9.0;
+        let p = SamplingParams { temperature: 2.0, top_k: 2, seed: 0 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = sample(&logits, &p, &mut rng);
+            assert!(t == 3 || t == 7, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut logits = vec![0.0f32; 10];
+        logits[4] = 3.0;
+        let p = SamplingParams { temperature: 0.1, top_k: 0, seed: 0 };
+        let mut rng = Rng::new(4);
+        let hits = (0..100).filter(|_| sample(&logits, &p, &mut rng) == 4).count();
+        assert!(hits > 95, "hits={hits}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Byte-level tokenizer matching `python/compile/model.py`'s vocabulary.
+//!
+//! Tokens 0..=255 are raw bytes; 256..=259 are BOS/EOS/PAD/UNK. Chosen over
+//! BPE so the Rust and Python sides agree by construction (no merges file),
+//! while still exercising real encode/decode + incremental UTF-8 assembly
+//! on the streaming path.
+
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const UNK: i32 = 259;
+pub const VOCAB: usize = 260;
+
+/// Encode text to token ids (no specials).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+/// Encode with BOS prepended (prompt form).
+pub fn encode_prompt(text: &str) -> Vec<i32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| b as i32));
+    out
+}
+
+/// Decode token ids, skipping specials.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> =
+        tokens.iter().filter(|&&t| (0..256).contains(&t)).map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Incremental decoder for token streaming: buffers bytes until they form
+/// complete UTF-8 sequences so multi-byte characters never split across SSE
+/// events.
+#[derive(Default)]
+pub struct StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    /// Push one token; returns any newly-completed text.
+    pub fn push(&mut self, token: i32) -> String {
+        if !(0..256).contains(&token) {
+            return String::new();
+        }
+        self.pending.push(token as u8);
+        // Longest valid UTF-8 prefix.
+        match std::str::from_utf8(&self.pending) {
+            Ok(s) => {
+                let out = s.to_string();
+                self.pending.clear();
+                out
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                if valid > 0 {
+                    let out =
+                        String::from_utf8(self.pending.drain(..valid).collect()).unwrap();
+                    out
+                } else if self.pending.len() >= 4 {
+                    // Invalid sequence: flush lossily rather than stall.
+                    let out = String::from_utf8_lossy(&self.pending).into_owned();
+                    self.pending.clear();
+                    out
+                } else {
+                    String::new()
+                }
+            }
+        }
+    }
+
+    /// Flush any trailing invalid bytes (end of generation).
+    pub fn finish(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "Count from 1 to 10.";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_unicode() {
+        let text = "Göttingen — GWDG 🚀";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn prompt_has_bos_and_specials_skipped() {
+        let toks = encode_prompt("hi");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(decode(&toks), "hi");
+        assert_eq!(decode(&[BOS, 104, 105, EOS, PAD]), "hi");
+    }
+
+    #[test]
+    fn stream_decoder_handles_multibyte_split() {
+        let mut d = StreamDecoder::default();
+        let bytes = "é🚀x".as_bytes();
+        let mut out = String::new();
+        // Feed byte-by-byte; no intermediate garbage must appear.
+        for &b in bytes {
+            let chunk = d.push(b as i32);
+            assert!(!chunk.contains('\u{FFFD}'));
+            out.push_str(&chunk);
+        }
+        out.push_str(&d.finish());
+        assert_eq!(out, "é🚀x");
+    }
+
+    #[test]
+    fn stream_decoder_skips_specials_and_flushes_invalid() {
+        let mut d = StreamDecoder::default();
+        assert_eq!(d.push(EOS), "");
+        assert_eq!(d.push(0xC3), ""); // dangling continuation start
+        assert_eq!(d.finish(), "\u{FFFD}");
+    }
+}

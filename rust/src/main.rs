@@ -1,0 +1,89 @@
+//! `chat-hpc` launcher: boot the full Figure-1 stack and serve until
+//! interrupted.
+//!
+//! ```bash
+//! chat-hpc serve --models intel-neural-7b,mixtral-8x7b --keepalive-ms 5000
+//! chat-hpc serve --models tiny            # the real PJRT model
+//! chat-hpc models                          # list known model profiles
+//! ```
+
+use std::time::Duration;
+
+use chat_hpc::llmserver::SimProfile;
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{ChatAiStack, StackConfig};
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("models") => {
+            println!("simulated profiles: {:?}", SimProfile::known_models());
+            println!("real PJRT models:   [\"tiny\"] (requires `make artifacts`)");
+            Ok(())
+        }
+        Some("serve") => {
+            let models = flag(&args, "--models").unwrap_or_else(|| "intel-neural-7b".into());
+            let keepalive_ms: u64 = flag(&args, "--keepalive-ms")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(5000);
+            let time_scale: f64 = flag(&args, "--time-scale")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0);
+
+            let services: Vec<ServiceSpec> = models
+                .split(',')
+                .map(|m| {
+                    if m == "tiny" {
+                        ServiceSpec::pjrt_tiny()
+                    } else {
+                        ServiceSpec::sim(m, time_scale)
+                    }
+                })
+                .collect();
+            let names: Vec<String> = services.iter().map(|s| s.name.clone()).collect();
+
+            println!("booting chat-hpc with services {names:?} ...");
+            let stack = ChatAiStack::start(StackConfig {
+                services,
+                keepalive: Duration::from_millis(keepalive_ms),
+                load_time_scale: 0.01,
+                ..Default::default()
+            })?;
+            for name in &names {
+                stack.wait_ready(name, Duration::from_secs(300))?;
+                println!("  {name}: ready");
+            }
+            println!("gateway:  {}", stack.gateway_url());
+            println!("API key:  {}", stack.api_key);
+            println!("web app:  {}/chat", stack.gateway_url());
+            println!("metrics:  {}/metrics", stack.gateway_url());
+            println!("\nexample call:");
+            println!(
+                "  curl -s {}/v1/m/{}/ -H 'authorization: Bearer {}' \\",
+                stack.gateway_url(),
+                names[0],
+                stack.api_key
+            );
+            println!(
+                "    -d '{{\"messages\":[{{\"role\":\"user\",\"content\":\"count from 1 to 10\"}}]}}'"
+            );
+            println!("\nserving; Ctrl-C to stop.");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        _ => {
+            eprintln!(
+                "usage: chat-hpc <serve|models> [--models a,b] [--keepalive-ms N] [--time-scale F]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas model.
+//!
+//! This is the only place the Rust coordinator touches XLA. `make artifacts`
+//! (the build-time Python pass) leaves HLO *text* + a flat weights vector +
+//! a manifest under `artifacts/`; this module compiles the HLO once on a
+//! CPU PJRT client and serves `prefill` / `decode` calls from the engine hot
+//! path. Python is never loaded at runtime.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Static model geometry from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub block_size: usize,
+    pub n_blocks: usize,
+    pub max_blocks: usize,
+    pub max_seq: usize,
+    pub prefill_hlo: PathBuf,
+    pub decode_hlo: PathBuf,
+    pub weights: PathBuf,
+    pub golden: Option<PathBuf>,
+}
+
+impl ModelSpec {
+    fn pool_dims(&self) -> [usize; 5] {
+        [self.n_layers, self.n_blocks, self.block_size, self.n_heads, self.head_dim]
+    }
+
+    fn pool_len(&self) -> usize {
+        self.pool_dims().iter().product()
+    }
+}
+
+/// Parse `manifest.json` and resolve per-model file paths.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ModelSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+        format!("read {}/manifest.json — run `make artifacts` first", dir.display())
+    })?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+    let models = j
+        .get("models")
+        .and_then(|m| m.as_arr())
+        .ok_or_else(|| anyhow!("manifest: no models"))?;
+    let mut out = Vec::new();
+    for m in models {
+        let files = m.get("files").ok_or_else(|| anyhow!("manifest: no files"))?;
+        let path = |key: &str| -> Result<PathBuf> {
+            Ok(dir.join(
+                files
+                    .get(key)
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("manifest: missing file {key}"))?,
+            ))
+        };
+        out.push(ModelSpec {
+            name: m.str_or("name", "?").to_string(),
+            param_count: m.u64_or("param_count", 0) as usize,
+            vocab: m.u64_or("vocab", 0) as usize,
+            d_model: m.u64_or("d_model", 0) as usize,
+            n_layers: m.u64_or("n_layers", 0) as usize,
+            n_heads: m.u64_or("n_heads", 0) as usize,
+            head_dim: m.u64_or("head_dim", 0) as usize,
+            batch: m.u64_or("batch", 0) as usize,
+            prefill_len: m.u64_or("prefill_len", 0) as usize,
+            block_size: m.u64_or("block_size", 0) as usize,
+            n_blocks: m.u64_or("n_blocks", 0) as usize,
+            max_blocks: m.u64_or("max_blocks", 0) as usize,
+            max_seq: m.u64_or("max_seq", 0) as usize,
+            prefill_hlo: path("prefill")?,
+            decode_hlo: path("decode")?,
+            weights: path("weights")?,
+            golden: path("golden").ok(),
+        });
+    }
+    Ok(out)
+}
+
+/// Mutable per-model inference state: the paged KV pools.
+///
+/// Held as host literals between steps (the published `xla` crate cannot
+/// split result tuples into reusable device buffers, so pools round-trip
+/// through the host — measured in EXPERIMENTS.md §Perf).
+pub struct KvState {
+    k_pools: xla::Literal,
+    v_pools: xla::Literal,
+}
+
+/// A compiled model: PJRT executables + host-resident weights literal.
+///
+/// Thread-safety: the `xla` crate wrappers are not `Sync`; the engine
+/// serializes calls through the inner mutex (one model-runner step at a
+/// time — the same discipline as vLLM's model runner).
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    inner: Mutex<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    _client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    weights: xla::Literal,
+}
+
+// SAFETY: all raw PJRT handles are only touched under the Mutex; the CPU
+// client itself is thread-safe.
+unsafe impl Send for RuntimeInner {}
+unsafe impl Send for KvState {}
+
+/// Result of one prefill/decode execution.
+pub struct StepOutput {
+    /// Row-major `[batch, vocab]` logits.
+    pub logits: Vec<f32>,
+}
+
+impl ModelRuntime {
+    /// Compile the model's HLO on a fresh CPU PJRT client and load weights.
+    pub fn load(spec: ModelSpec) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let prefill_proto =
+            xla::HloModuleProto::from_text_file(&spec.prefill_hlo).map_err(wrap)?;
+        let decode_proto =
+            xla::HloModuleProto::from_text_file(&spec.decode_hlo).map_err(wrap)?;
+        let prefill_exe = client
+            .compile(&xla::XlaComputation::from_proto(&prefill_proto))
+            .map_err(wrap)?;
+        let decode_exe = client
+            .compile(&xla::XlaComputation::from_proto(&decode_proto))
+            .map_err(wrap)?;
+
+        let raw = std::fs::read(&spec.weights)
+            .with_context(|| format!("read {}", spec.weights.display()))?;
+        if raw.len() != spec.param_count * 4 {
+            bail!("weights size mismatch: {} bytes for {} params", raw.len(), spec.param_count);
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let weights = xla::Literal::vec1(&floats);
+
+        Ok(ModelRuntime {
+            spec,
+            inner: Mutex::new(RuntimeInner { _client: client, prefill_exe, decode_exe, weights }),
+        })
+    }
+
+    /// Load by model name from an artifacts directory.
+    pub fn load_from_dir(dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let specs = load_manifest(dir)?;
+        let spec = specs
+            .into_iter()
+            .find(|s| s.name == model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?;
+        ModelRuntime::load(spec)
+    }
+
+    /// Zero-initialised KV pools.
+    pub fn fresh_kv(&self) -> Result<KvState> {
+        let n = self.spec.pool_len();
+        let dims: Vec<i64> = self.spec.pool_dims().iter().map(|&d| d as i64).collect();
+        let zeros = vec![0f32; n];
+        let k = xla::Literal::vec1(&zeros).reshape(&dims).map_err(wrap)?;
+        let v = xla::Literal::vec1(&zeros).reshape(&dims).map_err(wrap)?;
+        Ok(KvState { k_pools: k, v_pools: v })
+    }
+
+    /// Prefill a prompt chunk.
+    ///
+    /// `tokens`: `[batch * prefill_len]` row-major (padded). `prompt_lens`:
+    /// `[batch]`, entries ≥ 1 (inactive rows should point at scratch blocks).
+    /// `block_tables`: `[batch * max_blocks]`.
+    pub fn prefill(
+        &self,
+        kv: &mut KvState,
+        tokens: &[i32],
+        prompt_lens: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput> {
+        let s = &self.spec;
+        if tokens.len() != s.batch * s.prefill_len
+            || prompt_lens.len() != s.batch
+            || block_tables.len() != s.batch * s.max_blocks
+        {
+            bail!("prefill: bad input shapes");
+        }
+        let inner = self.inner.lock().unwrap();
+        let tokens_lit = xla::Literal::vec1(tokens)
+            .reshape(&[s.batch as i64, s.prefill_len as i64])
+            .map_err(wrap)?;
+        let lens_lit = xla::Literal::vec1(prompt_lens);
+        let bt_lit = xla::Literal::vec1(block_tables)
+            .reshape(&[s.batch as i64, s.max_blocks as i64])
+            .map_err(wrap)?;
+        let args = [&inner.weights, &tokens_lit, &lens_lit, &kv.k_pools, &kv.v_pools, &bt_lit];
+        let result = inner.prefill_exe.execute::<&xla::Literal>(&args).map_err(wrap)?;
+        self.unpack(kv, result)
+    }
+
+    /// One decode step for the whole batch.
+    pub fn decode(
+        &self,
+        kv: &mut KvState,
+        tokens: &[i32],
+        positions: &[i32],
+        block_tables: &[i32],
+    ) -> Result<StepOutput> {
+        let s = &self.spec;
+        if tokens.len() != s.batch
+            || positions.len() != s.batch
+            || block_tables.len() != s.batch * s.max_blocks
+        {
+            bail!("decode: bad input shapes");
+        }
+        let inner = self.inner.lock().unwrap();
+        let tokens_lit = xla::Literal::vec1(tokens);
+        let pos_lit = xla::Literal::vec1(positions);
+        let bt_lit = xla::Literal::vec1(block_tables)
+            .reshape(&[s.batch as i64, s.max_blocks as i64])
+            .map_err(wrap)?;
+        let args = [&inner.weights, &tokens_lit, &pos_lit, &kv.k_pools, &kv.v_pools, &bt_lit];
+        let result = inner.decode_exe.execute::<&xla::Literal>(&args).map_err(wrap)?;
+        self.unpack(kv, result)
+    }
+
+    fn unpack(&self, kv: &mut KvState, result: Vec<Vec<xla::PjRtBuffer>>) -> Result<StepOutput> {
+        let buf = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        // Lowered with return_tuple=True: a single 3-tuple output.
+        let tuple = buf.to_literal_sync().map_err(wrap)?;
+        let (logits_lit, k_lit, v_lit) = tuple.to_tuple3().map_err(wrap)?;
+        let logits = logits_lit.to_vec::<f32>().map_err(wrap)?;
+        if logits.len() != self.spec.batch * self.spec.vocab {
+            bail!("logits shape mismatch: {}", logits.len());
+        }
+        kv.k_pools = k_lit;
+        kv.v_pools = v_lit;
+        Ok(StepOutput { logits })
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// Default artifacts directory: `$CHAT_HPC_ARTIFACTS` or the nearest
+/// ancestor `artifacts/` containing a manifest.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CHAT_HPC_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let candidate = d.join("artifacts");
+            if candidate.join("manifest.json").exists() {
+                return candidate;
+            }
+            if !d.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> ModelRuntime {
+        ModelRuntime::load_from_dir(&artifacts_dir(), "tiny")
+            .expect("artifacts missing — run `make artifacts`")
+    }
+
+    /// Deterministic block tables matching python/compile/aot.py make_golden.
+    fn golden_block_tables(spec: &ModelSpec) -> Vec<i32> {
+        let mut bt = vec![0i32; spec.batch * spec.max_blocks];
+        let mut next = 1;
+        for b in 0..spec.batch {
+            for j in 0..spec.max_blocks {
+                bt[b * spec.max_blocks + j] = next;
+                next += 1;
+            }
+        }
+        bt
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let specs = load_manifest(&artifacts_dir()).unwrap();
+        let tiny = specs.iter().find(|s| s.name == "tiny").unwrap();
+        assert!(tiny.param_count > 100_000);
+        assert_eq!(tiny.max_seq, tiny.block_size * tiny.max_blocks);
+    }
+
+    #[test]
+    fn prefill_and_decode_match_jax_golden() {
+        // The cross-language anchor: PJRT execution from Rust must
+        // reproduce the logits JAX computed at AOT time.
+        let rt = runtime();
+        let golden_path = rt.spec.golden.clone().expect("golden file in manifest");
+        let golden = Json::parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+        let spec = rt.spec.clone();
+
+        let prompts = golden.get("prompts").unwrap().as_arr().unwrap();
+        let mut tokens = vec![0i32; spec.batch * spec.prefill_len];
+        let mut lens = vec![0i32; spec.batch];
+        for (b, p) in prompts.iter().enumerate() {
+            let p = p.as_arr().unwrap();
+            for (i, t) in p.iter().enumerate() {
+                tokens[b * spec.prefill_len + i] = t.as_i64().unwrap() as i32;
+            }
+            lens[b] = p.len() as i32;
+        }
+        let bt_json = golden.get("block_tables").unwrap().as_arr().unwrap();
+        let mut bt = Vec::new();
+        for row in bt_json {
+            for v in row.as_arr().unwrap() {
+                bt.push(v.as_i64().unwrap() as i32);
+            }
+        }
+        assert_eq!(bt, golden_block_tables(&spec));
+
+        let mut kv = rt.fresh_kv().unwrap();
+        let out = rt.prefill(&mut kv, &tokens, &lens, &bt).unwrap();
+
+        let steps = golden.get("steps").unwrap().as_arr().unwrap();
+        let check = |logits: &[f32], step: &Json| {
+            let want = step.get("logits8").unwrap().as_arr().unwrap();
+            for (b, row) in want.iter().enumerate() {
+                for (i, w) in row.as_arr().unwrap().iter().enumerate() {
+                    let got = logits[b * spec.vocab + i];
+                    let want = w.as_f64().unwrap() as f32;
+                    assert!(
+                        (got - want).abs() < 2e-3 + want.abs() * 2e-3,
+                        "logits[{b},{i}]: got {got}, want {want}"
+                    );
+                }
+            }
+        };
+        check(&out.logits, &steps[0]);
+
+        let mut logits = out.logits;
+        for step in &steps[1..] {
+            let fed: Vec<i32> = step
+                .get("fed_tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect();
+            let pos: Vec<i32> = step
+                .get("positions")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap() as i32)
+                .collect();
+            // Greedy argmax over the previous logits must equal the fed
+            // token (same decode rule as make_golden).
+            for b in 0..spec.batch {
+                let row = &logits[b * spec.vocab..(b + 1) * spec.vocab];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32;
+                assert_eq!(argmax, fed[b], "greedy token diverged at row {b}");
+            }
+            let out = rt.decode(&mut kv, &fed, &pos, &bt).unwrap();
+            check(&out.logits, step);
+            logits = out.logits;
+        }
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let rt = runtime();
+        let spec = rt.spec.clone();
+        let bt = golden_block_tables(&spec);
+        let mut tokens = vec![0i32; spec.batch * spec.prefill_len];
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = (i % 50) as i32 + 1;
+        }
+        let lens = vec![4i32; spec.batch];
+
+        let run = || {
+            let mut kv = rt.fresh_kv().unwrap();
+            let _ = rt.prefill(&mut kv, &tokens, &lens, &bt).unwrap();
+            let out = rt
+                .decode(&mut kv, &vec![9i32; spec.batch], &vec![4i32; spec.batch], &bt)
+                .unwrap();
+            out.logits
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let rt = runtime();
+        let mut kv = rt.fresh_kv().unwrap();
+        assert!(rt.decode(&mut kv, &[1], &[0], &[0]).is_err());
+        assert!(rt.prefill(&mut kv, &[1, 2], &[1], &[0]).is_err());
+    }
+}

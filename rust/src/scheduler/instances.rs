@@ -1,0 +1,209 @@
+//! Instance lifecycle: what actually runs inside a service job.
+//!
+//! When the Slurm simulator starts a service job, something must listen on
+//! the job's `(node, port)` and serve inference. [`RealLauncher`] boots a
+//! real [`LlmHttpServer`] (SimBackend for the paper's big models, PJRT for
+//! `tiny`) after the model's simulated load time — reproducing the paper's
+//! cold-start behaviour (§7.1.1: up to ten minutes to load a 70B model,
+//! during which the readiness probe fails). [`MockLauncher`] is the
+//! deterministic stand-in for scheduler unit tests.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::llmserver::backend::{PjrtBackend, SimBackend};
+use crate::llmserver::engine::{Engine, EngineConfig};
+use crate::llmserver::LlmHttpServer;
+use crate::slurm::JobId;
+use crate::util::http;
+use crate::util::metrics::Registry;
+
+use super::ServiceSpec;
+
+/// Which compute backs a service instance.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// Calibrated timing model (`SimProfile::by_name`), with a wall-time
+    /// scale factor (1.0 = realistic, small = sped-up benches).
+    Sim { profile: String, time_scale: f64 },
+    /// The real AOT-compiled model through PJRT.
+    Pjrt { model: String },
+}
+
+/// Launches/terminates whatever serves a job, and probes readiness.
+pub trait InstanceLauncher: Send + Sync {
+    fn launch(&self, job_id: JobId, service: &ServiceSpec, node: &str, port: u16);
+    fn terminate(&self, job_id: JobId);
+    /// Health probe (the scheduler calls this until it succeeds, then marks
+    /// the instance ready in the routing table).
+    fn probe(&self, addr: &str) -> bool;
+}
+
+/// Real instances: an engine + HTTP server per job.
+pub struct RealLauncher {
+    metrics: Registry,
+    /// Model-load wall-time scale (1.0 = realistic cold starts).
+    load_time_scale: f64,
+    artifacts_dir: std::path::PathBuf,
+    state: Mutex<BTreeMap<JobId, Arc<InstanceState>>>,
+}
+
+struct InstanceState {
+    cancelled: AtomicBool,
+    server: Mutex<Option<LlmHttpServer>>,
+}
+
+impl RealLauncher {
+    pub fn new(metrics: Registry, load_time_scale: f64) -> RealLauncher {
+        RealLauncher {
+            metrics,
+            load_time_scale,
+            artifacts_dir: crate::runtime::artifacts_dir(),
+            state: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn with_artifacts(mut self, dir: std::path::PathBuf) -> RealLauncher {
+        self.artifacts_dir = dir;
+        self
+    }
+}
+
+impl InstanceLauncher for RealLauncher {
+    fn launch(&self, job_id: JobId, service: &ServiceSpec, _node: &str, port: u16) {
+        let st = Arc::new(InstanceState {
+            cancelled: AtomicBool::new(false),
+            server: Mutex::new(None),
+        });
+        self.state.lock().unwrap().insert(job_id, st.clone());
+        let backend = service.backend.clone();
+        let metrics = self.metrics.clone();
+        let load_scale = self.load_time_scale;
+        let artifacts = self.artifacts_dir.clone();
+        let service_name = service.name.clone();
+        std::thread::spawn(move || {
+            // Simulated model-load delay: the port stays unbound, so
+            // readiness probes get connection-refused — the cold start.
+            let load_secs = match &backend {
+                BackendKind::Sim { profile, .. } => crate::llmserver::SimProfile::by_name(profile)
+                    .map(|p| p.load_secs)
+                    .unwrap_or(10.0),
+                BackendKind::Pjrt { .. } => 2.0,
+            };
+            let delay = Duration::from_secs_f64(load_secs * load_scale);
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+            if st.cancelled.load(Ordering::SeqCst) {
+                return;
+            }
+            let engine = match &backend {
+                BackendKind::Sim { profile, time_scale } => {
+                    match SimBackend::by_name(profile, *time_scale) {
+                        Some(b) => Engine::start(Box::new(b), EngineConfig::default(), metrics),
+                        None => {
+                            crate::log_warn!("launcher", "unknown profile {profile}");
+                            return;
+                        }
+                    }
+                }
+                BackendKind::Pjrt { model } => match PjrtBackend::load(&artifacts, model) {
+                    Ok(b) => Engine::start(Box::new(b), EngineConfig::default(), metrics),
+                    Err(e) => {
+                        crate::log_warn!("launcher", "pjrt load failed: {e}");
+                        return;
+                    }
+                },
+            };
+            match LlmHttpServer::start_on(&format!("127.0.0.1:{port}"), engine) {
+                Ok(server) => {
+                    crate::log_info!(
+                        "launcher",
+                        "job {job_id} ({service_name}) serving on :{port}"
+                    );
+                    let mut slot = st.server.lock().unwrap();
+                    if st.cancelled.load(Ordering::SeqCst) {
+                        return; // terminated during bind; drop the server
+                    }
+                    *slot = Some(server);
+                }
+                Err(e) => crate::log_warn!("launcher", "bind :{port} failed: {e}"),
+            }
+        });
+    }
+
+    fn terminate(&self, job_id: JobId) {
+        if let Some(st) = self.state.lock().unwrap().remove(&job_id) {
+            st.cancelled.store(true, Ordering::SeqCst);
+            if let Some(mut server) = st.server.lock().unwrap().take() {
+                server.server.stop();
+            }
+        }
+    }
+
+    fn probe(&self, addr: &str) -> bool {
+        http::request_timeout(
+            "GET",
+            &format!("http://{addr}/health"),
+            &[],
+            &[],
+            Duration::from_millis(500),
+        )
+        .map(|r| r.status == 200)
+        .unwrap_or(false)
+    }
+}
+
+/// Test double: records calls; readiness is scripted.
+#[derive(Default)]
+pub struct MockLauncher {
+    pub launched: Mutex<Vec<(JobId, String, String, u16)>>,
+    pub terminated: Mutex<Vec<JobId>>,
+    /// Addresses that should probe healthy.
+    pub healthy: Mutex<std::collections::BTreeSet<String>>,
+}
+
+impl MockLauncher {
+    pub fn new() -> Arc<MockLauncher> {
+        Arc::new(MockLauncher::default())
+    }
+
+    pub fn set_healthy(&self, addr: &str, healthy: bool) {
+        let mut h = self.healthy.lock().unwrap();
+        if healthy {
+            h.insert(addr.to_string());
+        } else {
+            h.remove(addr);
+        }
+    }
+
+    /// Mark every launched instance healthy (instant model load).
+    pub fn all_healthy(&self) {
+        let launched = self.launched.lock().unwrap();
+        let mut h = self.healthy.lock().unwrap();
+        for (_, _, _, port) in launched.iter() {
+            h.insert(format!("127.0.0.1:{port}"));
+        }
+    }
+}
+
+impl InstanceLauncher for MockLauncher {
+    fn launch(&self, job_id: JobId, service: &ServiceSpec, node: &str, port: u16) {
+        self.launched.lock().unwrap().push((
+            job_id,
+            service.name.clone(),
+            node.to_string(),
+            port,
+        ));
+    }
+
+    fn terminate(&self, job_id: JobId) {
+        self.terminated.lock().unwrap().push(job_id);
+    }
+
+    fn probe(&self, addr: &str) -> bool {
+        self.healthy.lock().unwrap().contains(addr)
+    }
+}

@@ -1,0 +1,582 @@
+//! The Slurm-native service scheduler — the paper's core contribution (§5.6).
+//!
+//! A "scheduler script" runs on the HPC service node, triggered by every
+//! keepalive ping arriving over the SSH connection (every 5 s). Each run:
+//!
+//! 1. takes the lock (only one scheduler instance at a time — the paper
+//!    uses a lock file);
+//! 2. reconciles Slurm state: consumes job events, launches/terminates
+//!    instance processes, updates the routing table;
+//! 3. per service: samples demand, computes the desired instance count from
+//!    the windowed average concurrency, submits missing jobs (`sbatch`)
+//!    with scheduler-allocated random ports, cancels/expires excess ones,
+//!    renews jobs approaching their walltime (the "continuously replaced or
+//!    extended" requirement of §4), and probes not-yet-ready instances.
+//!
+//! Everything is driven by explicit clock reads so the same code runs under
+//! simulated months and live wall time.
+
+pub mod instances;
+pub mod routing;
+
+pub use instances::{BackendKind, InstanceLauncher, MockLauncher, RealLauncher};
+pub use routing::{DemandTracker, Instance, RoutingTable};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::slurm::{JobId, JobInfo, JobSpec, JobState, JobUpdate, SlurmSim};
+use crate::util::clock::Clock;
+use crate::util::metrics::Registry;
+use crate::util::rng::Rng;
+
+/// Declarative description of one service the scheduler maintains.
+#[derive(Debug, Clone)]
+pub struct ServiceSpec {
+    /// Service/model name (also the route name at the gateway).
+    pub name: String,
+    pub min_instances: u32,
+    pub max_instances: u32,
+    /// Autoscaling target: desired = ceil(avg_concurrency / this).
+    pub target_concurrency: f64,
+    /// Resources one instance requests from Slurm.
+    pub gpus: u32,
+    pub cpus: u32,
+    pub mem_gb: u32,
+    /// Service-job walltime; jobs are renewed `renew_margin` before expiry.
+    pub walltime: Duration,
+    pub backend: BackendKind,
+}
+
+impl ServiceSpec {
+    /// A simulated production model with paper-like resources.
+    pub fn sim(name: &str, time_scale: f64) -> ServiceSpec {
+        let profile = crate::llmserver::SimProfile::by_name(name)
+            .unwrap_or_else(|| panic!("unknown sim profile {name}"));
+        ServiceSpec {
+            name: name.to_string(),
+            min_instances: 1,
+            max_instances: 4,
+            target_concurrency: 4.0,
+            gpus: profile.gpus,
+            cpus: 8,
+            mem_gb: 64,
+            walltime: Duration::from_secs(12 * 3600),
+            backend: BackendKind::Sim { profile: name.to_string(), time_scale },
+        }
+    }
+
+    /// The real PJRT-served tiny model.
+    pub fn pjrt_tiny() -> ServiceSpec {
+        ServiceSpec {
+            name: "tiny".into(),
+            min_instances: 1,
+            max_instances: 2,
+            target_concurrency: 4.0,
+            gpus: 1,
+            cpus: 4,
+            mem_gb: 16,
+            walltime: Duration::from_secs(12 * 3600),
+            backend: BackendKind::Pjrt { model: "tiny".into() },
+        }
+    }
+}
+
+/// Scheduler tuning.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Demand averaging window (§5.6 "predefined time window").
+    pub demand_window: Duration,
+    /// Renew service jobs when less than this walltime remains.
+    pub renew_margin: Duration,
+    /// Service jobs run at elevated priority so they outrank batch (§7.1.3).
+    pub job_priority: i64,
+    /// Functional account jobs are submitted under (§4 Monitoring).
+    pub account: String,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            demand_window: Duration::from_secs(60),
+            renew_margin: Duration::from_secs(300),
+            job_priority: 100,
+            account: "svc-chat-ai".into(),
+        }
+    }
+}
+
+/// Outcome of one scheduler run (observability + tests).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RunReport {
+    pub skipped_locked: bool,
+    pub submitted: Vec<JobId>,
+    pub cancelled: Vec<JobId>,
+    pub renewed: Vec<JobId>,
+    pub became_ready: Vec<JobId>,
+}
+
+/// The scheduler itself.
+pub struct ServiceScheduler {
+    slurm: Arc<Mutex<SlurmSim>>,
+    clock: Arc<dyn Clock>,
+    pub routing: RoutingTable,
+    pub demand: DemandTracker,
+    launcher: Arc<dyn InstanceLauncher>,
+    services: Mutex<Vec<ServiceSpec>>,
+    rng: Mutex<Rng>,
+    lock: AtomicBool,
+    cfg: SchedulerConfig,
+    metrics: Registry,
+}
+
+impl ServiceScheduler {
+    pub fn new(
+        slurm: Arc<Mutex<SlurmSim>>,
+        clock: Arc<dyn Clock>,
+        launcher: Arc<dyn InstanceLauncher>,
+        services: Vec<ServiceSpec>,
+        cfg: SchedulerConfig,
+        metrics: Registry,
+    ) -> ServiceScheduler {
+        // Unique port-allocation seed per scheduler instance: co-hosted
+        // stacks (tests, multi-platform deployments on one box) must not
+        // race for the same ports.
+        static SEED: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0x5c_ed);
+        let seed = SEED.fetch_add(0x9E37_79B9, Ordering::Relaxed);
+        ServiceScheduler {
+            slurm,
+            clock,
+            routing: RoutingTable::new(),
+            demand: DemandTracker::new(),
+            launcher,
+            services: Mutex::new(services),
+            rng: Mutex::new(Rng::new(seed)),
+            lock: AtomicBool::new(false),
+            cfg,
+            metrics,
+        }
+    }
+
+    pub fn services(&self) -> Vec<ServiceSpec> {
+        self.services.lock().unwrap().clone()
+    }
+
+    /// Add or replace a service at runtime (the paper's §7.1.2 automation
+    /// gap — here it is one call).
+    pub fn upsert_service(&self, spec: ServiceSpec) {
+        let mut s = self.services.lock().unwrap();
+        match s.iter_mut().find(|x| x.name == spec.name) {
+            Some(slot) => *slot = spec,
+            None => s.push(spec),
+        }
+    }
+
+    fn job_name(service: &str) -> String {
+        format!("svc-{service}")
+    }
+
+    fn parse_comment(comment: &str) -> Option<(String, u16)> {
+        let mut service = None;
+        let mut port = None;
+        for kv in comment.split(';') {
+            match kv.split_once('=') {
+                Some(("service", v)) => service = Some(v.to_string()),
+                Some(("port", v)) => port = v.parse().ok(),
+                _ => {}
+            }
+        }
+        Some((service?, port?))
+    }
+
+    /// One scheduler-script execution (triggered per keepalive ping).
+    pub fn run_once(&self) -> RunReport {
+        // The lock file: only one scheduler instance at a time (§5.6).
+        if self.lock.swap(true, Ordering::SeqCst) {
+            return RunReport { skipped_locked: true, ..Default::default() };
+        }
+        let report = self.run_locked();
+        self.lock.store(false, Ordering::SeqCst);
+        report
+    }
+
+    fn run_locked(&self) -> RunReport {
+        let mut report = RunReport::default();
+        let now = self.clock.now_us();
+        let services = self.services();
+
+        // --- reconcile Slurm events -------------------------------------
+        let events = {
+            let mut slurm = self.slurm.lock().unwrap();
+            slurm.tick(now);
+            slurm.drain_events()
+        };
+        for ev in events {
+            match ev {
+                JobUpdate::Started { id, nodes } => {
+                    let Some(info) = self.slurm.lock().unwrap().job(id) else { continue };
+                    let Some((service, port)) = Self::parse_comment(&info.comment) else {
+                        continue; // not a service job
+                    };
+                    let Some(spec) = services.iter().find(|s| s.name == service) else {
+                        continue;
+                    };
+                    let node = nodes.first().cloned().unwrap_or_default();
+                    self.launcher.launch(id, spec, &node, port);
+                    self.routing.upsert(Instance {
+                        job_id: id,
+                        service: service.clone(),
+                        node,
+                        port,
+                        addr: format!("127.0.0.1:{port}"),
+                        ready: false,
+                        started_us: now,
+                    });
+                }
+                JobUpdate::Finished { id, .. } => {
+                    self.routing.remove(id);
+                    self.launcher.terminate(id);
+                }
+            }
+        }
+
+        // --- per-service reconciliation ----------------------------------
+        let window_us = self.cfg.demand_window.as_micros() as u64;
+        for spec in &services {
+            self.demand.sample(&spec.name, now, window_us);
+            let avg = self.demand.average(&spec.name);
+            let desired = ((avg / spec.target_concurrency).ceil() as u32)
+                .clamp(spec.min_instances, spec.max_instances);
+            self.metrics
+                .gauge("sched_desired_instances", &[("service", &spec.name)])
+                .set(desired as i64);
+
+            let jobs = self.service_jobs(&spec.name);
+            let active: Vec<&JobInfo> =
+                jobs.iter().filter(|j| !j.state.is_terminal()).collect();
+
+            // Jobs close to their walltime are "draining": they will expire
+            // and cannot be extended (batch semantics, §4), so they no
+            // longer count toward the desired pool. That makes renewal fall
+            // out of ordinary scale-up, and keeps scale-down from
+            // cannibalising the freshly-submitted replacements.
+            let renew_us = self.cfg.renew_margin.as_micros() as u64;
+            let walltime_us = spec.walltime.as_micros() as u64;
+            let is_draining = |j: &&JobInfo| {
+                j.state == JobState::Running
+                    && (j.start_us.unwrap_or(now) + walltime_us).saturating_sub(now) < renew_us
+            };
+            let draining = active.iter().filter(|j| is_draining(j)).count() as u32;
+            let countable: Vec<&&JobInfo> =
+                active.iter().filter(|j| !is_draining(j)).collect();
+
+            // Scale up (covers walltime renewal: a draining job stops
+            // counting, so its replacement is submitted here).
+            if (countable.len() as u32) < desired {
+                for _ in 0..(desired - countable.len() as u32) {
+                    let id = self.submit_job(spec, now);
+                    if draining > 0 {
+                        report.renewed.push(id);
+                    } else {
+                        report.submitted.push(id);
+                    }
+                }
+            }
+
+            // Scale down: prefer cancelling pending (never-started) jobs,
+            // then the youngest running ones (§5.6 lets excess expire; we
+            // also support active cancellation to free GPUs promptly).
+            if (countable.len() as u32) > desired {
+                let mut excess = countable.len() as u32 - desired;
+                let mut victims: Vec<JobId> = countable
+                    .iter()
+                    .filter(|j| j.state == JobState::Pending)
+                    .map(|j| j.id)
+                    .collect();
+                let mut running: Vec<&&&JobInfo> =
+                    countable.iter().filter(|j| j.state == JobState::Running).collect();
+                running.sort_by_key(|j| std::cmp::Reverse(j.start_us.unwrap_or(0)));
+                victims.extend(running.iter().map(|j| j.id));
+                for id in victims.into_iter().take(excess as usize) {
+                    self.slurm.lock().unwrap().scancel(id, now);
+                    self.routing.remove(id);
+                    self.launcher.terminate(id);
+                    report.cancelled.push(id);
+                    excess -= 1;
+                    if excess == 0 {
+                        break;
+                    }
+                }
+            }
+
+            // Readiness probing.
+            for inst in self.routing.instances(&spec.name) {
+                if !inst.ready && self.launcher.probe(&inst.addr) {
+                    self.routing.mark_ready(inst.job_id);
+                    report.became_ready.push(inst.job_id);
+                }
+            }
+            self.metrics
+                .gauge("sched_ready_instances", &[("service", &spec.name)])
+                .set(self.routing.ready_instances(&spec.name).len() as i64);
+        }
+        report
+    }
+
+    fn service_jobs(&self, service: &str) -> Vec<JobInfo> {
+        let name = Self::job_name(service);
+        self.slurm
+            .lock()
+            .unwrap()
+            .squeue()
+            .into_iter()
+            .filter(|j| j.name == name)
+            .collect()
+    }
+
+    fn submit_job(&self, spec: &ServiceSpec, now: u64) -> JobId {
+        let port = self.routing.alloc_port(&mut self.rng.lock().unwrap());
+        let job = JobSpec {
+            name: Self::job_name(&spec.name),
+            account: self.cfg.account.clone(),
+            nodes: 1,
+            gpus_per_node: spec.gpus,
+            cpus_per_node: spec.cpus,
+            mem_gb_per_node: spec.mem_gb,
+            time_limit: spec.walltime,
+            priority: self.cfg.job_priority,
+            duration: None,
+            comment: format!("service={};port={port}", spec.name),
+        };
+        let id = self.slurm.lock().unwrap().sbatch(job, now);
+        // Reserve the port in the routing table immediately (pending, not
+        // ready) so concurrent allocations can't collide.
+        self.routing.upsert(Instance {
+            job_id: id,
+            service: spec.name.clone(),
+            node: String::new(),
+            port,
+            addr: format!("127.0.0.1:{port}"),
+            ready: false,
+            started_us: now,
+        });
+        self.metrics.counter("sched_jobs_submitted_total", &[("service", &spec.name)]).inc();
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::ClusterSpec;
+    use crate::util::clock::SimClock;
+
+    fn setup(
+        services: Vec<ServiceSpec>,
+    ) -> (ServiceScheduler, Arc<SimClock>, Arc<MockLauncher>, Arc<Mutex<SlurmSim>>) {
+        let slurm = Arc::new(Mutex::new(SlurmSim::new(ClusterSpec::kisski())));
+        let clock = SimClock::new();
+        let launcher = MockLauncher::new();
+        let sched = ServiceScheduler::new(
+            slurm.clone(),
+            clock.clone(),
+            launcher.clone(),
+            services,
+            SchedulerConfig::default(),
+            Registry::new(),
+        );
+        (sched, clock, launcher, slurm)
+    }
+
+    fn svc(name: &str, min: u32, max: u32) -> ServiceSpec {
+        ServiceSpec {
+            name: name.into(),
+            min_instances: min,
+            max_instances: max,
+            target_concurrency: 4.0,
+            gpus: 2,
+            cpus: 8,
+            mem_gb: 64,
+            walltime: Duration::from_secs(3600),
+            backend: BackendKind::Sim { profile: "intel-neural-7b".into(), time_scale: 0.0 },
+        }
+    }
+
+    /// Advance 5 s and run (one keepalive cycle).
+    fn cycle(sched: &ServiceScheduler, clock: &SimClock) -> RunReport {
+        clock.advance(Duration::from_secs(5));
+        sched.run_once()
+    }
+
+    #[test]
+    fn maintains_min_instances_and_marks_ready() {
+        let (sched, clock, launcher, _slurm) = setup(vec![svc("m", 2, 4)]);
+        let r1 = sched.run_once();
+        assert_eq!(r1.submitted.len(), 2);
+        // Next cycle: jobs started, instances launched, not ready yet.
+        let _ = cycle(&sched, &clock);
+        assert_eq!(launcher.launched.lock().unwrap().len(), 2);
+        assert_eq!(sched.routing.ready_instances("m").len(), 0);
+        // Model finishes loading -> probes succeed -> ready.
+        launcher.all_healthy();
+        let r3 = cycle(&sched, &clock);
+        assert_eq!(r3.became_ready.len(), 2);
+        assert_eq!(sched.routing.ready_instances("m").len(), 2);
+        // Steady state: nothing more to do.
+        let r4 = cycle(&sched, &clock);
+        assert!(r4.submitted.is_empty() && r4.cancelled.is_empty());
+    }
+
+    #[test]
+    fn ports_are_unique_across_jobs() {
+        let (sched, clock, _l, _s) = setup(vec![svc("a", 3, 3), svc("b", 3, 3)]);
+        sched.run_once();
+        cycle(&sched, &clock);
+        let mut ports: Vec<u16> = sched
+            .routing
+            .instances("a")
+            .into_iter()
+            .chain(sched.routing.instances("b"))
+            .map(|i| i.port)
+            .collect();
+        assert_eq!(ports.len(), 6);
+        ports.sort();
+        ports.dedup();
+        assert_eq!(ports.len(), 6, "port collision");
+    }
+
+    #[test]
+    fn scales_up_under_demand_and_down_when_idle() {
+        let (sched, clock, launcher, _s) = setup(vec![svc("m", 1, 4)]);
+        sched.run_once();
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        assert_eq!(sched.routing.instances("m").len(), 1);
+
+        // Sustained demand: 10 concurrent requests, target 4/instance -> 3.
+        let guards: Vec<_> = (0..10).map(|_| sched.demand.begin("m")).collect();
+        for _ in 0..13 {
+            cycle(&sched, &clock);
+        }
+        assert_eq!(
+            sched.routing.instances("m").len(),
+            3,
+            "avg 10 / target 4 -> 3 instances"
+        );
+
+        // Demand drains; after the window passes, scale back to min.
+        drop(guards);
+        for _ in 0..20 {
+            cycle(&sched, &clock);
+        }
+        assert_eq!(sched.routing.instances("m").len(), 1);
+        assert!(!launcher.terminated.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn respects_max_instances() {
+        let (sched, clock, _l, _s) = setup(vec![svc("m", 1, 2)]);
+        sched.run_once();
+        let _guards: Vec<_> = (0..100).map(|_| sched.demand.begin("m")).collect();
+        for _ in 0..10 {
+            cycle(&sched, &clock);
+        }
+        assert_eq!(sched.routing.instances("m").len(), 2, "capped at max");
+    }
+
+    #[test]
+    fn node_failure_recovers() {
+        let (sched, clock, launcher, slurm) = setup(vec![svc("m", 1, 4)]);
+        sched.run_once();
+        cycle(&sched, &clock); // job starts, instance launched
+        launcher.all_healthy();
+        cycle(&sched, &clock); // probe succeeds
+        let inst = sched.routing.instances("m")[0].clone();
+        assert!(inst.ready);
+
+        // Kill the node under the instance.
+        slurm.lock().unwrap().fail_node(&inst.node, clock.now_us());
+        let r = cycle(&sched, &clock);
+        // Old instance gone, replacement submitted.
+        assert!(sched.routing.instances("m").iter().all(|i| i.job_id != inst.job_id));
+        assert_eq!(r.submitted.len(), 1);
+        assert!(launcher.terminated.lock().unwrap().contains(&inst.job_id));
+    }
+
+    #[test]
+    fn renewal_before_walltime_keeps_service_alive() {
+        let mut spec = svc("m", 1, 4);
+        spec.walltime = Duration::from_secs(600);
+        let (sched, clock, launcher, _s) = setup(vec![spec]);
+        let cfg_margin = Duration::from_secs(300);
+        assert_eq!(SchedulerConfig::default().renew_margin, cfg_margin);
+
+        sched.run_once();
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        let first = sched.routing.instances("m")[0].job_id;
+
+        // Walk to within the renew margin: a replacement appears.
+        let mut renewed = false;
+        for _ in 0..130 {
+            let r = cycle(&sched, &clock);
+            launcher.all_healthy();
+            if !r.renewed.is_empty() {
+                renewed = true;
+                break;
+            }
+        }
+        assert!(renewed, "no renewal before walltime");
+        // After the old job times out, the service still has an instance.
+        for _ in 0..80 {
+            cycle(&sched, &clock);
+            launcher.all_healthy();
+        }
+        let insts = sched.routing.instances("m");
+        assert!(!insts.is_empty());
+        assert!(insts.iter().all(|i| i.job_id != first), "old job expired");
+    }
+
+    #[test]
+    fn lock_prevents_concurrent_runs() {
+        let (sched, _c, _l, _s) = setup(vec![svc("m", 1, 1)]);
+        let sched = Arc::new(sched);
+        // Hold the lock manually and observe the skip.
+        sched.lock.store(true, Ordering::SeqCst);
+        let r = sched.run_once();
+        assert!(r.skipped_locked);
+        sched.lock.store(false, Ordering::SeqCst);
+        let r = sched.run_once();
+        assert!(!r.skipped_locked);
+    }
+
+    #[test]
+    fn comment_parsing() {
+        assert_eq!(
+            ServiceScheduler::parse_comment("service=m;port=1234"),
+            Some(("m".into(), 1234))
+        );
+        assert_eq!(ServiceScheduler::parse_comment("garbage"), None);
+        assert_eq!(ServiceScheduler::parse_comment("service=m"), None);
+    }
+
+    #[test]
+    fn non_service_jobs_ignored() {
+        let (sched, clock, launcher, slurm) = setup(vec![svc("m", 1, 1)]);
+        // A regular batch job shares the cluster.
+        slurm.lock().unwrap().sbatch(
+            crate::slurm::JobSpec {
+                name: "training-run".into(),
+                gpus_per_node: 4,
+                duration: Some(Duration::from_secs(100)),
+                ..Default::default()
+            },
+            0,
+        );
+        sched.run_once();
+        cycle(&sched, &clock);
+        // Only the service instance was launched.
+        assert_eq!(launcher.launched.lock().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,283 @@
+//! Routing table + demand tracking (§5.6).
+//!
+//! The scheduler script maintains a routing table with an entry per active
+//! service job (service, node, port, readiness); the Cloud Interface Script
+//! uses it to forward each request to a random *ready* instance (the
+//! paper's random load balancing). Demand is measured as the average number
+//! of concurrent requests per service over a sliding window, recomputed on
+//! every scheduling run — the autoscaling signal.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::slurm::JobId;
+use crate::util::rng::Rng;
+
+/// One service-job instance known to the router.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub job_id: JobId,
+    pub service: String,
+    pub node: String,
+    pub port: u16,
+    /// Reachable address. The simulation flattens the cluster network onto
+    /// loopback: every node's instances bind 127.0.0.1:<port> (ports are
+    /// cluster-unique, see `alloc_port`).
+    pub addr: String,
+    /// Set once the readiness probe has seen a healthy /health.
+    pub ready: bool,
+    pub started_us: u64,
+}
+
+/// The shared routing table (scheduler writes, cloud interface reads).
+#[derive(Clone, Default)]
+pub struct RoutingTable {
+    inner: Arc<Mutex<BTreeMap<String, Vec<Instance>>>>,
+}
+
+impl RoutingTable {
+    pub fn new() -> RoutingTable {
+        RoutingTable::default()
+    }
+
+    pub fn upsert(&self, inst: Instance) {
+        let mut t = self.inner.lock().unwrap();
+        let v = t.entry(inst.service.clone()).or_default();
+        match v.iter_mut().find(|i| i.job_id == inst.job_id) {
+            Some(slot) => *slot = inst,
+            None => v.push(inst),
+        }
+    }
+
+    pub fn remove(&self, job_id: JobId) {
+        let mut t = self.inner.lock().unwrap();
+        for v in t.values_mut() {
+            v.retain(|i| i.job_id != job_id);
+        }
+    }
+
+    pub fn mark_ready(&self, job_id: JobId) {
+        let mut t = self.inner.lock().unwrap();
+        for v in t.values_mut() {
+            for i in v.iter_mut() {
+                if i.job_id == job_id {
+                    i.ready = true;
+                }
+            }
+        }
+    }
+
+    /// All instances of a service (ready or not).
+    pub fn instances(&self, service: &str) -> Vec<Instance> {
+        self.inner.lock().unwrap().get(service).cloned().unwrap_or_default()
+    }
+
+    pub fn ready_instances(&self, service: &str) -> Vec<Instance> {
+        self.instances(service).into_iter().filter(|i| i.ready).collect()
+    }
+
+    pub fn services(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Random load balancing over ready instances (§5.6).
+    pub fn pick(&self, service: &str, rng: &mut Rng) -> Option<Instance> {
+        let ready = self.ready_instances(service);
+        rng.choose(&ready).cloned()
+    }
+
+    /// Is a port already reserved anywhere in the table?
+    pub fn port_in_use(&self, port: u16) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .flatten()
+            .any(|i| i.port == port)
+    }
+
+    /// Pick a random unused port for a new service job. Slurm provides no
+    /// network virtualization, so two jobs must never share a port (§5.6).
+    pub fn alloc_port(&self, rng: &mut Rng) -> u16 {
+        loop {
+            let port = rng.range(20_000, 40_000) as u16;
+            if !self.port_in_use(port) {
+                return port;
+            }
+        }
+    }
+}
+
+/// Sliding-window concurrency tracking per service.
+#[derive(Clone, Default)]
+pub struct DemandTracker {
+    inner: Arc<Mutex<BTreeMap<String, ServiceDemand>>>,
+}
+
+#[derive(Default)]
+struct ServiceDemand {
+    inflight: Arc<AtomicI64>,
+    /// (sample_time_us, concurrent) samples taken on scheduling runs.
+    samples: Vec<(u64, i64)>,
+}
+
+/// RAII guard decrementing the in-flight counter.
+pub struct InflightGuard {
+    counter: Arc<AtomicI64>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl DemandTracker {
+    pub fn new() -> DemandTracker {
+        DemandTracker::default()
+    }
+
+    /// Record a request starting; the guard ends it.
+    pub fn begin(&self, service: &str) -> InflightGuard {
+        let counter = {
+            let mut t = self.inner.lock().unwrap();
+            t.entry(service.to_string()).or_default().inflight.clone()
+        };
+        counter.fetch_add(1, Ordering::SeqCst);
+        InflightGuard { counter }
+    }
+
+    pub fn inflight(&self, service: &str) -> i64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(service)
+            .map(|d| d.inflight.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Take a sample (called on each scheduling run) and drop samples older
+    /// than `window_us`.
+    pub fn sample(&self, service: &str, now_us: u64, window_us: u64) {
+        let mut t = self.inner.lock().unwrap();
+        let d = t.entry(service.to_string()).or_default();
+        let c = d.inflight.load(Ordering::SeqCst);
+        d.samples.push((now_us, c));
+        d.samples.retain(|&(ts, _)| ts + window_us >= now_us);
+    }
+
+    /// Average concurrency over the retained window.
+    pub fn average(&self, service: &str) -> f64 {
+        let t = self.inner.lock().unwrap();
+        match t.get(service) {
+            Some(d) if !d.samples.is_empty() => {
+                d.samples.iter().map(|&(_, c)| c as f64).sum::<f64>() / d.samples.len() as f64
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+
+    fn inst(job: JobId, service: &str, port: u16, ready: bool) -> Instance {
+        Instance {
+            job_id: job,
+            service: service.into(),
+            node: "ggpu01".into(),
+            port,
+            addr: format!("127.0.0.1:{port}"),
+            ready,
+            started_us: 0,
+        }
+    }
+
+    #[test]
+    fn upsert_and_ready_transitions() {
+        let t = RoutingTable::new();
+        t.upsert(inst(1, "m", 20001, false));
+        assert_eq!(t.instances("m").len(), 1);
+        assert!(t.ready_instances("m").is_empty());
+        t.mark_ready(1);
+        assert_eq!(t.ready_instances("m").len(), 1);
+        t.remove(1);
+        assert!(t.instances("m").is_empty());
+    }
+
+    #[test]
+    fn pick_is_random_over_ready_only() {
+        let t = RoutingTable::new();
+        t.upsert(inst(1, "m", 20001, true));
+        t.upsert(inst(2, "m", 20002, true));
+        t.upsert(inst(3, "m", 20003, false));
+        let mut rng = Rng::new(1);
+        let mut hits = BTreeMap::new();
+        for _ in 0..300 {
+            let picked = t.pick("m", &mut rng).unwrap();
+            *hits.entry(picked.job_id).or_insert(0u32) += 1;
+            assert_ne!(picked.job_id, 3, "never route to a non-ready instance");
+        }
+        assert!(hits[&1] > 90 && hits[&2] > 90, "roughly balanced: {hits:?}");
+        assert!(t.pick("missing", &mut rng).is_none());
+    }
+
+    #[test]
+    fn port_allocation_avoids_collisions() {
+        let t = RoutingTable::new();
+        let mut rng = Rng::new(2);
+        let mut used = std::collections::BTreeSet::new();
+        for j in 0..200 {
+            let p = t.alloc_port(&mut rng);
+            assert!(used.insert(p), "port {p} reused");
+            t.upsert(inst(j, "m", p, false));
+        }
+    }
+
+    #[test]
+    fn demand_window_average() {
+        let d = DemandTracker::new();
+        let g1 = d.begin("m");
+        let g2 = d.begin("m");
+        assert_eq!(d.inflight("m"), 2);
+        d.sample("m", 1_000_000, 60_000_000);
+        drop(g1);
+        d.sample("m", 2_000_000, 60_000_000);
+        assert_eq!(d.inflight("m"), 1);
+        assert!((d.average("m") - 1.5).abs() < 1e-9);
+        drop(g2);
+        // Old samples age out of the window.
+        d.sample("m", 120_000_000, 60_000_000);
+        assert!((d.average("m") - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_inflight_never_negative_and_returns_to_zero() {
+        run_prop("demand_balance", 7, 30, |rng| {
+            let d = DemandTracker::new();
+            let mut guards = Vec::new();
+            for _ in 0..100 {
+                if rng.chance(0.6) {
+                    guards.push(d.begin("svc"));
+                } else if !guards.is_empty() {
+                    let i = rng.below(guards.len() as u64) as usize;
+                    guards.swap_remove(i);
+                }
+                prop_assert!(d.inflight("svc") >= 0, "negative inflight");
+                prop_assert!(
+                    d.inflight("svc") == guards.len() as i64,
+                    "counter drift: {} vs {}",
+                    d.inflight("svc"),
+                    guards.len()
+                );
+            }
+            guards.clear();
+            prop_assert!(d.inflight("svc") == 0, "did not return to zero");
+            Ok(())
+        });
+    }
+}

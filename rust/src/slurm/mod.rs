@@ -1,0 +1,167 @@
+//! Slurm simulator substrate.
+//!
+//! The paper deploys on a production Slurm cluster (10 nodes × 4 H100s);
+//! this module reproduces the *contract* the Chat AI scheduler script
+//! consumes — `sbatch` / `squeue` / `scancel` / `sinfo` — on top of a
+//! faithful batch-scheduling core: priority ordering, conservative
+//! backfill, gang allocation for multi-node jobs, walltime enforcement and
+//! node-failure injection (§7.1.1 of the paper describes exactly these
+//! failure modes).
+//!
+//! The simulator is deliberately *not* aware of services: from its point of
+//! view a vLLM server is just another batch job, which is the paper's
+//! central design point ("entirely Slurm-native").
+
+mod sim;
+
+pub use sim::{JobUpdate, SlurmSim};
+
+use std::time::Duration;
+
+/// Job identifier (monotonically increasing, like Slurm's).
+pub type JobId = u64;
+
+/// Resource request for one job, Slurm-style.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// Submitting account (the paper uses a functional account for services).
+    pub account: String,
+    /// Number of nodes (gang-allocated: all or nothing).
+    pub nodes: u32,
+    /// GPUs per node (GRES).
+    pub gpus_per_node: u32,
+    /// CPUs per node.
+    pub cpus_per_node: u32,
+    /// Memory per node in GB.
+    pub mem_gb_per_node: u32,
+    /// Walltime limit; the job is killed (TIMEOUT) when it elapses.
+    pub time_limit: Duration,
+    /// Scheduling priority (higher first). Service jobs are submitted with
+    /// elevated priority per §7.1.3 so they don't starve behind batch.
+    pub priority: i64,
+    /// If set, the job self-completes after this duration (batch work);
+    /// service jobs run until walltime or scancel.
+    pub duration: Option<Duration>,
+    /// Opaque payload (the service job script's arguments; the scheduler
+    /// stores "model=...;port=..." here).
+    pub comment: String,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            name: "job".into(),
+            account: "user".into(),
+            nodes: 1,
+            gpus_per_node: 0,
+            cpus_per_node: 1,
+            mem_gb_per_node: 1,
+            time_limit: Duration::from_secs(3600),
+            priority: 0,
+            duration: None,
+            comment: String::new(),
+        }
+    }
+}
+
+/// Job lifecycle states (Slurm names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Cancelled,
+    Timeout,
+    NodeFail,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Pending | JobState::Running)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Pending => "PENDING",
+            JobState::Running => "RUNNING",
+            JobState::Completed => "COMPLETED",
+            JobState::Cancelled => "CANCELLED",
+            JobState::Timeout => "TIMEOUT",
+            JobState::NodeFail => "NODE_FAIL",
+        }
+    }
+}
+
+/// Why a pending job isn't running (squeue's REASON column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PendReason {
+    None,
+    Resources,
+    Priority,
+}
+
+/// One row of `squeue`/`sacct` output.
+#[derive(Debug, Clone)]
+pub struct JobInfo {
+    pub id: JobId,
+    pub name: String,
+    pub account: String,
+    pub state: JobState,
+    pub reason: PendReason,
+    /// Node hostnames the job runs on (empty while pending).
+    pub nodes: Vec<String>,
+    pub submit_us: u64,
+    pub start_us: Option<u64>,
+    pub end_us: Option<u64>,
+    pub priority: i64,
+    pub gpus_per_node: u32,
+    pub comment: String,
+}
+
+/// One row of `sinfo`.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub hostname: String,
+    pub up: bool,
+    pub gpus: u32,
+    pub gpus_alloc: u32,
+    pub cpus: u32,
+    pub cpus_alloc: u32,
+    pub mem_gb: u32,
+    pub mem_gb_alloc: u32,
+    pub running_jobs: Vec<JobId>,
+}
+
+/// Cluster geometry.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: u32,
+    pub gpus_per_node: u32,
+    pub cpus_per_node: u32,
+    pub mem_gb_per_node: u32,
+    /// Hostname prefix; nodes are `<prefix>01..`.
+    pub prefix: String,
+}
+
+impl ClusterSpec {
+    /// The paper's KISSKI testbed: 10 GPU nodes, 4×H100 each, 52 cores,
+    /// 500 GB RAM (§6.3.1).
+    pub fn kisski() -> ClusterSpec {
+        ClusterSpec {
+            nodes: 10,
+            gpus_per_node: 4,
+            cpus_per_node: 52,
+            mem_gb_per_node: 500,
+            prefix: "ggpu".into(),
+        }
+    }
+}
+
+/// Per-account GPU-seconds accounting (sreport-style).
+#[derive(Debug, Clone, Default)]
+pub struct AccountUsage {
+    pub gpu_secs: f64,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+}

@@ -1,0 +1,735 @@
+//! Core event-driven Slurm simulation.
+//!
+//! All methods take explicit `now_us` timestamps so the same code runs under
+//! a `SimClock` (months in milliseconds, for the adoption/ablation sims) and
+//! a `WallClock` (the live serving stack). `tick` is idempotent for a fixed
+//! time: completions are processed before scheduling, and scheduling is a
+//! priority pass with conservative backfill.
+
+use std::collections::BTreeMap;
+
+use super::{
+    AccountUsage, ClusterSpec, JobId, JobInfo, JobSpec, JobState, NodeInfo, PendReason,
+};
+
+#[derive(Debug, Clone)]
+struct Node {
+    hostname: String,
+    up: bool,
+    gpus: u32,
+    cpus: u32,
+    mem_gb: u32,
+    gpus_alloc: u32,
+    cpus_alloc: u32,
+    mem_gb_alloc: u32,
+    running: Vec<JobId>,
+}
+
+impl Node {
+    fn fits(&self, spec: &JobSpec) -> bool {
+        self.up
+            && self.gpus - self.gpus_alloc >= spec.gpus_per_node
+            && self.cpus - self.cpus_alloc >= spec.cpus_per_node
+            && self.mem_gb - self.mem_gb_alloc >= spec.mem_gb_per_node
+    }
+
+    fn alloc(&mut self, spec: &JobSpec, id: JobId) {
+        self.gpus_alloc += spec.gpus_per_node;
+        self.cpus_alloc += spec.cpus_per_node;
+        self.mem_gb_alloc += spec.mem_gb_per_node;
+        self.running.push(id);
+    }
+
+    fn release(&mut self, spec: &JobSpec, id: JobId) {
+        self.gpus_alloc -= spec.gpus_per_node;
+        self.cpus_alloc -= spec.cpus_per_node;
+        self.mem_gb_alloc -= spec.mem_gb_per_node;
+        self.running.retain(|&j| j != id);
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Job {
+    spec: JobSpec,
+    state: JobState,
+    reason: PendReason,
+    node_idx: Vec<usize>,
+    submit_us: u64,
+    start_us: Option<u64>,
+    end_us: Option<u64>,
+}
+
+impl Job {
+    /// Projected end for a running job (self-completion or walltime kill).
+    fn projected_end_us(&self) -> u64 {
+        let start = self.start_us.unwrap_or(0);
+        let walltime = self.spec.time_limit.as_micros() as u64;
+        match self.spec.duration {
+            Some(d) => start + (d.as_micros() as u64).min(walltime),
+            None => start + walltime,
+        }
+    }
+}
+
+/// State-change event emitted by `tick` (consumed by tests, the analytics
+/// pipeline and the service scheduler's failure-recovery logic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobUpdate {
+    Started { id: JobId, nodes: Vec<String> },
+    Finished { id: JobId, state: JobState },
+}
+
+/// The simulated cluster.
+pub struct SlurmSim {
+    spec: ClusterSpec,
+    nodes: Vec<Node>,
+    jobs: BTreeMap<JobId, Job>,
+    next_id: JobId,
+    events: Vec<JobUpdate>,
+    accounts: BTreeMap<String, AccountUsage>,
+}
+
+impl SlurmSim {
+    pub fn new(spec: ClusterSpec) -> SlurmSim {
+        let nodes = (0..spec.nodes)
+            .map(|i| Node {
+                hostname: format!("{}{:02}", spec.prefix, i + 1),
+                up: true,
+                gpus: spec.gpus_per_node,
+                cpus: spec.cpus_per_node,
+                mem_gb: spec.mem_gb_per_node,
+                gpus_alloc: 0,
+                cpus_alloc: 0,
+                mem_gb_alloc: 0,
+                running: Vec::new(),
+            })
+            .collect();
+        SlurmSim { spec, nodes, jobs: BTreeMap::new(), next_id: 1000, events: Vec::new(), accounts: BTreeMap::new() }
+    }
+
+    pub fn cluster_spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Submit a job (sbatch). It stays PENDING until the next `tick`.
+    pub fn sbatch(&mut self, spec: JobSpec, now_us: u64) -> JobId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.accounts.entry(spec.account.clone()).or_default().jobs_submitted += 1;
+        self.jobs.insert(
+            id,
+            Job {
+                spec,
+                state: JobState::Pending,
+                reason: PendReason::None,
+                node_idx: Vec::new(),
+                submit_us: now_us,
+                start_us: None,
+                end_us: None,
+            },
+        );
+        id
+    }
+
+    /// Cancel a job (scancel). Running jobs release resources immediately.
+    pub fn scancel(&mut self, id: JobId, now_us: u64) -> bool {
+        let Some(job) = self.jobs.get(&id) else { return false };
+        if job.state.is_terminal() {
+            return false;
+        }
+        self.finish(id, JobState::Cancelled, now_us);
+        true
+    }
+
+    /// squeue: all non-terminal jobs plus terminal ones (sacct-style, the
+    /// caller filters).
+    pub fn squeue(&self) -> Vec<JobInfo> {
+        self.jobs.iter().map(|(&id, j)| self.job_info(id, j)).collect()
+    }
+
+    pub fn job(&self, id: JobId) -> Option<JobInfo> {
+        self.jobs.get(&id).map(|j| self.job_info(id, j))
+    }
+
+    fn job_info(&self, id: JobId, j: &Job) -> JobInfo {
+        JobInfo {
+            id,
+            name: j.spec.name.clone(),
+            account: j.spec.account.clone(),
+            state: j.state,
+            reason: j.reason,
+            nodes: j.node_idx.iter().map(|&i| self.nodes[i].hostname.clone()).collect(),
+            submit_us: j.submit_us,
+            start_us: j.start_us,
+            end_us: j.end_us,
+            priority: j.spec.priority,
+            gpus_per_node: j.spec.gpus_per_node,
+            comment: j.spec.comment.clone(),
+        }
+    }
+
+    /// sinfo: per-node allocation state.
+    pub fn sinfo(&self) -> Vec<NodeInfo> {
+        self.nodes
+            .iter()
+            .map(|n| NodeInfo {
+                hostname: n.hostname.clone(),
+                up: n.up,
+                gpus: n.gpus,
+                gpus_alloc: n.gpus_alloc,
+                cpus: n.cpus,
+                cpus_alloc: n.cpus_alloc,
+                mem_gb: n.mem_gb,
+                mem_gb_alloc: n.mem_gb_alloc,
+                running_jobs: n.running.clone(),
+            })
+            .collect()
+    }
+
+    /// sreport-style accounting.
+    pub fn account_usage(&self, account: &str) -> AccountUsage {
+        self.accounts.get(account).cloned().unwrap_or_default()
+    }
+
+    /// Mark a node DOWN; running jobs on it die with NODE_FAIL (§7.1.1).
+    pub fn fail_node(&mut self, hostname: &str, now_us: u64) -> bool {
+        let Some(idx) = self.nodes.iter().position(|n| n.hostname == hostname) else {
+            return false;
+        };
+        self.nodes[idx].up = false;
+        let victims: Vec<JobId> = self.nodes[idx].running.clone();
+        for id in victims {
+            self.finish(id, JobState::NodeFail, now_us);
+        }
+        true
+    }
+
+    /// Bring a DOWN node back (admin intervention per §7.1.1).
+    pub fn restore_node(&mut self, hostname: &str) -> bool {
+        match self.nodes.iter_mut().find(|n| n.hostname == hostname) {
+            Some(n) => {
+                n.up = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drain state-change events accumulated since the last call.
+    pub fn drain_events(&mut self) -> Vec<JobUpdate> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Advance the cluster to `now_us`: complete/timeout running jobs, then
+    /// run the scheduling pass (priority order + conservative backfill).
+    pub fn tick(&mut self, now_us: u64) {
+        // Phase 1: completions.
+        let done: Vec<(JobId, JobState)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.state == JobState::Running)
+            .filter(|(_, j)| j.projected_end_us() <= now_us)
+            .map(|(&id, j)| {
+                let walltime_end =
+                    j.start_us.unwrap_or(0) + j.spec.time_limit.as_micros() as u64;
+                let state = match j.spec.duration {
+                    Some(_) if j.projected_end_us() < walltime_end => JobState::Completed,
+                    Some(_) => JobState::Completed, // duration == walltime: completed
+                    None => JobState::Timeout,
+                };
+                (id, state)
+            })
+            .collect();
+        for (id, state) in done {
+            // Use projected end as the actual end time for accounting.
+            let end = self.jobs[&id].projected_end_us().min(now_us);
+            self.finish_at(id, state, end);
+        }
+
+        // Phase 2: scheduling.
+        self.schedule(now_us);
+    }
+
+    fn schedule(&mut self, now_us: u64) {
+        // Pending jobs in (priority desc, id asc) order — Slurm's multifactor
+        // reduced to the explicit priority plus FIFO age.
+        let mut pending: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.state == JobState::Pending)
+            .map(|(&id, _)| id)
+            .collect();
+        pending.sort_by_key(|id| {
+            let j = &self.jobs[id];
+            (-j.spec.priority, *id)
+        });
+
+        // Conservative backfill: once the highest-priority job cannot start,
+        // compute its shadow start time; later jobs may only start if they
+        // are guaranteed to finish before it (time-based check).
+        let mut shadow_start: Option<u64> = None;
+        for id in pending {
+            let spec = self.jobs[&id].spec.clone();
+            let placement = self.find_placement(&spec);
+            match placement {
+                Some(nodes) if shadow_start.is_none() => {
+                    self.start(id, nodes, now_us);
+                }
+                Some(nodes) => {
+                    // Backfill window check.
+                    let projected_end = now_us + spec.time_limit.as_micros() as u64;
+                    if projected_end <= shadow_start.unwrap() {
+                        self.start(id, nodes, now_us);
+                    } else {
+                        self.jobs.get_mut(&id).unwrap().reason = PendReason::Priority;
+                    }
+                }
+                None if shadow_start.is_none() => {
+                    // Head blocked job: reserve its earliest feasible start.
+                    shadow_start = Some(self.earliest_start(&spec, now_us));
+                    self.jobs.get_mut(&id).unwrap().reason = PendReason::Resources;
+                }
+                None => {
+                    self.jobs.get_mut(&id).unwrap().reason = PendReason::Resources;
+                }
+            }
+        }
+    }
+
+    /// Distinct up-nodes that can host the job right now (first-fit).
+    fn find_placement(&self, spec: &JobSpec) -> Option<Vec<usize>> {
+        let mut chosen = Vec::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.fits(spec) {
+                chosen.push(i);
+                if chosen.len() == spec.nodes as usize {
+                    return Some(chosen);
+                }
+            }
+        }
+        None
+    }
+
+    /// Earliest time `spec` could start assuming running jobs end at their
+    /// projected ends and nothing else arrives (the backfill shadow).
+    fn earliest_start(&self, spec: &JobSpec, now_us: u64) -> u64 {
+        // Sort running jobs by projected end; release them one by one on a
+        // scratch copy of node state until the job fits.
+        let mut scratch: Vec<Node> = self.nodes.clone();
+        let fits = |nodes: &[Node]| {
+            nodes.iter().filter(|n| n.fits(spec)).count() >= spec.nodes as usize
+        };
+        if fits(&scratch) {
+            return now_us;
+        }
+        let mut running: Vec<(JobId, &Job)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.state == JobState::Running)
+            .map(|(&id, j)| (id, j))
+            .collect();
+        running.sort_by_key(|(_, j)| j.projected_end_us());
+        for (id, j) in running {
+            for &ni in &j.node_idx {
+                scratch[ni].release(&j.spec, id);
+            }
+            if fits(&scratch) {
+                return j.projected_end_us();
+            }
+        }
+        // Can never fit (cluster too small or nodes down): far future.
+        u64::MAX / 2
+    }
+
+    fn start(&mut self, id: JobId, node_idx: Vec<usize>, now_us: u64) {
+        for &ni in &node_idx {
+            let spec = self.jobs[&id].spec.clone();
+            self.nodes[ni].alloc(&spec, id);
+        }
+        let job = self.jobs.get_mut(&id).unwrap();
+        job.state = JobState::Running;
+        job.reason = PendReason::None;
+        job.start_us = Some(now_us);
+        job.node_idx = node_idx.clone();
+        self.events.push(JobUpdate::Started {
+            id,
+            nodes: node_idx.iter().map(|&i| self.nodes[i].hostname.clone()).collect(),
+        });
+    }
+
+    fn finish(&mut self, id: JobId, state: JobState, now_us: u64) {
+        self.finish_at(id, state, now_us);
+    }
+
+    fn finish_at(&mut self, id: JobId, state: JobState, end_us: u64) {
+        let (spec, node_idx, start_us) = {
+            let job = self.jobs.get_mut(&id).unwrap();
+            let prev = std::mem::replace(&mut job.state, state);
+            job.end_us = Some(end_us);
+            if prev != JobState::Running {
+                // Pending job cancelled: nothing to release.
+                self.events.push(JobUpdate::Finished { id, state });
+                return;
+            }
+            (job.spec.clone(), std::mem::take(&mut job.node_idx), job.start_us.unwrap_or(end_us))
+        };
+        for &ni in &node_idx {
+            self.nodes[ni].release(&spec, id);
+        }
+        let elapsed = (end_us.saturating_sub(start_us)) as f64 / 1e6;
+        let usage = self.accounts.entry(spec.account.clone()).or_default();
+        usage.gpu_secs += elapsed * (spec.gpus_per_node * spec.nodes) as f64;
+        if state == JobState::Completed {
+            usage.jobs_completed += 1;
+        }
+        self.events.push(JobUpdate::Finished { id, state });
+    }
+
+    /// Total free GPUs across up nodes (the "gaps in the schedule" §1).
+    pub fn free_gpus(&self) -> u32 {
+        self.nodes.iter().filter(|n| n.up).map(|n| n.gpus - n.gpus_alloc).sum()
+    }
+
+    /// Invariant check used by property tests: allocation counters match
+    /// the running-job set and never exceed capacity.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            let (mut g, mut c, mut m) = (0u32, 0u32, 0u32);
+            for id in &n.running {
+                let j = self.jobs.get(id).ok_or(format!("node {i} references unknown job"))?;
+                if j.state != JobState::Running {
+                    return Err(format!("node {i} holds non-running job {id}"));
+                }
+                g += j.spec.gpus_per_node;
+                c += j.spec.cpus_per_node;
+                m += j.spec.mem_gb_per_node;
+            }
+            if g != n.gpus_alloc || c != n.cpus_alloc || m != n.mem_gb_alloc {
+                return Err(format!("node {i} alloc counters drifted"));
+            }
+            if n.gpus_alloc > n.gpus || n.cpus_alloc > n.cpus || n.mem_gb_alloc > n.mem_gb {
+                return Err(format!("node {i} over-allocated"));
+            }
+        }
+        for (id, j) in &self.jobs {
+            if j.state == JobState::Running {
+                if j.node_idx.len() != j.spec.nodes as usize {
+                    return Err(format!("job {id} node count mismatch"));
+                }
+                for &ni in &j.node_idx {
+                    if !self.nodes[ni].running.contains(id) {
+                        return Err(format!("job {id} missing from node {ni} roster"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Convenience for test specs.
+    fn secs(s: u64) -> std::time::Duration {
+        std::time::Duration::from_secs(s)
+    }
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn gpu_job(gpus: u32, prio: i64, dur: Option<u64>) -> JobSpec {
+        JobSpec {
+            name: "j".into(),
+            gpus_per_node: gpus,
+            priority: prio,
+            duration: dur.map(secs),
+            time_limit: secs(1000),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn basic_lifecycle() {
+        let mut sim = SlurmSim::new(ClusterSpec::kisski());
+        let id = sim.sbatch(gpu_job(2, 0, Some(10)), 0);
+        assert_eq!(sim.job(id).unwrap().state, JobState::Pending);
+        sim.tick(0);
+        let info = sim.job(id).unwrap();
+        assert_eq!(info.state, JobState::Running);
+        assert_eq!(info.nodes, vec!["ggpu01"]);
+        sim.tick(9_999_999);
+        assert_eq!(sim.job(id).unwrap().state, JobState::Running);
+        sim.tick(10_000_000);
+        assert_eq!(sim.job(id).unwrap().state, JobState::Completed);
+        assert_eq!(sim.free_gpus(), 40);
+    }
+
+    #[test]
+    fn walltime_timeout() {
+        let mut sim = SlurmSim::new(ClusterSpec::kisski());
+        let id = sim.sbatch(
+            JobSpec { time_limit: secs(100), ..gpu_job(1, 0, None) },
+            0,
+        );
+        sim.tick(0);
+        sim.tick(100_000_000);
+        assert_eq!(sim.job(id).unwrap().state, JobState::Timeout);
+    }
+
+    #[test]
+    fn scancel_pending_and_running() {
+        let mut sim = SlurmSim::new(ClusterSpec::kisski());
+        let a = sim.sbatch(gpu_job(1, 0, None), 0);
+        let b = sim.sbatch(gpu_job(1, 0, None), 0);
+        sim.tick(0);
+        assert!(sim.scancel(a, 1_000_000));
+        assert_eq!(sim.job(a).unwrap().state, JobState::Cancelled);
+        assert!(!sim.scancel(a, 2_000_000), "double cancel is a no-op");
+        // b still running and unaffected.
+        assert_eq!(sim.job(b).unwrap().state, JobState::Running);
+        sim.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn gang_scheduling_all_or_nothing() {
+        // 2-node job on a cluster with only 1 free node must wait entirely.
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 2,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        let filler = sim.sbatch(gpu_job(4, 0, Some(50)), 0);
+        sim.tick(0);
+        let multi = sim.sbatch(
+            JobSpec { nodes: 2, ..gpu_job(4, 0, Some(10)) },
+            1_000_000,
+        );
+        sim.tick(1_000_000);
+        assert_eq!(sim.job(multi).unwrap().state, JobState::Pending);
+        assert_eq!(sim.job(multi).unwrap().reason, PendReason::Resources);
+        assert_eq!(sim.job(filler).unwrap().state, JobState::Running);
+        // After the filler completes, the gang job gets both nodes.
+        sim.tick(50_000_000);
+        let info = sim.job(multi).unwrap();
+        assert_eq!(info.state, JobState::Running);
+        assert_eq!(info.nodes.len(), 2);
+    }
+
+    #[test]
+    fn priority_order_respected() {
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        let filler = sim.sbatch(gpu_job(4, 0, Some(10)), 0);
+        sim.tick(0);
+        let low = sim.sbatch(gpu_job(4, 1, Some(10)), 1_000_000);
+        let high = sim.sbatch(gpu_job(4, 9, Some(10)), 2_000_000);
+        sim.tick(3_000_000);
+        assert_eq!(sim.job(low).unwrap().state, JobState::Pending);
+        assert_eq!(sim.job(high).unwrap().state, JobState::Pending);
+        let _ = filler;
+        sim.tick(10_000_000); // filler done -> high priority starts first
+        assert_eq!(sim.job(high).unwrap().state, JobState::Running);
+        assert_eq!(sim.job(low).unwrap().state, JobState::Pending);
+        assert_eq!(sim.job(low).unwrap().reason, PendReason::Resources);
+    }
+
+    #[test]
+    fn backfill_small_job_jumps_queue_without_delaying_head() {
+        // Cluster: 1 node, 4 GPUs. Running: 2-GPU job ending t=100.
+        // Head of queue: 4-GPU job (can't start until t=100).
+        // Backfill candidate: 2-GPU job with walltime 50 -> fits the window.
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 16,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        let _running = sim.sbatch(
+            JobSpec { time_limit: secs(100), ..gpu_job(2, 0, Some(100)) },
+            0,
+        );
+        sim.tick(0);
+        let head = sim.sbatch(gpu_job(4, 5, Some(10)), 1_000_000);
+        let backfill_ok = sim.sbatch(
+            JobSpec { time_limit: secs(50), ..gpu_job(1, 0, Some(50)) },
+            1_000_000,
+        );
+        sim.tick(1_000_000);
+        assert_eq!(sim.job(head).unwrap().state, JobState::Pending);
+        assert_eq!(
+            sim.job(backfill_ok).unwrap().state,
+            JobState::Running,
+            "short job should backfill into the shadow window"
+        );
+        // A long job must NOT backfill even though a GPU is free (it would
+        // delay the head's reservation).
+        let backfill_bad = sim.sbatch(
+            JobSpec { time_limit: secs(500), ..gpu_job(1, 0, Some(500)) },
+            2_000_000,
+        );
+        sim.tick(2_000_000);
+        assert_eq!(sim.job(backfill_bad).unwrap().state, JobState::Pending);
+        assert_eq!(sim.job(backfill_bad).unwrap().reason, PendReason::Priority);
+    }
+
+    #[test]
+    fn node_failure_kills_jobs_and_excludes_node() {
+        let mut sim = SlurmSim::new(ClusterSpec::kisski());
+        let id = sim.sbatch(gpu_job(4, 0, None), 0);
+        sim.tick(0);
+        let node = sim.job(id).unwrap().nodes[0].clone();
+        assert!(sim.fail_node(&node, 5_000_000));
+        assert_eq!(sim.job(id).unwrap().state, JobState::NodeFail);
+        // New jobs avoid the down node.
+        let id2 = sim.sbatch(gpu_job(4, 0, None), 6_000_000);
+        sim.tick(6_000_000);
+        assert_ne!(sim.job(id2).unwrap().nodes[0], node);
+        // Restore and reuse.
+        assert!(sim.restore_node(&node));
+        sim.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cluster_saturation_reports_resources_reason() {
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 2,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        for _ in 0..2 {
+            sim.sbatch(gpu_job(4, 0, None), 0);
+        }
+        let extra = sim.sbatch(gpu_job(4, 0, None), 0);
+        sim.tick(0);
+        assert_eq!(sim.free_gpus(), 0);
+        assert_eq!(sim.job(extra).unwrap().state, JobState::Pending);
+        assert_eq!(sim.job(extra).unwrap().reason, PendReason::Resources);
+    }
+
+    #[test]
+    fn accounting_tracks_gpu_seconds() {
+        let mut sim = SlurmSim::new(ClusterSpec::kisski());
+        let spec = JobSpec { account: "svc".into(), ..gpu_job(2, 0, Some(100)) };
+        sim.sbatch(spec, 0);
+        sim.tick(0);
+        sim.tick(100_000_000);
+        let usage = sim.account_usage("svc");
+        assert_eq!(usage.jobs_submitted, 1);
+        assert_eq!(usage.jobs_completed, 1);
+        assert!((usage.gpu_secs - 200.0).abs() < 1e-6, "2 GPUs x 100 s");
+    }
+
+    #[test]
+    fn events_emitted_in_order() {
+        let mut sim = SlurmSim::new(ClusterSpec::kisski());
+        let id = sim.sbatch(gpu_job(1, 0, Some(5)), 0);
+        sim.tick(0);
+        sim.tick(5_000_000);
+        let ev = sim.drain_events();
+        assert_eq!(ev.len(), 2);
+        assert!(matches!(ev[0], JobUpdate::Started { id: i, .. } if i == id));
+        assert!(matches!(ev[1], JobUpdate::Finished { id: i, state: JobState::Completed } if i == id));
+        assert!(sim.drain_events().is_empty());
+    }
+
+    #[test]
+    fn prop_invariants_under_random_ops() {
+        run_prop("slurm_invariants", 0x51_0e_a1, 40, |rng| {
+            let mut sim = SlurmSim::new(ClusterSpec {
+                nodes: 1 + rng.below(5) as u32,
+                gpus_per_node: 1 + rng.below(4) as u32,
+                cpus_per_node: 8,
+                mem_gb_per_node: 64,
+                prefix: "n".into(),
+            });
+            let mut now = 0u64;
+            let mut ids = Vec::new();
+            for _ in 0..60 {
+                match rng.below(10) {
+                    0..=4 => {
+                        let id = sim.sbatch(
+                            JobSpec {
+                                gpus_per_node: rng.range(0, 4) as u32,
+                                cpus_per_node: 1 + rng.below(8) as u32,
+                                mem_gb_per_node: 1 + rng.below(32) as u32,
+                                priority: rng.range(0, 10) as i64,
+                                duration: if rng.chance(0.7) {
+                                    Some(secs(1 + rng.below(100)))
+                                } else {
+                                    None
+                                },
+                                time_limit: secs(1 + rng.below(200)),
+                                ..Default::default()
+                            },
+                            now,
+                        );
+                        ids.push(id);
+                    }
+                    5..=6 => {
+                        if let Some(&id) = rng.choose(&ids) {
+                            sim.scancel(id, now);
+                        }
+                    }
+                    7 => {
+                        let host = format!("n{:02}", 1 + rng.below(5));
+                        if rng.chance(0.5) {
+                            sim.fail_node(&host, now);
+                        } else {
+                            sim.restore_node(&host);
+                        }
+                    }
+                    _ => {
+                        now += rng.below(50_000_000);
+                        sim.tick(now);
+                    }
+                }
+                if let Err(e) = sim.check_invariants() {
+                    return Err(e);
+                }
+            }
+            // Eventually everything with a duration drains.
+            now += 1_000_000_000_000;
+            sim.tick(now);
+            sim.check_invariants()?;
+            for id in ids {
+                let j = sim.job(id).unwrap();
+                prop_assert!(
+                    j.state != JobState::Running || j.gpus_per_node == 0 || true,
+                    "unreachable"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_no_job_starts_before_submit_or_after_cancel() {
+        run_prop("slurm_causality", 42, 30, |rng| {
+            let mut sim = SlurmSim::new(ClusterSpec::kisski());
+            let mut now = 0;
+            for _ in 0..30 {
+                let id = sim.sbatch(gpu_job(rng.range(1, 4) as u32, 0, Some(10)), now);
+                now += rng.below(5_000_000);
+                sim.tick(now);
+                if let Some(info) = sim.job(id) {
+                    if let Some(start) = info.start_us {
+                        prop_assert!(start >= info.submit_us, "started before submit");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,248 @@
+//! Session cryptography for the SSH-shaped channel.
+//!
+//! Real primitives (AES-128-CTR + HMAC-SHA256, encrypt-then-MAC, per-frame
+//! replay counters); simulated identity (possession of the 32-byte key
+//! secret stands in for a private key, its SHA-256 hex digest for the
+//! public fingerprint). See module docs in `sshsim` for why that is an
+//! acceptable substitution for the circuit-breaker evaluation.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// An SSH-sim key pair: 32-byte secret, fingerprint = SHA-256(secret).
+#[derive(Clone)]
+pub struct KeyPair {
+    secret: [u8; 32],
+}
+
+impl KeyPair {
+    /// Deterministic key generation from a seed (reproducible tests/sims).
+    pub fn generate(seed: u64) -> KeyPair {
+        let mut h = Sha256::new();
+        h.update(b"chat-hpc-ssh-sim-key");
+        h.update(seed.to_le_bytes());
+        let digest = h.finalize();
+        let mut secret = [0u8; 32];
+        secret.copy_from_slice(&digest);
+        KeyPair { secret }
+    }
+
+    pub fn from_secret(secret: [u8; 32]) -> KeyPair {
+        KeyPair { secret }
+    }
+
+    /// Hex SHA-256 fingerprint (the "public key" in authorized_keys).
+    pub fn fingerprint(&self) -> String {
+        hex(&Sha256::digest(self.secret))
+    }
+
+    /// Prove possession: HMAC over both nonces (the handshake "signature").
+    pub fn prove(&self, client_nonce: &[u8; 16], server_nonce: &[u8; 16]) -> [u8; 32] {
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.secret).unwrap();
+        mac.update(b"chat-hpc-handshake");
+        mac.update(client_nonce);
+        mac.update(server_nonce);
+        let out = mac.finalize().into_bytes();
+        let mut proof = [0u8; 32];
+        proof.copy_from_slice(&out);
+        proof
+    }
+
+    /// Derive directional session keys from the secret + nonces.
+    pub fn derive_session(
+        &self,
+        client_nonce: &[u8; 16],
+        server_nonce: &[u8; 16],
+        is_client: bool,
+    ) -> SessionCrypto {
+        let derive = |label: &[u8]| -> [u8; 32] {
+            let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.secret).unwrap();
+            mac.update(label);
+            mac.update(client_nonce);
+            mac.update(server_nonce);
+            let out = mac.finalize().into_bytes();
+            let mut k = [0u8; 32];
+            k.copy_from_slice(&out);
+            k
+        };
+        let c2s_enc = derive(b"c2s-enc");
+        let c2s_mac = derive(b"c2s-mac");
+        let s2c_enc = derive(b"s2c-enc");
+        let s2c_mac = derive(b"s2c-mac");
+        let (send_enc, send_mac, recv_enc, recv_mac) = if is_client {
+            (c2s_enc, c2s_mac, s2c_enc, s2c_mac)
+        } else {
+            (s2c_enc, s2c_mac, c2s_enc, c2s_mac)
+        };
+        SessionCrypto {
+            send_cipher: <Aes128 as KeyInit>::new_from_slice(&send_enc[..16]).unwrap(),
+            send_mac_key: send_mac,
+            recv_cipher: <Aes128 as KeyInit>::new_from_slice(&recv_enc[..16]).unwrap(),
+            recv_mac_key: recv_mac,
+            send_ctr: 0,
+            recv_ctr: 0,
+        }
+    }
+}
+
+/// Directional frame encryption state.
+pub struct SessionCrypto {
+    send_cipher: Aes128,
+    send_mac_key: [u8; 32],
+    recv_cipher: Aes128,
+    recv_mac_key: [u8; 32],
+    send_ctr: u64,
+    recv_ctr: u64,
+}
+
+/// CTR keystream: E(k, frame_ctr || block_ctr) xored over the payload.
+fn ctr_xor(cipher: &Aes128, frame_ctr: u64, data: &mut [u8]) {
+    let mut block = [0u8; 16];
+    for (i, chunk) in data.chunks_mut(16).enumerate() {
+        block[..8].copy_from_slice(&frame_ctr.to_le_bytes());
+        block[8..16].copy_from_slice(&(i as u64).to_le_bytes());
+        let mut ks = aes::Block::from(block);
+        cipher.encrypt_block(&mut ks);
+        for (b, k) in chunk.iter_mut().zip(ks.iter()) {
+            *b ^= k;
+        }
+    }
+}
+
+fn frame_mac(key: &[u8; 32], frame_ctr: u64, ciphertext: &[u8]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(key).unwrap();
+    mac.update(&frame_ctr.to_le_bytes());
+    mac.update(ciphertext);
+    let out = mac.finalize().into_bytes();
+    let mut tag = [0u8; 32];
+    tag.copy_from_slice(&out);
+    tag
+}
+
+impl SessionCrypto {
+    /// Encrypt-then-MAC one frame: returns `ciphertext || tag(32)`.
+    pub fn seal(&mut self, plaintext: &[u8]) -> Vec<u8> {
+        let ctr = self.send_ctr;
+        self.send_ctr += 1;
+        let mut buf = plaintext.to_vec();
+        ctr_xor(&self.send_cipher, ctr, &mut buf);
+        let tag = frame_mac(&self.send_mac_key, ctr, &buf);
+        buf.extend_from_slice(&tag);
+        buf
+    }
+
+    /// Verify + decrypt one frame. Enforces the monotonic counter (replay
+    /// and reorder protection).
+    pub fn open(&mut self, sealed: &[u8]) -> Result<Vec<u8>, String> {
+        if sealed.len() < 32 {
+            return Err("frame too short".into());
+        }
+        let (ciphertext, tag) = sealed.split_at(sealed.len() - 32);
+        let ctr = self.recv_ctr;
+        let want = frame_mac(&self.recv_mac_key, ctr, ciphertext);
+        // Constant-time compare.
+        let mut diff = 0u8;
+        for (a, b) in want.iter().zip(tag.iter()) {
+            diff |= a ^ b;
+        }
+        if diff != 0 {
+            return Err("MAC verification failed (tamper or replay)".into());
+        }
+        self.recv_ctr += 1;
+        let mut buf = ciphertext.to_vec();
+        ctr_xor(&self.recv_cipher, ctr, &mut buf);
+        Ok(buf)
+    }
+}
+
+pub fn hex(data: &[u8]) -> String {
+    data.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (SessionCrypto, SessionCrypto) {
+        let kp = KeyPair::generate(7);
+        let cn = [1u8; 16];
+        let sn = [2u8; 16];
+        (kp.derive_session(&cn, &sn, true), kp.derive_session(&cn, &sn, false))
+    }
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let (mut c, mut s) = pair();
+        for msg in [&b"hello"[..], &[0u8; 100], &b""[..], &[0xffu8; 33]] {
+            let sealed = c.seal(msg);
+            assert_eq!(s.open(&sealed).unwrap(), msg);
+        }
+        // And the reverse direction with independent keys.
+        let sealed = s.seal(b"reply");
+        assert_eq!(c.open(&sealed).unwrap(), b"reply");
+    }
+
+    #[test]
+    fn ciphertext_differs_from_plaintext_and_between_frames() {
+        let (mut c, _s) = pair();
+        let a = c.seal(b"same message");
+        let b = c.seal(b"same message");
+        assert_ne!(&a[..12], b"same message");
+        assert_ne!(a, b, "frame counter must randomize the keystream");
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let (mut c, mut s) = pair();
+        let mut sealed = c.seal(b"payload");
+        sealed[0] ^= 1;
+        assert!(s.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn replay_rejected() {
+        let (mut c, mut s) = pair();
+        let sealed = c.seal(b"one");
+        assert!(s.open(&sealed).is_ok());
+        // Replaying the same frame fails: the receive counter moved on.
+        assert!(s.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn reorder_rejected() {
+        let (mut c, mut s) = pair();
+        let f1 = c.seal(b"first");
+        let f2 = c.seal(b"second");
+        assert!(s.open(&f2).is_err(), "out-of-order frame must fail");
+        let _ = f1;
+    }
+
+    #[test]
+    fn wrong_key_cannot_open() {
+        let kp2 = KeyPair::generate(99);
+        let (mut c, _) = pair();
+        let mut other = kp2.derive_session(&[1u8; 16], &[2u8; 16], false);
+        assert!(other.open(&c.seal(b"secret")).is_err());
+    }
+
+    #[test]
+    fn fingerprint_stable_and_distinct() {
+        assert_eq!(KeyPair::generate(1).fingerprint(), KeyPair::generate(1).fingerprint());
+        assert_ne!(KeyPair::generate(1).fingerprint(), KeyPair::generate(2).fingerprint());
+        assert_eq!(KeyPair::generate(1).fingerprint().len(), 64);
+    }
+
+    #[test]
+    fn proof_binds_both_nonces() {
+        let kp = KeyPair::generate(5);
+        let p1 = kp.prove(&[1; 16], &[2; 16]);
+        let p2 = kp.prove(&[1; 16], &[3; 16]);
+        let p3 = kp.prove(&[4; 16], &[2; 16]);
+        assert_ne!(p1, p2);
+        assert_ne!(p1, p3);
+    }
+}

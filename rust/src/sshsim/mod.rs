@@ -1,0 +1,223 @@
+//! SSH-shaped secure channel with ForceCommand enforcement.
+//!
+//! This substrate reproduces the paper's security boundary (§5.4–5.5,
+//! §6.1.2): the *only* wire between the internet-facing web server and the
+//! HPC cluster is an SSH connection whose key is pinned — via the
+//! `authorized_keys` `command=` (ForceCommand) option — to a single
+//! entrypoint, the Cloud Interface Script. A fully compromised web server
+//! holding the key can still only ever invoke that one entrypoint.
+//!
+//! What is real here:
+//! - the wire protocol: length-framed messages encrypted with AES-128-CTR
+//!   and authenticated with HMAC-SHA256 (encrypt-then-MAC) under session
+//!   keys derived from the key secret + fresh nonces; replay-protected by
+//!   monotonic frame counters;
+//! - `authorized_keys` parsing with `command=`/option semantics and the
+//!   server-side enforcement point (the client's requested command is
+//!   demoted to `SSH_ORIGINAL_COMMAND`, exactly like OpenSSH);
+//! - channel multiplexing over one connection (the paper's HPC Proxy keeps
+//!   a single persistent connection and pushes all traffic + keepalives
+//!   through it — its ~200 RPS ceiling in Table 2 comes from this);
+//! - keepalive pings (every 5 s in the paper) and reconnect detection.
+//!
+//! What is simulated: identity. Key pairs are a 32-byte secret whose
+//! "public key" is its SHA-256 fingerprint; the handshake proves possession
+//! via HMAC instead of a signature. The circuit-breaker property under
+//! evaluation — *server-side* command pinning — is independent of the
+//! signature scheme (DESIGN.md §Substitution-ledger).
+
+mod crypto;
+mod proto;
+
+pub use crypto::{hex, KeyPair, SessionCrypto};
+pub use proto::{CommandHandler, ExecReply, SshClient, SshServer, StreamChunk};
+
+use std::collections::BTreeMap;
+
+/// One parsed `authorized_keys` entry.
+#[derive(Debug, Clone)]
+pub struct AuthorizedKey {
+    /// SHA-256 fingerprint of the key (hex).
+    pub fingerprint: String,
+    /// `command="..."` — the ForceCommand. When set, whatever the client
+    /// asked to execute is replaced by this; the original request is passed
+    /// to the handler as `SSH_ORIGINAL_COMMAND`.
+    pub force_command: Option<String>,
+    /// Options like `no-port-forwarding`, `no-pty`, `restrict`.
+    pub options: Vec<String>,
+    pub comment: String,
+}
+
+/// Parsed `authorized_keys` file: fingerprint -> entry.
+#[derive(Debug, Clone, Default)]
+pub struct AuthorizedKeys {
+    entries: BTreeMap<String, AuthorizedKey>,
+}
+
+impl AuthorizedKeys {
+    pub fn new() -> AuthorizedKeys {
+        AuthorizedKeys::default()
+    }
+
+    pub fn add(&mut self, entry: AuthorizedKey) {
+        self.entries.insert(entry.fingerprint.clone(), entry);
+    }
+
+    pub fn lookup(&self, fingerprint: &str) -> Option<&AuthorizedKey> {
+        self.entries.get(fingerprint)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parse the OpenSSH `authorized_keys` format (subset):
+    ///
+    /// ```text
+    /// command="/usr/local/bin/cloud_interface",no-pty,restrict ssh-sim <fingerprint> <comment>
+    /// ssh-sim <fingerprint> <comment>
+    /// ```
+    pub fn parse(text: &str) -> Result<AuthorizedKeys, String> {
+        let mut out = AuthorizedKeys::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let entry = parse_entry(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            out.add(entry);
+        }
+        Ok(out)
+    }
+}
+
+fn parse_entry(line: &str) -> Result<AuthorizedKey, String> {
+    // The options prefix (if any) ends at the first space not inside quotes.
+    let (options_str, rest) = if line.starts_with("ssh-sim ") {
+        ("", line)
+    } else {
+        let mut in_quotes = false;
+        let mut split = None;
+        for (i, c) in line.char_indices() {
+            match c {
+                '"' => in_quotes = !in_quotes,
+                ' ' if !in_quotes => {
+                    split = Some(i);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let i = split.ok_or("missing key type")?;
+        (&line[..i], line[i + 1..].trim_start())
+    };
+
+    let mut parts = rest.split_whitespace();
+    let keytype = parts.next().ok_or("missing key type")?;
+    if keytype != "ssh-sim" {
+        return Err(format!("unsupported key type {keytype}"));
+    }
+    let fingerprint = parts.next().ok_or("missing fingerprint")?.to_string();
+    if fingerprint.len() != 64 || !fingerprint.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err("fingerprint must be 64 hex chars".into());
+    }
+    let comment = parts.collect::<Vec<_>>().join(" ");
+
+    let mut force_command = None;
+    let mut options = Vec::new();
+    if !options_str.is_empty() {
+        for opt in split_options(options_str) {
+            if let Some(cmd) = opt.strip_prefix("command=") {
+                let cmd = cmd.trim_matches('"');
+                force_command = Some(cmd.to_string());
+            } else {
+                options.push(opt);
+            }
+        }
+    }
+    Ok(AuthorizedKey { fingerprint, force_command, options, comment })
+}
+
+/// Split a comma-separated option list, honouring quotes.
+fn split_options(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_quotes = !in_quotes;
+                cur.push(c);
+            }
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_force_command_entry() {
+        let kp = KeyPair::generate(1);
+        let line = format!(
+            "command=\"/opt/saia/cloud_interface.sh\",no-pty,no-port-forwarding,restrict ssh-sim {} esx-proxy@web01",
+            kp.fingerprint()
+        );
+        let ak = AuthorizedKeys::parse(&line).unwrap();
+        let entry = ak.lookup(&kp.fingerprint()).unwrap();
+        assert_eq!(entry.force_command.as_deref(), Some("/opt/saia/cloud_interface.sh"));
+        assert_eq!(entry.options, vec!["no-pty", "no-port-forwarding", "restrict"]);
+        assert_eq!(entry.comment, "esx-proxy@web01");
+    }
+
+    #[test]
+    fn parse_plain_entry_and_comments() {
+        let kp = KeyPair::generate(2);
+        let text = format!(
+            "# functional account keys\n\nssh-sim {} admin@mgmt\n",
+            kp.fingerprint()
+        );
+        let ak = AuthorizedKeys::parse(&text).unwrap();
+        assert_eq!(ak.len(), 1);
+        assert!(ak.lookup(&kp.fingerprint()).unwrap().force_command.is_none());
+    }
+
+    #[test]
+    fn parse_command_with_spaces_and_commas() {
+        let kp = KeyPair::generate(3);
+        let line = format!(
+            "command=\"/bin/ci --mode a,b --flag\",restrict ssh-sim {} c",
+            kp.fingerprint()
+        );
+        let ak = AuthorizedKeys::parse(&line).unwrap();
+        let entry = ak.lookup(&kp.fingerprint()).unwrap();
+        assert_eq!(entry.force_command.as_deref(), Some("/bin/ci --mode a,b --flag"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(AuthorizedKeys::parse("ssh-rsa AAAA real-key").is_err());
+        assert!(AuthorizedKeys::parse("ssh-sim nothex").is_err());
+        assert!(AuthorizedKeys::parse("command=\"x\" ssh-sim").is_err());
+    }
+
+    #[test]
+    fn unknown_fingerprint_not_found() {
+        let ak = AuthorizedKeys::parse("").unwrap();
+        assert!(ak.lookup(&"0".repeat(64)).is_none());
+        assert!(ak.is_empty());
+    }
+}

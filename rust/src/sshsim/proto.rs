@@ -1,0 +1,678 @@
+//! SSH-sim wire protocol: handshake, multiplexed channels, keepalives.
+//!
+//! One TCP connection carries many concurrent `exec` channels (the paper's
+//! HPC Proxy multiplexes every inference request plus a 5-second keepalive
+//! over a single persistent SSH connection — Table 2's ~200 RPS SSH ceiling
+//! is this serialization). Frames are sealed by [`SessionCrypto`].
+//!
+//! Frame plaintext layout: `type(1) | channel(4, LE) | payload`.
+//!
+//! The ForceCommand enforcement point is in [`SshServer`]: after
+//! authentication the requested command is *replaced* by the
+//! `authorized_keys` `command=` value; the request only survives as the
+//! `SSH_ORIGINAL_COMMAND` argument to the handler — byte-for-byte OpenSSH
+//! semantics, and the paper's circuit breaker.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::crypto::{KeyPair, SessionCrypto};
+use super::AuthorizedKeys;
+
+const FRAME_EXEC: u8 = 0;
+const FRAME_DATA: u8 = 1;
+const FRAME_EOF: u8 = 2;
+const FRAME_EXIT: u8 = 3;
+const FRAME_PING: u8 = 4;
+const FRAME_PONG: u8 = 5;
+
+const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// What a command execution produces.
+#[derive(Debug, Clone)]
+pub struct ExecReply {
+    pub exit_code: i32,
+    pub stdout: Vec<u8>,
+}
+
+/// Streaming chunk delivered to `exec_stream` consumers.
+#[derive(Debug)]
+pub enum StreamChunk {
+    Data(Vec<u8>),
+    Exit(i32),
+}
+
+/// Server-side command implementation.
+///
+/// `command` is the command line actually being run (the ForceCommand when
+/// one is pinned); `original_command` is what the client requested —
+/// `SSH_ORIGINAL_COMMAND` in OpenSSH terms. `stdin` is the full request
+/// body; `out` streams stdout chunks back. Returns the exit code.
+pub trait CommandHandler: Send + Sync {
+    fn exec(
+        &self,
+        command: &str,
+        original_command: &str,
+        stdin: &[u8],
+        out: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> i32;
+}
+
+impl<F> CommandHandler for F
+where
+    F: Fn(&str, &str, &[u8], &mut dyn FnMut(&[u8]) -> Result<()>) -> i32 + Send + Sync,
+{
+    fn exec(
+        &self,
+        command: &str,
+        original_command: &str,
+        stdin: &[u8],
+        out: &mut dyn FnMut(&[u8]) -> Result<()>,
+    ) -> i32 {
+        self(command, original_command, stdin, out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing helpers
+// ---------------------------------------------------------------------------
+
+fn write_frame(
+    w: &mut (impl Write + ?Sized),
+    crypto: &mut SessionCrypto,
+    ty: u8,
+    chan: u32,
+    payload: &[u8],
+) -> Result<()> {
+    let mut plain = Vec::with_capacity(payload.len() + 5);
+    plain.push(ty);
+    plain.extend_from_slice(&chan.to_le_bytes());
+    plain.extend_from_slice(payload);
+    let sealed = crypto.seal(&plain);
+    w.write_all(&(sealed.len() as u32).to_le_bytes())?;
+    w.write_all(&sealed)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_frame(r: &mut impl Read, crypto: &mut SessionCrypto) -> Result<(u8, u32, Vec<u8>)> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("oversized frame {len}");
+    }
+    let mut sealed = vec![0u8; len];
+    r.read_exact(&mut sealed)?;
+    let plain = crypto.open(&sealed).map_err(|e| anyhow!(e))?;
+    if plain.len() < 5 {
+        bail!("short frame");
+    }
+    let ty = plain[0];
+    let chan = u32::from_le_bytes([plain[1], plain[2], plain[3], plain[4]]);
+    Ok((ty, chan, plain[5..].to_vec()))
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Per-server metrics exposed to the monitoring layer.
+#[derive(Default)]
+pub struct SshServerStats {
+    pub sessions_accepted: AtomicU64,
+    pub sessions_rejected: AtomicU64,
+    pub execs: AtomicU64,
+    pub pings: AtomicU64,
+    pub forced_commands: AtomicU64,
+}
+
+/// The sshd of the HPC service node.
+pub struct SshServer {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<SshServerStats>,
+    stop: Arc<AtomicBool>,
+    sessions: Arc<Mutex<Vec<TcpStream>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+struct ServerShared {
+    authorized: AuthorizedKeys,
+    /// Host-side key material (the functional account's keys).
+    keys: BTreeMap<String, KeyPair>,
+    /// command path (first token) -> handler.
+    handlers: BTreeMap<String, Arc<dyn CommandHandler>>,
+    stats: Arc<SshServerStats>,
+}
+
+impl SshServer {
+    /// Start an sshd on an ephemeral port.
+    ///
+    /// `keys` must contain the key material for every fingerprint in
+    /// `authorized`; `handlers` maps command paths (the first whitespace
+    /// token of the resolved command line) to implementations.
+    pub fn start(
+        authorized: AuthorizedKeys,
+        keys: Vec<KeyPair>,
+        handlers: Vec<(String, Arc<dyn CommandHandler>)>,
+    ) -> Result<SshServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stats = Arc::new(SshServerStats::default());
+        let shared = Arc::new(ServerShared {
+            authorized,
+            keys: keys.into_iter().map(|k| (k.fingerprint(), k)).collect(),
+            handlers: handlers.into_iter().collect(),
+            stats: stats.clone(),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let sessions: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let sessions2 = sessions.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if let Ok(clone) = stream.try_clone() {
+                            sessions2.lock().unwrap().push(clone);
+                        }
+                        let sh = shared.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_session(stream, sh);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(SshServer { addr, stats, stop, sessions, handle: Some(handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Kill live sessions so clients observe the outage immediately.
+        for s in self.sessions.lock().unwrap().drain(..) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SshServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // --- handshake ---
+    let mut fp_buf = [0u8; 64];
+    stream.read_exact(&mut fp_buf)?;
+    let fingerprint = std::str::from_utf8(&fp_buf)?.to_string();
+    let mut client_nonce = [0u8; 16];
+    stream.read_exact(&mut client_nonce)?;
+
+    let (Some(entry), Some(key)) =
+        (shared.authorized.lookup(&fingerprint), shared.keys.get(&fingerprint))
+    else {
+        shared.stats.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = stream.write_all(&[0u8]); // reject
+        return Ok(());
+    };
+    let entry = entry.clone();
+
+    // Server nonce from OS entropy-ish source (time + addr hash is enough
+    // for the simulation; uniqueness is what matters for CTR keys).
+    let mut server_nonce = [0u8; 16];
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    server_nonce[..8].copy_from_slice(&t.as_nanos().to_le_bytes()[..8]);
+    server_nonce[8..].copy_from_slice(&(&stream as *const _ as u64).to_le_bytes());
+    stream.write_all(&[1u8])?; // accept
+    stream.write_all(&server_nonce)?;
+
+    let mut proof = [0u8; 32];
+    stream.read_exact(&mut proof)?;
+    if proof != key.prove(&client_nonce, &server_nonce) {
+        shared.stats.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+        return Ok(());
+    }
+    shared.stats.sessions_accepted.fetch_add(1, Ordering::Relaxed);
+
+    let mut recv_crypto = key.derive_session(&client_nonce, &server_nonce, false);
+    // Writer shares the socket: split send/recv crypto states.
+    let send_crypto = key.derive_session(&client_nonce, &server_nonce, false);
+    let writer = Arc::new(Mutex::new((stream.try_clone()?, send_crypto)));
+
+    // Per-channel stdin accumulators.
+    let mut stdin_bufs: BTreeMap<u32, Vec<u8>> = BTreeMap::new();
+
+    loop {
+        let (ty, chan, payload) = match read_frame(&mut stream, &mut recv_crypto) {
+            Ok(f) => f,
+            Err(_) => break, // disconnect
+        };
+        match ty {
+            FRAME_PING => {
+                shared.stats.pings.fetch_add(1, Ordering::Relaxed);
+                let w = writer.clone();
+                let mut g = w.lock().unwrap();
+                let (ref mut sock, ref mut crypto) = *g;
+                let _ = write_frame(sock, crypto, FRAME_PONG, chan, &payload);
+            }
+            FRAME_EXEC => {
+                stdin_bufs.insert(chan, payload);
+            }
+            FRAME_DATA => {
+                if let Some(buf) = stdin_bufs.get_mut(&chan) {
+                    // EXEC payload holds the command; stdin appends after a
+                    // NUL separator written by the client.
+                    buf.extend_from_slice(&payload);
+                }
+            }
+            FRAME_EOF => {
+                // Request complete: resolve + dispatch.
+                let Some(buf) = stdin_bufs.remove(&chan) else { continue };
+                let sep = buf.iter().position(|&b| b == 0).unwrap_or(buf.len());
+                let requested = String::from_utf8_lossy(&buf[..sep]).into_owned();
+                let stdin = if sep < buf.len() { buf[sep + 1..].to_vec() } else { Vec::new() };
+
+                // *** The ForceCommand circuit breaker. ***
+                let (command, original) = match &entry.force_command {
+                    Some(forced) => {
+                        shared.stats.forced_commands.fetch_add(1, Ordering::Relaxed);
+                        (forced.clone(), requested)
+                    }
+                    None => (requested.clone(), requested),
+                };
+                shared.stats.execs.fetch_add(1, Ordering::Relaxed);
+
+                let path = command.split_whitespace().next().unwrap_or("").to_string();
+                let handler = shared.handlers.get(&path).cloned();
+                let w = writer.clone();
+                std::thread::spawn(move || {
+                    let send =
+                        |ty: u8, payload: &[u8]| -> Result<()> {
+                            let mut g = w.lock().unwrap();
+                            let (ref mut sock, ref mut crypto) = *g;
+                            write_frame(sock, crypto, ty, chan, payload)
+                        };
+                    let code = match handler {
+                        Some(h) => {
+                            let mut out =
+                                |chunk: &[u8]| -> Result<()> { send(FRAME_DATA, chunk) };
+                            h.exec(&command, &original, &stdin, &mut out)
+                        }
+                        None => {
+                            let _ = send(
+                                FRAME_DATA,
+                                format!("sshsim: {path}: command not found\n").as_bytes(),
+                            );
+                            127
+                        }
+                    };
+                    let _ = send(FRAME_EXIT, &(code as u32).to_le_bytes());
+                });
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client side of the persistent SSH connection (held by the HPC Proxy).
+pub struct SshClient {
+    writer: Arc<Mutex<(TcpStream, SessionCrypto)>>,
+    channels: Arc<Mutex<BTreeMap<u32, Sender<StreamChunk>>>>,
+    pong: Arc<Mutex<BTreeMap<u32, Sender<()>>>>,
+    next_chan: AtomicU32,
+    dead: Arc<AtomicBool>,
+    /// Emulated serialized wire time per frame. Loopback TCP is far faster
+    /// than the paper's ESX↔HPC link + OpenSSH channel costs; benches set
+    /// this (calibrated against Table 1's measured SSH leg) to reproduce
+    /// the single-connection ~200 RPS ceiling of Table 2. Zero by default.
+    frame_delay: Duration,
+}
+
+impl SshClient {
+    /// Connect and authenticate with `key`.
+    pub fn connect(addr: &str, key: &KeyPair) -> Result<SshClient> {
+        SshClient::connect_with(addr, key, Duration::ZERO)
+    }
+
+    /// Connect with an emulated per-frame wire delay (see `frame_delay`).
+    pub fn connect_with(addr: &str, key: &KeyPair, frame_delay: Duration) -> Result<SshClient> {
+        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        // --- handshake ---
+        stream.write_all(key.fingerprint().as_bytes())?;
+        let mut client_nonce = [0u8; 16];
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        client_nonce[..8].copy_from_slice(&t.as_nanos().to_le_bytes()[..8]);
+        client_nonce[8..].copy_from_slice(&std::process::id().to_le_bytes().repeat(4)[..8]);
+        stream.write_all(&client_nonce)?;
+
+        let mut accept = [0u8; 1];
+        stream.read_exact(&mut accept)?;
+        if accept[0] != 1 {
+            bail!("server rejected key {}", key.fingerprint());
+        }
+        let mut server_nonce = [0u8; 16];
+        stream.read_exact(&mut server_nonce)?;
+        stream.write_all(&key.prove(&client_nonce, &server_nonce))?;
+
+        let send_crypto = key.derive_session(&client_nonce, &server_nonce, true);
+        let mut recv_crypto = key.derive_session(&client_nonce, &server_nonce, true);
+
+        let writer = Arc::new(Mutex::new((stream.try_clone()?, send_crypto)));
+        let channels: Arc<Mutex<BTreeMap<u32, Sender<StreamChunk>>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let pong: Arc<Mutex<BTreeMap<u32, Sender<()>>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+
+        // Reader thread: route frames to channel receivers.
+        let channels2 = channels.clone();
+        let pong2 = pong.clone();
+        let dead2 = dead.clone();
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            loop {
+                match read_frame(&mut stream, &mut recv_crypto) {
+                    Ok((ty, chan, payload)) => match ty {
+                        FRAME_DATA => {
+                            if let Some(tx) = channels2.lock().unwrap().get(&chan) {
+                                let _ = tx.send(StreamChunk::Data(payload));
+                            }
+                        }
+                        FRAME_EXIT => {
+                            let code = i32::from_le_bytes([
+                                payload[0], payload[1], payload[2], payload[3],
+                            ]);
+                            if let Some(tx) = channels2.lock().unwrap().remove(&chan) {
+                                let _ = tx.send(StreamChunk::Exit(code));
+                            }
+                        }
+                        FRAME_PONG => {
+                            if let Some(tx) = pong2.lock().unwrap().remove(&chan) {
+                                let _ = tx.send(());
+                            }
+                        }
+                        _ => {}
+                    },
+                    Err(_) => {
+                        dead2.store(true, Ordering::SeqCst);
+                        // Wake all waiters by dropping their senders.
+                        channels2.lock().unwrap().clear();
+                        pong2.lock().unwrap().clear();
+                        break;
+                    }
+                }
+            }
+        });
+
+        Ok(SshClient { writer, channels, pong, next_chan: AtomicU32::new(1), dead, frame_delay })
+    }
+
+    pub fn is_alive(&self) -> bool {
+        !self.dead.load(Ordering::SeqCst)
+    }
+
+    fn send(&self, ty: u8, chan: u32, payload: &[u8]) -> Result<()> {
+        if !self.is_alive() {
+            bail!("ssh connection is down");
+        }
+        let mut g = self.writer.lock().unwrap();
+        if !self.frame_delay.is_zero() {
+            // Serialized wire time: held under the writer lock on purpose —
+            // one connection, one wire (the paper's SSH bottleneck).
+            std::thread::sleep(self.frame_delay);
+        }
+        let (ref mut sock, ref mut crypto) = *g;
+        write_frame(sock, crypto, ty, chan, payload).map_err(|e| {
+            self.dead.store(true, Ordering::SeqCst);
+            e
+        })
+    }
+
+    fn open_channel(&self) -> (u32, Receiver<StreamChunk>) {
+        let chan = self.next_chan.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        self.channels.lock().unwrap().insert(chan, tx);
+        (chan, rx)
+    }
+
+    /// Execute `command` with `stdin`, streaming stdout chunks to
+    /// `on_chunk`; returns the exit code.
+    pub fn exec_stream(
+        &self,
+        command: &str,
+        stdin: &[u8],
+        mut on_chunk: impl FnMut(&[u8]),
+    ) -> Result<i32> {
+        let (chan, rx) = self.open_channel();
+        // EXEC payload = command; stdin travels as DATA after a NUL marker.
+        self.send(FRAME_EXEC, chan, command.as_bytes())?;
+        let mut body = vec![0u8];
+        body.extend_from_slice(stdin);
+        self.send(FRAME_DATA, chan, &body)?;
+        self.send(FRAME_EOF, chan, &[])?;
+        loop {
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(StreamChunk::Data(d)) => on_chunk(&d),
+                Ok(StreamChunk::Exit(code)) => return Ok(code),
+                Err(_) => {
+                    self.channels.lock().unwrap().remove(&chan);
+                    bail!("ssh exec timed out or connection lost");
+                }
+            }
+        }
+    }
+
+    /// Execute and collect stdout.
+    pub fn exec(&self, command: &str, stdin: &[u8]) -> Result<ExecReply> {
+        let mut stdout = Vec::new();
+        let exit_code = self.exec_stream(command, stdin, |chunk| {
+            stdout.extend_from_slice(chunk);
+        })?;
+        Ok(ExecReply { exit_code, stdout })
+    }
+
+    /// Keepalive ping; returns the round-trip time.
+    pub fn ping(&self) -> Result<Duration> {
+        let chan = self.next_chan.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        self.pong.lock().unwrap().insert(chan, tx);
+        let start = Instant::now();
+        self.send(FRAME_PING, chan, &[])?;
+        rx.recv_timeout(Duration::from_secs(10))
+            .map_err(|_| anyhow!("ping timeout"))?;
+        Ok(start.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sshsim::AuthorizedKey;
+
+    fn echo_handler() -> Arc<dyn CommandHandler> {
+        Arc::new(
+            |command: &str,
+             original: &str,
+             stdin: &[u8],
+             out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                let _ = out(format!("cmd={command}\n").as_bytes());
+                let _ = out(format!("orig={original}\n").as_bytes());
+                let _ = out(b"stdin=");
+                let _ = out(stdin);
+                0
+            },
+        )
+    }
+
+    fn forced_server(kp: &KeyPair) -> SshServer {
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/opt/saia/cloud_interface".into()),
+            options: vec!["restrict".into()],
+            comment: "esx".into(),
+        });
+        SshServer::start(
+            ak,
+            vec![kp.clone()],
+            vec![("/opt/saia/cloud_interface".into(), echo_handler())],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn exec_roundtrip_with_force_command() {
+        let kp = KeyPair::generate(11);
+        let server = forced_server(&kp);
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        // The client asks for an arbitrary (malicious) command...
+        let reply = client.exec("rm -rf / --no-preserve-root", b"PAYLOAD").unwrap();
+        let text = String::from_utf8_lossy(&reply.stdout);
+        // ...but the pinned command runs, and the request is demoted to
+        // SSH_ORIGINAL_COMMAND.
+        assert!(text.contains("cmd=/opt/saia/cloud_interface"), "{text}");
+        assert!(text.contains("orig=rm -rf / --no-preserve-root"), "{text}");
+        assert!(text.contains("stdin=PAYLOAD"), "{text}");
+        assert_eq!(reply.exit_code, 0);
+        assert_eq!(server.stats.forced_commands.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unauthorized_key_rejected() {
+        let kp = KeyPair::generate(12);
+        let server = forced_server(&kp);
+        let rogue = KeyPair::generate(666);
+        let err = SshClient::connect(&server.addr.to_string(), &rogue);
+        assert!(err.is_err());
+        assert_eq!(server.stats.sessions_rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn no_handler_means_exit_127() {
+        let kp = KeyPair::generate(13);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: None,
+            options: vec![],
+            comment: String::new(),
+        });
+        let server = SshServer::start(ak, vec![kp.clone()], vec![]).unwrap();
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        let reply = client.exec("/bin/bash -c evil", b"").unwrap();
+        assert_eq!(reply.exit_code, 127);
+        assert!(String::from_utf8_lossy(&reply.stdout).contains("command not found"));
+    }
+
+    #[test]
+    fn concurrent_execs_multiplex_one_connection() {
+        let kp = KeyPair::generate(14);
+        let server = forced_server(&kp);
+        let client = Arc::new(SshClient::connect(&server.addr.to_string(), &kp).unwrap());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    for j in 0..5 {
+                        let body = format!("req-{i}-{j}");
+                        let reply = c.exec("x", body.as_bytes()).unwrap();
+                        assert!(
+                            String::from_utf8_lossy(&reply.stdout)
+                                .contains(&format!("stdin={body}")),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stats.execs.load(Ordering::Relaxed), 40);
+        assert_eq!(server.stats.sessions_accepted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn ping_keepalive() {
+        let kp = KeyPair::generate(15);
+        let server = forced_server(&kp);
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        for _ in 0..3 {
+            let rtt = client.ping().unwrap();
+            assert!(rtt < Duration::from_secs(1));
+        }
+        assert_eq!(server.stats.pings.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn server_death_detected() {
+        let kp = KeyPair::generate(16);
+        let mut server = forced_server(&kp);
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        assert!(client.is_alive());
+        server.stop();
+        // Next operation fails and marks the connection dead.
+        std::thread::sleep(Duration::from_millis(50));
+        let _ = client.ping();
+        let _ = client.ping();
+        assert!(!client.is_alive() || client.ping().is_err());
+    }
+
+    #[test]
+    fn streaming_chunks_arrive_incrementally() {
+        let kp = KeyPair::generate(17);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/ci".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let streamer: Arc<dyn CommandHandler> = Arc::new(
+            |_c: &str, _o: &str, _i: &[u8], out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                for i in 0..10 {
+                    if out(format!("tok{i};").as_bytes()).is_err() {
+                        return 1;
+                    }
+                }
+                0
+            },
+        );
+        let server =
+            SshServer::start(ak, vec![kp.clone()], vec![("/ci".into(), streamer)]).unwrap();
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        let mut chunks = Vec::new();
+        let code = client
+            .exec_stream("anything", b"", |c| chunks.push(String::from_utf8_lossy(c).into_owned()))
+            .unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(chunks.len(), 10);
+        assert_eq!(chunks[0], "tok0;");
+    }
+}

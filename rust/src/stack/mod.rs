@@ -1,0 +1,326 @@
+//! Full-stack assembly — Figure 1 in one process group.
+//!
+//! Wires every component exactly along the paper's request path:
+//!
+//! ```text
+//! client ── gateway (auth, routes, rate limits)          [ESX server]
+//!              │
+//!              ├── webapp (browser-only state)
+//!              ├── external proxy (GPT-4 wrapper)
+//!              └── HPC proxy ══ SSH(ForceCommand) ══╗
+//!                                                   ║    [HPC platform]
+//!                     cloud interface script ◄──────╝
+//!                        │ routing table
+//!                        ├── scheduler script ── Slurm sim ── GPU nodes
+//!                        └── vLLM-like servers (SimBackend / PJRT tiny)
+//! ```
+//!
+//! Examples, integration tests and every bench build on this.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::analytics::RequestLog;
+use crate::auth::SsoProvider;
+use crate::external::ExternalLlmService;
+use crate::gateway::{Consumer, Gateway, Route};
+use crate::hpcproxy::{HpcProxy, ProxyConfig};
+use crate::interface::CloudInterface;
+use crate::scheduler::{RealLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec};
+use crate::slurm::{ClusterSpec, SlurmSim};
+use crate::sshsim::{AuthorizedKey, AuthorizedKeys, KeyPair, SshServer};
+use crate::util::clock::WallClock;
+use crate::util::http::{self, Server};
+use crate::util::json::Json;
+use crate::util::metrics::Registry;
+use crate::webapp::WebApp;
+
+/// The ForceCommand every deployment pins the proxy key to.
+pub const CLOUD_INTERFACE_CMD: &str = "/opt/saia/cloud_interface";
+
+/// Stack-wide configuration.
+pub struct StackConfig {
+    pub cluster: ClusterSpec,
+    pub services: Vec<ServiceSpec>,
+    /// Wall-time scale for simulated model load times (1.0 = minutes-long
+    /// 70B cold starts; tests use ~1e-3).
+    pub load_time_scale: f64,
+    /// Keepalive/tick interval (paper: 5 s; tests use tens of ms).
+    pub keepalive: Duration,
+    /// Also stand up the external GPT-4 wrapper route.
+    pub with_external: bool,
+    /// Emulated ESX↔HPC wire time per SSH frame (Table 1/2 benches set
+    /// this; everything else leaves it at zero).
+    pub ssh_link_frame_delay: Duration,
+}
+
+impl Default for StackConfig {
+    fn default() -> StackConfig {
+        StackConfig {
+            cluster: ClusterSpec::kisski(),
+            services: vec![ServiceSpec::sim("intel-neural-7b", 0.0)],
+            load_time_scale: 0.001,
+            keepalive: Duration::from_millis(50),
+            with_external: true,
+            ssh_link_frame_delay: Duration::ZERO,
+        }
+    }
+}
+
+/// Everything running.
+pub struct ChatAiStack {
+    pub metrics: Registry,
+    pub log: RequestLog,
+    pub sso: SsoProvider,
+    pub slurm: Arc<Mutex<SlurmSim>>,
+    pub scheduler: Arc<ServiceScheduler>,
+    pub ssh_server: SshServer,
+    pub proxy: Arc<HpcProxy>,
+    pub proxy_http: Server,
+    pub gateway_server: Server,
+    pub webapp: WebApp,
+    pub external: Option<ExternalLlmService>,
+    /// Research-group API key provisioned by default.
+    pub api_key: String,
+    /// §7.1.4: the platform key clients seal E2EE payloads with.
+    pub e2ee_key: KeyPair,
+}
+
+impl ChatAiStack {
+    pub fn start(cfg: StackConfig) -> Result<ChatAiStack> {
+        let metrics = Registry::new();
+        let log = RequestLog::new();
+
+        // --- HPC platform ------------------------------------------------
+        let slurm = Arc::new(Mutex::new(SlurmSim::new(cfg.cluster.clone())));
+        let clock = WallClock::new();
+        let launcher = Arc::new(RealLauncher::new(metrics.clone(), cfg.load_time_scale));
+        let scheduler = Arc::new(ServiceScheduler::new(
+            slurm.clone(),
+            clock,
+            launcher,
+            cfg.services.clone(),
+            SchedulerConfig::default(),
+            metrics.clone(),
+        ));
+        // §7.1.4 E2EE platform key + §7.1.3 cold-start queueing are on by
+        // default: sealed bodies decrypt only here, and infer calls wait
+        // out a scale-from-zero cold start.
+        let e2ee_key = KeyPair::generate(0x2EE);
+        let interface = CloudInterface::new(scheduler.clone(), metrics.clone())
+            .with_platform_key(e2ee_key.clone())
+            .with_queue_timeout(Duration::from_secs(30));
+
+        // --- the circuit breaker -----------------------------------------
+        let key = KeyPair::generate(0xE5C);
+        let mut authorized = AuthorizedKeys::new();
+        authorized.add(AuthorizedKey {
+            fingerprint: key.fingerprint(),
+            force_command: Some(CLOUD_INTERFACE_CMD.into()),
+            options: vec!["no-pty".into(), "no-port-forwarding".into(), "restrict".into()],
+            comment: "esx-hpc-proxy (functional account)".into(),
+        });
+        let ssh_server = SshServer::start(
+            authorized,
+            vec![key.clone()],
+            vec![(CLOUD_INTERFACE_CMD.into(), interface)],
+        )?;
+
+        // --- ESX side -----------------------------------------------------
+        let proxy = HpcProxy::connect(
+            &ssh_server.addr.to_string(),
+            key,
+            ProxyConfig {
+                keepalive: cfg.keepalive,
+                reconnect_backoff: Duration::from_millis(50),
+                link_frame_delay: cfg.ssh_link_frame_delay,
+            },
+            metrics.clone(),
+        )?;
+        let proxy_http = proxy.clone().into_http()?;
+
+        let sso = SsoProvider::new();
+        sso.register("demo@uni-goettingen.de", "demo-password");
+
+        let model_names: Vec<String> = cfg.services.iter().map(|s| s.name.clone()).collect();
+        let webapp = WebApp::start(model_names.clone())?;
+
+        let external = if cfg.with_external {
+            Some(ExternalLlmService::start("gpt-4", Duration::from_millis(5))?)
+        } else {
+            None
+        };
+
+        let mut routes = Vec::new();
+        for name in &model_names {
+            routes.push(Route::new(
+                name,
+                &format!("/v1/m/{name}/"),
+                vec![proxy_http.url()],
+                &format!("/infer/{name}"),
+            ));
+        }
+        if let Some(ext) = &external {
+            // §5.8: strict rate limit + group restriction on the paid route.
+            routes.push(
+                Route::new("gpt-4", "/v1/m/gpt-4/", vec![ext.url()], "/v1/chat/completions")
+                    .with_rate_limit(50.0)
+                    .with_groups(&["research", "web"]),
+            );
+        }
+        routes.push(Route::new("webapp", "/chat", vec![webapp.url()], "/").public());
+
+        let api_key = "key-research-0001".to_string();
+        let consumers = vec![
+            Consumer { id: "api-research".into(), api_key: api_key.clone(), group: "research".into() },
+            Consumer {
+                id: "api-student".into(),
+                api_key: "key-student-0001".into(),
+                group: "students".into(),
+            },
+        ];
+        let gateway = Gateway::new(routes, consumers, Some(sso.clone()), metrics.clone(), log.clone());
+        let gateway_server = gateway.start()?;
+
+        Ok(ChatAiStack {
+            metrics,
+            log,
+            sso,
+            slurm,
+            scheduler,
+            ssh_server,
+            proxy,
+            proxy_http,
+            gateway_server,
+            webapp,
+            external,
+            api_key,
+            e2ee_key,
+        })
+    }
+
+    pub fn gateway_url(&self) -> String {
+        self.gateway_server.url()
+    }
+
+    /// Wait until a service has ≥1 ready instance (scheduler ticks run on
+    /// the proxy keepalive; this just polls the routing table).
+    pub fn wait_ready(&self, service: &str, timeout: Duration) -> Result<()> {
+        let start = std::time::Instant::now();
+        while start.elapsed() < timeout {
+            if !self.scheduler.routing.ready_instances(service).is_empty() {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Err(anyhow!("service {service} not ready within {timeout:?}"))
+    }
+
+    /// One chat completion through the entire stack.
+    pub fn chat(&self, model: &str, message: &str) -> Result<(u16, Json)> {
+        let body = Json::obj()
+            .set("model", model)
+            .set(
+                "messages",
+                vec![Json::obj().set("role", "user").set("content", message)],
+            )
+            .set("stream", false);
+        let resp = http::request(
+            "POST",
+            &format!("{}/v1/m/{model}/", self.gateway_url()),
+            &[
+                ("authorization", &format!("Bearer {}", self.api_key)),
+                ("content-type", "application/json"),
+            ],
+            body.dump().as_bytes(),
+        )?;
+        let json = resp.json_body().unwrap_or(Json::Null);
+        Ok((resp.status, json))
+    }
+
+    /// Streaming chat; returns the concatenated token text.
+    pub fn chat_stream(&self, model: &str, message: &str) -> Result<String> {
+        let body = Json::obj()
+            .set("model", model)
+            .set(
+                "messages",
+                vec![Json::obj().set("role", "user").set("content", message)],
+            )
+            .set("stream", true);
+        let mut parser = http::SseParser::default();
+        let mut text = String::new();
+        http::request_stream(
+            "POST",
+            &format!("{}/v1/m/{model}/", self.gateway_url()),
+            &[
+                ("authorization", &format!("Bearer {}", self.api_key)),
+                ("content-type", "application/json"),
+            ],
+            body.dump().as_bytes(),
+            |chunk| {
+                for event in parser.push(chunk) {
+                    if event == "[DONE]" {
+                        continue;
+                    }
+                    if let Ok(j) = Json::parse(&event) {
+                        if let Some(c) = j.at(&["choices", "0", "delta", "content"]) {
+                            if let Some(s) = c.as_str() {
+                                text.push_str(s);
+                            }
+                        }
+                    }
+                }
+            },
+        )?;
+        Ok(text)
+    }
+
+    /// §7.1.4: end-to-end-encrypted chat — the body is sealed for the HPC
+    /// platform; the gateway, proxy and SSH layers forward ciphertext only.
+    pub fn chat_sealed(&self, model: &str, message: &str) -> Result<(u16, Json)> {
+        let body = Json::obj()
+            .set("model", model)
+            .set(
+                "messages",
+                vec![Json::obj().set("role", "user").set("content", message)],
+            )
+            .set("stream", false);
+        // Nonce from wall time; uniqueness is what matters.
+        let mut nonce = [0u8; 16];
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        nonce[..16].copy_from_slice(&t.as_nanos().to_le_bytes()[..16]);
+        let sealed =
+            crate::interface::e2ee::seal_request(&self.e2ee_key, nonce, body.dump().as_bytes());
+        let resp = http::request(
+            "POST",
+            &format!("{}/v1/m/{model}/", self.gateway_url()),
+            &[
+                ("authorization", &format!("Bearer {}", self.api_key)),
+                ("content-type", "application/octet-stream"),
+            ],
+            &sealed,
+        )?;
+        if resp.status != 200 {
+            return Ok((resp.status, resp.json_body().unwrap_or(Json::Null)));
+        }
+        let plain = crate::interface::e2ee::open_response(&self.e2ee_key, &resp.body)
+            .map_err(|e| anyhow!("unseal: {e}"))?;
+        let json = Json::parse(std::str::from_utf8(&plain)?).map_err(|e| anyhow!("{e}"))?;
+        Ok((resp.status, json))
+    }
+
+    pub fn stop(&mut self) {
+        self.proxy.stop();
+        self.ssh_server.stop();
+    }
+}
+
+impl Drop for ChatAiStack {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}

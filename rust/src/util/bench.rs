@@ -1,0 +1,134 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! Benches in `benches/` are `harness = false` binaries that use this module
+//! to time closures, compute robust statistics, and print table rows that
+//! mirror the paper's Tables 1–2 format.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample of seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn stats(samples: &[f64]) -> Stats {
+    assert!(!samples.is_empty());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Stats {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        p50: q(0.5),
+        p95: q(0.95),
+        p99: q(0.99),
+        max: sorted[n - 1],
+    }
+}
+
+/// Time `f` for `n` iterations after `warmup` iterations; returns per-call
+/// seconds.
+pub fn time_n(warmup: usize, n: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Measure sustained throughput: run `f` repeatedly for ~`secs` wall seconds
+/// and return completed ops/sec.
+pub fn throughput_for(secs: f64, mut f: impl FnMut()) -> f64 {
+    let start = Instant::now();
+    let mut ops = 0u64;
+    while start.elapsed().as_secs_f64() < secs {
+        f();
+        ops += 1;
+    }
+    ops as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Parallel closed-loop throughput with `workers` threads.
+pub fn throughput_parallel(secs: f64, workers: usize, f: impl Fn() + Send + Sync) -> f64 {
+    let start = Instant::now();
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let ops = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    f();
+                    ops.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    ops.load(std::sync::atomic::Ordering::Relaxed) as f64 / start.elapsed().as_secs_f64()
+}
+
+/// Print a table header like the paper's tables.
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n## {title}");
+    println!("| {} |", cols.join(" | "));
+    println!("|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+pub fn table_row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+/// Format seconds as "mean (std) ms" like Table 1.
+pub fn fmt_ms(s: &Stats) -> String {
+    format!("{:.2} ({:.2})", s.mean * 1e3, s.std * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let mut calls = 0;
+        let v = time_n(2, 5, || calls += 1);
+        assert_eq!(v.len(), 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let t = throughput_for(0.05, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(t > 1000.0);
+    }
+}

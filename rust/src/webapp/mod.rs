@@ -1,0 +1,107 @@
+//! Chat AI web app (§5.3) — served as a gateway route.
+//!
+//! The paper's decisive design choice is that the app runs *entirely in the
+//! browser*: conversations live in browser storage, never on the server
+//! (§6.2). Reproduced here as a static-asset server whose API surface is
+//! provably state-free — there is no endpoint that accepts or returns
+//! conversation history, which the privacy tests assert.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::http::{Handler, Reply, Request, Response, Server};
+use crate::util::json::Json;
+
+/// The static SPA shell (stands in for the React/Vite bundle).
+pub const INDEX_HTML: &str = r#"<!doctype html>
+<html>
+<head><meta charset="utf-8"><title>Chat AI</title></head>
+<body>
+<h1>Chat AI</h1>
+<p>Conversations are stored exclusively in your browser (localStorage).
+This server keeps no chat state: see /app/config for the model list, and
+POST inference through the gateway.</p>
+<script>
+// All conversation state management happens client-side; the bundle only
+// ever calls the inference routes. (Stand-in for the React/Vite app.)
+const STORE_KEY = "chat-ai-conversations";
+</script>
+</body>
+</html>
+"#;
+
+pub struct WebApp {
+    pub server: Server,
+}
+
+impl WebApp {
+    /// `models` is shown in the UI's model drop-down.
+    pub fn start(models: Vec<String>) -> Result<WebApp> {
+        let handler: Handler = Arc::new(move |req: &Request| -> Reply {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/") | ("GET", "/chat") => Reply::full(
+                    Response::new(200)
+                        .header("content-type", "text/html; charset=utf-8")
+                        // Explicitly forbid intermediary caching of the app
+                        // shell; there is nothing user-specific in it anyway.
+                        .header("cache-control", "no-store")
+                        .with_body(INDEX_HTML.as_bytes()),
+                ),
+                ("GET", "/app/config") => {
+                    let list: Vec<Json> = models.iter().map(|m| Json::from(m.as_str())).collect();
+                    Reply::full(Response::json(
+                        200,
+                        &Json::obj().set("models", list).set("storage", "browser-only"),
+                    ))
+                }
+                ("GET", "/health") => {
+                    Reply::full(Response::json(200, &Json::obj().set("status", "ok")))
+                }
+                // The privacy property, made structural: any conversation-
+                // sounding endpoint simply does not exist.
+                _ => Reply::full(Response::json(404, &Json::obj().set("error", "not found"))),
+            }
+        });
+        Ok(WebApp { server: Server::start(handler)? })
+    }
+
+    pub fn url(&self) -> String {
+        self.server.url()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::http;
+
+    #[test]
+    fn serves_spa_and_config() {
+        let app = WebApp::start(vec!["tiny".into(), "mixtral-8x7b".into()]).unwrap();
+        let r = http::get(&format!("{}/", app.url())).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(r.body_str().contains("stored exclusively in your browser"));
+        let c = http::get(&format!("{}/app/config", app.url())).unwrap();
+        let j = c.json_body().unwrap();
+        assert_eq!(j.at(&["models", "1"]).unwrap().as_str(), Some("mixtral-8x7b"));
+        assert_eq!(j.str_or("storage", ""), "browser-only");
+    }
+
+    #[test]
+    fn no_server_side_conversation_endpoints() {
+        let app = WebApp::start(vec![]).unwrap();
+        for path in [
+            "/conversations",
+            "/api/conversations",
+            "/history",
+            "/chat/save",
+            "/app/conversations/1",
+        ] {
+            let r = http::get(&format!("{}{path}", app.url())).unwrap();
+            assert_eq!(r.status, 404, "{path} must not exist (privacy §6.2)");
+            let r = http::request("POST", &format!("{}{path}", app.url()), &[], b"{}").unwrap();
+            assert_eq!(r.status, 404, "POST {path} must not exist");
+        }
+    }
+}

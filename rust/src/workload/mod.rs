@@ -1,0 +1,166 @@
+//! Workload generation + latency probing (§6.3's methodology).
+//!
+//! The paper measures latency with a custom shell script (50 identical
+//! probes per stage, Table 1) and throughput with Locust (Table 2). This
+//! module is the equivalent harness: [`probe_stage`] produces Table 1 rows
+//! and [`LoadGen`] runs closed-loop multi-worker load like a Locust user
+//! swarm.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::bench::{stats, Stats};
+
+/// One Table-1 row: a named pipeline stage measured over N probes.
+#[derive(Debug, Clone)]
+pub struct StageResult {
+    pub component: String,
+    pub operation: String,
+    pub stats: Stats,
+    /// Aggregated average in ms (this stage includes all previous ones),
+    /// mirroring Table 1's "Agg. Avg." column.
+    pub agg_avg_ms: f64,
+    /// Latency attributable to this stage alone ("Diff." column).
+    pub diff_ms: f64,
+}
+
+/// Run `n` probes of a stage and build its row. `agg_prev_ms` is the
+/// aggregated average of the previous stage (0 for the first).
+pub fn probe_stage(
+    component: &str,
+    operation: &str,
+    n: usize,
+    agg_prev_ms: f64,
+    mut probe: impl FnMut(),
+) -> StageResult {
+    // One warmup probe to exclude connection setup noise, as a shell
+    // script's first curl would be discarded.
+    probe();
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = Instant::now();
+        probe();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let s = stats(&samples);
+    let agg_avg_ms = s.mean * 1e3;
+    StageResult {
+        component: component.to_string(),
+        operation: operation.to_string(),
+        stats: s,
+        agg_avg_ms,
+        diff_ms: agg_avg_ms - agg_prev_ms,
+    }
+}
+
+/// Closed-loop load generator (Locust-style user swarm).
+pub struct LoadGen {
+    pub workers: usize,
+    pub duration: Duration,
+}
+
+/// Aggregate result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadResult {
+    pub rps: f64,
+    pub ok: u64,
+    pub errors: u64,
+    pub latency: Stats,
+}
+
+impl LoadGen {
+    pub fn new(workers: usize, duration: Duration) -> LoadGen {
+        LoadGen { workers, duration }
+    }
+
+    /// Hammer `op` from `workers` threads for the configured duration.
+    /// `op` returns Ok to count a success.
+    pub fn run(&self, op: impl Fn() -> Result<(), String> + Send + Sync) -> LoadResult {
+        let stop = AtomicBool::new(false);
+        let ok = AtomicU64::new(0);
+        let errors = AtomicU64::new(0);
+        let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let start = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let t = Instant::now();
+                        match op() {
+                            Ok(()) => {
+                                ok.fetch_add(1, Ordering::Relaxed);
+                                local.push(t.elapsed().as_secs_f64());
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    latencies.lock().unwrap().extend(local);
+                });
+            }
+            s.spawn(|| {
+                std::thread::sleep(self.duration);
+                stop.store(true, Ordering::Relaxed);
+            });
+        });
+        let elapsed = start.elapsed().as_secs_f64();
+        let ok_n = ok.load(Ordering::Relaxed);
+        let lat = latencies.into_inner().unwrap();
+        LoadResult {
+            rps: ok_n as f64 / elapsed,
+            ok: ok_n,
+            errors: errors.load(Ordering::Relaxed),
+            latency: if lat.is_empty() { stats(&[0.0]) } else { stats(&lat) },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_stage_diff_column() {
+        let r1 = probe_stage("A", "op1", 20, 0.0, || {
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert!(r1.agg_avg_ms >= 0.2, "{}", r1.agg_avg_ms);
+        assert!((r1.diff_ms - r1.agg_avg_ms).abs() < 1e-9);
+        let r2 = probe_stage("B", "op2", 20, r1.agg_avg_ms, || {
+            std::thread::sleep(Duration::from_micros(500));
+        });
+        assert!(r2.diff_ms > 0.0, "stage B adds latency over A");
+        assert_eq!(r2.stats.n, 20);
+    }
+
+    #[test]
+    fn loadgen_counts_and_rps() {
+        let gen = LoadGen::new(4, Duration::from_millis(100));
+        let result = gen.run(|| {
+            std::thread::sleep(Duration::from_micros(100));
+            Ok(())
+        });
+        assert!(result.ok > 50, "ok={}", result.ok);
+        assert_eq!(result.errors, 0);
+        assert!(result.rps > 500.0, "rps={}", result.rps);
+        assert!(result.latency.mean >= 1e-4);
+    }
+
+    #[test]
+    fn loadgen_counts_errors() {
+        let gen = LoadGen::new(2, Duration::from_millis(50));
+        let flip = AtomicU64::new(0);
+        let result = gen.run(|| {
+            if flip.fetch_add(1, Ordering::Relaxed) % 2 == 0 {
+                Ok(())
+            } else {
+                Err("boom".into())
+            }
+        });
+        assert!(result.errors > 0);
+        assert!(result.ok > 0);
+    }
+}

