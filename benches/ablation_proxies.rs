@@ -3,7 +3,11 @@
 //! connection, scales it out (the paper projects ~3000 RPS with load
 //! balancing across proxies).
 //!
-//! Sweep: aggregate `probe` throughput with 1, 2, 4, 8 proxy connections.
+//! Two sweeps over the same cluster:
+//!  1. the paper's projection — 1, 2, 4, 8 separate proxy *processes*;
+//!  2. the tentpole — ONE proxy process with a pool of 1, 2, 4, 8
+//!     multiplexed SSH connections (see benches/README.md for how to read
+//!     the comparison: same aggregate wire capacity, no extra deployment).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -33,21 +37,19 @@ fn main() -> anyhow::Result<()> {
         &["proxies", "aggregate probe RPS", "scaling vs 1 proxy"],
     );
 
+    let quiet_cfg = |pool_size: usize| ProxyConfig {
+        keepalive: Duration::from_secs(60), // quiet during the run
+        reconnect_backoff: Duration::from_millis(50),
+        link_frame_delay: Duration::from_micros(1700),
+        pool_size,
+        max_channels_per_conn: 8,
+    };
+
     let mut base = 0.0f64;
     for n_proxies in [1usize, 2, 4, 8] {
         let proxies: Vec<Arc<HpcProxy>> = (0..n_proxies)
             .map(|_| {
-                HpcProxy::connect(
-                    &ssh_addr,
-                    key.clone(),
-                    ProxyConfig {
-                        keepalive: Duration::from_secs(60), // quiet during the run
-                        reconnect_backoff: Duration::from_millis(50),
-                        link_frame_delay: Duration::from_micros(1700),
-                    },
-                    Registry::new(),
-                )
-                .unwrap()
+                HpcProxy::connect(&ssh_addr, key.clone(), quiet_cfg(1), Registry::new()).unwrap()
             })
             .collect();
 
@@ -83,5 +85,45 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\nshape check: throughput grows with proxy count (paper §7.1.5): see scaling column");
+
+    // --- sweep 2: one proxy, pooled connections ---------------------------
+    println!();
+    table_header(
+        "Ablation — single HPC Proxy with a pool of N multiplexed SSH connections",
+        &["pool size N", "aggregate probe RPS", "scaling vs N=1"],
+    );
+    let mut pool_base = 0.0f64;
+    for n in [1usize, 2, 4, 8] {
+        let proxy =
+            HpcProxy::connect(&ssh_addr, key.clone(), quiet_cfg(n), Registry::new()).unwrap();
+        let ops = AtomicU64::new(0);
+        let secs = 3.0;
+        let start = Instant::now();
+        std::thread::scope(|s| {
+            // Same aggregate worker count as the multi-proxy sweep.
+            for _ in 0..(8 * n) {
+                s.spawn(|| {
+                    while start.elapsed().as_secs_f64() < secs {
+                        if proxy.probe("intel-neural-7b").is_ok() {
+                            ops.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let rps = ops.load(Ordering::Relaxed) as f64 / start.elapsed().as_secs_f64();
+        if n == 1 {
+            pool_base = rps;
+        }
+        table_row(&[
+            n.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / pool_base.max(1.0)),
+        ]);
+        proxy.stop();
+    }
+    println!(
+        "\nshape check: one pooled proxy tracks N separate proxies without extra deployment"
+    );
     Ok(())
 }

@@ -114,7 +114,13 @@ fn main() -> anyhow::Result<()> {
     // --- PJRT model steps (the real compute) ---
     println!("\nloading PJRT tiny model (compile + weights)...");
     let t = std::time::Instant::now();
-    let rt = ModelRuntime::load_from_dir(&artifacts_dir(), "tiny")?;
+    let rt = match ModelRuntime::load_from_dir(&artifacts_dir(), "tiny") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping PJRT section: {e}");
+            return Ok(());
+        }
+    };
     println!("model load: {:.2}s", t.elapsed().as_secs_f64());
     let spec = rt.spec.clone();
     let mut bt = vec![0i32; spec.batch * spec.max_blocks];

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 CI pipeline — exactly what .github/workflows/ci.yml runs.
+# Usage: ./ci.sh
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "    rustfmt not installed; skipping (CI installs it)"
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "CI OK"

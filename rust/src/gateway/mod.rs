@@ -7,13 +7,14 @@
 //!   `x-user-id`, unifying both paths for the backend exactly as §5.2
 //!   describes;
 //! - **rate limiting**: token-bucket per (consumer, route);
-//! - **load balancing**: round-robin over a route's upstreams (the paper's
-//!   multi-HPC-proxy scale-out, §7.1.5);
+//! - **load balancing**: smooth weighted round-robin over a route's
+//!   upstreams (the paper's multi-HPC-proxy scale-out, §7.1.5) — each HPC
+//!   proxy advertises capacity = pooled connections × channels per
+//!   connection, and the gateway sends traffic proportionally;
 //! - **observability**: a Prometheus `/metrics` endpoint (§5.9) and a
 //!   request log feeding the analytics pipeline (timestamp, user, model —
 //!   and deliberately nothing else, §6.2).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -58,8 +59,12 @@ pub struct Route {
     pub name: String,
     /// Path prefix to match, e.g. `/v1/m/intel-neural-7b/`.
     pub prefix: String,
-    /// Upstream base URLs; requests round-robin across them.
+    /// Upstream base URLs; requests are spread across them by weight.
     pub upstreams: Vec<String>,
+    /// Relative capacity per upstream (an HPC proxy advertises pooled
+    /// connections × channels per connection). Defaults to all-equal,
+    /// which degrades to plain round-robin.
+    pub weights: Vec<usize>,
     /// Strip the prefix before forwarding and prepend this instead.
     pub rewrite: String,
     /// Requests/second per consumer (None = unlimited). The paper rate-
@@ -68,20 +73,23 @@ pub struct Route {
     /// Routes may be restricted to specific consumer groups (§5.8).
     pub allowed_groups: Option<Vec<String>>,
     pub require_auth: bool,
-    rr: AtomicUsize,
+    /// Smooth weighted-round-robin state (one current weight per upstream).
+    wrr: Mutex<Vec<i64>>,
 }
 
 impl Route {
     pub fn new(name: &str, prefix: &str, upstreams: Vec<String>, rewrite: &str) -> Route {
+        let n = upstreams.len();
         Route {
             name: name.into(),
             prefix: prefix.into(),
             upstreams,
+            weights: vec![1; n],
             rewrite: rewrite.into(),
             rate_limit_per_sec: None,
             allowed_groups: None,
             require_auth: true,
-            rr: AtomicUsize::new(0),
+            wrr: Mutex::new(vec![0; n]),
         }
     }
 
@@ -100,9 +108,35 @@ impl Route {
         self
     }
 
+    /// Set per-upstream capacity weights (must match `upstreams` length).
+    pub fn with_weights(mut self, weights: Vec<usize>) -> Route {
+        assert_eq!(
+            weights.len(),
+            self.upstreams.len(),
+            "one weight per upstream on route {}",
+            self.name
+        );
+        self.weights = weights;
+        self
+    }
+
+    /// Smooth weighted round-robin (the nginx algorithm): add each weight
+    /// to its running total, pick the max, subtract the weight sum. Equal
+    /// weights reduce to plain round-robin.
     fn next_upstream(&self) -> &str {
-        let i = self.rr.fetch_add(1, Ordering::Relaxed);
-        &self.upstreams[i % self.upstreams.len()]
+        let mut cur = self.wrr.lock().unwrap();
+        let mut best = 0;
+        let mut total: i64 = 0;
+        for (i, w) in self.weights.iter().enumerate() {
+            let w = (*w).max(1) as i64;
+            total += w;
+            cur[i] += w;
+            if cur[i] > cur[best] {
+                best = i;
+            }
+        }
+        cur[best] -= total;
+        &self.upstreams[best]
     }
 }
 
@@ -447,6 +481,36 @@ mod tests {
                 http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
             assert_eq!(r.status, 200);
         }
+    }
+
+    #[test]
+    fn weighted_round_robin_matches_capacity() {
+        // Upstream A advertises 3x the capacity of B (e.g. a pooled proxy
+        // with 3 connections vs a single-connection one): exactly 3/4 of
+        // the traffic must land on A.
+        fn marker(name: &'static str) -> Server {
+            Server::start(Arc::new(move |_req: &Request| {
+                Reply::full(Response::json(200, &Json::obj().set("up", name)))
+            }))
+            .unwrap()
+        }
+        let up_a = marker("a");
+        let up_b = marker("b");
+        let routes = vec![Route::new("m", "/c/", vec![up_a.url(), up_b.url()], "/x")
+            .public()
+            .with_weights(vec![3, 1])];
+        let (_gw, server) = gw(routes, None);
+        let (mut a, mut b) = (0, 0);
+        for _ in 0..8 {
+            let r = http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+            assert_eq!(r.status, 200);
+            match r.json_body().unwrap().str_or("up", "?") {
+                "a" => a += 1,
+                "b" => b += 1,
+                other => panic!("unexpected upstream {other}"),
+            }
+        }
+        assert_eq!((a, b), (6, 2), "3:1 weights over 8 requests");
     }
 
     #[test]

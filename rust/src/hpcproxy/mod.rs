@@ -1,13 +1,23 @@
 //! The HPC Proxy (§5.4): the web server's only bridge to the cluster.
 //!
-//! Holds one persistent SSH connection to the HPC service node, re-
-//! establishes it automatically after interruptions (detected by the 5 s
-//! keepalive pings), and forwards inference HTTP requests as Cloud
-//! Interface invocations over the channel — including streamed responses.
+//! The paper's proxy keeps **one** persistent SSH connection and pushes all
+//! traffic through it — the ~200 RPS ceiling of Table 2. This module breaks
+//! that ceiling with a **pool of N persistent multiplexed connections**
+//! (OpenSSH `ControlMaster`-style masters, see DESIGN.md §Connection pool):
 //!
-//! The keepalive serves double duty, as in the paper: it detects broken
-//! connections *and* each ping triggers a scheduler-script run on the HPC
-//! side (`tick`).
+//! - connection 0 is the **control lane**: keepalive pings and the
+//!   scheduler `tick` stay here, exactly once per interval, so bulk token
+//!   streams never head-of-line-block them;
+//! - connections 1..N are **data lanes** for `infer`/`probe` traffic,
+//!   placed least-loaded-first with a per-connection channel cap
+//!   (`MaxSessions`-style): a lane at its cap falls over to the next, and
+//!   only a fully saturated pool borrows the control lane;
+//! - every pool member reconnects independently (backoff + keepalive
+//!   detection), and each one authenticates with the same pinned key, so
+//!   the ForceCommand circuit breaker holds per connection.
+//!
+//! `pool_size = 1` reproduces the paper's single-connection proxy exactly:
+//! one connection carries control and data alike.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -16,7 +26,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::interface::parse_reply;
-use crate::sshsim::{KeyPair, SshClient};
+use crate::sshsim::{KeyPair, SshClient, EXIT_CHANNEL_REJECTED};
 use crate::util::http::{Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
@@ -30,6 +40,11 @@ pub struct ProxyConfig {
     pub reconnect_backoff: Duration,
     /// Emulated ESX↔HPC wire time per SSH frame (benches only; 0 = off).
     pub link_frame_delay: Duration,
+    /// Persistent SSH connections in the pool. 1 = the paper's baseline.
+    pub pool_size: usize,
+    /// Per-connection concurrent-channel cap used for placement (OpenSSH
+    /// `MaxSessions` is ~10 by default).
+    pub max_channels_per_conn: usize,
 }
 
 impl Default for ProxyConfig {
@@ -38,18 +53,31 @@ impl Default for ProxyConfig {
             keepalive: Duration::from_secs(5),
             reconnect_backoff: Duration::from_millis(200),
             link_frame_delay: Duration::ZERO,
+            pool_size: 1,
+            max_channels_per_conn: 8,
         }
     }
 }
 
-/// Connection manager + request forwarder.
+/// One pooled SSH connection and its lifecycle state.
+struct PoolMember {
+    client: Mutex<Option<Arc<SshClient>>>,
+    reconnects: AtomicU64,
+    /// A background reconnect for this member is in flight.
+    reconnecting: AtomicBool,
+}
+
+/// Connection-pool manager + request forwarder.
 pub struct HpcProxy {
     ssh_addr: String,
     key: KeyPair,
     cfg: ProxyConfig,
-    client: Mutex<Option<Arc<SshClient>>>,
+    members: Vec<PoolMember>,
     stop: Arc<AtomicBool>,
+    /// Total reconnects detected by the keepalive, across all members.
     pub reconnects: AtomicU64,
+    /// Placements that saturated every data lane and borrowed capacity.
+    pub overflows: AtomicU64,
     metrics: Registry,
 }
 
@@ -60,62 +88,90 @@ impl HpcProxy {
         cfg: ProxyConfig,
         metrics: Registry,
     ) -> Result<Arc<HpcProxy>> {
+        let n = cfg.pool_size.max(1);
+        let members = (0..n)
+            .map(|_| PoolMember {
+                client: Mutex::new(None),
+                reconnects: AtomicU64::new(0),
+                reconnecting: AtomicBool::new(false),
+            })
+            .collect();
         let proxy = Arc::new(HpcProxy {
             ssh_addr: ssh_addr.to_string(),
             key,
             cfg,
-            client: Mutex::new(None),
+            members,
             stop: Arc::new(AtomicBool::new(false)),
             reconnects: AtomicU64::new(0),
+            overflows: AtomicU64::new(0),
             metrics,
         });
-        proxy.ensure_connected()?;
-        // Keepalive thread: ping + scheduler tick every interval; reconnect
-        // on failure.
+        // The control connection must come up; data lanes are best-effort
+        // (the keepalive loop keeps retrying them). Sequential connects so
+        // member order matches the server's accept order.
+        proxy.ensure_connected(0)?;
+        for idx in 1..proxy.members.len() {
+            if let Err(e) = proxy.ensure_connected(idx) {
+                crate::log_warn!("hpcproxy", "pool member {idx} connect failed: {e}");
+            }
+        }
+        // Keepalive thread: ping every member + scheduler tick (connection
+        // 0 only, once per interval); reconnect members on failure.
         let p = proxy.clone();
         std::thread::spawn(move || p.keepalive_loop());
         Ok(proxy)
     }
 
-    fn keepalive_loop(&self) {
+    fn keepalive_loop(self: Arc<Self>) {
         while !self.stop.load(Ordering::SeqCst) {
             std::thread::sleep(self.cfg.keepalive);
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
-            let healthy = match self.current_client() {
-                Some(c) => {
-                    // Ping for liveness, then trigger the scheduler run.
-                    let ok = c.ping().is_ok();
-                    if ok {
-                        let _ = c.exec("tick", b"");
+            for idx in 0..self.members.len() {
+                let healthy = match self.current_client(idx) {
+                    Some(c) => {
+                        // Ping for liveness; connection 0's ping doubles as
+                        // the scheduler trigger (exactly one tick/interval).
+                        let ok = c.ping().is_ok();
+                        if ok && idx == 0 {
+                            let _ = c.exec("tick", b"");
+                        }
+                        ok
                     }
-                    ok
+                    None => false,
+                };
+                // Reconnect in the background so one dead member's retry
+                // backoff never stalls pings/ticks for the others (at most
+                // one reconnect thread per member).
+                if !healthy && !self.members[idx].reconnecting.swap(true, Ordering::SeqCst) {
+                    self.metrics.counter("proxy_reconnects_total", &[]).inc();
+                    self.reconnects.fetch_add(1, Ordering::SeqCst);
+                    self.members[idx].reconnects.fetch_add(1, Ordering::SeqCst);
+                    let p = self.clone();
+                    std::thread::spawn(move || {
+                        let _ = p.reconnect(idx);
+                        p.members[idx].reconnecting.store(false, Ordering::SeqCst);
+                    });
                 }
-                None => false,
-            };
-            if !healthy {
-                self.metrics.counter("proxy_reconnects_total", &[]).inc();
-                self.reconnects.fetch_add(1, Ordering::SeqCst);
-                let _ = self.reconnect();
             }
         }
     }
 
-    fn current_client(&self) -> Option<Arc<SshClient>> {
-        let guard = self.client.lock().unwrap();
+    fn current_client(&self, idx: usize) -> Option<Arc<SshClient>> {
+        let guard = self.members[idx].client.lock().unwrap();
         guard.as_ref().filter(|c| c.is_alive()).cloned()
     }
 
-    fn ensure_connected(&self) -> Result<Arc<SshClient>> {
-        if let Some(c) = self.current_client() {
+    fn ensure_connected(&self, idx: usize) -> Result<Arc<SshClient>> {
+        if let Some(c) = self.current_client(idx) {
             return Ok(c);
         }
-        self.reconnect()
+        self.reconnect(idx)
     }
 
-    fn reconnect(&self) -> Result<Arc<SshClient>> {
-        let mut guard = self.client.lock().unwrap();
+    fn reconnect(&self, idx: usize) -> Result<Arc<SshClient>> {
+        let mut guard = self.members[idx].client.lock().unwrap();
         if let Some(c) = guard.as_ref().filter(|c| c.is_alive()) {
             return Ok(c.clone());
         }
@@ -125,7 +181,7 @@ impl HpcProxy {
                 Ok(c) => {
                     let c = Arc::new(c);
                     *guard = Some(c.clone());
-                    crate::log_info!("hpcproxy", "ssh connection (re)established");
+                    crate::log_info!("hpcproxy", "ssh connection {idx} (re)established");
                     return Ok(c);
                 }
                 Err(e) => {
@@ -137,15 +193,90 @@ impl HpcProxy {
         Err(last_err)
     }
 
+    /// Pick the connection for a bulk (`infer`/`probe`) request.
+    ///
+    /// Least-loaded data lane below the channel cap first — so a lane at
+    /// its cap falls over to the next one. Only when every data lane is
+    /// saturated (or down) does traffic borrow the control connection;
+    /// a fully saturated pool degrades to global least-loaded rather than
+    /// queueing.
+    fn pick_bulk(&self) -> Result<Arc<SshClient>> {
+        let n = self.members.len();
+        if n == 1 {
+            return self.ensure_connected(0);
+        }
+        let cap = self.cfg.max_channels_per_conn.max(1);
+        let mut best_under_cap: Option<(usize, Arc<SshClient>)> = None;
+        let mut least_loaded: Option<(usize, Arc<SshClient>)> = None;
+        for idx in 1..n {
+            let Some(c) = self.current_client(idx) else { continue };
+            let load = c.active_channels();
+            if load < cap && best_under_cap.as_ref().map_or(true, |(l, _)| load < *l) {
+                best_under_cap = Some((load, c.clone()));
+            }
+            if least_loaded.as_ref().map_or(true, |(l, _)| load < *l) {
+                least_loaded = Some((load, c));
+            }
+        }
+        if let Some((_, c)) = best_under_cap {
+            return Ok(c);
+        }
+        // Saturation (a live lane at its cap) counts as overflow; lanes
+        // merely being down is an outage, not capacity exhaustion.
+        if least_loaded.is_some() {
+            self.overflows.fetch_add(1, Ordering::Relaxed);
+            self.metrics.counter("proxy_channel_overflow_total", &[]).inc();
+        }
+        if let Some(c) = self.current_client(0) {
+            let load0 = c.active_channels();
+            if load0 < cap || least_loaded.as_ref().map_or(true, |(l, _)| load0 < *l) {
+                return Ok(c);
+            }
+        }
+        if let Some((_, c)) = least_loaded {
+            return Ok(c);
+        }
+        // Nothing alive at all: resurrect a data lane, else the control
+        // connection (propagating its error if that fails too).
+        if let Ok(c) = self.ensure_connected(1) {
+            return Ok(c);
+        }
+        self.ensure_connected(0)
+    }
+
+    /// Advertised capacity: connections × channels per connection. The
+    /// gateway uses this as the load-balancing weight for multi-proxy
+    /// deployments (§7.1.5).
+    pub fn capacity(&self) -> usize {
+        self.members.len() * self.cfg.max_channels_per_conn.max(1)
+    }
+
+    /// Pool members currently holding a live connection.
+    pub fn alive_connections(&self) -> usize {
+        (0..self.members.len()).filter(|&i| self.current_client(i).is_some()).count()
+    }
+
+    /// Per-member in-flight channel counts (`None` = disconnected).
+    pub fn member_loads(&self) -> Vec<Option<usize>> {
+        (0..self.members.len())
+            .map(|i| self.current_client(i).map(|c| c.active_channels()))
+            .collect()
+    }
+
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
     }
 
     /// Forward one inference call, buffered.
     pub fn infer(&self, service: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
-        let client = self.ensure_connected()?;
+        let client = self.pick_bulk()?;
         let t = std::time::Instant::now();
         let reply = client.exec(&format!("infer {service}"), body)?;
+        if reply.exit_code == EXIT_CHANNEL_REJECTED {
+            // Server-side MaxSessions refusal carries no status header;
+            // surface it as an error instead of a fake 200.
+            return Err(anyhow!("ssh channel rejected (server MaxSessions)"));
+        }
         self.metrics
             .histogram("proxy_infer_seconds", &[("service", service)])
             .observe(t.elapsed().as_secs_f64());
@@ -161,10 +292,10 @@ impl HpcProxy {
         body: &[u8],
         mut on_chunk: impl FnMut(&[u8]),
     ) -> Result<u16> {
-        let client = self.ensure_connected()?;
+        let client = self.pick_bulk()?;
         let mut header_buf: Vec<u8> = Vec::new();
         let mut status: Option<u16> = None;
-        client.exec_stream(&format!("infer {service}"), body, |chunk| {
+        let code = client.exec_stream(&format!("infer {service}"), body, |chunk| {
             if status.is_none() {
                 header_buf.extend_from_slice(chunk);
                 if let Some(pos) = find_double_newline(&header_buf) {
@@ -179,29 +310,38 @@ impl HpcProxy {
                 on_chunk(chunk);
             }
         })?;
+        if code == EXIT_CHANNEL_REJECTED {
+            // The refusal text never contains the header separator, so no
+            // chunk has been emitted yet; fail cleanly.
+            return Err(anyhow!("ssh channel rejected (server MaxSessions)"));
+        }
         Ok(status.unwrap_or(200))
     }
 
     /// Probe a service's availability on the cluster.
     pub fn probe(&self, service: &str) -> Result<(u16, Json)> {
-        let client = self.ensure_connected()?;
+        let client = self.pick_bulk()?;
         let reply = client.exec(&format!("probe {service}"), b"")?;
+        if reply.exit_code == EXIT_CHANNEL_REJECTED {
+            return Err(anyhow!("ssh channel rejected (server MaxSessions)"));
+        }
         let (status, body) = parse_reply(&reply.stdout);
         let j = Json::parse(std::str::from_utf8(&body).unwrap_or("{}"))
             .unwrap_or(Json::Null);
         Ok((status, j))
     }
 
-    /// Manually trigger a scheduler run (used by tests/benches).
+    /// Manually trigger a scheduler run (used by tests/benches). Control
+    /// traffic: always the control connection.
     pub fn tick(&self) -> Result<()> {
-        let client = self.ensure_connected()?;
+        let client = self.ensure_connected(0)?;
         client.exec("tick", b"")?;
         Ok(())
     }
 
-    /// Round-trip time of one keepalive ping.
+    /// Round-trip time of one keepalive ping on the control connection.
     pub fn ping(&self) -> Result<Duration> {
-        let client = self.ensure_connected()?;
+        let client = self.ensure_connected(0)?;
         client.ping()
     }
 
@@ -213,10 +353,14 @@ impl HpcProxy {
             let proxy = self.clone();
             match (req.method.as_str(), req.path.as_str()) {
                 ("GET", "/health") => {
-                    let alive = proxy.current_client().is_some();
+                    let alive = proxy.alive_connections();
                     Reply::full(Response::json(
-                        if alive { 200 } else { 503 },
-                        &Json::obj().set("ssh_connected", alive),
+                        if alive > 0 { 200 } else { 503 },
+                        &Json::obj()
+                            .set("ssh_connected", alive > 0)
+                            .set("pool_size", proxy.members.len())
+                            .set("alive_connections", alive)
+                            .set("capacity", proxy.capacity()),
                     ))
                 }
                 ("POST", path) if path.starts_with("/infer/") => {
@@ -310,7 +454,37 @@ mod tests {
         )
     }
 
-    fn ssh_server(kp: &KeyPair) -> SshServer {
+    /// Like `fake_ci`, but `infer` takes `delay` of wall time (to hold
+    /// channels open) and streams its reply in chunks.
+    fn slow_ci(delay: Duration) -> Arc<dyn CommandHandler> {
+        Arc::new(
+            move |_c: &str,
+                  orig: &str,
+                  stdin: &[u8],
+                  out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                match orig.split_whitespace().next() {
+                    Some("tick") => {
+                        let _ = out(b"status: 200\n\n{\"ticked\":true}");
+                        0
+                    }
+                    Some("infer") => {
+                        let _ = out(b"status: 200\n\n");
+                        for _ in 0..10 {
+                            std::thread::sleep(delay / 10);
+                            if out(b"tok ").is_err() {
+                                return 1;
+                            }
+                        }
+                        let _ = out(stdin);
+                        0
+                    }
+                    _ => 2,
+                }
+            },
+        )
+    }
+
+    fn ssh_server_with(kp: &KeyPair, ci: Arc<dyn CommandHandler>) -> SshServer {
         let mut ak = AuthorizedKeys::new();
         ak.add(AuthorizedKey {
             fingerprint: kp.fingerprint(),
@@ -318,7 +492,11 @@ mod tests {
             options: vec![],
             comment: String::new(),
         });
-        SshServer::start(ak, vec![kp.clone()], vec![("/ci".into(), fake_ci())]).unwrap()
+        SshServer::start(ak, vec![kp.clone()], vec![("/ci".into(), ci)]).unwrap()
+    }
+
+    fn ssh_server(kp: &KeyPair) -> SshServer {
+        ssh_server_with(kp, fake_ci())
     }
 
     fn fast_cfg() -> ProxyConfig {
@@ -326,7 +504,13 @@ mod tests {
             keepalive: Duration::from_millis(50),
             reconnect_backoff: Duration::from_millis(10),
             link_frame_delay: Duration::ZERO,
+            pool_size: 1,
+            max_channels_per_conn: 8,
         }
+    }
+
+    fn pool_cfg(pool_size: usize, cap: usize) -> ProxyConfig {
+        ProxyConfig { pool_size, max_channels_per_conn: cap, ..fast_cfg() }
     }
 
     #[test]
@@ -351,6 +535,29 @@ mod tests {
         assert!(server.stats.pings.load(Ordering::Relaxed) >= 2);
         assert!(server.stats.execs.load(Ordering::Relaxed) >= 2, "ticks ran");
         proxy.stop();
+    }
+
+    #[test]
+    fn pooled_keepalive_ticks_once_per_interval() {
+        // With a pool, every member gets pinged but only connection 0 runs
+        // the scheduler tick — tick rate must not scale with pool size.
+        let kp = KeyPair::generate(36);
+        let server = ssh_server(&kp);
+        let proxy = HpcProxy::connect(
+            &server.addr.to_string(),
+            kp,
+            pool_cfg(4, 8),
+            Registry::new(),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(320));
+        proxy.stop();
+        let pings = server.stats.pings.load(Ordering::Relaxed);
+        let ticks = server.stats.execs.load(Ordering::Relaxed);
+        assert!(pings >= 4 * ticks.saturating_sub(1), "all members pinged: {pings} vs {ticks}");
+        assert!(ticks >= 2, "scheduler driven");
+        // ~6 intervals elapsed; 4x tick amplification would exceed this.
+        assert!(ticks <= 10, "tick must not run per member: {ticks}");
     }
 
     #[test]
@@ -402,6 +609,114 @@ mod tests {
     }
 
     #[test]
+    fn pool_opens_n_connections_and_advertises_capacity() {
+        let kp = KeyPair::generate(37);
+        let server = ssh_server(&kp);
+        let proxy = HpcProxy::connect(
+            &server.addr.to_string(),
+            kp,
+            pool_cfg(3, 4),
+            Registry::new(),
+        )
+        .unwrap();
+        assert_eq!(server.stats.sessions_accepted.load(Ordering::Relaxed), 3);
+        assert_eq!(proxy.capacity(), 12, "3 connections x 4 channels");
+        assert_eq!(proxy.alive_connections(), 3);
+        assert_eq!(proxy.member_loads(), vec![Some(0), Some(0), Some(0)]);
+        // Data still flows, on a data lane.
+        let (status, _) = proxy.infer("m", b"x").unwrap();
+        assert_eq!(status, 200);
+        proxy.stop();
+    }
+
+    #[test]
+    fn channel_cap_exhaustion_falls_over_to_next_connection() {
+        // Pool of 3 = control + 2 data lanes, 1 channel per lane. Two slow
+        // infers must land on different lanes; a third (all lanes at cap)
+        // borrows the control connection and counts an overflow.
+        let kp = KeyPair::generate(38);
+        let server = ssh_server_with(&kp, slow_ci(Duration::from_millis(400)));
+        let proxy = Arc::new(
+            HpcProxy::connect(
+                &server.addr.to_string(),
+                kp,
+                ProxyConfig {
+                    keepalive: Duration::from_secs(60), // quiet during the test
+                    ..pool_cfg(3, 1)
+                },
+                Registry::new(),
+            )
+            .unwrap(),
+        );
+        // Sequential spawns so each placement sees the previous one's load.
+        let p1 = proxy.clone();
+        let w1 = std::thread::spawn(move || p1.infer("m", b"x").unwrap().0);
+        std::thread::sleep(Duration::from_millis(60));
+        let loads = proxy.member_loads();
+        assert_eq!(loads[1], Some(1), "first infer on lane 1: {loads:?}");
+
+        let p2 = proxy.clone();
+        let w2 = std::thread::spawn(move || p2.infer("m", b"x").unwrap().0);
+        std::thread::sleep(Duration::from_millis(60));
+        let loads = proxy.member_loads();
+        assert_eq!(loads[0], Some(0), "control lane untouched below saturation");
+        assert_eq!(loads[2], Some(1), "cap fallover put the second on lane 2: {loads:?}");
+        assert_eq!(proxy.overflows.load(Ordering::Relaxed), 0);
+
+        // Saturate: the third infer borrows the control connection.
+        let p3 = proxy.clone();
+        let w3 = std::thread::spawn(move || p3.infer("m", b"y").unwrap().0);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(proxy.member_loads()[0], Some(1), "overflow onto control lane");
+        assert!(proxy.overflows.load(Ordering::Relaxed) >= 1);
+
+        assert_eq!(w1.join().unwrap(), 200);
+        assert_eq!(w2.join().unwrap(), 200);
+        assert_eq!(w3.join().unwrap(), 200);
+        proxy.stop();
+    }
+
+    #[test]
+    fn single_member_reconnect_preserves_streams_on_other_members() {
+        // A stream runs on data lane 1 while data lane 2's TCP dies; the
+        // keepalive revives lane 2 and the stream never notices.
+        let kp = KeyPair::generate(39);
+        let server = ssh_server_with(&kp, slow_ci(Duration::from_millis(500)));
+        let proxy = Arc::new(
+            HpcProxy::connect(
+                &server.addr.to_string(),
+                kp,
+                pool_cfg(3, 8),
+                Registry::new(),
+            )
+            .unwrap(),
+        );
+        // Stream lands on lane 1 (least-loaded, first in order).
+        let p = proxy.clone();
+        let stream = std::thread::spawn(move || {
+            let mut chunks = 0usize;
+            let status = p.infer_stream("m", b"tail", |_| chunks += 1).unwrap();
+            (status, chunks)
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(proxy.member_loads()[1], Some(1), "stream on lane 1");
+
+        // Kill lane 2's connection (accept order: 0, 1, 2).
+        assert!(server.kill_session(2));
+        let (status, chunks) = stream.join().unwrap();
+        assert_eq!(status, 200, "stream survived the other member's outage");
+        assert!(chunks >= 10, "full stream delivered: {chunks}");
+        // Keepalive noticed and reconnected lane 2.
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(proxy.reconnects.load(Ordering::SeqCst) >= 1, "lane 2 reconnect counted");
+        assert_eq!(proxy.alive_connections(), 3, "pool healed");
+        // And lane 2 serves again.
+        let (s, _) = proxy.infer("m", b"z").unwrap();
+        assert_eq!(s, 200);
+        proxy.stop();
+    }
+
+    #[test]
     fn http_facade_forwards() {
         let kp = KeyPair::generate(34);
         let server = ssh_server(&kp);
@@ -419,6 +734,9 @@ mod tests {
         assert_eq!(r.body, b"echo:{\"q\":2}");
         let h = crate::util::http::get(&format!("{}/health", http_server.url())).unwrap();
         assert_eq!(h.status, 200);
+        let j = h.json_body().unwrap();
+        assert_eq!(j.u64_or("pool_size", 0), 1);
+        assert_eq!(j.u64_or("capacity", 0), 8);
         proxy.stop();
     }
 

@@ -196,13 +196,14 @@ impl CloudInterface {
             stdin
         };
 
-        // Random load balancing over ready instances (§5.6), waiting out a
+        // Least-loaded balancing over ready instances (random tie-break:
+        // §5.6's random balancing as the degenerate case), waiting out a
         // cold start up to queue_timeout (§7.1.3 scale-to-zero queueing).
         let deadline = std::time::Instant::now() + self.queue_timeout;
         let inst = loop {
             let picked = {
                 let mut rng = self.rng.lock().unwrap();
-                self.scheduler.routing.pick(service, &mut rng)
+                self.scheduler.routing.pick_least_loaded(service, &mut rng)
             };
             match picked {
                 Some(i) => break Some(i),
@@ -221,6 +222,9 @@ impl CloudInterface {
             );
             return EXIT_NO_INSTANCE;
         };
+        // Pin the in-flight count to the chosen instance for the request's
+        // lifetime so concurrent placements see its true load.
+        let _inst_guard = self.scheduler.routing.begin_request(inst.job_id);
 
         let url = format!("http://{}/v1/chat/completions", inst.addr);
         let is_stream = Json::parse(std::str::from_utf8(stdin).unwrap_or(""))

@@ -9,11 +9,20 @@
 //! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate needs the xla_extension C++ bundle at build time, so the
+//! whole PJRT path is behind the off-by-default `pjrt` cargo feature.
+//! Without it, [`ModelRuntime::load`] returns an error and everything else
+//! in the stack (SimBackend services, scheduler, proxy, gateway) works
+//! unchanged — see DESIGN.md §Substitution-ledger.
 
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
@@ -98,9 +107,17 @@ pub fn load_manifest(dir: &Path) -> Result<Vec<ModelSpec>> {
 /// Held as host literals between steps (the published `xla` crate cannot
 /// split result tuples into reusable device buffers, so pools round-trip
 /// through the host — measured in EXPERIMENTS.md §Perf).
+#[cfg(feature = "pjrt")]
 pub struct KvState {
     k_pools: xla::Literal,
     v_pools: xla::Literal,
+}
+
+/// Stub KV state for builds without the `pjrt` feature; never constructed
+/// because [`ModelRuntime::load`] fails first.
+#[cfg(not(feature = "pjrt"))]
+pub struct KvState {
+    _private: (),
 }
 
 /// A compiled model: PJRT executables + host-resident weights literal.
@@ -108,11 +125,21 @@ pub struct KvState {
 /// Thread-safety: the `xla` crate wrappers are not `Sync`; the engine
 /// serializes calls through the inner mutex (one model-runner step at a
 /// time — the same discipline as vLLM's model runner).
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     pub spec: ModelSpec,
     inner: Mutex<RuntimeInner>,
 }
 
+/// Stub runtime for builds without the `pjrt` feature: loading always
+/// fails with a clear message, so `BackendKind::Pjrt` services simply never
+/// come up while the rest of the stack is unaffected.
+#[cfg(not(feature = "pjrt"))]
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+}
+
+#[cfg(feature = "pjrt")]
 struct RuntimeInner {
     _client: xla::PjRtClient,
     prefill_exe: xla::PjRtLoadedExecutable,
@@ -122,7 +149,9 @@ struct RuntimeInner {
 
 // SAFETY: all raw PJRT handles are only touched under the Mutex; the CPU
 // client itself is thread-safe.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for RuntimeInner {}
+#[cfg(feature = "pjrt")]
 unsafe impl Send for KvState {}
 
 /// Result of one prefill/decode execution.
@@ -131,6 +160,52 @@ pub struct StepOutput {
     pub logits: Vec<f32>,
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl ModelRuntime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(spec: ModelSpec) -> Result<ModelRuntime> {
+        Err(anyhow!(
+            "model {} needs PJRT, but chat-hpc was built without the `pjrt` \
+             cargo feature (rebuild with `--features pjrt`)",
+            spec.name
+        ))
+    }
+
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load_from_dir(dir: &Path, model: &str) -> Result<ModelRuntime> {
+        let _ = dir;
+        Err(anyhow!(
+            "model {model} needs PJRT, but chat-hpc was built without the \
+             `pjrt` cargo feature (rebuild with `--features pjrt`)"
+        ))
+    }
+
+    pub fn fresh_kv(&self) -> Result<KvState> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+
+    pub fn prefill(
+        &self,
+        _kv: &mut KvState,
+        _tokens: &[i32],
+        _prompt_lens: &[i32],
+        _block_tables: &[i32],
+    ) -> Result<StepOutput> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+
+    pub fn decode(
+        &self,
+        _kv: &mut KvState,
+        _tokens: &[i32],
+        _positions: &[i32],
+        _block_tables: &[i32],
+    ) -> Result<StepOutput> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Compile the model's HLO on a fresh CPU PJRT client and load weights.
     pub fn load(spec: ModelSpec) -> Result<ModelRuntime> {
@@ -259,6 +334,7 @@ impl ModelRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn wrap(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e}")
 }
@@ -280,7 +356,11 @@ pub fn artifacts_dir() -> PathBuf {
     })
 }
 
-#[cfg(test)]
+// These tests execute real HLO through PJRT and need both the `pjrt`
+// feature and `make artifacts` output; without the feature they are
+// compiled out (quarantine note: they were red on any box lacking the
+// xla_extension bundle + artifacts — DESIGN.md §Substitution-ledger).
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -20,7 +20,7 @@ pub mod instances;
 pub mod routing;
 
 pub use instances::{BackendKind, InstanceLauncher, MockLauncher, RealLauncher};
-pub use routing::{DemandTracker, Instance, RoutingTable};
+pub use routing::{DemandTracker, Instance, InstanceGuard, RoutingTable};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};

@@ -3,7 +3,10 @@
 //! The scheduler script maintains a routing table with an entry per active
 //! service job (service, node, port, readiness); the Cloud Interface Script
 //! uses it to forward each request to a random *ready* instance (the
-//! paper's random load balancing). Demand is measured as the average number
+//! paper's random load balancing) — or, with per-instance in-flight
+//! tracking, to the *least-loaded* ready instance (random only as the
+//! tie-break), which keeps one slow request from stacking a batch on an
+//! already-busy instance. Demand is measured as the average number
 //! of concurrent requests per service over a sliding window, recomputed on
 //! every scheduling run — the autoscaling signal.
 
@@ -34,6 +37,19 @@ pub struct Instance {
 #[derive(Clone, Default)]
 pub struct RoutingTable {
     inner: Arc<Mutex<BTreeMap<String, Vec<Instance>>>>,
+    /// In-flight requests per instance, for least-loaded placement.
+    loads: Arc<Mutex<BTreeMap<JobId, Arc<AtomicI64>>>>,
+}
+
+/// RAII guard: one request in flight against one instance.
+pub struct InstanceGuard {
+    counter: Arc<AtomicI64>,
+}
+
+impl Drop for InstanceGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl RoutingTable {
@@ -55,6 +71,9 @@ impl RoutingTable {
         for v in t.values_mut() {
             v.retain(|i| i.job_id != job_id);
         }
+        drop(t);
+        // Forget its load counter; live guards keep their own Arc.
+        self.loads.lock().unwrap().remove(&job_id);
     }
 
     pub fn mark_ready(&self, job_id: JobId) {
@@ -85,6 +104,40 @@ impl RoutingTable {
     pub fn pick(&self, service: &str, rng: &mut Rng) -> Option<Instance> {
         let ready = self.ready_instances(service);
         rng.choose(&ready).cloned()
+    }
+
+    /// Begin a request against an instance; dropping the guard ends it.
+    pub fn begin_request(&self, job_id: JobId) -> InstanceGuard {
+        let counter = self.loads.lock().unwrap().entry(job_id).or_default().clone();
+        counter.fetch_add(1, Ordering::SeqCst);
+        InstanceGuard { counter }
+    }
+
+    /// Current in-flight requests against an instance.
+    pub fn instance_load(&self, job_id: JobId) -> i64 {
+        self.loads
+            .lock()
+            .unwrap()
+            .get(&job_id)
+            .map(|c| c.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Least-loaded placement over ready instances; the paper's random
+    /// balancing survives as the tie-break among equally loaded ones.
+    pub fn pick_least_loaded(&self, service: &str, rng: &mut Rng) -> Option<Instance> {
+        let ready = self.ready_instances(service);
+        if ready.is_empty() {
+            return None;
+        }
+        let loads = self.loads.lock().unwrap();
+        let load_of = |i: &Instance| {
+            loads.get(&i.job_id).map(|c| c.load(Ordering::SeqCst)).unwrap_or(0)
+        };
+        let min = ready.iter().map(|i| load_of(i)).min().unwrap_or(0);
+        let min_set: Vec<Instance> =
+            ready.iter().filter(|&i| load_of(i) == min).cloned().collect();
+        rng.choose(&min_set).cloned()
     }
 
     /// Is a port already reserved anywhere in the table?
@@ -224,6 +277,42 @@ mod tests {
         }
         assert!(hits[&1] > 90 && hits[&2] > 90, "roughly balanced: {hits:?}");
         assert!(t.pick("missing", &mut rng).is_none());
+    }
+
+    #[test]
+    fn least_loaded_pick_follows_inflight_counts() {
+        let t = RoutingTable::new();
+        t.upsert(inst(1, "m", 20001, true));
+        t.upsert(inst(2, "m", 20002, true));
+        let mut rng = Rng::new(3);
+
+        // One request on instance 1 -> instance 2 always wins.
+        let g1 = t.begin_request(1);
+        assert_eq!(t.instance_load(1), 1);
+        for _ in 0..30 {
+            assert_eq!(t.pick_least_loaded("m", &mut rng).unwrap().job_id, 2);
+        }
+        // Two on instance 2 -> instance 1 wins despite its one in-flight.
+        let g2a = t.begin_request(2);
+        let g2b = t.begin_request(2);
+        for _ in 0..30 {
+            assert_eq!(t.pick_least_loaded("m", &mut rng).unwrap().job_id, 1);
+        }
+        // Guards drain; ties split randomly (the §5.6 behaviour).
+        drop(g1);
+        drop(g2a);
+        drop(g2b);
+        assert_eq!(t.instance_load(1), 0);
+        assert_eq!(t.instance_load(2), 0);
+        let mut hits = BTreeMap::new();
+        for _ in 0..300 {
+            *hits.entry(t.pick_least_loaded("m", &mut rng).unwrap().job_id).or_insert(0u32) += 1;
+        }
+        assert!(hits[&1] > 90 && hits[&2] > 90, "tie-break balanced: {hits:?}");
+        // Removing an instance forgets its counter.
+        let _g = t.begin_request(2);
+        t.remove(2);
+        assert_eq!(t.instance_load(2), 0);
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //!   demoted to `SSH_ORIGINAL_COMMAND`, exactly like OpenSSH);
 //! - channel multiplexing over one connection (the paper's HPC Proxy keeps
 //!   a single persistent connection and pushes all traffic + keepalives
-//!   through it — its ~200 RPS ceiling in Table 2 comes from this);
+//!   through it — its ~200 RPS ceiling in Table 2 comes from this; the
+//!   pooled proxy in [`crate::hpcproxy`] breaks that ceiling with N such
+//!   connections), plus OpenSSH `MaxSessions`-style per-connection channel
+//!   caps ([`SshServerConfig`]);
 //! - keepalive pings (every 5 s in the paper) and reconnect detection.
 //!
 //! What is simulated: identity. Key pairs are a 32-byte secret whose
@@ -30,7 +33,10 @@ mod crypto;
 mod proto;
 
 pub use crypto::{hex, KeyPair, SessionCrypto};
-pub use proto::{CommandHandler, ExecReply, SshClient, SshServer, StreamChunk};
+pub use proto::{
+    CommandHandler, ExecReply, SshClient, SshServer, SshServerConfig, StreamChunk,
+    EXIT_CHANNEL_REJECTED,
+};
 
 use std::collections::BTreeMap;
 

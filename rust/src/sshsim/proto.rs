@@ -16,7 +16,7 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -34,6 +34,11 @@ const FRAME_PING: u8 = 4;
 const FRAME_PONG: u8 = 5;
 
 const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Exit code reported when the server refuses to open another channel on a
+/// connection that is already at `max_sessions` (OpenSSH surfaces the same
+/// condition as "channel open failed").
+pub const EXIT_CHANNEL_REJECTED: i32 = 254;
 
 /// What a command execution produces.
 #[derive(Debug, Clone)]
@@ -132,6 +137,22 @@ pub struct SshServerStats {
     pub execs: AtomicU64,
     pub pings: AtomicU64,
     pub forced_commands: AtomicU64,
+    /// Channel opens refused because a connection hit `max_sessions`.
+    pub channel_rejections: AtomicU64,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SshServerConfig {
+    /// Maximum concurrent exec channels per connection, like OpenSSH
+    /// `MaxSessions`. `0` = unlimited (the seed behaviour).
+    pub max_sessions: usize,
+}
+
+impl Default for SshServerConfig {
+    fn default() -> SshServerConfig {
+        SshServerConfig { max_sessions: 0 }
+    }
 }
 
 /// The sshd of the HPC service node.
@@ -150,10 +171,12 @@ struct ServerShared {
     /// command path (first token) -> handler.
     handlers: BTreeMap<String, Arc<dyn CommandHandler>>,
     stats: Arc<SshServerStats>,
+    cfg: SshServerConfig,
 }
 
 impl SshServer {
-    /// Start an sshd on an ephemeral port.
+    /// Start an sshd on an ephemeral port with default config (no
+    /// per-connection session cap).
     ///
     /// `keys` must contain the key material for every fingerprint in
     /// `authorized`; `handlers` maps command paths (the first whitespace
@@ -162,6 +185,16 @@ impl SshServer {
         authorized: AuthorizedKeys,
         keys: Vec<KeyPair>,
         handlers: Vec<(String, Arc<dyn CommandHandler>)>,
+    ) -> Result<SshServer> {
+        SshServer::start_with(authorized, keys, handlers, SshServerConfig::default())
+    }
+
+    /// Start an sshd with explicit config (e.g. a `MaxSessions` cap).
+    pub fn start_with(
+        authorized: AuthorizedKeys,
+        keys: Vec<KeyPair>,
+        handlers: Vec<(String, Arc<dyn CommandHandler>)>,
+        cfg: SshServerConfig,
     ) -> Result<SshServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
@@ -172,6 +205,7 @@ impl SshServer {
             keys: keys.into_iter().map(|k| (k.fingerprint(), k)).collect(),
             handlers: handlers.into_iter().collect(),
             stats: stats.clone(),
+            cfg,
         });
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -208,6 +242,25 @@ impl SshServer {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+
+    /// Hard-close one accepted connection (index in accept order) without
+    /// stopping the server — simulates a single pool member's link dying
+    /// while the others stay up.
+    pub fn kill_session(&self, index: usize) -> bool {
+        let sessions = self.sessions.lock().unwrap();
+        match sessions.get(index) {
+            Some(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of TCP connections accepted so far (dead ones included).
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
     }
 }
 
@@ -261,6 +314,9 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
 
     // Per-channel stdin accumulators.
     let mut stdin_bufs: BTreeMap<u32, Vec<u8>> = BTreeMap::new();
+    // Concurrent exec channels on THIS connection (MaxSessions accounting):
+    // counted from channel open (EXEC) until the handler thread finishes.
+    let inflight = Arc::new(AtomicUsize::new(0));
 
     loop {
         let (ty, chan, payload) = match read_frame(&mut stream, &mut recv_crypto) {
@@ -276,6 +332,30 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                 let _ = write_frame(sock, crypto, FRAME_PONG, chan, &payload);
             }
             FRAME_EXEC => {
+                // *** MaxSessions: refuse the channel open outright. ***
+                let cap = shared.cfg.max_sessions;
+                if cap > 0 && inflight.load(Ordering::SeqCst) >= cap {
+                    shared.stats.channel_rejections.fetch_add(1, Ordering::Relaxed);
+                    let mut g = writer.lock().unwrap();
+                    let (ref mut sock, ref mut crypto) = *g;
+                    let _ = write_frame(
+                        sock,
+                        crypto,
+                        FRAME_DATA,
+                        chan,
+                        format!("sshsim: channel open failed: MaxSessions {cap} reached\n")
+                            .as_bytes(),
+                    );
+                    let _ = write_frame(
+                        sock,
+                        crypto,
+                        FRAME_EXIT,
+                        chan,
+                        &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
+                    );
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::SeqCst);
                 stdin_bufs.insert(chan, payload);
             }
             FRAME_DATA => {
@@ -288,6 +368,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
             FRAME_EOF => {
                 // Request complete: resolve + dispatch.
                 let Some(buf) = stdin_bufs.remove(&chan) else { continue };
+                let inflight = inflight.clone();
                 let sep = buf.iter().position(|&b| b == 0).unwrap_or(buf.len());
                 let requested = String::from_utf8_lossy(&buf[..sep]).into_owned();
                 let stdin = if sep < buf.len() { buf[sep + 1..].to_vec() } else { Vec::new() };
@@ -327,6 +408,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                         }
                     };
                     let _ = send(FRAME_EXIT, &(code as u32).to_le_bytes());
+                    inflight.fetch_sub(1, Ordering::SeqCst);
                 });
             }
             _ => {}
@@ -455,11 +537,40 @@ impl SshClient {
         })
     }
 
+    /// Write several frames of one channel under a single writer-lock
+    /// acquisition: a pipelined exec leaves EXEC+DATA+EOF back-to-back on
+    /// the wire instead of letting other channels interleave (and pay the
+    /// lock) between each frame.
+    fn send_pipelined(&self, chan: u32, frames: &[(u8, &[u8])]) -> Result<()> {
+        if !self.is_alive() {
+            bail!("ssh connection is down");
+        }
+        let mut g = self.writer.lock().unwrap();
+        if !self.frame_delay.is_zero() {
+            // Serialized wire time, one slot per frame (see `send`).
+            std::thread::sleep(self.frame_delay * frames.len() as u32);
+        }
+        let (ref mut sock, ref mut crypto) = *g;
+        for (ty, payload) in frames {
+            write_frame(sock, crypto, *ty, chan, payload).map_err(|e| {
+                self.dead.store(true, Ordering::SeqCst);
+                e
+            })?;
+        }
+        Ok(())
+    }
+
     fn open_channel(&self) -> (u32, Receiver<StreamChunk>) {
         let chan = self.next_chan.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = channel();
         self.channels.lock().unwrap().insert(chan, tx);
         (chan, rx)
+    }
+
+    /// Exec channels currently open (in-flight requests) — the load signal
+    /// the proxy pool uses for least-loaded placement.
+    pub fn active_channels(&self) -> usize {
+        self.channels.lock().unwrap().len()
     }
 
     /// Execute `command` with `stdin`, streaming stdout chunks to
@@ -472,11 +583,14 @@ impl SshClient {
     ) -> Result<i32> {
         let (chan, rx) = self.open_channel();
         // EXEC payload = command; stdin travels as DATA after a NUL marker.
-        self.send(FRAME_EXEC, chan, command.as_bytes())?;
         let mut body = vec![0u8];
         body.extend_from_slice(stdin);
-        self.send(FRAME_DATA, chan, &body)?;
-        self.send(FRAME_EOF, chan, &[])?;
+        let frames: [(u8, &[u8]); 3] =
+            [(FRAME_EXEC, command.as_bytes()), (FRAME_DATA, &body), (FRAME_EOF, &[])];
+        if let Err(e) = self.send_pipelined(chan, &frames) {
+            self.channels.lock().unwrap().remove(&chan);
+            return Err(e);
+        }
         loop {
             match rx.recv_timeout(Duration::from_secs(60)) {
                 Ok(StreamChunk::Data(d)) => on_chunk(&d),
@@ -642,6 +756,76 @@ mod tests {
         let _ = client.ping();
         let _ = client.ping();
         assert!(!client.is_alive() || client.ping().is_err());
+    }
+
+    fn slow_handler(ms: u64) -> Arc<dyn CommandHandler> {
+        Arc::new(
+            move |_c: &str,
+                  _o: &str,
+                  _i: &[u8],
+                  out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                std::thread::sleep(Duration::from_millis(ms));
+                let _ = out(b"done");
+                0
+            },
+        )
+    }
+
+    #[test]
+    fn max_sessions_cap_rejects_excess_channels() {
+        let kp = KeyPair::generate(18);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/slow".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let server = SshServer::start_with(
+            ak,
+            vec![kp.clone()],
+            vec![("/slow".into(), slow_handler(200))],
+            SshServerConfig { max_sessions: 2 },
+        )
+        .unwrap();
+        let client = Arc::new(SshClient::connect(&server.addr.to_string(), &kp).unwrap());
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let c = client.clone();
+                std::thread::spawn(move || c.exec("x", b"").unwrap().exit_code)
+            })
+            .collect();
+        let codes: Vec<i32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(codes.iter().any(|&c| c == 0), "some execs must run: {codes:?}");
+        assert!(
+            codes.iter().any(|&c| c == EXIT_CHANNEL_REJECTED),
+            "cap 2 with 6 concurrent execs must reject: {codes:?}"
+        );
+        assert!(server.stats.channel_rejections.load(Ordering::Relaxed) >= 1);
+        // The connection itself survives rejections.
+        assert_eq!(client.exec("again", b"").unwrap().exit_code, 0);
+    }
+
+    #[test]
+    fn active_channels_tracks_inflight_execs() {
+        let kp = KeyPair::generate(19);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/slow".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let server = SshServer::start(ak, vec![kp.clone()], vec![("/slow".into(), slow_handler(150))])
+            .unwrap();
+        let client = Arc::new(SshClient::connect(&server.addr.to_string(), &kp).unwrap());
+        assert_eq!(client.active_channels(), 0);
+        let c = client.clone();
+        let h = std::thread::spawn(move || c.exec("x", b"").unwrap());
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(client.active_channels(), 1, "exec in flight");
+        h.join().unwrap();
+        assert_eq!(client.active_channels(), 0, "drained after exit");
     }
 
     #[test]

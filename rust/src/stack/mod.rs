@@ -7,7 +7,8 @@
 //!              │
 //!              ├── webapp (browser-only state)
 //!              ├── external proxy (GPT-4 wrapper)
-//!              └── HPC proxy ══ SSH(ForceCommand) ══╗
+//!              └── HPC proxy ══ SSH(ForceCommand) ══╗   (pool of N
+//!                                                   ║    connections)
 //!                                                   ║    [HPC platform]
 //!                     cloud interface script ◄──────╝
 //!                        │ routing table
@@ -54,6 +55,11 @@ pub struct StackConfig {
     /// Emulated ESX↔HPC wire time per SSH frame (Table 1/2 benches set
     /// this; everything else leaves it at zero).
     pub ssh_link_frame_delay: Duration,
+    /// Persistent SSH connections in the HPC proxy pool (1 = the paper's
+    /// single-connection baseline; more breaks the ~200 RPS SSH ceiling).
+    pub ssh_pool_size: usize,
+    /// Per-connection channel cap used for pool placement (MaxSessions).
+    pub ssh_max_channels: usize,
 }
 
 impl Default for StackConfig {
@@ -65,6 +71,8 @@ impl Default for StackConfig {
             keepalive: Duration::from_millis(50),
             with_external: true,
             ssh_link_frame_delay: Duration::ZERO,
+            ssh_pool_size: 1,
+            ssh_max_channels: 8,
         }
     }
 }
@@ -136,6 +144,8 @@ impl ChatAiStack {
                 keepalive: cfg.keepalive,
                 reconnect_backoff: Duration::from_millis(50),
                 link_frame_delay: cfg.ssh_link_frame_delay,
+                pool_size: cfg.ssh_pool_size,
+                max_channels_per_conn: cfg.ssh_max_channels,
             },
             metrics.clone(),
         )?;
@@ -155,12 +165,17 @@ impl ChatAiStack {
 
         let mut routes = Vec::new();
         for name in &model_names {
-            routes.push(Route::new(
-                name,
-                &format!("/v1/m/{name}/"),
-                vec![proxy_http.url()],
-                &format!("/infer/{name}"),
-            ));
+            // The proxy advertises capacity = connections × channels; with
+            // several proxy upstreams the gateway balances by that weight.
+            routes.push(
+                Route::new(
+                    name,
+                    &format!("/v1/m/{name}/"),
+                    vec![proxy_http.url()],
+                    &format!("/infer/{name}"),
+                )
+                .with_weights(vec![proxy.capacity()]),
+            );
         }
         if let Some(ext) = &external {
             // §5.8: strict rate limit + group restriction on the paid route.

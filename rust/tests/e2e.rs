@@ -166,6 +166,10 @@ fn metrics_cover_all_layers() {
     }
 }
 
+// Needs the `pjrt` cargo feature (xla_extension bundle) plus `make
+// artifacts`; compiled out otherwise so default tier-1 stays green
+// (quarantine note — see DESIGN.md §Substitution-ledger).
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_tiny_model_serves_end_to_end() {
     // The real AOT-compiled JAX/Pallas model through the entire stack.

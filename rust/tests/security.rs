@@ -148,6 +148,69 @@ fn no_conversation_content_stored_server_side() {
     }
 }
 
+/// The pooled proxy opens N SSH connections instead of one; the
+/// ForceCommand circuit breaker must hold on *every* pool member — for the
+/// legitimate proxy's traffic and for an attacker driving their own pool
+/// of connections with the stolen key.
+#[test]
+fn force_command_pinned_on_every_pooled_connection() {
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("intel-neural-7b", 0.0)],
+        ssh_pool_size: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(15)).unwrap();
+    let stats = &stack.ssh_server.stats;
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(
+        stats.sessions_accepted.load(ord) >= 4,
+        "all pool members authenticated with the pinned key"
+    );
+
+    // Concurrent traffic spreads over the pool's data lanes.
+    let mut workers = Vec::new();
+    for _ in 0..8 {
+        let proxy = stack.proxy.clone();
+        workers.push(std::thread::spawn(move || {
+            for _ in 0..3 {
+                let (status, _) = proxy
+                    .infer("intel-neural-7b", b"{\"messages\":[{\"role\":\"user\",\"content\":\"x\"}]}")
+                    .unwrap();
+                assert_eq!(status, 200);
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    // Every exec that reached the server — infer on any lane, tick on the
+    // control connection — went through the ForceCommand replacement.
+    // (forced_commands increments before execs, so reading execs first
+    // makes this race-safe against in-flight keepalive ticks.)
+    let execs = stats.execs.load(ord);
+    let forced = stats.forced_commands.load(ord);
+    assert!(execs >= 24, "pool traffic reached the server: {execs}");
+    assert!(forced >= execs, "an exec bypassed ForceCommand: {forced} < {execs}");
+
+    // An attacker with the stolen key builds their own 4-connection pool:
+    // each connection is independently pinned, so arbitrary commands are
+    // rejected on all of them.
+    let stolen = KeyPair::generate(0xE5C);
+    let attack_pool: Vec<_> = (0..4)
+        .map(|_| SshClient::connect(&stack.ssh_server.addr.to_string(), &stolen).unwrap())
+        .collect();
+    for client in &attack_pool {
+        let reply = client.exec("scancel --all", b"").unwrap();
+        assert_eq!(reply.exit_code, 2, "arbitrary command must be rejected");
+        let out = String::from_utf8_lossy(&reply.stdout);
+        assert!(out.contains("does not match any permitted path"), "{out}");
+    }
+    let execs = stats.execs.load(ord);
+    let forced = stats.forced_commands.load(ord);
+    assert!(forced >= execs, "attacker connections are force-commanded too");
+}
+
 /// Rate limiting protects the paid external route (§5.8).
 #[test]
 fn external_route_rate_limited() {
