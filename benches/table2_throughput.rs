@@ -11,6 +11,7 @@
 //! order 7B ≫ 8x7B ≫ 70B-class with roughly 27/8/2 ratios (we use the
 //! calibrated SimBackend profiles with real wall-clock pacing).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use chat_hpc::hpcproxy::{HpcProxy, ProxyConfig};
@@ -217,6 +218,102 @@ fn main() -> anyhow::Result<()> {
     ];
     println!();
     for (name, ok) in pool_checks {
+        println!("shape check: {name}: {}", if ok { "REPRODUCED" } else { "DIVERGED" });
+    }
+
+    // Tear the shared stack down before the abandonment stacks spin up.
+    drop(stack);
+
+    // -- Abandonment sweep --------------------------------------------------
+    // Request-lifecycle tentpole: 50% of streaming clients hang up after
+    // two SSE events. The run-to-completion engine (the seed behaviour)
+    // keeps generating for ghosts, holding batch slots to EOS; the
+    // cancellation engine frees a slot within one decode step of the
+    // disconnect. Completed-request throughput of the *surviving* clients
+    // is the metric — the reclaimed slots are where it comes from.
+    println!();
+    table_header(
+        "Abandonment sweep — 50% of streaming clients disconnect mid-stream",
+        &["engine mode", "completed req/s", "abandoned", "slots reclaimed"],
+    );
+    let run = Duration::from_secs(8);
+    let mut completed: Vec<(bool, f64, u64)> = Vec::new();
+    for abort_on_disconnect in [false, true] {
+        // One instance, batch 8, 16 closed-loop workers: slots are the
+        // contended resource, exactly the regime cancellation pays off in.
+        let mut spec = ServiceSpec::sim("mixtral-8x7b", 1.0);
+        spec.max_instances = 1;
+        let stack = ChatAiStack::start(StackConfig {
+            services: vec![spec],
+            load_time_scale: 0.0001,
+            keepalive: Duration::from_millis(100),
+            with_external: false,
+            abort_on_disconnect,
+            ..Default::default()
+        })?;
+        stack.wait_ready("mixtral-8x7b", Duration::from_secs(30))?;
+        let url = format!("{}/v1/m/mixtral-8x7b/", stack.gateway_url());
+        let auth = format!("Bearer {}", stack.api_key);
+        let body = Json::obj()
+            .set(
+                "messages",
+                vec![Json::obj().set("role", "user").set("content", "count from 1 to 10")],
+            )
+            .set("stream", true)
+            .dump();
+        let turn = AtomicU64::new(0);
+        let abandoned = AtomicU64::new(0);
+        let r = LoadGen::new(16, run).run(|| {
+            let abandon = turn.fetch_add(1, Ordering::Relaxed) % 2 == 0;
+            let mut events = 0usize;
+            let res = http::request_stream_ctl(
+                "POST",
+                &url,
+                &[("authorization", &auth), ("content-type", "application/json")],
+                body.as_bytes(),
+                |_| {
+                    events += 1;
+                    !(abandon && events >= 2)
+                },
+            );
+            match res {
+                Ok((200, true)) => {
+                    abandoned.fetch_add(1, Ordering::Relaxed);
+                    Err("abandoned".into()) // deliberate: not a completion
+                }
+                Ok((200, false)) => Ok(()),
+                Ok((s, _)) => Err(format!("status {s}")),
+                Err(e) => Err(e.to_string()),
+            }
+        });
+        let reclaimed = stack
+            .metrics
+            .counter("llm_cancelled_total", &[("model", "mixtral-8x7b")])
+            .get();
+        table_row(&[
+            if abort_on_disconnect { "cancellation" } else { "run-to-completion" }.to_string(),
+            format!("{:.1}", r.rps),
+            abandoned.load(Ordering::Relaxed).to_string(),
+            reclaimed.to_string(),
+        ]);
+        completed.push((abort_on_disconnect, r.rps, reclaimed));
+    }
+    let row_of = |mode: bool| *completed.iter().find(|&&(m, _, _)| m == mode).unwrap();
+    let (_, baseline_rps, baseline_reclaimed) = row_of(false);
+    let (_, cancel_rps, cancel_reclaimed) = row_of(true);
+    let lifecycle_checks = [
+        (
+            "cancellation completes more requests than run-to-completion",
+            cancel_rps > baseline_rps,
+        ),
+        (
+            "run-to-completion baseline reclaims no slots (control is a control)",
+            baseline_reclaimed == 0,
+        ),
+        ("cancellation mode actually reclaims slots", cancel_reclaimed > 0),
+    ];
+    println!();
+    for (name, ok) in lifecycle_checks {
         println!("shape check: {name}: {}", if ok { "REPRODUCED" } else { "DIVERGED" });
     }
     Ok(())

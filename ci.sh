@@ -11,6 +11,13 @@ else
     echo "    rustfmt not installed; skipping (CI installs it)"
 fi
 
+echo "==> cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "    clippy not installed; skipping (CI installs it)"
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 

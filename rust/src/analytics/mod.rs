@@ -24,6 +24,9 @@ pub struct LogEntry {
     pub ts_us: u64,
     pub user: String,
     pub model: String,
+    /// The client hung up before the response finished (the gateway tags
+    /// this after the fact; still no prompt/response content, §6.2).
+    pub cancelled: bool,
 }
 
 /// Append-only usage log shared by the gateway and the analytics jobs.
@@ -37,18 +40,30 @@ impl RequestLog {
         RequestLog::default()
     }
 
-    /// Record with the current wall time (gateway path).
-    pub fn record(&self, user: &str, model: &str) {
+    /// Record with the current wall time (gateway path). Returns the entry
+    /// index so the caller can tag the entry once its outcome is known.
+    pub fn record(&self, user: &str, model: &str) -> usize {
         let ts = crate::util::clock::unix_now_secs() * 1_000_000;
-        self.record_at(ts, user, model);
+        self.record_at(ts, user, model)
     }
 
     /// Record with an explicit timestamp (simulation path).
-    pub fn record_at(&self, ts_us: u64, user: &str, model: &str) {
-        self.entries
-            .lock()
-            .unwrap()
-            .push(LogEntry { ts_us, user: user.to_string(), model: model.to_string() });
+    pub fn record_at(&self, ts_us: u64, user: &str, model: &str) -> usize {
+        let mut entries = self.entries.lock().unwrap();
+        entries.push(LogEntry {
+            ts_us,
+            user: user.to_string(),
+            model: model.to_string(),
+            cancelled: false,
+        });
+        entries.len() - 1
+    }
+
+    /// Tag an entry as client-cancelled (mid-stream disconnect).
+    pub fn mark_cancelled(&self, index: usize) {
+        if let Some(e) = self.entries.lock().unwrap().get_mut(index) {
+            e.cancelled = true;
+        }
     }
 
     pub fn entries(&self) -> Vec<LogEntry> {

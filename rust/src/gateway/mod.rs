@@ -51,7 +51,19 @@ impl TokenBucket {
             false
         }
     }
+
+    /// When the bucket was last used (drives eviction at the map cap).
+    fn last_used(&self) -> std::time::Instant {
+        self.state.lock().unwrap().1
+    }
 }
+
+/// Cap on distinct (route, consumer) rate-limit buckets kept in memory: a
+/// key-scanning client must not grow the map without bound.
+const MAX_BUCKETS: usize = 4096;
+/// How many buckets one overflow eviction reclaims when none are expired:
+/// the O(map) walk then runs once per EVICT_BATCH inserts, not per insert.
+const EVICT_BATCH: usize = 64;
 
 /// One gateway route.
 pub struct Route {
@@ -183,6 +195,37 @@ impl Gateway {
         let rps = route.rate_limit_per_sec?;
         let key = (route.name.clone(), consumer.to_string());
         let mut buckets = self.buckets.lock().unwrap();
+        if buckets.len() >= MAX_BUCKETS && !buckets.contains_key(&key) {
+            // One pass, one state-lock read per bucket: buckets idle past
+            // their refill horizon would be full again anyway, so dropping
+            // + recreating them is behaviour-preserving. When an active
+            // scan keeps even young buckets in the map, fall back to
+            // evicting the EVICT_BATCH most-idle — the map then sits
+            // EVICT_BATCH under the cap, so this walk amortizes to O(1)
+            // per insert. Evicting a live consumer hands back at most one
+            // refilled burst — bounded memory beats perfect accounting.
+            let now = std::time::Instant::now();
+            let mut expired: Vec<(String, String)> = Vec::new();
+            let mut live: Vec<(std::time::Instant, (String, String))> = Vec::new();
+            for (k, b) in buckets.iter() {
+                let used = b.last_used();
+                let horizon = (b.capacity / b.refill_per_sec).max(1.0);
+                if now.duration_since(used).as_secs_f64() > horizon {
+                    expired.push(k.clone());
+                } else {
+                    live.push((used, k.clone()));
+                }
+            }
+            if expired.is_empty() && !live.is_empty() {
+                let n = EVICT_BATCH.min(live.len());
+                live.select_nth_unstable_by_key(n - 1, |e| e.0);
+                live.truncate(n);
+                expired.extend(live.into_iter().map(|(_, k)| k));
+            }
+            for k in &expired {
+                buckets.remove(k);
+            }
+        }
         Some(
             buckets
                 .entry(key)
@@ -261,7 +304,7 @@ impl Gateway {
         }
 
         // --- usage log: user id, timestamp, model. Nothing else (§6.2). ---
-        self.log.record(&user, &route.name);
+        let log_idx = self.log.record(&user, &route.name);
         let timer = std::time::Instant::now();
 
         // --- forward ---
@@ -281,17 +324,28 @@ impl Gateway {
         let body = req.body.clone();
 
         if is_stream {
+            let log = self.log.clone();
             Reply::sse(move |sink| {
                 let h: Vec<(&str, &str)> =
                     headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
-                let res = http::request_stream(&method, &url, &h, &body, |chunk| {
-                    let _ = sink.send(chunk);
+                // A failed sink write means the downstream socket died: stop
+                // pumping SSE, which disconnects the upstream hop and lets
+                // the whole chain (proxy → SSH → interface → engine) unwind.
+                let res = http::request_stream_ctl(&method, &url, &h, &body, |chunk| {
+                    sink.send(chunk).is_ok()
                 });
                 metrics
                     .histogram("gw_latency_seconds", &[("route", &route_name)])
                     .observe(timer.elapsed().as_secs_f64());
                 match res {
-                    Ok(_) => Ok(()),
+                    Ok((_, true)) => {
+                        metrics
+                            .counter("gw_cancelled_total", &[("route", &route_name)])
+                            .inc();
+                        log.mark_cancelled(log_idx);
+                        Ok(())
+                    }
+                    Ok((_, false)) => Ok(()),
                     Err(e) => {
                         sink.send_event(&Json::obj().set("error", e.to_string()).dump())?;
                         Ok(())
@@ -520,6 +574,87 @@ mod tests {
         assert_eq!(r.status, 404);
         let m = http::get(&format!("{}/metrics", server.url())).unwrap();
         assert!(m.body_str().contains("gw_requests_total"));
+    }
+
+    #[test]
+    fn client_disconnect_stops_sse_pump_and_tags_log() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // Upstream streams 40 events over ~2 s and stops when its sink
+        // write fails (i.e. when the gateway hangs up).
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = sent.clone();
+        let upstream = Server::start(Arc::new(move |_req: &Request| {
+            let sent = sent2.clone();
+            Reply::sse(move |sink| {
+                for i in 0..40 {
+                    std::thread::sleep(Duration::from_millis(50));
+                    if sink.send_event(&format!("tok{i}")).is_err() {
+                        return Ok(());
+                    }
+                    sent.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(())
+            })
+        }))
+        .unwrap();
+        let routes = vec![Route::new("m", "/c/", vec![upstream.url()], "/x")];
+        let log = RequestLog::new();
+        let metrics = Registry::new();
+        let gateway = Gateway::new(
+            routes,
+            vec![Consumer { id: "u1".into(), api_key: "k".into(), group: "g".into() }],
+            None,
+            metrics.clone(),
+            log.clone(),
+        );
+        let server = gateway.start().unwrap();
+        // Client asks for a stream, reads two events, hangs up.
+        let mut events = 0usize;
+        let (status, aborted) = http::request_stream_ctl(
+            "POST",
+            &format!("{}/c/", server.url()),
+            &[("authorization", "Bearer k")],
+            b"{\"stream\":true}",
+            |_| {
+                events += 1;
+                events < 2
+            },
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(aborted);
+        // The gateway stops pumping: upstream sees the hangup well before
+        // event 40, the cancel counter ticks, and the log entry is tagged.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while metrics.counter("gw_cancelled_total", &[("route", "m")]).get() == 0 {
+            assert!(std::time::Instant::now() < deadline, "gateway never noticed hangup");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        std::thread::sleep(Duration::from_millis(300));
+        let pumped = sent.load(Ordering::SeqCst);
+        assert!(pumped < 30, "gateway kept pumping after disconnect: {pumped}");
+        let entries = log.entries();
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].cancelled, "log entry not tagged as cancelled");
+    }
+
+    #[test]
+    fn rate_limiter_map_is_bounded_under_key_scans() {
+        let routes =
+            vec![Route::new("m", "/c/", vec!["http://127.0.0.1:1".into()], "/x")
+                .with_rate_limit(10.0)];
+        let gateway = Gateway::new(routes, vec![], None, Registry::new(), RequestLog::new());
+        // A scanning client fabricates more consumer identities than the
+        // cap; the map must never exceed MAX_BUCKETS.
+        for i in 0..(MAX_BUCKETS + 64) {
+            let b = gateway.bucket(&gateway.routes[0], &format!("scan-{i}"));
+            assert!(b.is_some());
+            let n = gateway.buckets.lock().unwrap().len();
+            assert!(n <= MAX_BUCKETS, "bucket map grew to {n}");
+        }
+        // Legit consumers keep working after the churn.
+        let b = gateway.bucket(&gateway.routes[0], "real-user").unwrap();
+        assert!(b.try_take());
     }
 
     #[test]

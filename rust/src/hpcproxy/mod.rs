@@ -26,7 +26,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::interface::parse_reply;
-use crate::sshsim::{KeyPair, SshClient, EXIT_CHANNEL_REJECTED};
+use crate::sshsim::{KeyPair, SshClient, EXIT_CANCELLED, EXIT_CHANNEL_REJECTED};
 use crate::util::http::{Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
@@ -285,35 +285,45 @@ impl HpcProxy {
 
     /// Forward one inference call, streaming chunks as they arrive. The
     /// first `status: ...` line is parsed out; everything after streams to
-    /// `on_chunk`.
+    /// `on_chunk`, whose return value says whether to keep consuming.
+    ///
+    /// When the caller (the gateway-facing SSE writer, usually) returns
+    /// `false` — its own downstream socket died — the proxy closes the SSH
+    /// channel (CHANNEL_CLOSE) and the lane's channel accounting drops
+    /// immediately, so the freed capacity is placeable before the server
+    /// has even unwound its handler.
     pub fn infer_stream(
         &self,
         service: &str,
         body: &[u8],
-        mut on_chunk: impl FnMut(&[u8]),
+        mut on_chunk: impl FnMut(&[u8]) -> bool,
     ) -> Result<u16> {
         let client = self.pick_bulk()?;
         let mut header_buf: Vec<u8> = Vec::new();
         let mut status: Option<u16> = None;
-        let code = client.exec_stream(&format!("infer {service}"), body, |chunk| {
+        let code = client.exec_stream_ctl(&format!("infer {service}"), body, |chunk| {
             if status.is_none() {
                 header_buf.extend_from_slice(chunk);
                 if let Some(pos) = find_double_newline(&header_buf) {
                     let (code, _) = parse_reply(&header_buf[..pos + 2]);
                     status = Some(code);
                     if header_buf.len() > pos + 2 {
-                        on_chunk(&header_buf[pos + 2..]);
+                        return on_chunk(&header_buf[pos + 2..]);
                     }
                     header_buf.clear();
                 }
+                true
             } else {
-                on_chunk(chunk);
+                on_chunk(chunk)
             }
         })?;
         if code == EXIT_CHANNEL_REJECTED {
             // The refusal text never contains the header separator, so no
             // chunk has been emitted yet; fail cleanly.
             return Err(anyhow!("ssh channel rejected (server MaxSessions)"));
+        }
+        if code == EXIT_CANCELLED {
+            self.metrics.counter("proxy_cancelled_total", &[("service", service)]).inc();
         }
         Ok(status.unwrap_or(200))
     }
@@ -371,8 +381,10 @@ impl HpcProxy {
                     let body = req.body.clone();
                     if is_stream {
                         Reply::sse(move |sink| {
+                            // A failed sink write = our HTTP caller hung up;
+                            // returning false closes the SSH channel.
                             let status = proxy.infer_stream(&service, &body, |chunk| {
-                                let _ = sink.send(chunk);
+                                sink.send(chunk).is_ok()
                             })?;
                             if status >= 400 {
                                 // Error surfaced inside the stream envelope.
@@ -695,7 +707,12 @@ mod tests {
         let p = proxy.clone();
         let stream = std::thread::spawn(move || {
             let mut chunks = 0usize;
-            let status = p.infer_stream("m", b"tail", |_| chunks += 1).unwrap();
+            let status = p
+                .infer_stream("m", b"tail", |_| {
+                    chunks += 1;
+                    true
+                })
+                .unwrap();
             (status, chunks)
         });
         std::thread::sleep(Duration::from_millis(100));
@@ -713,6 +730,47 @@ mod tests {
         // And lane 2 serves again.
         let (s, _) = proxy.infer("m", b"z").unwrap();
         assert_eq!(s, 200);
+        proxy.stop();
+    }
+
+    #[test]
+    fn abandoned_stream_closes_channel_and_frees_lane() {
+        // A slow stream is abandoned by the proxy's consumer after two
+        // chunks: the SSH channel closes, the lane's accounting frees well
+        // before the handler would have finished, and the cancel counter
+        // ticks.
+        let kp = KeyPair::generate(40);
+        let server = ssh_server_with(&kp, slow_ci(Duration::from_millis(1500)));
+        let metrics = Registry::new();
+        let proxy = HpcProxy::connect(
+            &server.addr.to_string(),
+            kp,
+            ProxyConfig { keepalive: Duration::from_secs(60), ..fast_cfg() },
+            metrics.clone(),
+        )
+        .unwrap();
+        let mut chunks = 0usize;
+        let t = std::time::Instant::now();
+        let status = proxy
+            .infer_stream("m", b"x", |_| {
+                chunks += 1;
+                chunks < 2
+            })
+            .unwrap();
+        assert_eq!(status, 200);
+        // Abandoned after ~2 of 10 chunks: nowhere near the full 1.5 s.
+        assert!(t.elapsed() < Duration::from_millis(1200), "{:?}", t.elapsed());
+        assert_eq!(proxy.member_loads()[0], Some(0), "channel accounting not freed");
+        assert_eq!(
+            metrics.counter("proxy_cancelled_total", &[("service", "m")]).get(),
+            1
+        );
+        // The server saw the CHANNEL_CLOSE.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while server.stats.channels_cancelled.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "close frame never arrived");
+            std::thread::sleep(Duration::from_millis(10));
+        }
         proxy.stop();
     }
 

@@ -50,44 +50,30 @@ pub struct CloudInterface {
 }
 
 impl CloudInterface {
-    pub fn new(scheduler: Arc<ServiceScheduler>, metrics: Registry) -> Arc<CloudInterface> {
-        Arc::new(CloudInterface {
+    /// Plain constructor. Configure with the `with_*` builders *before*
+    /// wrapping in `Arc` (the old `Arc`-consuming builders fell back to
+    /// `Arc::try_unwrap` rebuilds that silently reset the RNG state).
+    pub fn new(scheduler: Arc<ServiceScheduler>, metrics: Registry) -> CloudInterface {
+        CloudInterface {
             scheduler,
             metrics,
             rng: std::sync::Mutex::new(Rng::new(0xc1)),
             queue_timeout: Duration::from_secs(30),
             platform_key: None,
-        })
+        }
     }
 
     /// Builder: scale-to-zero queue wait (0 = fail fast, the paper's
     /// §5.6 behaviour).
-    pub fn with_queue_timeout(self: Arc<Self>, timeout: Duration) -> Arc<CloudInterface> {
-        let mut this = Arc::try_unwrap(self).unwrap_or_else(|a| CloudInterface {
-            scheduler: a.scheduler.clone(),
-            metrics: a.metrics.clone(),
-            rng: std::sync::Mutex::new(Rng::new(0xc1)),
-            queue_timeout: a.queue_timeout,
-            platform_key: a.platform_key.clone(),
-        });
-        this.queue_timeout = timeout;
-        Arc::new(this)
+    pub fn with_queue_timeout(mut self, timeout: Duration) -> CloudInterface {
+        self.queue_timeout = timeout;
+        self
     }
 
     /// Builder: enable E2EE with the platform key.
-    pub fn with_platform_key(
-        self: Arc<Self>,
-        key: crate::sshsim::KeyPair,
-    ) -> Arc<CloudInterface> {
-        let mut this = Arc::try_unwrap(self).unwrap_or_else(|a| CloudInterface {
-            scheduler: a.scheduler.clone(),
-            metrics: a.metrics.clone(),
-            rng: std::sync::Mutex::new(Rng::new(0xc1)),
-            queue_timeout: a.queue_timeout,
-            platform_key: a.platform_key.clone(),
-        });
-        this.platform_key = Some(key);
-        Arc::new(this)
+    pub fn with_platform_key(mut self, key: crate::sshsim::KeyPair) -> CloudInterface {
+        self.platform_key = Some(key);
+        self
     }
 
     /// Validate a service name: the injection chokepoint. Anything that is
@@ -196,10 +182,22 @@ impl CloudInterface {
             stdin
         };
 
+        // Parse the (by now plaintext) body once: the streaming flag and
+        // the request's deadline budget (DESIGN.md §Request lifecycle).
+        let arrived = std::time::Instant::now();
+        let parsed = Json::parse(std::str::from_utf8(stdin).unwrap_or("")).ok();
+        let budget_ms = parsed.as_ref().map_or(0, |j| j.u64_or("deadline_ms", 0));
+
         // Least-loaded balancing over ready instances (random tie-break:
         // §5.6's random balancing as the degenerate case), waiting out a
-        // cold start up to queue_timeout (§7.1.3 scale-to-zero queueing).
-        let deadline = std::time::Instant::now() + self.queue_timeout;
+        // cold start up to queue_timeout (§7.1.3 scale-to-zero queueing) —
+        // but never past the request's own deadline budget: a request that
+        // can no longer be answered in time must not keep waiting.
+        let max_wait = match budget_ms {
+            0 => self.queue_timeout,
+            ms => self.queue_timeout.min(Duration::from_millis(ms)),
+        };
+        let deadline = arrived + max_wait;
         let inst = loop {
             let picked = {
                 let mut rng = self.rng.lock().unwrap();
@@ -216,27 +214,50 @@ impl CloudInterface {
             }
         };
         let Some(inst) = inst else {
-            let _ = Self::reply_status(out, 503);
-            let _ = out(
-                Json::obj().set("error", format!("no ready instance for {service}")).dump().as_bytes(),
-            );
+            let out_of_time =
+                budget_ms > 0 && arrived.elapsed() >= Duration::from_millis(budget_ms);
+            let (status, msg) = if out_of_time {
+                self.metrics.counter("ci_deadline_total", &[("service", service)]).inc();
+                (504, format!("deadline exceeded while queued for {service}"))
+            } else {
+                (503, format!("no ready instance for {service}"))
+            };
+            let _ = Self::reply_status(out, status);
+            let _ = out(Json::obj().set("error", msg).dump().as_bytes());
             return EXIT_NO_INSTANCE;
         };
         // Pin the in-flight count to the chosen instance for the request's
         // lifetime so concurrent placements see its true load.
         let _inst_guard = self.scheduler.routing.begin_request(inst.job_id);
 
+        // Burn transit + queue wait off the forwarded budget (gRPC-style
+        // deadline propagation): the instance re-anchors what remains, so
+        // a cold-start wait can never silently extend a client's deadline.
+        let rewritten;
+        let stdin: &[u8] = match &parsed {
+            Some(j) if budget_ms > 0 => {
+                let spent = arrived.elapsed().as_millis() as u64;
+                let remaining = budget_ms.saturating_sub(spent).max(1);
+                rewritten = j.clone().set("deadline_ms", remaining).dump().into_bytes();
+                &rewritten
+            }
+            _ => stdin,
+        };
+
         let url = format!("http://{}/v1/chat/completions", inst.addr);
-        let is_stream = Json::parse(std::str::from_utf8(stdin).unwrap_or(""))
-            .map(|j| j.bool_or("stream", false))
-            .unwrap_or(false)
+        let is_stream = parsed.as_ref().map_or(false, |j| j.bool_or("stream", false))
             // Streaming replies are not sealed (chunk-level E2EE is future
             // work even here); sealed requests get buffered replies.
             && e2ee_nonce.is_none();
 
         if is_stream {
             let mut sent_status = false;
-            let result = http::request_stream(
+            // `out` fails once the SSH channel is closed by the client
+            // side (CHANNEL_CLOSE); returning false then drops the HTTP
+            // connection to the instance, whose api layer drops the
+            // `Generation`, which frees the engine batch slot — the full
+            // disconnect cascade (DESIGN.md §Request lifecycle).
+            let result = http::request_stream_ctl(
                 "POST",
                 &url,
                 &[("content-type", "application/json")],
@@ -244,14 +265,20 @@ impl CloudInterface {
                 |chunk| {
                     if !sent_status {
                         sent_status = true;
-                        let _ = Self::reply_status(out, 200);
+                        if Self::reply_status(out, 200).is_err() {
+                            return false;
+                        }
                     }
-                    let _ = out(chunk);
+                    out(chunk).is_ok()
                 },
             );
             match result {
-                Ok(_) => {
-                    if !sent_status {
+                Ok((_, aborted)) => {
+                    if aborted {
+                        self.metrics
+                            .counter("ci_cancelled_total", &[("service", service)])
+                            .inc();
+                    } else if !sent_status {
                         let _ = Self::reply_status(out, 200);
                     }
                     EXIT_OK
@@ -358,7 +385,7 @@ mod tests {
         (Vec::new(), |_c: &[u8]| Ok(()))
     }
 
-    fn make(scheduler_services: Vec<ServiceSpec>) -> (Arc<CloudInterface>, Arc<ServiceScheduler>) {
+    fn make(scheduler_services: Vec<ServiceSpec>) -> (CloudInterface, Arc<ServiceScheduler>) {
         let slurm = Arc::new(Mutex::new(SlurmSim::new(ClusterSpec::kisski())));
         let sched = Arc::new(ServiceScheduler::new(
             slurm,
@@ -605,6 +632,102 @@ mod tests {
         assert_eq!(
             j.at(&["choices", "0", "message", "content"]).unwrap().as_str().unwrap(),
             "1 2 3 4 5 6 7 8 9 10"
+        );
+    }
+
+    #[test]
+    fn deadline_bounds_the_cold_start_queue_wait() {
+        // No instance ever appears; queue_timeout is long but the
+        // request's own budget is short — the interface must answer 504
+        // at the budget, not hold the request for the full queue wait.
+        let (ci, _sched) = make(vec![svc("m")]);
+        let ci = ci.with_queue_timeout(std::time::Duration::from_secs(30));
+        let body = Json::obj()
+            .set("messages", vec![Json::obj().set("role", "user").set("content", "x")])
+            .set("deadline_ms", 120u64)
+            .dump();
+        let t = std::time::Instant::now();
+        let (code, out) = run(&ci, "infer m", body.as_bytes());
+        assert_eq!(code, EXIT_NO_INSTANCE);
+        assert_eq!(parse_reply(&out).0, 504, "{}", String::from_utf8_lossy(&out));
+        assert!(t.elapsed() < std::time::Duration::from_secs(5), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn builders_compose_without_resetting_state() {
+        // The old Arc-consuming builders rebuilt the struct through an
+        // `Arc::try_unwrap` fallback that silently reset the RNG and could
+        // drop sibling settings; the plain builders must compose.
+        let (ci, _) = make(vec![]);
+        let key = crate::sshsim::KeyPair::generate(7);
+        let ci = ci
+            .with_queue_timeout(std::time::Duration::from_millis(5))
+            .with_platform_key(key);
+        assert_eq!(ci.queue_timeout, std::time::Duration::from_millis(5));
+        assert!(ci.platform_key.is_some(), "platform key lost by later builder");
+    }
+
+    #[test]
+    fn out_failure_stops_forwarding_and_cancels_engine() {
+        // The SSH channel dying mid-stream surfaces here as `out` failing;
+        // the interface must stop reading from the instance, which cascades
+        // into the engine freeing the batch slot (finish_reason "cancelled").
+        let engine_metrics = Registry::new();
+        let engine = crate::llmserver::Engine::start(
+            Box::new(crate::llmserver::SimBackend::by_name("mixtral-8x7b", 1.0).unwrap()),
+            crate::llmserver::EngineConfig::default(),
+            engine_metrics.clone(),
+        );
+        let server = crate::llmserver::LlmHttpServer::start(engine).unwrap();
+        let slurm = Arc::new(Mutex::new(SlurmSim::new(ClusterSpec::kisski())));
+        let sched = Arc::new(ServiceScheduler::new(
+            slurm,
+            SimClock::new(),
+            MockLauncher::new(),
+            vec![svc("mixtral-8x7b")],
+            SchedulerConfig::default(),
+            Registry::new(),
+        ));
+        let ci_metrics = Registry::new();
+        let ci = CloudInterface::new(sched.clone(), ci_metrics.clone())
+            .with_queue_timeout(std::time::Duration::ZERO);
+        sched.routing.upsert(crate::scheduler::Instance {
+            job_id: 1,
+            service: "mixtral-8x7b".into(),
+            node: "n".into(),
+            port: server.server.addr.port(),
+            addr: server.server.addr.to_string(),
+            ready: true,
+            started_us: 0,
+        });
+        let body = Json::obj()
+            .set("messages", vec![Json::obj().set("role", "user").set("content", "count")])
+            .set("stream", true)
+            .dump();
+        let mut writes = 0usize;
+        let mut out = |_c: &[u8]| -> Result<()> {
+            writes += 1;
+            if writes > 2 {
+                anyhow::bail!("channel closed by client")
+            }
+            Ok(())
+        };
+        let code = ci.exec("/ci", "infer mixtral-8x7b", body.as_bytes(), &mut out);
+        assert_eq!(code, EXIT_OK);
+        assert_eq!(
+            ci_metrics.counter("ci_cancelled_total", &[("service", "mixtral-8x7b")]).get(),
+            1,
+            "interface did not record the cancellation"
+        );
+        // The disconnect propagated to the instance: the engine reaped the
+        // slot instead of generating the remaining ~18 tokens.
+        assert!(
+            engine_metrics.wait_for_metric(
+                "llm_cancelled_total{model=\"mixtral-8x7b\"} 1",
+                std::time::Duration::from_secs(5)
+            ),
+            "engine never saw the disconnect: {}",
+            engine_metrics.render()
         );
     }
 

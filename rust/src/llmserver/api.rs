@@ -7,6 +7,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -63,12 +64,21 @@ fn parse_gen_request(body: &Json) -> GenRequest {
         Some(msgs) if !msgs.is_empty() => render_prompt(msgs),
         _ => body.str_or("prompt", "").to_string(),
     };
+    // `deadline_ms` is a relative budget re-anchored at every hop that
+    // parses it (gRPC-style deadline propagation): the body travels
+    // verbatim through gateway → proxy → SSH → interface, so the engine is
+    // the single enforcement point and no hop needs clock sync.
+    let deadline = match body.u64_or("deadline_ms", 0) {
+        0 => None,
+        ms => Some(Instant::now() + Duration::from_millis(ms)),
+    };
     GenRequest {
         prompt,
         max_tokens: body.u64_or("max_tokens", 64) as usize,
         temperature: body.f64_or("temperature", 0.0),
         top_k: body.u64_or("top_k", 0) as usize,
         seed: body.u64_or("seed", 0),
+        deadline,
     }
 }
 
@@ -119,12 +129,23 @@ fn make_handler(engine: Engine) -> Handler {
                 let generation = engine.submit(gen_req);
 
                 if stream {
+                    let cancelled_ctr = engine
+                        .metrics()
+                        .counter("llm_stream_cancelled_total", &[("model", &model)]);
                     Reply::sse(move |sink| {
                         loop {
                             match generation.rx.recv() {
                                 Ok(GenEvent::Token(text)) => {
                                     let chunk = stream_chunk(&id, &model, Some(&text), None);
-                                    sink.send_event(&chunk.dump())?;
+                                    if sink.send_event(&chunk.dump()).is_err() {
+                                        // Client disconnected mid-stream.
+                                        // Returning drops `generation`,
+                                        // which the engine sees as a failed
+                                        // send and aborts within one decode
+                                        // step, freeing the batch slot.
+                                        cancelled_ctr.inc();
+                                        return Ok(());
+                                    }
                                 }
                                 Ok(GenEvent::Done(usage)) => {
                                     let chunk = stream_chunk(
@@ -316,5 +337,68 @@ mod tests {
         ];
         let p = render_prompt(&msgs);
         assert_eq!(p, "system: be terse\nuser: hi\nassistant:");
+    }
+
+    /// A slow real-paced server whose metrics registry the test holds on to.
+    fn slow_server() -> (LlmHttpServer, Registry) {
+        let metrics = Registry::new();
+        let engine = Engine::start(
+            // ~41 ms per decode step, ~0.9 s per full sentence: wide margins
+            // for observing mid-stream effects.
+            Box::new(SimBackend::by_name("mixtral-8x7b", 1.0).unwrap()),
+            EngineConfig::default(),
+            metrics.clone(),
+        );
+        (LlmHttpServer::start(engine).unwrap(), metrics)
+    }
+
+    #[test]
+    fn deadline_ms_bounds_a_completion() {
+        let (s, _metrics) = slow_server();
+        let body = chat_body(false).set("deadline_ms", 150u64).set("max_tokens", 64u64);
+        let t = std::time::Instant::now();
+        let r = http::post_json(&format!("{}/v1/chat/completions", s.url()), &body).unwrap();
+        assert_eq!(r.status, 200);
+        let j = r.json_body().unwrap();
+        assert_eq!(
+            j.at(&["choices", "0", "finish_reason"]).unwrap().as_str().unwrap(),
+            "deadline"
+        );
+        // Full sentence takes ~0.9 s; the deadline cut it well short.
+        assert!(t.elapsed() < Duration::from_millis(700), "{:?}", t.elapsed());
+        let done = j.at(&["usage", "completion_tokens"]).unwrap().as_u64().unwrap();
+        assert!(done < 21, "generated the whole sentence anyway: {done}");
+    }
+
+    #[test]
+    fn client_disconnect_mid_stream_cancels_generation() {
+        let (s, metrics) = slow_server();
+        let mut parser = SseParser::default();
+        let mut events = 0usize;
+        let (status, aborted) = http::request_stream_ctl(
+            "POST",
+            &format!("{}/v1/chat/completions", s.url()),
+            &[("content-type", "application/json")],
+            chat_body(true).dump().as_bytes(),
+            |chunk| {
+                events += parser.push(chunk).len();
+                events < 2 // hang up after the second event
+            },
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(aborted);
+        // The api layer notices the dead socket and drops the Generation;
+        // the engine reaps the slot with finish_reason "cancelled".
+        for needle in [
+            "llm_stream_cancelled_total{model=\"mixtral-8x7b\"} 1",
+            "llm_cancelled_total{model=\"mixtral-8x7b\"} 1",
+        ] {
+            assert!(
+                metrics.wait_for_metric(needle, Duration::from_secs(5)),
+                "disconnect never propagated ({needle}): {}",
+                metrics.render()
+            );
+        }
     }
 }

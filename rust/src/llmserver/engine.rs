@@ -34,11 +34,22 @@ pub struct GenRequest {
     pub temperature: f64,
     pub top_k: usize,
     pub seed: u64,
+    /// Absolute deadline: generation (and queue waiting) stops here with
+    /// `finish_reason: "deadline"`. Carried end-to-end as a relative
+    /// `deadline_ms` budget in the request body (see `api::parse_gen_request`).
+    pub deadline: Option<Instant>,
 }
 
 impl Default for GenRequest {
     fn default() -> GenRequest {
-        GenRequest { prompt: String::new(), max_tokens: 64, temperature: 0.0, top_k: 0, seed: 0 }
+        GenRequest {
+            prompt: String::new(),
+            max_tokens: 64,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            deadline: None,
+        }
     }
 }
 
@@ -50,7 +61,8 @@ pub struct Usage {
     /// Time to first token.
     pub ttft: Duration,
     pub total: Duration,
-    /// Why generation stopped: "stop" (EOS), "length", or "kv_exhausted".
+    /// Why generation stopped: "stop" (EOS), "length", "kv_exhausted",
+    /// "cancelled" (receiver dropped mid-stream), or "deadline".
     pub finish_reason: &'static str,
 }
 
@@ -63,6 +75,10 @@ pub enum GenEvent {
 }
 
 /// Handle to an in-flight generation.
+///
+/// Dropping the handle (or just its `rx`) *is* the cancellation signal:
+/// the engine's next token send fails, and it frees the batch slot and KV
+/// blocks within one decode step (`finish_reason: "cancelled"`).
 pub struct Generation {
     pub rx: Receiver<GenEvent>,
 }
@@ -80,6 +96,10 @@ impl Generation {
             }
         }
     }
+
+    /// Explicit abort: equivalent to dropping the handle, named for
+    /// call-site clarity.
+    pub fn cancel(self) {}
 }
 
 /// Engine tuning knobs.
@@ -89,11 +109,19 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Poll interval when completely idle.
     pub idle_wait: Duration,
+    /// Treat a failed event send (receiver dropped) as an abort, freeing
+    /// the slot and KV blocks immediately. `false` reproduces the
+    /// run-to-completion baseline the abandonment bench compares against.
+    pub abort_on_disconnect: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
-        EngineConfig { max_queue: 256, idle_wait: Duration::from_millis(2) }
+        EngineConfig {
+            max_queue: 256,
+            idle_wait: Duration::from_millis(2),
+            abort_on_disconnect: true,
+        }
     }
 }
 
@@ -123,6 +151,7 @@ struct Slot {
     prompt_tokens: usize,
     started: Instant,
     first_token_at: Option<Instant>,
+    deadline: Option<Instant>,
 }
 
 struct Waiting {
@@ -194,6 +223,8 @@ fn run_loop(
     let tokens_ctr = metrics.counter("llm_tokens_generated_total", &[("model", model)]);
     let req_ctr = metrics.counter("llm_requests_total", &[("model", model)]);
     let rejected_ctr = metrics.counter("llm_requests_rejected_total", &[("model", model)]);
+    let cancelled_ctr = metrics.counter("llm_cancelled_total", &[("model", model)]);
+    let deadline_ctr = metrics.counter("llm_deadline_total", &[("model", model)]);
     let step_hist = metrics.histogram("llm_decode_step_seconds", &[("model", model)]);
     let ttft_hist = metrics.histogram("llm_ttft_seconds", &[("model", model)]);
 
@@ -216,6 +247,26 @@ fn run_loop(
             }
         }
         queue_gauge.set(waiting.len() as i64);
+
+        // Expired queue entries never reach a batch slot: answer them with
+        // `finish_reason: "deadline"` while they are still cheap to drop.
+        if !waiting.is_empty() {
+            let now = Instant::now();
+            waiting.retain(|w| match w.req.deadline {
+                Some(d) if d <= now => {
+                    deadline_ctr.inc();
+                    let _ = w.tx.send(GenEvent::Done(Usage {
+                        prompt_tokens: 0,
+                        completion_tokens: 0,
+                        ttft: Duration::ZERO,
+                        total: w.enqueued.elapsed(),
+                        finish_reason: "deadline",
+                    }));
+                    false
+                }
+                _ => true,
+            });
+        }
 
         // --- 2. admission ----------------------------------------------
         let free_slots: Vec<usize> =
@@ -287,6 +338,7 @@ fn run_loop(
                                     prompt_tokens: toks.len(),
                                     started: w.enqueued,
                                     first_token_at: Some(Instant::now()),
+                                    deadline: w.req.deadline,
                                 };
                                 ttft_hist
                                     .observe(w.enqueued.elapsed().as_secs_f64());
@@ -295,10 +347,12 @@ fn run_loop(
                                     finish(&mut alloc, slot, "stop");
                                 } else {
                                     let text = slot.decoder.push(first);
-                                    if !text.is_empty() {
-                                        let _ = slot.tx.send(GenEvent::Token(text));
-                                    }
-                                    if slot.completion_tokens >= slot.max_tokens {
+                                    let gone = !text.is_empty()
+                                        && slot.tx.send(GenEvent::Token(text)).is_err();
+                                    if gone && cfg.abort_on_disconnect {
+                                        cancelled_ctr.inc();
+                                        finish(&mut alloc, slot, "cancelled");
+                                    } else if slot.completion_tokens >= slot.max_tokens {
                                         finish(&mut alloc, slot, "length");
                                     } else {
                                         slots[slot_idx] = Some(slot);
@@ -340,8 +394,14 @@ fn run_loop(
         let mut positions = vec![0i32; geo.batch];
         let mut tables = vec![0i32; geo.batch * geo.max_blocks];
         let mut oom: Vec<usize> = Vec::new();
+        let mut expired: Vec<usize> = Vec::new();
+        let now = Instant::now();
         for (i, slot) in slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
+            if s.deadline.is_some_and(|d| d <= now) {
+                expired.push(i);
+                continue;
+            }
             // The fed token occupies position seq.len; grow the page table.
             match alloc.append_token(&mut s.seq) {
                 Ok(true) => {
@@ -351,6 +411,12 @@ fn run_loop(
                     tables[i * geo.max_blocks..(i + 1) * geo.max_blocks].copy_from_slice(&row);
                 }
                 Ok(false) | Err(_) => oom.push(i),
+            }
+        }
+        for i in expired {
+            if let Some(s) = slots[i].take() {
+                deadline_ctr.inc();
+                finish(&mut alloc, s, "deadline");
             }
         }
         for i in oom {
@@ -388,8 +454,14 @@ fn run_loop(
                 finish(&mut alloc, s, "stop");
             } else {
                 let text = s.decoder.push(tok);
-                if !text.is_empty() {
-                    let _ = s.tx.send(GenEvent::Token(text));
+                // A failed send means the receiver is gone — the client
+                // disconnected somewhere up the chain. Abort: the slot and
+                // its KV blocks are back in the pool before the next step.
+                let gone = !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
+                if gone && cfg.abort_on_disconnect {
+                    cancelled_ctr.inc();
+                    finish(&mut alloc, s, "cancelled");
+                    continue;
                 }
                 s.next_token = tok;
                 if s.completion_tokens >= s.max_tokens {
@@ -546,5 +618,180 @@ mod tests {
         assert!(done || gen.rx.recv().is_err());
     }
 
+    // --- request lifecycle: cancellation + deadlines ----------------------
 
+    use crate::llmserver::backend::{Backend, BatchGeometry};
+
+    /// A backend that streams 'a' forever (never emits EOS): the only way a
+    /// request ends is max_tokens, deadline, or cancellation — exactly what
+    /// the lifecycle tests need to observe.
+    struct InfiniteBackend {
+        geometry: BatchGeometry,
+        step_delay: Duration,
+    }
+
+    impl InfiniteBackend {
+        fn new(batch: usize, step_delay: Duration) -> InfiniteBackend {
+            InfiniteBackend {
+                geometry: BatchGeometry {
+                    batch,
+                    prefill_len: 64,
+                    block_size: 16,
+                    n_blocks: 1025,
+                    max_blocks: 64,
+                    vocab: tokenizer::VOCAB,
+                },
+                step_delay,
+            }
+        }
+
+        fn one_hot(&self, rows: &[bool]) -> Vec<f32> {
+            let v = self.geometry.vocab;
+            let mut out = vec![0.0f32; self.geometry.batch * v];
+            for (b, &on) in rows.iter().enumerate() {
+                if on {
+                    out[b * v + b'a' as usize] = 100.0;
+                }
+            }
+            out
+        }
+    }
+
+    impl Backend for InfiniteBackend {
+        fn geometry(&self) -> &BatchGeometry {
+            &self.geometry
+        }
+
+        fn model_name(&self) -> &str {
+            "infinite"
+        }
+
+        fn prefill(
+            &mut self,
+            _tokens: &[i32],
+            lens: &[i32],
+            _tables: &[i32],
+        ) -> Result<Vec<f32>> {
+            let rows: Vec<bool> = lens.iter().map(|&l| l > 0).collect();
+            Ok(self.one_hot(&rows))
+        }
+
+        fn decode(
+            &mut self,
+            _tokens: &[i32],
+            _positions: &[i32],
+            _tables: &[i32],
+            active: &[bool],
+        ) -> Result<Vec<f32>> {
+            if !self.step_delay.is_zero() {
+                std::thread::sleep(self.step_delay);
+            }
+            Ok(self.one_hot(active))
+        }
+    }
+
+    fn infinite_engine(batch: usize) -> (Engine, Registry) {
+        let metrics = Registry::new();
+        let engine = Engine::start(
+            Box::new(InfiniteBackend::new(batch, Duration::from_millis(1))),
+            EngineConfig::default(),
+            metrics.clone(),
+        );
+        (engine, metrics)
+    }
+
+    #[test]
+    fn dropped_receiver_frees_slot_and_kv_blocks() {
+        let (engine, metrics) = infinite_engine(2);
+        // Fill both batch slots with never-ending generations...
+        let g1 = engine
+            .submit(GenRequest { prompt: "a".into(), max_tokens: 1_000_000, ..Default::default() });
+        let g2 = engine
+            .submit(GenRequest { prompt: "b".into(), max_tokens: 1_000_000, ..Default::default() });
+        assert!(matches!(g1.rx.recv(), Ok(GenEvent::Token(_))));
+        assert!(matches!(g2.rx.recv(), Ok(GenEvent::Token(_))));
+        // ...then abandon them: dropping the handle is the cancel signal.
+        drop(g1);
+        g2.cancel();
+        assert!(
+            metrics.wait_for_metric(
+                "llm_cancelled_total{model=\"infinite\"} 2",
+                Duration::from_secs(5)
+            ),
+            "engine never reaped abandoned slots: {}",
+            metrics.render()
+        );
+        // Both slots and their KV pages are free again: a fresh request is
+        // admitted and runs to its token limit.
+        let (text, usage) = engine
+            .generate(GenRequest { prompt: "c".into(), max_tokens: 5, ..Default::default() })
+            .unwrap();
+        assert_eq!(usage.finish_reason, "length");
+        assert_eq!(text, "aaaaa");
+    }
+
+    #[test]
+    fn deadline_bounds_generation() {
+        let (engine, metrics) = infinite_engine(2);
+        let t = Instant::now();
+        let (_, usage) = engine
+            .generate(GenRequest {
+                prompt: "x".into(),
+                max_tokens: 1_000_000,
+                deadline: Some(Instant::now() + Duration::from_millis(60)),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(usage.finish_reason, "deadline");
+        assert!(t.elapsed() < Duration::from_secs(5), "deadline ignored");
+        assert!(usage.completion_tokens >= 1, "ran at least one step");
+        assert!(metrics.render().contains("llm_deadline_total{model=\"infinite\"} 1"));
+    }
+
+    #[test]
+    fn queued_request_deadline_expires_before_admission() {
+        let (engine, _metrics) = infinite_engine(1);
+        // Occupy the single batch slot indefinitely.
+        let hog = engine.submit(GenRequest {
+            prompt: "hog".into(),
+            max_tokens: 1_000_000,
+            ..Default::default()
+        });
+        assert!(matches!(hog.rx.recv(), Ok(GenEvent::Token(_))));
+        // The queued request can never be admitted; its deadline answers it.
+        let (text, usage) = engine
+            .generate(GenRequest {
+                prompt: "queued".into(),
+                deadline: Some(Instant::now() + Duration::from_millis(40)),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(usage.finish_reason, "deadline");
+        assert_eq!(usage.completion_tokens, 0, "never reached a slot");
+        assert!(text.is_empty());
+        drop(hog);
+    }
+
+    #[test]
+    fn run_to_completion_baseline_ignores_disconnects() {
+        let metrics = Registry::new();
+        let engine = Engine::start(
+            Box::new(InfiniteBackend::new(1, Duration::from_millis(1))),
+            EngineConfig { abort_on_disconnect: false, ..Default::default() },
+            metrics.clone(),
+        );
+        let gen = engine
+            .submit(GenRequest { prompt: "x".into(), max_tokens: 40, ..Default::default() });
+        assert!(matches!(gen.rx.recv(), Ok(GenEvent::Token(_))));
+        drop(gen); // abandoned — but the baseline engine must not notice
+        assert!(
+            metrics.wait_for_metric(
+                "llm_tokens_generated_total{model=\"infinite\"} 40",
+                Duration::from_secs(5)
+            ),
+            "baseline stopped early: {}",
+            metrics.render()
+        );
+        assert!(metrics.render().contains("llm_cancelled_total{model=\"infinite\"} 0"));
+    }
 }

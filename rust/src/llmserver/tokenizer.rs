@@ -125,4 +125,36 @@ mod tests {
         assert_eq!(d.push(0xC3), ""); // dangling continuation start
         assert_eq!(d.finish(), "\u{FFFD}");
     }
+
+    #[test]
+    fn stream_decoder_lossy_flush_after_four_invalid_bytes() {
+        // A 4-byte-lead byte (0xF0) followed by non-continuation bytes can
+        // never become valid UTF-8; after four pending bytes the decoder
+        // must flush lossily instead of stalling the stream forever.
+        let mut d = StreamDecoder::default();
+        assert_eq!(d.push(0xF0), "");
+        assert_eq!(d.push(0xF1), "");
+        assert_eq!(d.push(0xF2), "");
+        let out = d.push(0xF3);
+        assert!(!out.is_empty(), "decoder stalled on an invalid sequence");
+        assert!(out.chars().all(|c| c == '\u{FFFD}'), "{out:?}");
+        // The buffer is clean afterwards: valid text decodes normally.
+        assert_eq!(d.push(b'o' as i32), "o");
+        assert_eq!(d.push(b'k' as i32), "k");
+        assert_eq!(d.finish(), "");
+    }
+
+    #[test]
+    fn stream_decoder_valid_prefix_drains_before_invalid_tail() {
+        // "é" (2 bytes, valid) followed by a lone continuation byte: the
+        // valid prefix must surface as soon as it completes, the dangling
+        // byte only at finish().
+        let mut d = StreamDecoder::default();
+        assert_eq!(d.push(0xC3), "");
+        assert_eq!(d.push(0xA9), "é");
+        assert_eq!(d.push(0x80), ""); // continuation with no lead
+        assert_eq!(d.finish(), "\u{FFFD}");
+        // finish() on an empty decoder is a no-op.
+        assert_eq!(d.finish(), "");
+    }
 }

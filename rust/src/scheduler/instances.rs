@@ -46,6 +46,9 @@ pub struct RealLauncher {
     metrics: Registry,
     /// Model-load wall-time scale (1.0 = realistic cold starts).
     load_time_scale: f64,
+    /// Engine tuning applied to every launched instance (the abandonment
+    /// bench flips `abort_on_disconnect` off for its baseline).
+    engine_config: EngineConfig,
     artifacts_dir: std::path::PathBuf,
     state: Mutex<BTreeMap<JobId, Arc<InstanceState>>>,
 }
@@ -60,6 +63,7 @@ impl RealLauncher {
         RealLauncher {
             metrics,
             load_time_scale,
+            engine_config: EngineConfig::default(),
             artifacts_dir: crate::runtime::artifacts_dir(),
             state: Mutex::new(BTreeMap::new()),
         }
@@ -67,6 +71,11 @@ impl RealLauncher {
 
     pub fn with_artifacts(mut self, dir: std::path::PathBuf) -> RealLauncher {
         self.artifacts_dir = dir;
+        self
+    }
+
+    pub fn with_engine_config(mut self, cfg: EngineConfig) -> RealLauncher {
+        self.engine_config = cfg;
         self
     }
 }
@@ -81,6 +90,7 @@ impl InstanceLauncher for RealLauncher {
         let backend = service.backend.clone();
         let metrics = self.metrics.clone();
         let load_scale = self.load_time_scale;
+        let engine_cfg = self.engine_config.clone();
         let artifacts = self.artifacts_dir.clone();
         let service_name = service.name.clone();
         std::thread::spawn(move || {
@@ -102,7 +112,7 @@ impl InstanceLauncher for RealLauncher {
             let engine = match &backend {
                 BackendKind::Sim { profile, time_scale } => {
                     match SimBackend::by_name(profile, *time_scale) {
-                        Some(b) => Engine::start(Box::new(b), EngineConfig::default(), metrics),
+                        Some(b) => Engine::start(Box::new(b), engine_cfg, metrics),
                         None => {
                             crate::log_warn!("launcher", "unknown profile {profile}");
                             return;
@@ -110,7 +120,7 @@ impl InstanceLauncher for RealLauncher {
                     }
                 }
                 BackendKind::Pjrt { model } => match PjrtBackend::load(&artifacts, model) {
-                    Ok(b) => Engine::start(Box::new(b), EngineConfig::default(), metrics),
+                    Ok(b) => Engine::start(Box::new(b), engine_cfg, metrics),
                     Err(e) => {
                         crate::log_warn!("launcher", "pjrt load failed: {e}");
                         return;

@@ -35,7 +35,7 @@ mod proto;
 pub use crypto::{hex, KeyPair, SessionCrypto};
 pub use proto::{
     CommandHandler, ExecReply, SshClient, SshServer, SshServerConfig, StreamChunk,
-    EXIT_CHANNEL_REJECTED,
+    EXIT_CANCELLED, EXIT_CHANNEL_REJECTED,
 };
 
 use std::collections::BTreeMap;

@@ -32,6 +32,10 @@ const FRAME_EOF: u8 = 2;
 const FRAME_EXIT: u8 = 3;
 const FRAME_PING: u8 = 4;
 const FRAME_PONG: u8 = 5;
+/// Client-initiated channel abandonment (OpenSSH `SSH_MSG_CHANNEL_CLOSE`):
+/// the server stops the handler's output and releases the channel's
+/// `MaxSessions` slot as soon as the handler returns.
+const FRAME_CLOSE: u8 = 6;
 
 const MAX_FRAME: usize = 16 * 1024 * 1024;
 
@@ -39,6 +43,11 @@ const MAX_FRAME: usize = 16 * 1024 * 1024;
 /// connection that is already at `max_sessions` (OpenSSH surfaces the same
 /// condition as "channel open failed").
 pub const EXIT_CHANNEL_REJECTED: i32 = 254;
+
+/// Pseudo exit code returned by `exec_stream_ctl` when the *consumer*
+/// abandoned the channel (CHANNEL_CLOSE sent); the real remote exit code
+/// never arrives because the channel is already gone.
+pub const EXIT_CANCELLED: i32 = 253;
 
 /// What a command execution produces.
 #[derive(Debug, Clone)]
@@ -139,6 +148,8 @@ pub struct SshServerStats {
     pub forced_commands: AtomicU64,
     /// Channel opens refused because a connection hit `max_sessions`.
     pub channel_rejections: AtomicU64,
+    /// Client-initiated CHANNEL_CLOSE frames received (cancelled channels).
+    pub channels_cancelled: AtomicU64,
 }
 
 /// Server tuning knobs.
@@ -317,6 +328,11 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
     // Concurrent exec channels on THIS connection (MaxSessions accounting):
     // counted from channel open (EXEC) until the handler thread finishes.
     let inflight = Arc::new(AtomicUsize::new(0));
+    // Channels whose client sent CHANNEL_CLOSE while a handler was running:
+    // the flag makes the handler's next output write fail, which is how the
+    // cancellation reaches CommandHandler implementations.
+    let cancels: Arc<Mutex<BTreeMap<u32, Arc<AtomicBool>>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
 
     loop {
         let (ty, chan, payload) = match read_frame(&mut stream, &mut recv_crypto) {
@@ -386,9 +402,15 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                 let path = command.split_whitespace().next().unwrap_or("").to_string();
                 let handler = shared.handlers.get(&path).cloned();
                 let w = writer.clone();
+                let cancelled = Arc::new(AtomicBool::new(false));
+                cancels.lock().unwrap().insert(chan, cancelled.clone());
+                let cancels_map = cancels.clone();
                 std::thread::spawn(move || {
                     let send =
                         |ty: u8, payload: &[u8]| -> Result<()> {
+                            if cancelled.load(Ordering::SeqCst) {
+                                bail!("channel {chan} closed by client");
+                            }
                             let mut g = w.lock().unwrap();
                             let (ref mut sock, ref mut crypto) = *g;
                             write_frame(sock, crypto, ty, chan, payload)
@@ -407,9 +429,24 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                             127
                         }
                     };
+                    // On a cancelled channel the EXIT frame is suppressed
+                    // (the client already forgot the channel); the send
+                    // closure's flag check does that for us.
                     let _ = send(FRAME_EXIT, &(code as u32).to_le_bytes());
+                    cancels_map.lock().unwrap().remove(&chan);
                     inflight.fetch_sub(1, Ordering::SeqCst);
                 });
+            }
+            FRAME_CLOSE => {
+                shared.stats.channels_cancelled.fetch_add(1, Ordering::Relaxed);
+                if stdin_bufs.remove(&chan).is_some() {
+                    // Closed before EOF ever dispatched a handler: release
+                    // the MaxSessions slot taken at EXEC.
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                } else if let Some(flag) = cancels.lock().unwrap().get(&chan) {
+                    // Handler running: fail its next output write.
+                    flag.store(true, Ordering::SeqCst);
+                }
             }
             _ => {}
         }
@@ -581,6 +618,23 @@ impl SshClient {
         stdin: &[u8],
         mut on_chunk: impl FnMut(&[u8]),
     ) -> Result<i32> {
+        self.exec_stream_ctl(command, stdin, |chunk| {
+            on_chunk(chunk);
+            true
+        })
+    }
+
+    /// Cancellable exec: like [`exec_stream`], but `on_chunk` returns
+    /// whether to keep consuming. Returning `false` sends CHANNEL_CLOSE,
+    /// drops the channel from this connection's accounting immediately
+    /// (the lane is placeable again before the server even reacts), and
+    /// returns [`EXIT_CANCELLED`].
+    pub fn exec_stream_ctl(
+        &self,
+        command: &str,
+        stdin: &[u8],
+        mut on_chunk: impl FnMut(&[u8]) -> bool,
+    ) -> Result<i32> {
         let (chan, rx) = self.open_channel();
         // EXEC payload = command; stdin travels as DATA after a NUL marker.
         let mut body = vec![0u8];
@@ -593,10 +647,22 @@ impl SshClient {
         }
         loop {
             match rx.recv_timeout(Duration::from_secs(60)) {
-                Ok(StreamChunk::Data(d)) => on_chunk(&d),
+                Ok(StreamChunk::Data(d)) => {
+                    if !on_chunk(&d) {
+                        self.channels.lock().unwrap().remove(&chan);
+                        // Best-effort: a dead connection already freed the
+                        // server side, so the close frame may not go out.
+                        let _ = self.send(FRAME_CLOSE, chan, &[]);
+                        return Ok(EXIT_CANCELLED);
+                    }
+                }
                 Ok(StreamChunk::Exit(code)) => return Ok(code),
                 Err(_) => {
                     self.channels.lock().unwrap().remove(&chan);
+                    // Same ghost-generation hazard as an explicit abandon:
+                    // without a close the server handler keeps its
+                    // MaxSessions slot and keeps generating for nobody.
+                    let _ = self.send(FRAME_CLOSE, chan, &[]);
                     bail!("ssh exec timed out or connection lost");
                 }
             }
@@ -826,6 +892,101 @@ mod tests {
         assert_eq!(client.active_channels(), 1, "exec in flight");
         h.join().unwrap();
         assert_eq!(client.active_channels(), 0, "drained after exit");
+    }
+
+    #[test]
+    fn channel_close_stops_server_handler_and_frees_accounting() {
+        let kp = KeyPair::generate(20);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/drip".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        // A handler that drips chunks until its output write fails.
+        let emitted = Arc::new(AtomicUsize::new(0));
+        let stopped_early = Arc::new(AtomicBool::new(false));
+        let (em, st) = (emitted.clone(), stopped_early.clone());
+        let dripper: Arc<dyn CommandHandler> = Arc::new(
+            move |_c: &str, _o: &str, _i: &[u8], out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                for _ in 0..50 {
+                    std::thread::sleep(Duration::from_millis(10));
+                    if out(b"tok;").is_err() {
+                        st.store(true, Ordering::SeqCst);
+                        return 1;
+                    }
+                    em.fetch_add(1, Ordering::SeqCst);
+                }
+                0
+            },
+        );
+        let server =
+            SshServer::start(ak, vec![kp.clone()], vec![("/drip".into(), dripper)]).unwrap();
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+
+        let mut seen = 0usize;
+        let code = client
+            .exec_stream_ctl("x", b"", |_| {
+                seen += 1;
+                seen < 3 // abandon after the third chunk
+            })
+            .unwrap();
+        assert_eq!(code, EXIT_CANCELLED);
+        // Channel accounting freed immediately on the client side.
+        assert_eq!(client.active_channels(), 0, "lane not released");
+        // The CLOSE frame reached the server and the handler stopped.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while !stopped_early.load(Ordering::SeqCst) {
+            assert!(Instant::now() < deadline, "server handler never noticed the close");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(server.stats.channels_cancelled.load(Ordering::Relaxed), 1);
+        let produced = emitted.load(Ordering::SeqCst);
+        assert!(produced < 50, "handler ran to completion despite close: {produced}");
+        // The connection itself survives: a fresh exec runs to completion.
+        let reply = client.exec("again", b"").unwrap();
+        assert_eq!(reply.exit_code, 0);
+    }
+
+    #[test]
+    fn cancelled_channel_releases_max_sessions_slot() {
+        // Cap 1: while a drip exec is in flight the cap is full; after the
+        // client closes the channel the next exec must be admitted.
+        let kp = KeyPair::generate(21);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/slow".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let server = SshServer::start_with(
+            ak,
+            vec![kp.clone()],
+            vec![("/slow".into(), slow_handler(400))],
+            SshServerConfig { max_sessions: 1 },
+        )
+        .unwrap();
+        let client = Arc::new(SshClient::connect(&server.addr.to_string(), &kp).unwrap());
+        // First exec occupies the only session slot, then gets abandoned.
+        let c = client.clone();
+        let h = std::thread::spawn(move || {
+            c.exec_stream_ctl("x", b"", |_| false).unwrap() // close on first chunk
+        });
+        assert_eq!(h.join().unwrap(), EXIT_CANCELLED);
+        // The handler thread finishes within its sleep; once it does, the
+        // slot is free and a new exec is admitted rather than rejected.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        loop {
+            let code = client.exec("y", b"").unwrap().exit_code;
+            if code == 0 {
+                break;
+            }
+            assert_eq!(code, EXIT_CHANNEL_REJECTED);
+            assert!(Instant::now() < deadline, "MaxSessions slot never released");
+            std::thread::sleep(Duration::from_millis(25));
+        }
     }
 
     #[test]

@@ -60,6 +60,10 @@ pub struct StackConfig {
     pub ssh_pool_size: usize,
     /// Per-connection channel cap used for pool placement (MaxSessions).
     pub ssh_max_channels: usize,
+    /// Engine-side disconnect handling: `true` frees a batch slot the
+    /// moment its client vanishes; `false` is the run-to-completion
+    /// baseline the abandonment bench measures against.
+    pub abort_on_disconnect: bool,
 }
 
 impl Default for StackConfig {
@@ -73,6 +77,7 @@ impl Default for StackConfig {
             ssh_link_frame_delay: Duration::ZERO,
             ssh_pool_size: 1,
             ssh_max_channels: 8,
+            abort_on_disconnect: true,
         }
     }
 }
@@ -104,7 +109,14 @@ impl ChatAiStack {
         // --- HPC platform ------------------------------------------------
         let slurm = Arc::new(Mutex::new(SlurmSim::new(cfg.cluster.clone())));
         let clock = WallClock::new();
-        let launcher = Arc::new(RealLauncher::new(metrics.clone(), cfg.load_time_scale));
+        let launcher = Arc::new(
+            RealLauncher::new(metrics.clone(), cfg.load_time_scale).with_engine_config(
+                crate::llmserver::EngineConfig {
+                    abort_on_disconnect: cfg.abort_on_disconnect,
+                    ..Default::default()
+                },
+            ),
+        );
         let scheduler = Arc::new(ServiceScheduler::new(
             slurm.clone(),
             clock,
@@ -117,9 +129,11 @@ impl ChatAiStack {
         // default: sealed bodies decrypt only here, and infer calls wait
         // out a scale-from-zero cold start.
         let e2ee_key = KeyPair::generate(0x2EE);
-        let interface = CloudInterface::new(scheduler.clone(), metrics.clone())
-            .with_platform_key(e2ee_key.clone())
-            .with_queue_timeout(Duration::from_secs(30));
+        let interface = Arc::new(
+            CloudInterface::new(scheduler.clone(), metrics.clone())
+                .with_platform_key(e2ee_key.clone())
+                .with_queue_timeout(Duration::from_secs(30)),
+        );
 
         // --- the circuit breaker -----------------------------------------
         let key = KeyPair::generate(0xE5C);

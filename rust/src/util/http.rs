@@ -136,7 +136,7 @@ struct ChunkedWriter<'a> {
     w: &'a mut dyn Write,
 }
 
-impl<'a> StreamSink for ChunkedWriter<'a> {
+impl StreamSink for ChunkedWriter<'_> {
     fn send(&mut self, chunk: &[u8]) -> Result<()> {
         if chunk.is_empty() {
             return Ok(());
@@ -334,18 +334,16 @@ pub fn url_decode(s: &str) -> String {
     let mut i = 0;
     while i < b.len() {
         match b[i] {
-            b'%' if i + 2 < b.len() + 1 && i + 2 < b.len() + 1 => {
-                if i + 2 < b.len() {
-                    if let Ok(v) =
-                        u8::from_str_radix(std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("zz"), 16)
-                    {
-                        out.push(v);
-                        i += 3;
-                        continue;
-                    }
+            b'%' if i + 2 < b.len() => {
+                if let Ok(v) =
+                    u8::from_str_radix(std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("zz"), 16)
+                {
+                    out.push(v);
+                    i += 3;
+                } else {
+                    out.push(b'%');
+                    i += 1;
                 }
-                out.push(b'%');
-                i += 1;
             }
             b'+' => {
                 out.push(b' ');
@@ -555,6 +553,28 @@ pub fn request_stream(
     body: &[u8],
     mut on_chunk: impl FnMut(&[u8]),
 ) -> Result<u16> {
+    request_stream_ctl(method, url, headers, body, |chunk| {
+        on_chunk(chunk);
+        true
+    })
+    .map(|(status, _)| status)
+}
+
+/// Cancellable streaming request: like [`request_stream`], but `on_chunk`
+/// returns whether to keep consuming. Returning `false` drops the TCP
+/// connection immediately — the server sees a write failure on its next
+/// chunk, which is the disconnect signal the whole request-lifecycle chain
+/// propagates (DESIGN.md §Request lifecycle).
+///
+/// Returns `(status, aborted)`: `aborted` is true iff the callback stopped
+/// the stream before the server finished it.
+pub fn request_stream_ctl(
+    method: &str,
+    url: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    mut on_chunk: impl FnMut(&[u8]) -> bool,
+) -> Result<(u16, bool)> {
     let (addr, path) = split_url(url)?;
     let stream = TcpStream::connect(&addr)?;
     stream.set_nodelay(true)?;
@@ -584,15 +604,26 @@ pub fn request_stream(
             let mut buf = vec![0u8; size + 2];
             reader.read_exact(&mut buf)?;
             buf.truncate(size);
-            on_chunk(&buf);
+            if !on_chunk(&buf) {
+                // Abandon mid-stream: shut the socket down so the server's
+                // next write fails promptly instead of filling kernel
+                // buffers, then drop it.
+                let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
+                return Ok((status, true));
+            }
         }
     } else if let Some(len) = resp_headers.get("content-length") {
         let len: usize = len.parse()?;
         let mut buf = vec![0u8; len];
         reader.read_exact(&mut buf)?;
-        on_chunk(&buf);
+        if !on_chunk(&buf) {
+            // Contract: returning false always drops the connection and
+            // reports the abort, even on a buffered (non-chunked) reply.
+            let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
+            return Ok((status, true));
+        }
     }
-    Ok(status)
+    Ok((status, false))
 }
 
 /// Parse SSE `data:` payloads out of a raw chunk stream.
@@ -792,5 +823,69 @@ mod tests {
     fn url_encode_decode_roundtrip() {
         let s = "a b+c/d?e=f&g%h";
         assert_eq!(url_decode(&url_encode(s)), s);
+    }
+
+    #[test]
+    fn sse_parser_event_split_across_chunks() {
+        // One event delivered in three fragments, splitting both the
+        // `data: ` prefix and the `\n\n` terminator across pushes.
+        let mut p = SseParser::default();
+        assert_eq!(p.push(b"da"), Vec::<String>::new());
+        assert_eq!(p.push(b"ta: hel"), Vec::<String>::new());
+        assert_eq!(p.push(b"lo\n"), Vec::<String>::new());
+        assert_eq!(p.push(b"\n"), vec!["hello"]);
+        // A chunk carrying the tail of one event plus a whole second one.
+        let mut p = SseParser::default();
+        assert_eq!(p.push(b"data: a\n"), Vec::<String>::new());
+        assert_eq!(p.push(b"\ndata: b\n\ndata: c"), vec!["a", "b"]);
+        assert_eq!(p.push(b"\n\n"), vec!["c"]);
+    }
+
+    #[test]
+    fn sse_parser_compact_prefix_and_multiline_event() {
+        let mut p = SseParser::default();
+        // `data:` without the space is valid SSE framing.
+        assert_eq!(p.push(b"data:tight\n\n"), vec!["tight"]);
+        // Two data lines inside a single event block both surface.
+        assert_eq!(p.push(b"data: one\ndata: two\n\n"), vec!["one", "two"]);
+        // Non-data lines (comments, event names) are ignored.
+        assert_eq!(p.push(b": comment\nevent: x\ndata: y\n\n"), vec!["y"]);
+    }
+
+    #[test]
+    fn stream_ctl_abort_disconnects_mid_stream() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // A slow SSE producer that stops when its sink write fails (the
+        // pattern every streaming layer in the stack uses).
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = sent.clone();
+        let server = Server::start(Arc::new(move |_req: &Request| {
+            let sent = sent2.clone();
+            Reply::sse(move |sink| {
+                for i in 0..50 {
+                    std::thread::sleep(Duration::from_millis(10));
+                    if sink.send_event(&format!("tok{i}")).is_err() {
+                        return Ok(()); // client gone: stop producing
+                    }
+                    sent.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(())
+            })
+        }))
+        .unwrap();
+        let mut seen = 0usize;
+        let (status, aborted) =
+            request_stream_ctl("GET", &format!("{}/s", server.url()), &[], &[], |_| {
+                seen += 1;
+                seen < 3 // abandon after the third chunk
+            })
+            .unwrap();
+        assert_eq!(status, 200);
+        assert!(aborted);
+        // The producer notices within a write or two of the shutdown —
+        // nowhere near the 50 events a run-to-completion server would send.
+        std::thread::sleep(Duration::from_millis(300));
+        let produced = sent.load(Ordering::SeqCst);
+        assert!(produced < 20, "server kept streaming after disconnect: {produced}");
     }
 }

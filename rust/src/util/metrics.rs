@@ -156,6 +156,24 @@ impl Registry {
             .clone()
     }
 
+    /// Poll [`render`](Registry::render) until one of its lines equals
+    /// `needle` (e.g. `metric{label="x"} 1` — whole-line match, so `} 1`
+    /// never false-positives on `} 10`) or the timeout passes. Counters
+    /// only ever grow, so a `true` is durable — the polling idiom every
+    /// lifecycle test needs.
+    pub fn wait_for_metric(&self, needle: &str, timeout: std::time::Duration) -> bool {
+        let start = std::time::Instant::now();
+        loop {
+            if self.render().lines().any(|l| l == needle) {
+                return true;
+            }
+            if start.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+
     /// Prometheus text exposition format.
     pub fn render(&self) -> String {
         let mut out = String::new();

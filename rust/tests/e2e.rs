@@ -8,6 +8,7 @@
 use std::time::Duration;
 
 use chat_hpc::scheduler::ServiceSpec;
+#[cfg(feature = "pjrt")]
 use chat_hpc::slurm::ClusterSpec;
 use chat_hpc::stack::{ChatAiStack, StackConfig};
 use chat_hpc::util::http;
@@ -241,4 +242,105 @@ fn scale_from_zero_queues_and_serves() {
         "should have waited for the cold start"
     );
     assert!(!stack.scheduler.routing.ready_instances("intel-neural-7b").is_empty());
+}
+
+#[test]
+fn mid_stream_disconnect_frees_engine_slot_across_all_hops() {
+    // The tentpole end-to-end: a client hangs up on an SSE stream at the
+    // gateway socket; the abort crosses gateway → proxy → SSH CHANNEL_CLOSE
+    // → cloud interface → instance HTTP → engine, which frees the batch
+    // slot with finish_reason "cancelled". Every layer's cancel counter
+    // must tick.
+    let stack = ChatAiStack::start(StackConfig {
+        // Real pacing so the stream is still in flight when we hang up
+        // (~41 ms/token, ~0.9 s per sentence).
+        services: vec![ServiceSpec::sim("mixtral-8x7b", 1.0)],
+        with_external: false,
+        ..Default::default()
+    })
+    .unwrap();
+    stack.wait_ready("mixtral-8x7b", Duration::from_secs(15)).unwrap();
+
+    let body = Json::obj()
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "count")])
+        .set("stream", true);
+    let mut events = 0usize;
+    let (status, aborted) = http::request_stream_ctl(
+        "POST",
+        &format!("{}/v1/m/mixtral-8x7b/", stack.gateway_url()),
+        &[
+            ("authorization", &format!("Bearer {}", stack.api_key)),
+            ("content-type", "application/json"),
+        ],
+        body.dump().as_bytes(),
+        |_| {
+            events += 1;
+            events < 2 // hang up mid-stream
+        },
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(aborted, "stream finished before we could abandon it");
+
+    // The disconnect propagates the whole way down within a few token
+    // writes; poll the shared registry for every layer's evidence.
+    for needle in [
+        "gw_cancelled_total{route=\"mixtral-8x7b\"} 1",
+        "proxy_cancelled_total{service=\"mixtral-8x7b\"} 1",
+        "ci_cancelled_total{service=\"mixtral-8x7b\"} 1",
+        "llm_stream_cancelled_total{model=\"mixtral-8x7b\"} 1",
+        "llm_cancelled_total{model=\"mixtral-8x7b\"} 1",
+    ] {
+        assert!(
+            stack.metrics.wait_for_metric(needle, Duration::from_secs(10)),
+            "cancellation never reached this layer ({needle}):\n{}",
+            stack.metrics.render()
+        );
+    }
+    // The SSH server saw the client-initiated channel close.
+    assert!(
+        stack.ssh_server.stats.channels_cancelled.load(std::sync::atomic::Ordering::Relaxed) >= 1
+    );
+    // And the gateway tagged the usage-log entry.
+    let entries = stack.log.entries();
+    assert_eq!(entries.len(), 1);
+    assert!(entries[0].cancelled, "log entry not tagged cancelled");
+}
+
+#[test]
+fn deadline_ms_propagates_from_client_to_engine() {
+    // A relative deadline budget rides the request body end-to-end; the
+    // engine is the enforcement point and answers `finish_reason:
+    // "deadline"` long before the full sentence is generated.
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("mixtral-8x7b", 1.0)],
+        with_external: false,
+        ..Default::default()
+    })
+    .unwrap();
+    stack.wait_ready("mixtral-8x7b", Duration::from_secs(15)).unwrap();
+
+    let body = Json::obj()
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "count")])
+        .set("stream", false)
+        .set("deadline_ms", 200u64);
+    let t = std::time::Instant::now();
+    let r = http::request(
+        "POST",
+        &format!("{}/v1/m/mixtral-8x7b/", stack.gateway_url()),
+        &[
+            ("authorization", &format!("Bearer {}", stack.api_key)),
+            ("content-type", "application/json"),
+        ],
+        body.dump().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200);
+    let j = r.json_body().unwrap();
+    assert_eq!(
+        j.at(&["choices", "0", "finish_reason"]).unwrap().as_str().unwrap(),
+        "deadline"
+    );
+    // Full sentence would take ~0.9 s of pure decode; the budget cut it.
+    assert!(t.elapsed() < Duration::from_millis(800), "{:?}", t.elapsed());
 }
