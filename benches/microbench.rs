@@ -103,11 +103,22 @@ fn main() -> anyhow::Result<()> {
 
     // --- KV cache ---
     let mut alloc = BlockAllocator::new(512, 16, 32);
+    alloc.set_cache_enabled(false);
+    let prompt: Vec<i32> = (0..16).collect();
     row("kvcache create+grow+free seq (64 tok)", &time_n(100, 5000, || {
-        let mut seq = alloc.create_seq(1, 16).unwrap();
-        for _ in 0..48 {
-            let _ = alloc.append_token(&mut seq).unwrap();
+        let mut seq = alloc.create_seq(1, &prompt).unwrap();
+        for t in 0..48 {
+            let _ = alloc.append_token(&mut seq, t).unwrap();
         }
+        alloc.free_seq(&seq);
+    }));
+    // Same cycle with the prefix cache on: after the first iteration every
+    // create attaches the registered pages instead of allocating.
+    let mut alloc = BlockAllocator::new(512, 16, 32);
+    let prompt: Vec<i32> = (0..64).collect();
+    row("kvcache prefix-attach hit (64-tok prompt)", &time_n(100, 5000, || {
+        let mut seq = alloc.create_seq(1, &prompt).unwrap();
+        seq.written = seq.len;
         alloc.free_seq(&seq);
     }));
 

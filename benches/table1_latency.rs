@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{ChatAiStack, StackConfig};
-use chat_hpc::util::bench::{fmt_ms, table_header, table_row};
+use chat_hpc::util::bench::{fmt_ms, table_header, table_row, BenchReport};
 use chat_hpc::util::http;
 use chat_hpc::util::json::Json;
 use chat_hpc::workload::probe_stage;
@@ -108,5 +108,19 @@ fn main() -> anyhow::Result<()> {
         if s4.diff_ms > overhead { "<" } else { ">=" },
         if s4.diff_ms > overhead { "REPRODUCED" } else { "DIVERGED (see EXPERIMENTS.md)" }
     );
+
+    // Machine-readable trajectory: per-stage latency; the sequential probe
+    // loop makes 1/mean the honest stage throughput. `ttft_ms` is only
+    // meaningful for the LLM stage (its probe IS a first-token wait).
+    let mut report = BenchReport::new();
+    for (key, s, ttft_ms) in [
+        ("probe_local_proxy", &s1, 0.0),
+        ("ssh_command", &s2, 0.0),
+        ("probe_gpu_node", &s3, 0.0),
+        ("llm_first_token", &s4, s4.agg_avg_ms),
+    ] {
+        report.entry(key, 1.0 / s.stats.mean, s.stats.p50 * 1e3, s.stats.p99 * 1e3, ttft_ms);
+    }
+    report.write("BENCH_table1.json")?;
     Ok(())
 }

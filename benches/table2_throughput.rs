@@ -15,14 +15,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use chat_hpc::hpcproxy::{HpcProxy, ProxyConfig};
+use chat_hpc::llmserver::{Engine, EngineConfig, LlmHttpServer, SimBackend};
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::sshsim::KeyPair;
 use chat_hpc::stack::{ChatAiStack, StackConfig};
-use chat_hpc::util::bench::{table_header, table_row};
+use chat_hpc::util::bench::{table_header, table_row, BenchReport};
 use chat_hpc::util::http;
 use chat_hpc::util::json::Json;
 use chat_hpc::util::metrics::Registry;
-use chat_hpc::workload::LoadGen;
+use chat_hpc::workload::{LoadGen, LoadResult, MultiTurnChat};
 
 fn chat_op<'a>(
     stack: &'a ChatAiStack,
@@ -85,6 +86,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut report = BenchReport::new();
+    let record = |report: &mut BenchReport, name: &str, r: &LoadResult| {
+        report.entry(name, r.rps, r.latency.p50 * 1e3, r.latency.p99 * 1e3, 0.0);
+    };
     let quick = Duration::from_secs(3);
 
     // -- gateway (Kong + Apache role) --
@@ -92,6 +97,7 @@ fn main() -> anyhow::Result<()> {
     let r = LoadGen::new(32, quick).run(|| {
         http::pooled_request("GET", &gw_health, &[], &[]).map(|_| ()).map_err(|e| e.to_string())
     });
+    record(&mut report, "gateway", &r);
     rows.push(("Kong API Gateway".into(), r.rps));
 
     // -- web interface (static app via gateway) --
@@ -99,6 +105,7 @@ fn main() -> anyhow::Result<()> {
     let r = LoadGen::new(32, quick).run(|| {
         http::pooled_request("GET", &chat_url, &[], &[]).map(|_| ()).map_err(|e| e.to_string())
     });
+    record(&mut report, "web_interface", &r);
     rows.push(("Chat AI Web Interface".into(), r.rps));
 
     // -- middleware (gateway -> HPC proxy HTTP hop, no SSH) --
@@ -106,10 +113,12 @@ fn main() -> anyhow::Result<()> {
     let r = LoadGen::new(32, quick).run(|| {
         http::pooled_request("GET", &proxy_health, &[], &[]).map(|_| ()).map_err(|e| e.to_string())
     });
+    record(&mut report, "middleware", &r);
     rows.push(("Chat AI Web Interface Middleware".into(), r.rps));
 
     // -- SSH to service node (cloud interface `models`) --
     let r = LoadGen::new(32, quick).run(|| stack.proxy.tick().map_err(|e| e.to_string()));
+    record(&mut report, "ssh_service_node", &r);
     rows.push(("SSH to HPC Service node".into(), r.rps));
 
     // -- SSH to GPU node (probe through cloud interface + node HTTP) --
@@ -120,18 +129,21 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| e.to_string())
             .and_then(|(s, _)| if s == 200 { Ok(()) } else { Err(format!("{s}")) })
     });
+    record(&mut report, "ssh_gpu_node", &r);
     rows.push(("SSH to HPC GPU node".into(), r.rps));
 
     // -- LLM rows with real pacing --
     let r = LoadGen::new(16, Duration::from_secs(5)).run(chat_op(&stack, "intel-neural-7b", 1));
+    record(&mut report, "word_7b", &r);
     rows.push(("Single word from 7B LLM".into(), r.rps));
-    for (label, model, workers, secs) in [
-        ("Sentence from Intel Neural 7B LLM", "intel-neural-7b", 16, 6),
-        ("Sentence from Mixtral 8x7B LLM", "mixtral-8x7b", 16, 8),
-        ("Sentence from Qwen1.5 72B LLM", "qwen1.5-72b", 16, 12),
-        ("Sentence from Meta Llama3 70B LLM", "llama3-70b", 16, 12),
+    for (label, key, model, workers, secs) in [
+        ("Sentence from Intel Neural 7B LLM", "sentence_7b", "intel-neural-7b", 16, 6),
+        ("Sentence from Mixtral 8x7B LLM", "sentence_8x7b", "mixtral-8x7b", 16, 8),
+        ("Sentence from Qwen1.5 72B LLM", "sentence_72b", "qwen1.5-72b", 16, 12),
+        ("Sentence from Meta Llama3 70B LLM", "sentence_70b", "llama3-70b", 16, 12),
     ] {
         let r = LoadGen::new(workers, Duration::from_secs(secs)).run(chat_op(&stack, model, 64));
+        record(&mut report, key, &r);
         rows.push((label.into(), r.rps));
     }
 
@@ -202,6 +214,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}", r.rps),
             format!("{:.2}x", r.rps / base.max(1.0)),
         ]);
+        record(&mut report, &format!("pool_n{n}"), &r);
         sweep.push((n, r.rps));
         pool.stop();
     }
@@ -296,6 +309,11 @@ fn main() -> anyhow::Result<()> {
             abandoned.load(Ordering::Relaxed).to_string(),
             reclaimed.to_string(),
         ]);
+        record(
+            &mut report,
+            if abort_on_disconnect { "abandon_cancel" } else { "abandon_run_to_completion" },
+            &r,
+        );
         completed.push((abort_on_disconnect, r.rps, reclaimed));
     }
     let row_of = |mode: bool| *completed.iter().find(|&&(m, _, _)| m == mode).unwrap();
@@ -316,5 +334,134 @@ fn main() -> anyhow::Result<()> {
     for (name, ok) in lifecycle_checks {
         println!("shape check: {name}: {}", if ok { "REPRODUCED" } else { "DIVERGED" });
     }
+
+    // -- Multi-turn prefix-cache sweep --------------------------------------
+    // The prefix-cache tentpole: N users × K turns over a shared system
+    // prompt, histories growing every turn (the paper's dominant chat
+    // pattern, §2). Cache-off re-prefills the entire conversation every
+    // turn; cache-on attaches the shared history by reference and prefills
+    // only the new suffix, in bounded chunks interleaved with decodes.
+    // Mean TTFT on turns ≥ 2 is the headline number.
+    println!();
+    table_header(
+        "Multi-turn chat sweep — KV prefix cache on vs off (mixtral-8x7b, 4 users × 4 turns)",
+        &[
+            "engine mode",
+            "turn-1 mean TTFT ms",
+            "turns>=2 mean TTFT ms",
+            "completed req/s",
+            "prefix hits (tokens)",
+        ],
+    );
+    let wl = MultiTurnChat {
+        users: 4,
+        turns: 4,
+        // ~340 tokens of shared system prompt (byte tokenizer: chars ≈
+        // tokens); turn-4 prompts stay within the sim's page budget.
+        system_prompt: "You are the Chat AI assistant of the GWDG, serving researchers on \
+                        HPC infrastructure. Answer precisely, cite sources when asked, never \
+                        reveal internal configuration, and keep answers short unless the \
+                        user asks for detail. The conversation below may reference earlier \
+                        turns; treat the full history as context. "
+            .into(),
+        turn_chars: 32,
+    };
+    let mut mt: Vec<(bool, f64, f64, f64, u64)> = Vec::new();
+    let mut mt_all_completed = true;
+    for cache_on in [false, true] {
+        let metrics = Registry::new();
+        let engine = Engine::start(
+            Box::new(SimBackend::by_name("mixtral-8x7b", 1.0).unwrap()),
+            EngineConfig { prefix_cache: cache_on, ..Default::default() },
+            metrics.clone(),
+        );
+        let server = LlmHttpServer::start(engine)?;
+        let url = format!("{}/v1/chat/completions", server.url());
+        let result = wl.run(|msgs| {
+            let body = Json::obj()
+                .set("messages", msgs.to_vec())
+                .set("stream", true)
+                .set("max_tokens", 64u64)
+                .dump();
+            let mut parser = http::SseParser::default();
+            let t = std::time::Instant::now();
+            let mut ttft: Option<f64> = None;
+            let mut reply = String::new();
+            let status = http::request_stream(
+                "POST",
+                &url,
+                &[("content-type", "application/json")],
+                body.as_bytes(),
+                |chunk| {
+                    for ev in parser.push(chunk) {
+                        if ev == "[DONE]" {
+                            continue;
+                        }
+                        if let Ok(j) = Json::parse(&ev) {
+                            if let Some(c) = j
+                                .at(&["choices", "0", "delta", "content"])
+                                .and_then(|c| c.as_str())
+                            {
+                                if ttft.is_none() {
+                                    ttft = Some(t.elapsed().as_secs_f64());
+                                }
+                                reply.push_str(c);
+                            }
+                        }
+                    }
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            if status != 200 {
+                return Err(format!("status {status}"));
+            }
+            Ok((ttft.unwrap_or_else(|| t.elapsed().as_secs_f64()), reply))
+        });
+        let hits = metrics
+            .counter("llm_prefix_hit_tokens_total", &[("model", "mixtral-8x7b")])
+            .get();
+        let turn1_ms = result.per_turn_ttft[0].mean * 1e3;
+        let later: Vec<f64> =
+            result.per_turn_ttft[1..].iter().map(|s| s.mean).collect();
+        let later_ms = later.iter().sum::<f64>() / later.len() as f64 * 1e3;
+        table_row(&[
+            if cache_on { "prefix cache" } else { "no cache" }.to_string(),
+            format!("{turn1_ms:.1}"),
+            format!("{later_ms:.1}"),
+            format!("{:.2}", result.rps),
+            hits.to_string(),
+        ]);
+        report.entry(
+            if cache_on { "multiturn_cache_on" } else { "multiturn_cache_off" },
+            result.rps,
+            0.0,
+            0.0,
+            later_ms,
+        );
+        // A TTFT comparison over failed requests would be vacuous: every
+        // turn of every user must actually complete in both modes.
+        mt_all_completed &= result.errors == 0
+            && result.completed == (wl.users * wl.turns) as u64;
+        mt.push((cache_on, turn1_ms, later_ms, result.rps, hits));
+    }
+    let mt_row = |mode: bool| *mt.iter().find(|&&(m, _, _, _, _)| m == mode).unwrap();
+    let (_, _, off_later, off_rps, off_hits) = mt_row(false);
+    let (_, _, on_later, on_rps, on_hits) = mt_row(true);
+    let mt_checks = [
+        ("all multi-turn requests completed in both modes", mt_all_completed),
+        (
+            "prefix cache halves (or better) TTFT on turns >= 2",
+            mt_all_completed && on_later * 2.0 <= off_later,
+        ),
+        ("prefix cache does not regress completed RPS", on_rps >= off_rps),
+        ("cache-off control records zero prefix hits", off_hits == 0),
+        ("cache-on actually hits (shared history tokens)", on_hits > 0),
+    ];
+    println!();
+    for (name, ok) in mt_checks {
+        println!("shape check: {name}: {}", if ok { "REPRODUCED" } else { "DIVERGED" });
+    }
+
+    report.write("BENCH_table2.json")?;
     Ok(())
 }

@@ -21,6 +21,11 @@ fi
 echo "==> cargo build --release"
 cargo build --release
 
+echo "==> cargo build --release --benches"
+# Benches are harness=false main()s outside the test graph; building them
+# here keeps the paper-figure reproductions from rotting outside tier-1.
+cargo build --release --benches
+
 echo "==> cargo test -q"
 cargo test -q
 

@@ -27,6 +27,9 @@ pub struct LogEntry {
     /// The client hung up before the response finished (the gateway tags
     /// this after the fact; still no prompt/response content, §6.2).
     pub cancelled: bool,
+    /// Prompt tokens the serving instance's KV prefix cache absorbed
+    /// (DESIGN.md §Prefix cache) — a single integer, no content.
+    pub cached_tokens: u64,
 }
 
 /// Append-only usage log shared by the gateway and the analytics jobs.
@@ -55,6 +58,7 @@ impl RequestLog {
             user: user.to_string(),
             model: model.to_string(),
             cancelled: false,
+            cached_tokens: 0,
         });
         entries.len() - 1
     }
@@ -63,6 +67,14 @@ impl RequestLog {
     pub fn mark_cancelled(&self, index: usize) {
         if let Some(e) = self.entries.lock().unwrap().get_mut(index) {
             e.cancelled = true;
+        }
+    }
+
+    /// Record how many prompt tokens the instance's prefix cache served
+    /// (the gateway tags this from the response's usage block).
+    pub fn mark_cached_tokens(&self, index: usize, cached: u64) {
+        if let Some(e) = self.entries.lock().unwrap().get_mut(index) {
+            e.cached_tokens = cached;
         }
     }
 

@@ -331,21 +331,46 @@ impl Gateway {
                 // A failed sink write means the downstream socket died: stop
                 // pumping SSE, which disconnects the upstream hop and lets
                 // the whole chain (proxy → SSH → interface → engine) unwind.
-                let res = http::request_stream_ctl(&method, &url, &h, &body, |chunk| {
-                    sink.send(chunk).is_ok()
+                // Frames the upstream already delivered are drained per
+                // wake-up into ONE downstream write (single flush) instead
+                // of a write per token frame. A bounded tail of the stream
+                // is retained so the usage block on the final SSE chunk can
+                // feed the log after the fact.
+                let mut tail: Vec<u8> = Vec::new();
+                let res = http::request_stream_coalesced(&method, &url, &h, &body, |batch| {
+                    let ok = sink.send(batch).is_ok();
+                    if ok {
+                        tail.extend_from_slice(batch);
+                        if tail.len() > 4096 {
+                            let cut = tail.len() - 2048;
+                            tail.drain(..cut);
+                        }
+                    }
+                    ok
                 });
                 metrics
                     .histogram("gw_latency_seconds", &[("route", &route_name)])
                     .observe(timer.elapsed().as_secs_f64());
+                let coalesced_ctr =
+                    metrics.counter("gw_sse_frames_coalesced_total", &[("route", &route_name)]);
                 match res {
-                    Ok((_, true)) => {
+                    Ok((_, true, saved)) => {
+                        coalesced_ctr.add(saved);
                         metrics
                             .counter("gw_cancelled_total", &[("route", &route_name)])
                             .inc();
                         log.mark_cancelled(log_idx);
                         Ok(())
                     }
-                    Ok((_, false)) => Ok(()),
+                    Ok((_, false, saved)) => {
+                        coalesced_ctr.add(saved);
+                        if let Some(cached) = sse_tail_cached_tokens(&tail) {
+                            if cached > 0 {
+                                log.mark_cached_tokens(log_idx, cached);
+                            }
+                        }
+                        Ok(())
+                    }
                     Err(e) => {
                         sink.send_event(&Json::obj().set("error", e.to_string()).dump())?;
                         Ok(())
@@ -363,6 +388,20 @@ impl Gateway {
                             &[("route", &route_name), ("status", &resp.status.to_string())],
                         )
                         .inc();
+                    // Usage accounting for the log: how much of the prompt
+                    // the instance's prefix cache absorbed (still no
+                    // prompt/response content, §6.2 — a single integer).
+                    if resp.status == 200 {
+                        if let Ok(j) = resp.json_body() {
+                            let cached = j
+                                .at(&["usage", "cached_tokens"])
+                                .and_then(|c| c.as_u64())
+                                .unwrap_or(0);
+                            if cached > 0 {
+                                self.log.mark_cached_tokens(log_idx, cached);
+                            }
+                        }
+                    }
                     Reply::full(resp)
                 }
                 Err(e) => {
@@ -378,6 +417,19 @@ impl Gateway {
             reply
         }
     }
+}
+
+/// Extract `usage.cached_tokens` from the tail of a completed SSE stream:
+/// the api layer emits the usage block on the finish chunk, which is always
+/// within the retained tail. Truncation can only clip *earlier* events,
+/// whose parse failures are skipped.
+fn sse_tail_cached_tokens(tail: &[u8]) -> Option<u64> {
+    let text = String::from_utf8_lossy(tail);
+    text.lines()
+        .rev()
+        .filter_map(|l| l.strip_prefix("data: "))
+        .filter_map(|d| Json::parse(d).ok())
+        .find_map(|j| j.at(&["usage", "cached_tokens"]).and_then(|c| c.as_u64()))
 }
 
 /// Small helper for benches/tests: wait until an HTTP endpoint answers 200.
@@ -655,6 +707,16 @@ mod tests {
         // Legit consumers keep working after the churn.
         let b = gateway.bucket(&gateway.routes[0], "real-user").unwrap();
         assert!(b.try_take());
+    }
+
+    #[test]
+    fn sse_tail_usage_extraction() {
+        // The finish chunk's usage block is found even behind later events
+        // and a clipped front.
+        let tail = b"ken\"}}]}\n\ndata: {\"choices\":[{\"delta\":{},\"finish_reason\":\"stop\"}],\"usage\":{\"prompt_tokens\":40,\"cached_tokens\":31}}\n\ndata: [DONE]\n\n";
+        assert_eq!(sse_tail_cached_tokens(tail), Some(31));
+        assert_eq!(sse_tail_cached_tokens(b"data: {\"x\":1}\n\n"), None);
+        assert_eq!(sse_tail_cached_tokens(b""), None);
     }
 
     #[test]

@@ -256,24 +256,29 @@ impl CloudInterface {
             // side (CHANNEL_CLOSE); returning false then drops the HTTP
             // connection to the instance, whose api layer drops the
             // `Generation`, which frees the engine batch slot — the full
-            // disconnect cascade (DESIGN.md §Request lifecycle).
-            let result = http::request_stream_ctl(
+            // disconnect cascade (DESIGN.md §Request lifecycle). Frames the
+            // instance already delivered are drained per wake-up into one
+            // SSH channel write instead of a write per token frame.
+            let result = http::request_stream_coalesced(
                 "POST",
                 &url,
                 &[("content-type", "application/json")],
                 stdin,
-                |chunk| {
+                |batch| {
                     if !sent_status {
                         sent_status = true;
                         if Self::reply_status(out, 200).is_err() {
                             return false;
                         }
                     }
-                    out(chunk).is_ok()
+                    out(batch).is_ok()
                 },
             );
             match result {
-                Ok((_, aborted)) => {
+                Ok((_, aborted, saved)) => {
+                    self.metrics
+                        .counter("ci_sse_frames_coalesced_total", &[("service", service)])
+                        .add(saved);
                     if aborted {
                         self.metrics
                             .counter("ci_cancelled_total", &[("service", service)])
@@ -300,6 +305,25 @@ impl CloudInterface {
                             let _ = out(&e2ee::seal_response(key, nonce, &resp.body));
                         }
                         _ => {
+                            // Prefix-cache accounting rides the usage block
+                            // (plaintext replies only; sealed bodies are
+                            // opaque by design).
+                            if resp.status == 200 {
+                                if let Ok(j) = Json::parse(resp.body_str()) {
+                                    let cached = j
+                                        .at(&["usage", "cached_tokens"])
+                                        .and_then(|c| c.as_u64())
+                                        .unwrap_or(0);
+                                    if cached > 0 {
+                                        self.metrics
+                                            .counter(
+                                                "ci_prefix_hit_tokens_total",
+                                                &[("service", service)],
+                                            )
+                                            .add(cached);
+                                    }
+                                }
+                            }
                             let _ = out(&resp.body);
                         }
                     }

@@ -11,9 +11,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::engine::{Engine, GenEvent, GenRequest};
-use crate::util::http::{Handler, Reply, Request, Response, Server};
+use super::engine::{Engine, GenEvent, GenRequest, Generation, Usage};
+use crate::util::http::{Handler, Reply, Request, Response, Server, StreamSink};
 use crate::util::json::Json;
+use crate::util::metrics::Counter;
 
 static COMPLETION_ID: AtomicU64 = AtomicU64::new(1);
 
@@ -132,41 +133,18 @@ fn make_handler(engine: Engine) -> Handler {
                     let cancelled_ctr = engine
                         .metrics()
                         .counter("llm_stream_cancelled_total", &[("model", &model)]);
+                    let coalesced_ctr = engine
+                        .metrics()
+                        .counter("llm_sse_frames_coalesced_total", &[("model", &model)]);
                     Reply::sse(move |sink| {
-                        loop {
-                            match generation.rx.recv() {
-                                Ok(GenEvent::Token(text)) => {
-                                    let chunk = stream_chunk(&id, &model, Some(&text), None);
-                                    if sink.send_event(&chunk.dump()).is_err() {
-                                        // Client disconnected mid-stream.
-                                        // Returning drops `generation`,
-                                        // which the engine sees as a failed
-                                        // send and aborts within one decode
-                                        // step, freeing the batch slot.
-                                        cancelled_ctr.inc();
-                                        return Ok(());
-                                    }
-                                }
-                                Ok(GenEvent::Done(usage)) => {
-                                    let chunk = stream_chunk(
-                                        &id,
-                                        &model,
-                                        None,
-                                        Some(usage.finish_reason),
-                                    );
-                                    sink.send_event(&chunk.dump())?;
-                                    sink.send_event("[DONE]")?;
-                                    return Ok(());
-                                }
-                                Ok(GenEvent::Error(e)) => {
-                                    sink.send_event(
-                                        &Json::obj().set("error", e.as_str()).dump(),
-                                    )?;
-                                    return Ok(());
-                                }
-                                Err(_) => return Ok(()),
-                            }
-                        }
+                        pump_generation(
+                            &generation,
+                            sink,
+                            &id,
+                            &model,
+                            &coalesced_ctr,
+                            &cancelled_ctr,
+                        )
                     })
                 } else {
                     match generation.collect() {
@@ -183,16 +161,7 @@ fn make_handler(engine: Engine) -> Handler {
                                 .set("object", "chat.completion")
                                 .set("model", model.as_str())
                                 .set("choices", vec![choice])
-                                .set(
-                                    "usage",
-                                    Json::obj()
-                                        .set("prompt_tokens", usage.prompt_tokens)
-                                        .set("completion_tokens", usage.completion_tokens)
-                                        .set(
-                                            "total_tokens",
-                                            usage.prompt_tokens + usage.completion_tokens,
-                                        ),
-                                );
+                                .set("usage", usage_json(&usage));
                             Reply::full(Response::json(200, &resp))
                         }
                         Err(e) => Reply::full(Response::json(
@@ -207,7 +176,88 @@ fn make_handler(engine: Engine) -> Handler {
     })
 }
 
-fn stream_chunk(id: &str, model: &str, content: Option<&str>, finish: Option<&str>) -> Json {
+/// OpenAI `usage` block, extended with the prefix-cache hit count so every
+/// layer above (interface, gateway logs, clients) can see what the cache
+/// saved (DESIGN.md §Prefix cache).
+fn usage_json(usage: &Usage) -> Json {
+    Json::obj()
+        .set("prompt_tokens", usage.prompt_tokens)
+        .set("completion_tokens", usage.completion_tokens)
+        .set("cached_tokens", usage.cached_tokens)
+        .set("total_tokens", usage.prompt_tokens + usage.completion_tokens)
+}
+
+/// Engine-channel → SSE pump. One blocking `recv` per wake-up, then every
+/// token already queued behind it is drained and framed into a SINGLE
+/// chunked write (one flush through all seven layers) — per-token writes
+/// were the streaming hot path. `coalesced_ctr` counts the writes saved.
+fn pump_generation(
+    generation: &Generation,
+    sink: &mut dyn StreamSink,
+    id: &str,
+    model: &str,
+    coalesced_ctr: &Counter,
+    cancelled_ctr: &Counter,
+) -> Result<()> {
+    loop {
+        let first = match generation.rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => return Ok(()),
+        };
+        let mut batch: Vec<String> = Vec::new();
+        let mut terminal: Option<GenEvent> = None;
+        match first {
+            GenEvent::Token(t) => {
+                batch.push(stream_chunk(id, model, Some(&t), None, None).dump())
+            }
+            other => terminal = Some(other),
+        }
+        while terminal.is_none() {
+            match generation.rx.try_recv() {
+                Ok(GenEvent::Token(t)) => {
+                    batch.push(stream_chunk(id, model, Some(&t), None, None).dump())
+                }
+                Ok(other) => terminal = Some(other),
+                Err(_) => break,
+            }
+        }
+        if !batch.is_empty() {
+            if batch.len() > 1 {
+                coalesced_ctr.add(batch.len() as u64 - 1);
+            }
+            let refs: Vec<&str> = batch.iter().map(|s| s.as_str()).collect();
+            if sink.send_event_batch(&refs).is_err() {
+                // Client disconnected mid-stream. Returning drops
+                // `generation`, which the engine sees as a failed send and
+                // aborts within one decode step, freeing the batch slot.
+                cancelled_ctr.inc();
+                return Ok(());
+            }
+        }
+        match terminal {
+            Some(GenEvent::Done(usage)) => {
+                let chunk =
+                    stream_chunk(id, model, None, Some(usage.finish_reason), Some(&usage));
+                sink.send_event(&chunk.dump())?;
+                sink.send_event("[DONE]")?;
+                return Ok(());
+            }
+            Some(GenEvent::Error(e)) => {
+                sink.send_event(&Json::obj().set("error", e.as_str()).dump())?;
+                return Ok(());
+            }
+            _ => {}
+        }
+    }
+}
+
+fn stream_chunk(
+    id: &str,
+    model: &str,
+    content: Option<&str>,
+    finish: Option<&str>,
+    usage: Option<&Usage>,
+) -> Json {
     let mut delta = Json::obj();
     if let Some(c) = content {
         delta = delta.set("content", c);
@@ -219,11 +269,16 @@ fn stream_chunk(id: &str, model: &str, content: Option<&str>, finish: Option<&st
             None => Json::Null,
         },
     );
-    Json::obj()
+    let mut out = Json::obj()
         .set("id", id)
         .set("object", "chat.completion.chunk")
         .set("model", model)
-        .set("choices", vec![choice])
+        .set("choices", vec![choice]);
+    if let Some(u) = usage {
+        // OpenAI sends usage on the final chunk (stream_options-style).
+        out = out.set("usage", usage_json(u));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -306,6 +361,82 @@ mod tests {
             })
             .collect();
         assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
+    }
+
+    #[test]
+    fn second_identical_request_reports_cached_tokens() {
+        let s = server();
+        let url = format!("{}/v1/chat/completions", s.url());
+        let r1 = http::post_json(&url, &chat_body(false)).unwrap();
+        assert_eq!(
+            r1.json_body().unwrap().at(&["usage", "cached_tokens"]).unwrap().as_u64(),
+            Some(0),
+            "cold cache"
+        );
+        let r2 = http::post_json(&url, &chat_body(false)).unwrap();
+        let body = r2.json_body().unwrap();
+        assert_eq!(
+            body.at(&["choices", "0", "message", "content"]).unwrap().as_str().unwrap(),
+            "1 2 3 4 5 6 7 8 9 10",
+            "cache hit must not change the completion"
+        );
+        let cached = body.at(&["usage", "cached_tokens"]).unwrap().as_u64().unwrap();
+        let prompt = body.at(&["usage", "prompt_tokens"]).unwrap().as_u64().unwrap();
+        assert!(cached > 0 && cached < prompt, "cached {cached} of {prompt}");
+    }
+
+    /// Records each raw chunk the producer pushes.
+    struct RecordingSink(Vec<Vec<u8>>);
+
+    impl crate::util::http::StreamSink for RecordingSink {
+        fn send(&mut self, chunk: &[u8]) -> anyhow::Result<()> {
+            self.0.push(chunk.to_vec());
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn pump_drains_queued_tokens_into_one_write() {
+        use crate::llmserver::engine::{GenEvent, Generation, Usage};
+        use std::sync::mpsc::channel;
+        let (tx, rx) = channel();
+        for t in ["a", "b", "c", "d", "e"] {
+            tx.send(GenEvent::Token(t.into())).unwrap();
+        }
+        tx.send(GenEvent::Done(Usage { finish_reason: "stop", ..Default::default() }))
+            .unwrap();
+        let generation = Generation { rx };
+        let mut sink = RecordingSink(Vec::new());
+        let metrics = Registry::new();
+        let coalesced = metrics.counter("llm_sse_frames_coalesced_total", &[]);
+        let cancelled = metrics.counter("llm_stream_cancelled_total", &[]);
+        super::pump_generation(&generation, &mut sink, "id", "m", &coalesced, &cancelled)
+            .unwrap();
+        // All five queued tokens rode one write; then the finish chunk and
+        // [DONE] (the writes an uncoalesced pump would have made 7 of).
+        assert_eq!(sink.0.len(), 3, "writes: {:?}", sink.0.len());
+        assert_eq!(coalesced.get(), 4, "five frames, one write → four saved");
+        assert_eq!(cancelled.get(), 0);
+        // Nothing was lost or reordered.
+        let mut parser = SseParser::default();
+        let events: Vec<String> = sink.0.iter().flat_map(|c| parser.push(c)).collect();
+        let text: String = events
+            .iter()
+            .filter_map(|e| Json::parse(e).ok())
+            .filter_map(|j| {
+                j.at(&["choices", "0", "delta", "content"])
+                    .and_then(|c| c.as_str().map(String::from))
+            })
+            .collect();
+        assert_eq!(text, "abcde");
+        assert_eq!(events.last().map(|s| s.as_str()), Some("[DONE]"));
+        // The final chunk carries the usage block for upstream accounting.
+        let finish = Json::parse(&events[events.len() - 2]).unwrap();
+        assert_eq!(
+            finish.at(&["choices", "0", "finish_reason"]).unwrap().as_str(),
+            Some("stop")
+        );
+        assert!(finish.at(&["usage", "cached_tokens"]).is_some());
     }
 
     #[test]

@@ -32,10 +32,19 @@ pub trait Backend: Send {
     fn geometry(&self) -> &BatchGeometry;
     fn model_name(&self) -> &str;
 
-    /// Admit rows: rows with `lens[b] > 0` are prefilling a prompt; rows
-    /// with `lens[b] == 0` are inactive (scratch block tables expected).
-    /// Returns `[batch * vocab]` logits (only admitted rows meaningful).
-    fn prefill(&mut self, tokens: &[i32], lens: &[i32], block_tables: &[i32]) -> Result<Vec<f32>>;
+    /// Prefill rows: rows with `lens[b] > 0` process `lens[b]` prompt
+    /// tokens starting at position `offsets[b]` (chunked prefill feeds a
+    /// long prompt across several calls; a prefix-cache hit starts past
+    /// zero). Rows with `lens[b] == 0` are inactive (scratch block tables
+    /// expected). Returns `[batch * vocab]` logits; only the rows whose
+    /// chunk reaches the end of their prompt yield meaningful logits.
+    fn prefill(
+        &mut self,
+        tokens: &[i32],
+        lens: &[i32],
+        offsets: &[i32],
+        block_tables: &[i32],
+    ) -> Result<Vec<f32>>;
 
     /// One decode step. `active[b]` marks live rows; inactive rows must
     /// carry scratch tables and position 0.
@@ -88,7 +97,20 @@ impl Backend for PjrtBackend {
         &self.runtime.spec.name
     }
 
-    fn prefill(&mut self, tokens: &[i32], lens: &[i32], block_tables: &[i32]) -> Result<Vec<f32>> {
+    fn prefill(
+        &mut self,
+        tokens: &[i32],
+        lens: &[i32],
+        offsets: &[i32],
+        block_tables: &[i32],
+    ) -> Result<Vec<f32>> {
+        // The AOT-compiled prefill HLO always starts at position 0 and
+        // rewrites every page it touches, so chunked/cached prefill is not
+        // expressible; `pjrt_engine` disables both (prefill_chunk = 0,
+        // prefix_cache = false), which guarantees zero offsets here.
+        if offsets.iter().any(|&o| o != 0) {
+            anyhow::bail!("pjrt backend cannot prefill at a nonzero offset");
+        }
         let out = self.runtime.prefill(&mut self.kv, tokens, lens, block_tables)?;
         Ok(out.logits)
     }
@@ -231,12 +253,29 @@ impl Backend for SimBackend {
         &self.profile.name
     }
 
-    fn prefill(&mut self, _tokens: &[i32], lens: &[i32], _block_tables: &[i32]) -> Result<Vec<f32>> {
-        self.charge(self.profile.prefill_ms);
+    fn prefill(
+        &mut self,
+        _tokens: &[i32],
+        lens: &[i32],
+        _offsets: &[i32],
+        _block_tables: &[i32],
+    ) -> Result<Vec<f32>> {
+        // Prefill compute is charged proportional to the tokens actually
+        // processed this call: a prefix-cache hit (or a bounded chunk)
+        // costs only its uncached share. `prefill_ms` is calibrated as the
+        // cost of one full `prefill_len` window.
+        let total: i64 = lens.iter().map(|&l| l.max(0) as i64).sum();
+        self.charge(
+            self.profile.prefill_ms * total as f64 / self.geometry.prefill_len as f64,
+        );
         let mut rows = vec![-1i32; self.geometry.batch];
         for (b, &len) in lens.iter().enumerate() {
             if len > 0 {
-                self.progress[b] = 0; // fresh sequence in this slot
+                // (Re)arm the slot's completion stream. Intermediate chunks
+                // of a chunked prefill reset it again, so only the chunk
+                // that completes the prompt — the one whose logits the
+                // engine samples — determines the first emitted byte.
+                self.progress[b] = 0;
                 rows[b] = self.next_token_for_slot(b);
             }
         }
@@ -286,7 +325,8 @@ mod tests {
         let g = b.geometry().clone();
         let mut lens = vec![0i32; g.batch];
         lens[0] = 3;
-        let logits = b.prefill(&[0; 0].repeat(0), &lens, &[]).unwrap();
+        let offsets = vec![0i32; g.batch];
+        let logits = b.prefill(&[], &lens, &offsets, &[]).unwrap();
         let argmax = |logits: &[f32], row: usize| -> i32 {
             let r = &logits[row * g.vocab..(row + 1) * g.vocab];
             r.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 as i32
@@ -309,14 +349,39 @@ mod tests {
         let g = b.geometry().clone();
         let mut lens = vec![0i32; g.batch];
         lens[0] = 3;
-        let _ = b.prefill(&[], &lens, &[]).unwrap();
+        let offsets = vec![0i32; g.batch];
+        let _ = b.prefill(&[], &lens, &offsets, &[]).unwrap();
         // Admit row 1 later: row 0's progress must be unaffected.
         let p0 = b.progress[0];
         let mut lens2 = vec![0i32; g.batch];
         lens2[1] = 5;
-        let _ = b.prefill(&[], &lens2, &[]).unwrap();
+        let _ = b.prefill(&[], &lens2, &offsets, &[]).unwrap();
         assert_eq!(b.progress[0], p0);
         assert_eq!(b.progress[1], 1);
+    }
+
+    #[test]
+    fn prefill_charge_scales_with_tokens_processed() {
+        // 1.0 time scale, tiny chunks: the proportional model must charge
+        // far less for a 16-token chunk than a full 512-token window.
+        let mut b = SimBackend::by_name("qwen1.5-72b", 1.0).unwrap();
+        let g = b.geometry().clone();
+        let mut lens = vec![0i32; g.batch];
+        lens[0] = 16;
+        let offsets = vec![0i32; g.batch];
+        let t = std::time::Instant::now();
+        let _ = b.prefill(&[], &lens, &offsets, &[]).unwrap();
+        let small = t.elapsed();
+        // Full window: prefill_ms (120 ms) in one call.
+        let mut lens_full = vec![0i32; g.batch];
+        lens_full[0] = g.prefill_len as i32;
+        let t = std::time::Instant::now();
+        let _ = b.prefill(&[], &lens_full, &offsets, &[]).unwrap();
+        let full = t.elapsed();
+        assert!(
+            small < full / 4,
+            "chunk charge not proportional: {small:?} vs {full:?}"
+        );
     }
 
     #[test]

@@ -4,14 +4,21 @@
 //!
 //! 1. drain newly-submitted requests into the waiting queue;
 //! 2. **admit**: move waiting requests into free batch slots if the paged
-//!    KV allocator can hold their prompt — one `prefill` call covers all
-//!    admissions this iteration;
-//! 3. **step**: one `decode` call advances every active slot; sampled
-//!    tokens stream to each request's channel immediately.
+//!    KV allocator can hold their prompt — the allocator attaches the
+//!    longest prefix-cached portion of the prompt by reference, so only the
+//!    uncached suffix needs compute;
+//! 3. **prefill step**: every admitted-but-incomplete slot prefills up to
+//!    `EngineConfig.prefill_chunk` tokens of its uncached suffix — one
+//!    batched call — so a 4k-token prompt no longer stalls every running
+//!    generation for a full prefill;
+//! 4. **decode step**: one `decode` call advances every active slot;
+//!    sampled tokens stream to each request's channel immediately.
 //!
 //! Requests therefore join and leave the running batch at token
-//! granularity — no head-of-line blocking behind long generations, which
-//! is exactly the property the paper buys by deploying vLLM (§2, §5.7).
+//! granularity — no head-of-line blocking behind long generations *or*
+//! long prompts, which is exactly the property the paper buys by deploying
+//! vLLM (§2, §5.7), extended with vLLM's prefix caching and chunked
+//! prefill (DESIGN.md §Prefix cache).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -20,7 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::backend::Backend;
-use super::kvcache::{BlockAllocator, SeqBlocks};
+use super::kvcache::{BlockAllocator, CacheStats, SeqBlocks};
 use super::sampler::{sample, SamplingParams};
 use super::tokenizer::{self, StreamDecoder};
 use crate::util::metrics::Registry;
@@ -58,6 +65,10 @@ impl Default for GenRequest {
 pub struct Usage {
     pub prompt_tokens: usize,
     pub completion_tokens: usize,
+    /// Prompt tokens served from the KV prefix cache instead of being
+    /// re-prefilled (chat turns resend the whole conversation; this is how
+    /// much of it was already resident).
+    pub cached_tokens: usize,
     /// Time to first token.
     pub ttft: Duration,
     pub total: Duration,
@@ -97,9 +108,16 @@ impl Generation {
         }
     }
 
-    /// Explicit abort: equivalent to dropping the handle, named for
-    /// call-site clarity.
-    pub fn cancel(self) {}
+    /// Explicit abort. Equivalent to dropping the handle — and implemented
+    /// exactly that way: consuming `self` drops `rx`, the engine's next
+    /// event send into the closed channel fails, and the slot plus its KV
+    /// pages are reaped within one decode step with
+    /// `finish_reason: "cancelled"` (`engine_tests::explicit_cancel_aborts_
+    /// like_a_drop` pins the equivalence).
+    pub fn cancel(self) {
+        let Generation { rx } = self;
+        drop(rx);
+    }
 }
 
 /// Engine tuning knobs.
@@ -113,6 +131,15 @@ pub struct EngineConfig {
     /// the slot and KV blocks immediately. `false` reproduces the
     /// run-to-completion baseline the abandonment bench compares against.
     pub abort_on_disconnect: bool,
+    /// Max prompt tokens prefilled per engine iteration per sequence, so
+    /// long prompts interleave with decode steps instead of monopolizing
+    /// an admission round. `0` = unchunked (one prefill call per prompt,
+    /// prompt capped at the backend's `prefill_len` — required by backends
+    /// that cannot prefill at an offset, e.g. PJRT).
+    pub prefill_chunk: usize,
+    /// Content-hash prefix reuse in the paged KV allocator; `false`
+    /// reproduces the prefill-everything baseline.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -121,6 +148,8 @@ impl Default for EngineConfig {
             max_queue: 256,
             idle_wait: Duration::from_millis(2),
             abort_on_disconnect: true,
+            prefill_chunk: 128,
+            prefix_cache: true,
         }
     }
 }
@@ -138,17 +167,30 @@ pub struct Engine {
     metrics: Registry,
 }
 
+enum SlotState {
+    /// Prompt suffix still prefilling (chunk by chunk).
+    Prefill,
+    /// Generating: `next_token` is fed at the next decode step.
+    Decode,
+}
+
 struct Slot {
     seq: SeqBlocks,
     tx: Sender<GenEvent>,
     rng: Rng,
     params: SamplingParams,
     decoder: StreamDecoder,
+    state: SlotState,
+    /// Full (truncated) prompt token ids.
+    prompt: Vec<i32>,
+    /// Prompt tokens whose KV exists (cache hit + prefilled chunks).
+    prefilled: usize,
     /// Token to feed at the next decode step.
     next_token: i32,
     completion_tokens: usize,
     max_tokens: usize,
     prompt_tokens: usize,
+    cached_tokens: usize,
     started: Instant,
     first_token_at: Option<Instant>,
     deadline: Option<Instant>,
@@ -214,9 +256,26 @@ fn run_loop(
 ) {
     let geo = backend.geometry().clone();
     let mut alloc = BlockAllocator::new(geo.n_blocks, geo.block_size, geo.max_blocks);
+    alloc.set_cache_enabled(cfg.prefix_cache);
     let mut slots: Vec<Option<Slot>> = (0..geo.batch).map(|_| None).collect();
     let mut waiting: VecDeque<Waiting> = VecDeque::new();
     let mut next_seq_id = 1u64;
+
+    // Tokens prefilled per slot per iteration (one backend call covers all
+    // prefilling slots; each row is ≤ chunk_cap and the HLO window).
+    let chunk_cap = if cfg.prefill_chunk == 0 {
+        geo.prefill_len
+    } else {
+        cfg.prefill_chunk.clamp(1, geo.prefill_len)
+    };
+    // Longest admissible prompt: unchunked prefill is bounded by one HLO
+    // window; chunked prefill is bounded by the page budget, minus one page
+    // kept for generation headroom. Oversized prompts keep their tail.
+    let max_prompt = if cfg.prefill_chunk == 0 {
+        geo.prefill_len
+    } else {
+        (geo.block_size * geo.max_blocks).saturating_sub(geo.block_size).max(geo.block_size)
+    };
 
     let queue_gauge = metrics.gauge("llm_waiting_requests", &[("model", model)]);
     let running_gauge = metrics.gauge("llm_running_requests", &[("model", model)]);
@@ -225,8 +284,14 @@ fn run_loop(
     let rejected_ctr = metrics.counter("llm_requests_rejected_total", &[("model", model)]);
     let cancelled_ctr = metrics.counter("llm_cancelled_total", &[("model", model)]);
     let deadline_ctr = metrics.counter("llm_deadline_total", &[("model", model)]);
+    let prefix_hit_ctr = metrics.counter("llm_prefix_hit_tokens_total", &[("model", model)]);
+    let evict_ctr = metrics.counter("llm_prefix_evictions_total", &[("model", model)]);
+    let cow_ctr = metrics.counter("llm_cow_forks_total", &[("model", model)]);
+    let chunk_ctr = metrics.counter("llm_prefill_chunks_total", &[("model", model)]);
     let step_hist = metrics.histogram("llm_decode_step_seconds", &[("model", model)]);
     let ttft_hist = metrics.histogram("llm_ttft_seconds", &[("model", model)]);
+    // Allocator-internal counters are published as deltas once per loop.
+    let mut last_stats = CacheStats::default();
 
     'outer: loop {
         // --- 1. intake ------------------------------------------------
@@ -258,6 +323,7 @@ fn run_loop(
                     let _ = w.tx.send(GenEvent::Done(Usage {
                         prompt_tokens: 0,
                         completion_tokens: 0,
+                        cached_tokens: 0,
                         ttft: Duration::ZERO,
                         total: w.enqueued.elapsed(),
                         finish_reason: "deadline",
@@ -268,114 +334,142 @@ fn run_loop(
             });
         }
 
-        // --- 2. admission ----------------------------------------------
-        let free_slots: Vec<usize> =
-            (0..geo.batch).filter(|&i| slots[i].is_none()).collect();
-        if !free_slots.is_empty() && !waiting.is_empty() {
-            let mut admissions: Vec<(usize, Waiting, Vec<i32>)> = Vec::new();
-            for &slot_idx in &free_slots {
-                let Some(w) = waiting.front() else { break };
-                // Tokenize; truncate oversized prompts to the last chunk
-                // (prefill HLO shape is fixed).
-                let mut toks = tokenizer::encode_prompt(&w.req.prompt);
-                if toks.len() > geo.prefill_len {
-                    toks.drain(..toks.len() - geo.prefill_len);
-                }
-                if !alloc.can_admit(toks.len()) {
-                    break; // KV pressure: leave in queue (FIFO order kept)
-                }
-                let w = waiting.pop_front().unwrap();
-                admissions.push((slot_idx, w, toks));
+        // --- 2. admission (allocate pages; no backend call yet) ---------
+        for slot_idx in 0..geo.batch {
+            if slots[slot_idx].is_some() {
+                continue;
             }
-            if !admissions.is_empty() {
-                // Build one batched prefill over all admitted rows.
-                let mut tokens = vec![0i32; geo.batch * geo.prefill_len];
-                let mut lens = vec![0i32; geo.batch];
-                let mut tables = vec![0i32; geo.batch * geo.max_blocks];
-                // Existing rows keep scratch tables for prefill (nothing is
-                // written for len=0 rows).
-                let mut new_slots: Vec<(usize, Waiting, SeqBlocks, Vec<i32>)> = Vec::new();
-                for (slot_idx, w, toks) in admissions {
-                    let seq = match alloc.create_seq(next_seq_id, toks.len()) {
-                        Ok(s) => s,
-                        Err(e) => {
-                            let _ = w.tx.send(GenEvent::Error(e.to_string()));
+            let Some(w) = waiting.front() else { break };
+            let mut toks = tokenizer::encode_prompt(&w.req.prompt);
+            if toks.len() > max_prompt {
+                toks.drain(..toks.len() - max_prompt);
+            }
+            if !alloc.can_admit(toks.len()) {
+                break; // KV pressure: leave in queue (FIFO order kept)
+            }
+            let w = waiting.pop_front().unwrap();
+            let seq = match alloc.create_seq(next_seq_id, &toks) {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = w.tx.send(GenEvent::Error(e.to_string()));
+                    continue;
+                }
+            };
+            next_seq_id += 1;
+            prefix_hit_ctr.add(seq.cached as u64);
+            let seq_id = seq.seq_id;
+            slots[slot_idx] = Some(Slot {
+                prefilled: seq.cached,
+                cached_tokens: seq.cached,
+                prompt_tokens: toks.len(),
+                prompt: toks,
+                seq,
+                rng: Rng::new(w.req.seed ^ seq_id),
+                params: SamplingParams {
+                    temperature: w.req.temperature,
+                    top_k: w.req.top_k,
+                    seed: w.req.seed,
+                },
+                tx: w.tx,
+                decoder: StreamDecoder::default(),
+                state: SlotState::Prefill,
+                next_token: 0,
+                completion_tokens: 0,
+                max_tokens: w.req.max_tokens.max(1),
+                started: w.enqueued,
+                first_token_at: None,
+                deadline: w.req.deadline,
+            });
+        }
+
+        // --- deadlines (both phases) ------------------------------------
+        let now = Instant::now();
+        for i in 0..geo.batch {
+            let expired =
+                slots[i].as_ref().is_some_and(|s| s.deadline.is_some_and(|d| d <= now));
+            if expired {
+                let s = slots[i].take().unwrap();
+                deadline_ctr.inc();
+                finish(&mut alloc, s, "deadline");
+            }
+        }
+
+        // --- 3. prefill step (bounded chunk per slot) -------------------
+        let prefilling: Vec<usize> = (0..geo.batch)
+            .filter(|&i| {
+                slots[i].as_ref().is_some_and(|s| matches!(s.state, SlotState::Prefill))
+            })
+            .collect();
+        if !prefilling.is_empty() {
+            let mut tokens = vec![0i32; geo.batch * geo.prefill_len];
+            let mut lens = vec![0i32; geo.batch];
+            let mut offsets = vec![0i32; geo.batch];
+            let mut tables = vec![0i32; geo.batch * geo.max_blocks];
+            for &i in &prefilling {
+                let s = slots[i].as_ref().unwrap();
+                let n = chunk_cap.min(s.prompt.len() - s.prefilled);
+                for (j, &t) in s.prompt[s.prefilled..s.prefilled + n].iter().enumerate() {
+                    tokens[i * geo.prefill_len + j] = t;
+                }
+                lens[i] = n as i32;
+                offsets[i] = s.prefilled as i32;
+                let row = alloc.table_row(&s.seq);
+                tables[i * geo.max_blocks..(i + 1) * geo.max_blocks].copy_from_slice(&row);
+            }
+            match backend.prefill(&tokens, &lens, &offsets, &tables) {
+                Ok(logits) => {
+                    for &i in &prefilling {
+                        let mut s = slots[i].take().unwrap();
+                        s.prefilled += lens[i] as usize;
+                        s.seq.written = s.seq.written.max(s.prefilled);
+                        chunk_ctr.inc();
+                        if s.prefilled < s.prompt.len() {
+                            slots[i] = Some(s); // more chunks to go
                             continue;
                         }
-                    };
-                    next_seq_id += 1;
-                    for (i, &t) in toks.iter().enumerate() {
-                        tokens[slot_idx * geo.prefill_len + i] = t;
-                    }
-                    lens[slot_idx] = toks.len() as i32;
-                    let row = alloc.table_row(&seq);
-                    tables[slot_idx * geo.max_blocks..(slot_idx + 1) * geo.max_blocks]
-                        .copy_from_slice(&row);
-                    new_slots.push((slot_idx, w, seq, toks));
-                }
-                if !new_slots.is_empty() {
-                    match backend.prefill(&tokens, &lens, &tables) {
-                        Ok(logits) => {
-                            for (slot_idx, w, seq, toks) in new_slots {
-                                let params = SamplingParams {
-                                    temperature: w.req.temperature,
-                                    top_k: w.req.top_k,
-                                    seed: w.req.seed,
-                                };
-                                let mut rng = Rng::new(w.req.seed ^ seq.seq_id);
-                                let row =
-                                    &logits[slot_idx * geo.vocab..(slot_idx + 1) * geo.vocab];
-                                let first = sample(row, &params, &mut rng);
-                                let mut slot = Slot {
-                                    seq,
-                                    tx: w.tx,
-                                    rng,
-                                    params,
-                                    decoder: StreamDecoder::default(),
-                                    next_token: first,
-                                    completion_tokens: 1,
-                                    max_tokens: w.req.max_tokens.max(1),
-                                    prompt_tokens: toks.len(),
-                                    started: w.enqueued,
-                                    first_token_at: Some(Instant::now()),
-                                    deadline: w.req.deadline,
-                                };
-                                ttft_hist
-                                    .observe(w.enqueued.elapsed().as_secs_f64());
-                                tokens_ctr.inc();
-                                if first == tokenizer::EOS {
-                                    finish(&mut alloc, slot, "stop");
-                                } else {
-                                    let text = slot.decoder.push(first);
-                                    let gone = !text.is_empty()
-                                        && slot.tx.send(GenEvent::Token(text)).is_err();
-                                    if gone && cfg.abort_on_disconnect {
-                                        cancelled_ctr.inc();
-                                        finish(&mut alloc, slot, "cancelled");
-                                    } else if slot.completion_tokens >= slot.max_tokens {
-                                        finish(&mut alloc, slot, "length");
-                                    } else {
-                                        slots[slot_idx] = Some(slot);
-                                    }
-                                }
+                        // Prefill complete: the last chunk's logits carry
+                        // the last prompt position — sample the first token.
+                        let row = &logits[i * geo.vocab..(i + 1) * geo.vocab];
+                        let first = sample(row, &s.params, &mut s.rng);
+                        s.completion_tokens = 1;
+                        s.first_token_at = Some(Instant::now());
+                        ttft_hist.observe(s.started.elapsed().as_secs_f64());
+                        tokens_ctr.inc();
+                        if first == tokenizer::EOS {
+                            finish(&mut alloc, s, "stop");
+                        } else {
+                            let text = s.decoder.push(first);
+                            let gone =
+                                !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
+                            if gone && cfg.abort_on_disconnect {
+                                cancelled_ctr.inc();
+                                finish(&mut alloc, s, "cancelled");
+                            } else if s.completion_tokens >= s.max_tokens {
+                                finish(&mut alloc, s, "length");
+                            } else {
+                                s.next_token = first;
+                                s.state = SlotState::Decode;
+                                slots[i] = Some(s);
                             }
                         }
-                        Err(e) => {
-                            for (_, w, seq, _) in new_slots {
-                                alloc.free_seq(&seq);
-                                let _ = w.tx.send(GenEvent::Error(e.to_string()));
-                            }
+                    }
+                }
+                Err(e) => {
+                    for &i in &prefilling {
+                        if let Some(s) = slots[i].take() {
+                            alloc.free_seq(&s.seq);
+                            let _ = s.tx.send(GenEvent::Error(e.to_string()));
                         }
                     }
                 }
             }
         }
 
-        // --- 3. decode step ---------------------------------------------
-        let active: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
-        let n_active = active.iter().filter(|&&a| a).count();
+        // --- 4. decode step ---------------------------------------------
+        let n_active = slots.iter().filter(|s| s.is_some()).count();
         running_gauge.set(n_active as i64);
         if n_active == 0 {
+            publish_cache_stats(&alloc, &mut last_stats, &evict_ctr, &cow_ctr);
             if waiting.is_empty() {
                 // Idle: block briefly for new work.
                 match rx.recv_timeout(cfg.idle_wait) {
@@ -393,18 +487,17 @@ fn run_loop(
         let mut tokens = vec![0i32; geo.batch];
         let mut positions = vec![0i32; geo.batch];
         let mut tables = vec![0i32; geo.batch * geo.max_blocks];
+        let mut active = vec![false; geo.batch];
         let mut oom: Vec<usize> = Vec::new();
-        let mut expired: Vec<usize> = Vec::new();
-        let now = Instant::now();
         for (i, slot) in slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
-            if s.deadline.is_some_and(|d| d <= now) {
-                expired.push(i);
-                continue;
+            if !matches!(s.state, SlotState::Decode) {
+                continue; // still prefilling: scratch row, inactive
             }
             // The fed token occupies position seq.len; grow the page table.
-            match alloc.append_token(&mut s.seq) {
+            match alloc.append_token(&mut s.seq, s.next_token) {
                 Ok(true) => {
+                    active[i] = true;
                     tokens[i] = s.next_token;
                     positions[i] = (s.seq.len - 1) as i32;
                     let row = alloc.table_row(&s.seq);
@@ -413,62 +506,70 @@ fn run_loop(
                 Ok(false) | Err(_) => oom.push(i),
             }
         }
-        for i in expired {
-            if let Some(s) = slots[i].take() {
-                deadline_ctr.inc();
-                finish(&mut alloc, s, "deadline");
-            }
-        }
         for i in oom {
             if let Some(s) = slots[i].take() {
                 finish(&mut alloc, s, "kv_exhausted");
             }
         }
 
-        let active: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
-        if !active.iter().any(|&a| a) {
-            continue;
-        }
-        let t0 = Instant::now();
-        let logits = match backend.decode(&tokens, &positions, &tables, &active) {
-            Ok(l) => l,
-            Err(e) => {
-                for slot in slots.iter_mut() {
-                    if let Some(s) = slot.take() {
-                        alloc.free_seq(&s.seq);
-                        let _ = s.tx.send(GenEvent::Error(e.to_string()));
+        if active.iter().any(|&a| a) {
+            let t0 = Instant::now();
+            match backend.decode(&tokens, &positions, &tables, &active) {
+                Ok(logits) => {
+                    step_hist.observe(t0.elapsed().as_secs_f64());
+                    for i in 0..geo.batch {
+                        if !active[i] {
+                            continue;
+                        }
+                        let Some(mut s) = slots[i].take() else { continue };
+                        // The fed position's KV is now resident in its page.
+                        s.seq.written = s.seq.len;
+                        let row = &logits[i * geo.vocab..(i + 1) * geo.vocab];
+                        let tok = sample(row, &s.params, &mut s.rng);
+                        s.completion_tokens += 1;
+                        tokens_ctr.inc();
+                        if tok == tokenizer::EOS {
+                            finish(&mut alloc, s, "stop");
+                        } else {
+                            let text = s.decoder.push(tok);
+                            // A failed send means the receiver is gone — the
+                            // client disconnected somewhere up the chain.
+                            // Abort: the slot and its KV blocks are back in
+                            // the pool before the next step.
+                            let gone =
+                                !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
+                            if gone && cfg.abort_on_disconnect {
+                                cancelled_ctr.inc();
+                                finish(&mut alloc, s, "cancelled");
+                                continue;
+                            }
+                            s.next_token = tok;
+                            if s.completion_tokens >= s.max_tokens {
+                                finish(&mut alloc, s, "length");
+                            } else {
+                                slots[i] = Some(s);
+                            }
+                        }
                     }
                 }
-                continue;
+                Err(e) => {
+                    for slot in slots.iter_mut() {
+                        if let Some(s) = slot.take() {
+                            alloc.free_seq(&s.seq);
+                            let _ = s.tx.send(GenEvent::Error(e.to_string()));
+                        }
+                    }
+                }
             }
-        };
-        step_hist.observe(t0.elapsed().as_secs_f64());
+        }
 
-        for i in 0..geo.batch {
-            let Some(mut s) = slots[i].take() else { continue };
-            let row = &logits[i * geo.vocab..(i + 1) * geo.vocab];
-            let tok = sample(row, &s.params, &mut s.rng);
-            s.completion_tokens += 1;
-            tokens_ctr.inc();
-            if tok == tokenizer::EOS {
-                finish(&mut alloc, s, "stop");
-            } else {
-                let text = s.decoder.push(tok);
-                // A failed send means the receiver is gone — the client
-                // disconnected somewhere up the chain. Abort: the slot and
-                // its KV blocks are back in the pool before the next step.
-                let gone = !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
-                if gone && cfg.abort_on_disconnect {
-                    cancelled_ctr.inc();
-                    finish(&mut alloc, s, "cancelled");
-                    continue;
-                }
-                s.next_token = tok;
-                if s.completion_tokens >= s.max_tokens {
-                    finish(&mut alloc, s, "length");
-                } else {
-                    slots[i] = Some(s);
-                }
+        publish_cache_stats(&alloc, &mut last_stats, &evict_ctr, &cow_ctr);
+        #[cfg(debug_assertions)]
+        {
+            let live: Vec<&SeqBlocks> =
+                slots.iter().filter_map(|s| s.as_ref().map(|s| &s.seq)).collect();
+            if let Err(e) = alloc.check_invariants(&live) {
+                panic!("allocator invariants violated: {e}");
             }
         }
     }
@@ -485,6 +586,19 @@ fn run_loop(
     }
 }
 
+/// Publish allocator-internal counter deltas as engine metrics.
+fn publish_cache_stats(
+    alloc: &BlockAllocator,
+    last: &mut CacheStats,
+    evict_ctr: &crate::util::metrics::Counter,
+    cow_ctr: &crate::util::metrics::Counter,
+) {
+    let st = alloc.stats();
+    evict_ctr.add(st.evictions - last.evictions);
+    cow_ctr.add(st.cow_forks - last.cow_forks);
+    *last = st;
+}
+
 fn finish(alloc: &mut BlockAllocator, mut slot: Slot, reason: &'static str) {
     let tail = slot.decoder.finish();
     if !tail.is_empty() {
@@ -494,6 +608,7 @@ fn finish(alloc: &mut BlockAllocator, mut slot: Slot, reason: &'static str) {
     let usage = Usage {
         prompt_tokens: slot.prompt_tokens,
         completion_tokens: slot.completion_tokens,
+        cached_tokens: slot.cached_tokens,
         ttft: slot
             .first_token_at
             .map(|t| t.duration_since(slot.started))
@@ -510,10 +625,13 @@ pub fn sim_engine(model: &str, time_scale: f64, metrics: Registry) -> Option<Eng
     Some(Engine::start(Box::new(backend), EngineConfig::default(), metrics))
 }
 
-/// Build an engine around the real PJRT `tiny` model.
+/// Build an engine around the real PJRT `tiny` model. The compiled prefill
+/// HLO starts at position 0 and writes every page it touches, so chunked
+/// prefill and prefix reuse are disabled (DESIGN.md §Prefix cache).
 pub fn pjrt_engine(artifacts_dir: &std::path::Path, model: &str, metrics: Registry) -> Result<Engine> {
     let backend = super::backend::PjrtBackend::load(artifacts_dir, model)?;
-    Ok(Engine::start(Box::new(backend), EngineConfig::default(), metrics))
+    let cfg = EngineConfig { prefill_chunk: 0, prefix_cache: false, ..Default::default() };
+    Ok(Engine::start(Box::new(backend), cfg, metrics))
 }
 
 pub use self::sim_engine as engine_for_profile;
@@ -546,7 +664,31 @@ mod tests {
         assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
         assert_eq!(usage.finish_reason, "stop");
         assert!(usage.prompt_tokens > 10);
+        assert_eq!(usage.cached_tokens, 0, "cold cache");
         assert_eq!(usage.completion_tokens, 21, "20 bytes + EOS");
+    }
+
+    #[test]
+    fn repeat_request_hits_the_prefix_cache() {
+        let engine = sim();
+        let req = GenRequest { prompt: "count from 1 to 10".into(), ..Default::default() };
+        let (_, first) = engine.generate(req.clone()).unwrap();
+        assert_eq!(first.cached_tokens, 0);
+        let (text, second) = engine.generate(req).unwrap();
+        assert_eq!(text, "1 2 3 4 5 6 7 8 9 10", "cache hit must not change output");
+        assert!(
+            second.cached_tokens >= second.prompt_tokens.saturating_sub(engine_block_size()),
+            "second turn should reuse nearly the whole prompt: cached {} of {}",
+            second.cached_tokens,
+            second.prompt_tokens
+        );
+        assert!(second.cached_tokens < second.prompt_tokens, "last token is recomputed");
+        let m = engine.metrics().render();
+        assert!(m.contains("llm_prefix_hit_tokens_total{model=\"intel-neural-7b\"}"), "{m}");
+    }
+
+    fn engine_block_size() -> usize {
+        SimBackend::by_name("intel-neural-7b", 0.0).unwrap().geometry().block_size
     }
 
     #[test]
@@ -670,6 +812,7 @@ mod tests {
             &mut self,
             _tokens: &[i32],
             lens: &[i32],
+            _offsets: &[i32],
             _tables: &[i32],
         ) -> Result<Vec<f32>> {
             let rows: Vec<bool> = lens.iter().map(|&l| l > 0).collect();
@@ -728,6 +871,30 @@ mod tests {
             .unwrap();
         assert_eq!(usage.finish_reason, "length");
         assert_eq!(text, "aaaaa");
+    }
+
+    #[test]
+    fn explicit_cancel_aborts_like_a_drop() {
+        // `Generation::cancel` must be observationally identical to dropping
+        // the handle: the engine reaps the slot with "cancelled" either way.
+        let (engine, metrics) = infinite_engine(1);
+        let gen = engine
+            .submit(GenRequest { prompt: "x".into(), max_tokens: 1_000_000, ..Default::default() });
+        assert!(matches!(gen.rx.recv(), Ok(GenEvent::Token(_))));
+        gen.cancel();
+        assert!(
+            metrics.wait_for_metric(
+                "llm_cancelled_total{model=\"infinite\"} 1",
+                Duration::from_secs(5)
+            ),
+            "cancel() did not abort: {}",
+            metrics.render()
+        );
+        // The slot is reusable immediately, exactly as after a drop.
+        let (_, usage) = engine
+            .generate(GenRequest { prompt: "y".into(), max_tokens: 3, ..Default::default() })
+            .unwrap();
+        assert_eq!(usage.finish_reason, "length");
     }
 
     #[test]
@@ -793,5 +960,158 @@ mod tests {
             metrics.render()
         );
         assert!(metrics.render().contains("llm_cancelled_total{model=\"infinite\"} 0"));
+    }
+
+    // --- prefix cache + chunked prefill ----------------------------------
+
+    /// Records how many prompt tokens each prefill call processed and the
+    /// interleaving of prefill/decode calls.
+    struct RecordingBackend {
+        geometry: BatchGeometry,
+        calls: Arc<std::sync::Mutex<Vec<String>>>,
+    }
+
+    impl RecordingBackend {
+        fn new(batch: usize) -> (RecordingBackend, Arc<std::sync::Mutex<Vec<String>>>) {
+            let calls = Arc::new(std::sync::Mutex::new(Vec::new()));
+            (
+                RecordingBackend {
+                    geometry: BatchGeometry {
+                        batch,
+                        prefill_len: 32,
+                        block_size: 8,
+                        n_blocks: 257,
+                        max_blocks: 32,
+                        vocab: tokenizer::VOCAB,
+                    },
+                    calls: calls.clone(),
+                },
+                calls,
+            )
+        }
+
+        fn one_hot(&self, rows: &[bool]) -> Vec<f32> {
+            let v = self.geometry.vocab;
+            let mut out = vec![0.0f32; self.geometry.batch * v];
+            for (b, &on) in rows.iter().enumerate() {
+                if on {
+                    out[b * v + b'z' as usize] = 100.0;
+                }
+            }
+            out
+        }
+    }
+
+    impl Backend for RecordingBackend {
+        fn geometry(&self) -> &BatchGeometry {
+            &self.geometry
+        }
+
+        fn model_name(&self) -> &str {
+            "recording"
+        }
+
+        fn prefill(
+            &mut self,
+            _tokens: &[i32],
+            lens: &[i32],
+            offsets: &[i32],
+            _tables: &[i32],
+        ) -> Result<Vec<f32>> {
+            let total: i32 = lens.iter().sum();
+            let off: i32 = offsets.iter().sum();
+            self.calls.lock().unwrap().push(format!("P{total}@{off}"));
+            let rows: Vec<bool> = lens.iter().map(|&l| l > 0).collect();
+            Ok(self.one_hot(&rows))
+        }
+
+        fn decode(
+            &mut self,
+            _tokens: &[i32],
+            _positions: &[i32],
+            _tables: &[i32],
+            active: &[bool],
+        ) -> Result<Vec<f32>> {
+            self.calls.lock().unwrap().push("D".into());
+            Ok(self.one_hot(active))
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_with_decode() {
+        let (backend, calls) = RecordingBackend::new(2);
+        let engine = Engine::start(
+            Box::new(backend),
+            EngineConfig { prefill_chunk: 8, prefix_cache: false, ..Default::default() },
+            Registry::new(),
+        );
+        // Slot A decodes while slot B's 60-token prompt prefills in chunks.
+        let a = engine
+            .submit(GenRequest { prompt: "a".into(), max_tokens: 64, ..Default::default() });
+        assert!(matches!(a.rx.recv(), Ok(GenEvent::Token(_))), "A running");
+        let b = engine.submit(GenRequest {
+            prompt: "b".repeat(59), // + BOS = 60 tokens -> 8 chunks of ≤8
+            max_tokens: 4,
+            ..Default::default()
+        });
+        let (_, usage_b) = b.collect().unwrap();
+        assert_eq!(usage_b.finish_reason, "length");
+        drop(a);
+        let log = calls.lock().unwrap().clone();
+        // B's 60-token prompt took several bounded chunks (7×8 + 1×4)...
+        let b_chunks =
+            log.iter().filter(|c| c.starts_with("P8") || c.starts_with("P4")).count();
+        assert_eq!(b_chunks, 8, "expected 8 bounded chunks, log: {log:?}");
+        // ...and decode steps ran between them (no admission stall): slot A
+        // kept decoding while B prefilled.
+        let first_b_chunk = log.iter().position(|c| c.starts_with("P8")).unwrap();
+        let last_b_chunk = log.iter().rposition(|c| c.starts_with("P4")).unwrap();
+        let decodes_between =
+            log[first_b_chunk..last_b_chunk].iter().filter(|c| c.as_str() == "D").count();
+        assert!(
+            decodes_between >= 3,
+            "decode steps must interleave with prefill chunks, log: {log:?}"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_skips_recomputing_shared_prefix() {
+        let (backend, calls) = RecordingBackend::new(1);
+        let engine = Engine::start(
+            Box::new(backend),
+            EngineConfig { prefill_chunk: 64, ..Default::default() },
+            Registry::new(),
+        );
+        let prompt = "shared conversation history ".repeat(4); // 112 chars
+        let (_, u1) = engine
+            .generate(GenRequest { prompt: prompt.clone(), max_tokens: 2, ..Default::default() })
+            .unwrap();
+        assert_eq!(u1.cached_tokens, 0);
+        let before = calls.lock().unwrap().len();
+        let (_, u2) = engine
+            .generate(GenRequest { prompt, max_tokens: 2, ..Default::default() })
+            .unwrap();
+        assert!(
+            u2.cached_tokens > u2.prompt_tokens / 2,
+            "cached {} of {}",
+            u2.cached_tokens,
+            u2.prompt_tokens
+        );
+        let log = calls.lock().unwrap().clone();
+        // The second request's prefill covered only the uncached suffix.
+        let second_prefills: Vec<&String> =
+            log[before..].iter().filter(|c| c.starts_with('P')).collect();
+        assert_eq!(second_prefills.len(), 1, "one suffix chunk, log: {log:?}");
+        let processed: i32 = second_prefills[0][1..]
+            .split('@')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(
+            (processed as usize) < u2.prompt_tokens / 2,
+            "prefilled {processed} of {} prompt tokens",
+            u2.prompt_tokens
+        );
     }
 }

@@ -4,11 +4,13 @@
 //! vLLM the evaluation touches, sized to this testbed:
 //!
 //! - [`kvcache`] — the paged KV-cache block allocator (PagedAttention's
-//!   memory manager): pages from a shared pool are assigned to sequences on
-//!   demand and recycled on completion, near-zero fragmentation.
+//!   memory manager) with vLLM-style prefix caching: ref-counted,
+//!   content-hashed pages, block-aligned prefix attach, copy-on-write
+//!   forks, LRU eviction under pressure (DESIGN.md §Prefix cache).
 //! - [`engine`] — continuous batching: waiting requests are admitted into
 //!   free batch slots between decode steps; every step serves every active
-//!   sequence.
+//!   sequence. Prompts prefill only their uncached suffix, in bounded
+//!   chunks interleaved with decode steps (`EngineConfig.prefill_chunk`).
 //! - [`backend`] — the compute: [`backend::PjrtBackend`] executes the real
 //!   AOT-compiled JAX/Pallas model (the `tiny` artifact) through PJRT;
 //!   [`backend::SimBackend`] is a timing model calibrated to Table 2's

@@ -16,6 +16,23 @@ pub fn encode(text: &str) -> Vec<i32> {
     text.bytes().map(|b| b as i32).collect()
 }
 
+/// Chained content hash over token ids (FNV-1a), used by the prefix cache:
+/// a KV block's identity is `chain_hash(parent_chain, block_tokens)`, so two
+/// blocks are interchangeable only when *all* tokens from position 0 up to
+/// and including the block agree — exactly the condition under which their
+/// KV entries are identical (DESIGN.md §Prefix cache). The root of a chain
+/// is parent `0`.
+pub fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ parent.rotate_left(17);
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Encode with BOS prepended (prompt form).
 pub fn encode_prompt(text: &str) -> Vec<i32> {
     let mut out = Vec::with_capacity(text.len() + 1);
@@ -82,6 +99,19 @@ impl StreamDecoder {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn chain_hash_is_order_and_parent_sensitive() {
+        let a = chain_hash(0, &[1, 2, 3]);
+        let b = chain_hash(0, &[3, 2, 1]);
+        let c = chain_hash(a, &[1, 2, 3]);
+        assert_ne!(a, b, "token order must matter");
+        assert_ne!(a, c, "parent chain must matter");
+        assert_eq!(a, chain_hash(0, &[1, 2, 3]), "deterministic");
+        // Identical block content at different depths hashes differently —
+        // the property that makes block reuse position-safe.
+        assert_ne!(chain_hash(a, &[7, 7]), chain_hash(b, &[7, 7]));
+    }
 
     #[test]
     fn roundtrip_ascii() {

@@ -120,7 +120,17 @@ impl InstanceLauncher for RealLauncher {
                     }
                 }
                 BackendKind::Pjrt { model } => match PjrtBackend::load(&artifacts, model) {
-                    Ok(b) => Engine::start(Box::new(b), engine_cfg, metrics),
+                    Ok(b) => {
+                        // The AOT prefill HLO cannot start at an offset:
+                        // real-model instances run unchunked with the
+                        // prefix cache off (DESIGN.md §Prefix cache).
+                        let cfg = EngineConfig {
+                            prefill_chunk: 0,
+                            prefix_cache: false,
+                            ..engine_cfg
+                        };
+                        Engine::start(Box::new(b), cfg, metrics)
+                    }
                     Err(e) => {
                         crate::log_warn!("launcher", "pjrt load failed: {e}");
                         return;

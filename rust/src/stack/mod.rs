@@ -64,6 +64,13 @@ pub struct StackConfig {
     /// moment its client vanishes; `false` is the run-to-completion
     /// baseline the abandonment bench measures against.
     pub abort_on_disconnect: bool,
+    /// Max prompt tokens an engine prefills per iteration per sequence
+    /// (chunked prefill); 0 = unchunked.
+    pub prefill_chunk: usize,
+    /// Content-hash KV prefix reuse in every instance engine; `false` is
+    /// the prefill-everything baseline the multi-turn bench measures
+    /// against.
+    pub prefix_cache: bool,
 }
 
 impl Default for StackConfig {
@@ -78,6 +85,8 @@ impl Default for StackConfig {
             ssh_pool_size: 1,
             ssh_max_channels: 8,
             abort_on_disconnect: true,
+            prefill_chunk: crate::llmserver::EngineConfig::default().prefill_chunk,
+            prefix_cache: true,
         }
     }
 }
@@ -113,6 +122,8 @@ impl ChatAiStack {
             RealLauncher::new(metrics.clone(), cfg.load_time_scale).with_engine_config(
                 crate::llmserver::EngineConfig {
                     abort_on_disconnect: cfg.abort_on_disconnect,
+                    prefill_chunk: cfg.prefill_chunk,
+                    prefix_cache: cfg.prefix_cache,
                     ..Default::default()
                 },
             ),

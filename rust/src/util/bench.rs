@@ -86,6 +86,49 @@ pub fn throughput_parallel(secs: f64, workers: usize, f: impl Fn() + Send + Sync
     ops.load(std::sync::atomic::Ordering::Relaxed) as f64 / start.elapsed().as_secs_f64()
 }
 
+/// Machine-readable bench results: sweep name → `{rps, p50_ms, p99_ms,
+/// ttft_ms}`, written as `BENCH_<table>.json` next to the human-readable
+/// table so the perf trajectory is tracked PR-over-PR (fields that don't
+/// apply to a sweep are 0).
+#[derive(Default)]
+pub struct BenchReport {
+    entries: std::collections::BTreeMap<String, (f64, f64, f64, f64)>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    pub fn entry(&mut self, sweep: &str, rps: f64, p50_ms: f64, p99_ms: f64, ttft_ms: f64) {
+        // Round to keep the files diff-friendly across runs.
+        let r = |v: f64| (v * 1000.0).round() / 1000.0;
+        self.entries.insert(sweep.to_string(), (r(rps), r(p50_ms), r(p99_ms), r(ttft_ms)));
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut out = crate::util::json::Json::obj();
+        for (name, &(rps, p50, p99, ttft)) in &self.entries {
+            out = out.set(
+                name,
+                crate::util::json::Json::obj()
+                    .set("rps", rps)
+                    .set("p50_ms", p50)
+                    .set("p99_ms", p99)
+                    .set("ttft_ms", ttft),
+            );
+        }
+        out
+    }
+
+    /// Write the report; prints the path so bench logs point at it.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        println!("\nwrote {} ({} sweeps)", path, self.entries.len());
+        Ok(())
+    }
+}
+
 /// Print a table header like the paper's tables.
 pub fn table_header(title: &str, cols: &[&str]) {
     println!("\n## {title}");
@@ -122,6 +165,23 @@ mod tests {
         let v = time_n(2, 5, || calls += 1);
         assert_eq!(v.len(), 5);
         assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn bench_report_schema_roundtrips() {
+        let mut r = BenchReport::new();
+        r.entry("sentence_7b", 27.35, 580.1234, 910.5, 0.0);
+        r.entry("multiturn_cache_on", 3.2, 0.0, 0.0, 61.75);
+        let j = r.to_json();
+        let row = j.get("sentence_7b").unwrap();
+        assert!((row.f64_or("rps", 0.0) - 27.35).abs() < 1e-9);
+        assert!((row.f64_or("p50_ms", 0.0) - 580.123).abs() < 1e-9, "rounded to 3 decimals");
+        let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
+        assert!(
+            (parsed.at(&["multiturn_cache_on", "ttft_ms"]).unwrap().as_f64().unwrap() - 61.75)
+                .abs()
+                < 1e-9
+        );
     }
 
     #[test]

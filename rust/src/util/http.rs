@@ -130,6 +130,21 @@ pub trait StreamSink {
         buf.extend_from_slice(b"\n\n");
         self.send(&buf)
     }
+
+    /// Frame a whole batch of SSE events into ONE chunked write (one
+    /// flush): the coalesced-streaming hot path — every token that is
+    /// already waiting rides the same syscall through every downstream hop
+    /// instead of costing a write+flush each.
+    fn send_event_batch(&mut self, datas: &[&str]) -> Result<()> {
+        let mut buf =
+            Vec::with_capacity(datas.iter().map(|d| d.len() + 8).sum::<usize>());
+        for d in datas {
+            buf.extend_from_slice(b"data: ");
+            buf.extend_from_slice(d.as_bytes());
+            buf.extend_from_slice(b"\n\n");
+        }
+        self.send(&buf)
+    }
 }
 
 struct ChunkedWriter<'a> {
@@ -575,6 +590,29 @@ pub fn request_stream_ctl(
     body: &[u8],
     mut on_chunk: impl FnMut(&[u8]) -> bool,
 ) -> Result<(u16, bool)> {
+    // Thin wrapper over the coalescing reader: a delivered "chunk" may
+    // carry several already-arrived transfer frames back to back, which
+    // every caller (SSE parsing, byte pumps) is agnostic to.
+    request_stream_coalesced(method, url, headers, body, |batch| on_chunk(batch))
+        .map(|(status, aborted, _saved)| (status, aborted))
+}
+
+/// Like [`request_stream_ctl`], but each wake-up drains every chunked
+/// frame that has *already arrived* (buffered — no extra syscalls, never
+/// blocking) and delivers them to the callback as one batch. A per-token
+/// SSE pump built on this does one downstream write per wake-up instead of
+/// one per frame — the streaming-overhead fix the ISSUE's STREAM reference
+/// batches for.
+///
+/// Returns `(status, aborted, frames_saved)`: `frames_saved` counts frames
+/// that rode an earlier frame's batch (total frames = callbacks + saved).
+pub fn request_stream_coalesced(
+    method: &str,
+    url: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    mut on_batch: impl FnMut(&[u8]) -> bool,
+) -> Result<(u16, bool, u64)> {
     let (addr, path) = split_url(url)?;
     let stream = TcpStream::connect(&addr)?;
     stream.set_nodelay(true)?;
@@ -593,6 +631,7 @@ pub fn request_stream_ctl(
         .get("transfer-encoding")
         .map(|s| s.contains("chunked"))
         .unwrap_or(false);
+    let mut saved = 0u64;
     if chunked {
         loop {
             let mut line = String::new();
@@ -601,29 +640,59 @@ pub fn request_stream_ctl(
             if size == 0 {
                 break;
             }
-            let mut buf = vec![0u8; size + 2];
-            reader.read_exact(&mut buf)?;
-            buf.truncate(size);
-            if !on_chunk(&buf) {
-                // Abandon mid-stream: shut the socket down so the server's
-                // next write fails promptly instead of filling kernel
-                // buffers, then drop it.
+            let mut batch = vec![0u8; size + 2];
+            reader.read_exact(&mut batch)?;
+            batch.truncate(size);
+            // Drain frames the kernel already delivered into this batch.
+            let mut done = false;
+            while let Some(extra) = buffered_chunk(&mut reader, &mut done) {
+                batch.extend_from_slice(&extra);
+                saved += 1;
+            }
+            if !on_batch(&batch) {
                 let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
-                return Ok((status, true));
+                return Ok((status, true, saved));
+            }
+            if done {
+                break;
             }
         }
     } else if let Some(len) = resp_headers.get("content-length") {
         let len: usize = len.parse()?;
         let mut buf = vec![0u8; len];
         reader.read_exact(&mut buf)?;
-        if !on_chunk(&buf) {
-            // Contract: returning false always drops the connection and
-            // reports the abort, even on a buffered (non-chunked) reply.
+        if !on_batch(&buf) {
             let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
-            return Ok((status, true));
+            return Ok((status, true, saved));
         }
     }
-    Ok((status, false))
+    Ok((status, false, saved))
+}
+
+/// Parse one complete chunked-transfer frame out of the reader's internal
+/// buffer without touching the socket. Sets `done` (and consumes the bytes)
+/// when the terminal 0-length chunk is fully buffered. Returns `None` when
+/// the buffered bytes don't contain a complete frame.
+fn buffered_chunk(reader: &mut BufReader<TcpStream>, done: &mut bool) -> Option<Vec<u8>> {
+    let buf = reader.buffer();
+    let nl = buf.iter().position(|&b| b == b'\n')?;
+    let size =
+        usize::from_str_radix(std::str::from_utf8(&buf[..nl]).ok()?.trim(), 16).ok()?;
+    if size == 0 {
+        // Terminal chunk "0\r\n\r\n": needs its trailing blank line too.
+        if buf.len() >= nl + 3 {
+            reader.consume(nl + 3);
+            *done = true;
+        }
+        return None;
+    }
+    let total = nl + 1 + size + 2; // size line + data + CRLF
+    if buf.len() < total {
+        return None;
+    }
+    let data = buf[nl + 1..nl + 1 + size].to_vec();
+    reader.consume(total);
+    Some(data)
 }
 
 /// Parse SSE `data:` payloads out of a raw chunk stream.
@@ -850,6 +919,111 @@ mod tests {
         assert_eq!(p.push(b"data: one\ndata: two\n\n"), vec!["one", "two"]);
         // Non-data lines (comments, event names) are ignored.
         assert_eq!(p.push(b": comment\nevent: x\ndata: y\n\n"), vec!["y"]);
+    }
+
+    #[test]
+    fn send_event_batch_is_one_chunk_with_all_frames() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let server = Server::start(Arc::new(|_req: &Request| {
+            Reply::sse(|sink| {
+                sink.send_event_batch(&["a", "b", "c"])?;
+                sink.send_event("[DONE]")?;
+                Ok(())
+            })
+        }))
+        .unwrap();
+        let chunks = AtomicUsize::new(0);
+        let mut parser = SseParser::default();
+        let mut events = Vec::new();
+        let status =
+            request_stream("GET", &format!("{}/s", server.url()), &[], &[], |chunk| {
+                chunks.fetch_add(1, Ordering::SeqCst);
+                events.extend(parser.push(chunk));
+            })
+            .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(events, vec!["a", "b", "c", "[DONE]"]);
+        assert_eq!(chunks.load(Ordering::SeqCst), 2, "3 events in one chunk + [DONE]");
+    }
+
+    #[test]
+    fn request_stream_coalesced_batches_ready_frames() {
+        // Server: one event, a pause, then an 11-frame burst. The client
+        // sleeps on its first batch, so the burst is fully buffered by its
+        // next wake-up and must arrive coalesced.
+        let server = Server::start(Arc::new(|_req: &Request| {
+            Reply::sse(|sink| {
+                sink.send_event("tok0")?;
+                std::thread::sleep(Duration::from_millis(150));
+                for i in 1..12 {
+                    sink.send_event(&format!("tok{i}"))?;
+                }
+                Ok(())
+            })
+        }))
+        .unwrap();
+        let mut parser = SseParser::default();
+        let mut events = Vec::new();
+        let mut batches = 0u64;
+        let (status, aborted, saved) = request_stream_coalesced(
+            "GET",
+            &format!("{}/s", server.url()),
+            &[],
+            &[],
+            |batch| {
+                batches += 1;
+                events.extend(parser.push(batch));
+                if batches == 1 {
+                    std::thread::sleep(Duration::from_millis(400));
+                }
+                true
+            },
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(!aborted);
+        let expected: Vec<String> = (0..12).map(|i| format!("tok{i}")).collect();
+        assert_eq!(events, expected, "no frame lost or reordered by coalescing");
+        assert_eq!(batches + saved, 12, "every frame either woke us or rode a batch");
+        assert!(saved >= 5, "burst should coalesce: {batches} batches, {saved} saved");
+    }
+
+    #[test]
+    fn request_stream_coalesced_abort_still_disconnects() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = sent.clone();
+        let server = Server::start(Arc::new(move |_req: &Request| {
+            let sent = sent2.clone();
+            Reply::sse(move |sink| {
+                for i in 0..50 {
+                    std::thread::sleep(Duration::from_millis(10));
+                    if sink.send_event(&format!("tok{i}")).is_err() {
+                        return Ok(());
+                    }
+                    sent.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(())
+            })
+        }))
+        .unwrap();
+        let mut seen = 0usize;
+        let (status, aborted, _saved) = request_stream_coalesced(
+            "GET",
+            &format!("{}/s", server.url()),
+            &[],
+            &[],
+            |_| {
+                seen += 1;
+                seen < 3
+            },
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(aborted);
+        std::thread::sleep(Duration::from_millis(300));
+        let produced = sent.load(Ordering::SeqCst);
+        assert!(produced < 20, "server kept streaming after disconnect: {produced}");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::util::bench::{stats, Stats};
+use crate::util::json::Json;
 
 /// One Table-1 row: a named pipeline stage measured over N probes.
 #[derive(Debug, Clone)]
@@ -118,6 +119,115 @@ impl LoadGen {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-turn chat workload
+// ---------------------------------------------------------------------------
+
+/// N users × K turns over a shared system prompt with growing per-user
+/// histories — the paper's dominant workload shape (§2): every chat turn
+/// resends the whole conversation, so turn t's prompt embeds turns 1..t-1
+/// verbatim. This is exactly the pattern the KV prefix cache converts from
+/// O(history) re-prefill into O(new text).
+pub struct MultiTurnChat {
+    pub users: usize,
+    pub turns: usize,
+    /// Shared across all users (cross-user prefix reuse).
+    pub system_prompt: String,
+    /// User-message payload per turn, in bytes (≈ tokens for the byte
+    /// tokenizer). Content is distinct per (user, turn), so only the shared
+    /// history — never the new text — can hit the cache.
+    pub turn_chars: usize,
+}
+
+/// Aggregate of one multi-turn run.
+#[derive(Debug)]
+pub struct MultiTurnResult {
+    /// TTFT statistics per turn index (0-based), aggregated over users.
+    pub per_turn_ttft: Vec<Stats>,
+    pub completed: u64,
+    pub errors: u64,
+    /// Completed requests per wall-clock second across all users.
+    pub rps: f64,
+}
+
+impl MultiTurnChat {
+    /// Deterministic filler text for `user`'s message at `turn`.
+    pub fn user_message(&self, user: usize, turn: usize) -> String {
+        let stamp = format!("u{user}t{turn} please continue the analysis ");
+        let mut s = String::with_capacity(self.turn_chars + stamp.len());
+        while s.len() < self.turn_chars {
+            s.push_str(&stamp);
+        }
+        s.truncate(self.turn_chars.max(1));
+        s
+    }
+
+    /// OpenAI-style message list for `user`'s turn given prior exchanges.
+    pub fn messages(&self, user: usize, turn: usize, history: &[(String, String)]) -> Vec<Json> {
+        let mut msgs = Vec::with_capacity(2 + 2 * history.len());
+        msgs.push(
+            Json::obj().set("role", "system").set("content", self.system_prompt.as_str()),
+        );
+        for (u, a) in history {
+            msgs.push(Json::obj().set("role", "user").set("content", u.as_str()));
+            msgs.push(Json::obj().set("role", "assistant").set("content", a.as_str()));
+        }
+        msgs.push(Json::obj().set("role", "user").set("content", self.user_message(user, turn)));
+        msgs
+    }
+
+    /// Drive all users concurrently, each running its turns sequentially
+    /// with the history growing by one exchange per turn. `send` performs
+    /// one chat call and returns `(ttft_seconds, assistant_reply)`.
+    pub fn run(
+        &self,
+        send: impl Fn(&[Json]) -> Result<(f64, String), String> + Sync,
+    ) -> MultiTurnResult {
+        let completed = AtomicU64::new(0);
+        let errors = AtomicU64::new(0);
+        let per_turn: Mutex<Vec<Vec<f64>>> = Mutex::new(vec![Vec::new(); self.turns]);
+        let start = Instant::now();
+        std::thread::scope(|s| {
+            for user in 0..self.users {
+                let send = &send;
+                let per_turn = &per_turn;
+                let completed = &completed;
+                let errors = &errors;
+                s.spawn(move || {
+                    let mut history: Vec<(String, String)> = Vec::new();
+                    for turn in 0..self.turns {
+                        let msgs = self.messages(user, turn, &history);
+                        match send(&msgs) {
+                            Ok((ttft, reply)) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                                per_turn.lock().unwrap()[turn].push(ttft);
+                                history.push((self.user_message(user, turn), reply));
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                                // Keep the turn structure: an empty reply
+                                // still grows the history.
+                                history.push((self.user_message(user, turn), String::new()));
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let wall = start.elapsed().as_secs_f64().max(1e-9);
+        let per_turn = per_turn.into_inner().unwrap();
+        MultiTurnResult {
+            per_turn_ttft: per_turn
+                .iter()
+                .map(|v| if v.is_empty() { stats(&[0.0]) } else { stats(v) })
+                .collect(),
+            completed: completed.load(Ordering::Relaxed),
+            errors: errors.load(Ordering::Relaxed),
+            rps: completed.load(Ordering::Relaxed) as f64 / wall,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +257,36 @@ mod tests {
         assert_eq!(result.errors, 0);
         assert!(result.rps > 500.0, "rps={}", result.rps);
         assert!(result.latency.mean >= 1e-4);
+    }
+
+    #[test]
+    fn multi_turn_histories_grow_and_ttft_aggregates() {
+        let wl = MultiTurnChat {
+            users: 3,
+            turns: 4,
+            system_prompt: "you are a terse assistant".into(),
+            turn_chars: 24,
+        };
+        // Message-count law: turn t carries system + t prior exchanges + 1.
+        let calls = Mutex::new(Vec::new());
+        let result = wl.run(|msgs| {
+            calls.lock().unwrap().push(msgs.len());
+            // System prompt first, newest user message last.
+            assert_eq!(msgs[0].str_or("role", ""), "system");
+            assert_eq!(msgs[msgs.len() - 1].str_or("role", ""), "user");
+            Ok((0.005, "reply".into()))
+        });
+        assert_eq!(result.completed, 3 * 4);
+        assert_eq!(result.errors, 0);
+        assert_eq!(result.per_turn_ttft.len(), 4);
+        assert_eq!(result.per_turn_ttft[0].n, 3, "one sample per user per turn");
+        let mut counts = calls.into_inner().unwrap();
+        counts.sort_unstable();
+        // 3 users × turns 0..4 → msg counts 2, 4, 6, 8 three times each.
+        assert_eq!(counts, vec![2, 2, 2, 4, 4, 4, 6, 6, 6, 8, 8, 8]);
+        // Distinct users/turns never collide in message text.
+        assert_ne!(wl.user_message(0, 1), wl.user_message(1, 1));
+        assert_ne!(wl.user_message(0, 1), wl.user_message(0, 2));
     }
 
     #[test]

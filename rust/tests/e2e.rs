@@ -51,6 +51,43 @@ fn full_path_streaming_tokens() {
 }
 
 #[test]
+fn prefix_cache_usage_flows_through_the_stack() {
+    // Two identical chat turns end-to-end: the second must report prefix
+    // cached tokens in its usage block (engine → api → interface → gateway)
+    // and the gateway must tag its usage-log entry with the count.
+    let stack = sim_stack();
+    let msg = "please summarize our earlier discussion about Slurm-native serving";
+    let (status, _first) = stack.chat("intel-neural-7b", msg).unwrap();
+    assert_eq!(status, 200);
+    let (status, second) = stack.chat("intel-neural-7b", msg).unwrap();
+    assert_eq!(status, 200, "{second:?}");
+    assert_eq!(
+        second.at(&["choices", "0", "message", "content"]).unwrap().as_str().unwrap(),
+        "1 2 3 4 5 6 7 8 9 10",
+        "cache hit must not change the completion"
+    );
+    let cached = second.at(&["usage", "cached_tokens"]).unwrap().as_u64().unwrap();
+    let prompt = second.at(&["usage", "prompt_tokens"]).unwrap().as_u64().unwrap();
+    assert!(cached > 0 && cached < prompt, "cached {cached} of {prompt}");
+    // A streaming turn with the same prompt: the usage block rides the
+    // final SSE chunk and the gateway's tail extraction must log it too.
+    let text = stack.chat_stream("intel-neural-7b", msg).unwrap();
+    assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
+    // The gateway logged the hits — still just integers, no content (§6.2).
+    let entries = stack.log.entries();
+    assert_eq!(entries.len(), 3);
+    assert_eq!(entries[0].cached_tokens, 0, "cold first turn");
+    assert_eq!(entries[1].cached_tokens, cached);
+    assert!(entries[2].cached_tokens > 0, "streaming usage not extracted from SSE tail");
+    // And the instance-side metric ticked.
+    let m = stack.metrics.render();
+    assert!(
+        m.contains("llm_prefix_hit_tokens_total{model=\"intel-neural-7b\"}"),
+        "prefix-hit counter missing: {m}"
+    );
+}
+
+#[test]
 fn second_model_served_independently() {
     let stack = sim_stack();
     stack.wait_ready("mixtral-8x7b", Duration::from_secs(15)).unwrap();
