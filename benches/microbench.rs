@@ -93,6 +93,8 @@ fn main() -> anyhow::Result<()> {
             port: 20000 + j as u16,
             addr: String::new(),
             ready: true,
+            draining: false,
+            scavenger: false,
             started_us: 0,
         });
     }

@@ -21,9 +21,12 @@ use chat_hpc::util::http;
 use chat_hpc::util::json::Json;
 use chat_hpc::workload::probe_stage;
 
-const N: usize = 50; // same sample count as the paper
-
 fn main() -> anyhow::Result<()> {
+    // `--smoke`: a tiny CI-sized sweep — fewer probes, same stages, same
+    // BENCH_table1.json schema.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n: usize = if smoke { 10 } else { 50 }; // full run = paper's sample count
+
     // Sim profile with realistic per-token pacing scaled so the LLM stage
     // visibly dominates, like the paper's H100 first-token compute.
     let stack = ChatAiStack::start(StackConfig {
@@ -40,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     let proxy_url = stack.proxy_http.url();
 
     // Stage 1 — ESX machine probes its local HPC proxy over HTTP.
-    let s1 = probe_stage("ESX Machine", "Probe local proxy", N, 0.0, || {
+    let s1 = probe_stage("ESX Machine", "Probe local proxy", n, 0.0, || {
         let r = http::get(&format!("{proxy_url}/health")).unwrap();
         assert_eq!(r.status, 200);
     });
@@ -48,13 +51,13 @@ fn main() -> anyhow::Result<()> {
     // Stage 2 — proxy hop + an SSH command round-trip to the service node
     // (the ForceCommand-pinned cloud interface). Cumulative with stage 1,
     // like the paper's "Agg. Avg." column.
-    let s2 = probe_stage("HPC Service Node", "SSH Command", N, s1.agg_avg_ms, || {
+    let s2 = probe_stage("HPC Service Node", "SSH Command", n, s1.agg_avg_ms, || {
         let r = http::request("POST", &format!("{proxy_url}/tick"), &[], &[]).unwrap();
         assert_eq!(r.status, 200);
     });
 
     // Stage 3 — stage 2 + HTTP probe of the GPU-node health endpoint.
-    let s3 = probe_stage("HPC Service Node", "Probe GPU node", N, s2.agg_avg_ms, || {
+    let s3 = probe_stage("HPC Service Node", "Probe GPU node", n, s2.agg_avg_ms, || {
         let r = http::get(&format!("{proxy_url}/probe/intel-neural-7b")).unwrap();
         assert_eq!(r.status, 200);
     });
@@ -70,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         .dump();
     let url = format!("{}/v1/m/intel-neural-7b/", stack.gateway_url());
     let auth = format!("Bearer {}", stack.api_key);
-    let s4 = probe_stage("HPC GPU Node", "LLM First Token", N, s3.agg_avg_ms, || {
+    let s4 = probe_stage("HPC GPU Node", "LLM First Token", n, s3.agg_avg_ms, || {
         let mut first_token_seen = false;
         http::request_stream(
             "POST",
@@ -86,7 +89,7 @@ fn main() -> anyhow::Result<()> {
     });
 
     table_header(
-        "Table 1 — Latency measurements from the ESX machine (50 probes each)",
+        &format!("Table 1 — Latency measurements from the ESX machine ({n} probes each)"),
         &["Component", "Operation", "Agg. Avg. (std.) in ms", "Diff. in ms"],
     );
     let mut overhead = 0.0;

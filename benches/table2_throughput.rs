@@ -52,6 +52,10 @@ fn chat_op<'a>(
 }
 
 fn main() -> anyhow::Result<()> {
+    // `--smoke`: a tiny CI-sized sweep — every row and sweep still runs
+    // (so BENCH_table2.json keeps its schema, minus the larger pool
+    // sizes), but for load windows of a second or two instead of minutes.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let paper: &[(&str, &str)] = &[
         ("Kong API Gateway", "3000+"),
         ("Chat AI Web Interface", "1300-1800"),
@@ -90,7 +94,7 @@ fn main() -> anyhow::Result<()> {
     let record = |report: &mut BenchReport, name: &str, r: &LoadResult| {
         report.entry(name, r.rps, r.latency.p50 * 1e3, r.latency.p99 * 1e3, 0.0);
     };
-    let quick = Duration::from_secs(3);
+    let quick = Duration::from_secs(if smoke { 1 } else { 3 });
 
     // -- gateway (Kong + Apache role) --
     let gw_health = format!("{}/health", stack.gateway_url());
@@ -133,7 +137,8 @@ fn main() -> anyhow::Result<()> {
     rows.push(("SSH to HPC GPU node".into(), r.rps));
 
     // -- LLM rows with real pacing --
-    let r = LoadGen::new(16, Duration::from_secs(5)).run(chat_op(&stack, "intel-neural-7b", 1));
+    let r = LoadGen::new(16, Duration::from_secs(if smoke { 2 } else { 5 }))
+        .run(chat_op(&stack, "intel-neural-7b", 1));
     record(&mut report, "word_7b", &r);
     rows.push(("Single word from 7B LLM".into(), r.rps));
     for (label, key, model, workers, secs) in [
@@ -142,6 +147,7 @@ fn main() -> anyhow::Result<()> {
         ("Sentence from Qwen1.5 72B LLM", "sentence_72b", "qwen1.5-72b", 16, 12),
         ("Sentence from Meta Llama3 70B LLM", "sentence_70b", "llama3-70b", 16, 12),
     ] {
+        let (workers, secs) = if smoke { (8, 1) } else { (workers, secs) };
         let r = LoadGen::new(workers, Duration::from_secs(secs)).run(chat_op(&stack, model, 64));
         record(&mut report, key, &r);
         rows.push((label.into(), r.rps));
@@ -190,7 +196,8 @@ fn main() -> anyhow::Result<()> {
     );
     let key = KeyPair::generate(0xE5C); // the functional-account key
     let mut sweep: Vec<(usize, f64)> = Vec::new();
-    for n in [1usize, 2, 4, 8] {
+    let pool_sizes: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &n in pool_sizes {
         let pool = HpcProxy::connect(
             &stack.ssh_server.addr.to_string(),
             key.clone(),
@@ -220,15 +227,17 @@ fn main() -> anyhow::Result<()> {
     }
     let rps_at = |n: usize| sweep.iter().find(|&&(m, _)| m == n).unwrap().1;
     let single_conn_row = get("SSH to HPC Service node");
-    let pool_checks = [
+    let mut pool_checks = vec![
         (
             "N=1 matches the single-connection baseline (±25%)",
             (rps_at(1) - single_conn_row).abs() <= 0.25 * single_conn_row,
         ),
         ("monotonic N=1 -> N=2", rps_at(2) > rps_at(1)),
-        ("monotonic N=2 -> N=4", rps_at(4) > rps_at(2)),
-        ("pool of 4 breaks the ceiling (>2x)", rps_at(4) > 2.0 * rps_at(1)),
     ];
+    if !smoke {
+        pool_checks.push(("monotonic N=2 -> N=4", rps_at(4) > rps_at(2)));
+        pool_checks.push(("pool of 4 breaks the ceiling (>2x)", rps_at(4) > 2.0 * rps_at(1)));
+    }
     println!();
     for (name, ok) in pool_checks {
         println!("shape check: {name}: {}", if ok { "REPRODUCED" } else { "DIVERGED" });
@@ -249,7 +258,7 @@ fn main() -> anyhow::Result<()> {
         "Abandonment sweep — 50% of streaming clients disconnect mid-stream",
         &["engine mode", "completed req/s", "abandoned", "slots reclaimed"],
     );
-    let run = Duration::from_secs(8);
+    let run = Duration::from_secs(if smoke { 2 } else { 8 });
     let mut completed: Vec<(bool, f64, u64)> = Vec::new();
     for abort_on_disconnect in [false, true] {
         // One instance, batch 8, 16 closed-loop workers: slots are the
@@ -354,8 +363,8 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     let wl = MultiTurnChat {
-        users: 4,
-        turns: 4,
+        users: if smoke { 2 } else { 4 },
+        turns: if smoke { 2 } else { 4 },
         // ~340 tokens of shared system prompt (byte tokenizer: chars ≈
         // tokens); turn-4 prompts stay within the sim's page budget.
         system_prompt: "You are the Chat AI assistant of the GWDG, serving researchers on \

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 CI pipeline — exactly what .github/workflows/ci.yml runs.
+# Tier-1 CI pipeline — exactly what .github/workflows/ci.yml runs
+# (there as a lint + {debug,release} test matrix + bench-smoke job).
 # Usage: ./ci.sh
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -26,7 +27,35 @@ echo "==> cargo build --release --benches"
 # here keeps the paper-figure reproductions from rotting outside tier-1.
 cargo build --release --benches
 
-echo "==> cargo test -q"
+echo "==> cargo test -q (debug: keeps the engine/allocator debug_assertions invariant checks live)"
 cargo test -q
+
+echo "==> cargo test --release -q"
+cargo test --release -q
+
+# Paper-figure smoke runs: tiny sweeps, seconds not minutes — the benches
+# must not just compile but *run* and emit their machine-readable results
+# with every required sweep present.
+echo "==> bench smoke: table1_latency"
+cargo bench --bench table1_latency -- --smoke
+echo "==> bench smoke: table2_throughput"
+cargo bench --bench table2_throughput -- --smoke
+echo "==> bench smoke: ablation_scheduler"
+cargo bench --bench ablation_scheduler -- --smoke
+
+echo "==> validate BENCH_*.json schemas"
+if python3 --version >/dev/null 2>&1; then
+    python3 scripts/check_bench.py BENCH_table1.json \
+        probe_local_proxy ssh_command probe_gpu_node llm_first_token
+    python3 scripts/check_bench.py BENCH_table2.json \
+        gateway web_interface middleware ssh_service_node ssh_gpu_node \
+        word_7b sentence_7b sentence_8x7b sentence_72b sentence_70b \
+        pool_n1 pool_n2 abandon_run_to_completion abandon_cancel \
+        multiturn_cache_off multiturn_cache_on
+    python3 scripts/check_bench.py BENCH_ablation_scheduler.json \
+        scavenger_off scavenger_on
+else
+    echo "    python3 not installed; skipping schema validation (CI runs it)"
+fi
 
 echo "CI OK"

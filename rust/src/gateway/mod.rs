@@ -85,6 +85,18 @@ pub struct Route {
     /// Routes may be restricted to specific consumer groups (§5.8).
     pub allowed_groups: Option<Vec<String>>,
     pub require_auth: bool,
+    /// Additional attempts against the next upstream when a request dies
+    /// on a 502/503 or a transport error — e.g. because its instance was
+    /// preempted or walltime-killed between placement and completion. A
+    /// streaming request is only retried while nothing has been forwarded
+    /// downstream yet. With a single upstream the retry re-enters it,
+    /// which still helps: the interface behind it picks a *healthy*
+    /// instance the second time. Default 0 (opt-in via `with_retries`):
+    /// a transport error can strike AFTER the upstream acted on a POST,
+    /// so replay is only safe where the route's handler is idempotent or
+    /// the duplicate is an acceptable trade (model inference is; a paid
+    /// external call is not).
+    pub retries: usize,
     /// Smooth weighted-round-robin state (one current weight per upstream).
     wrr: Mutex<Vec<i64>>,
 }
@@ -101,6 +113,7 @@ impl Route {
             rate_limit_per_sec: None,
             allowed_groups: None,
             require_auth: true,
+            retries: 0,
             wrr: Mutex::new(vec![0; n]),
         }
     }
@@ -118,6 +131,31 @@ impl Route {
     pub fn with_groups(mut self, groups: &[&str]) -> Route {
         self.allowed_groups = Some(groups.iter().map(|s| s.to_string()).collect());
         self
+    }
+
+    /// Set the retry budget (see [`Route::retries`]; 0 = no retries).
+    pub fn with_retries(mut self, retries: usize) -> Route {
+        self.retries = retries;
+        self
+    }
+
+    /// Pick the attempt's upstream: smooth WRR, re-rolled (bounded) so a
+    /// retry never lands on the upstream that just failed when another
+    /// one exists — on weighted routes the WRR state can otherwise hand
+    /// back the same heavy, dead upstream twice in a row.
+    fn attempt_upstream(&self, last_failed: Option<&str>) -> String {
+        let mut upstream = self.next_upstream().to_string();
+        if self.upstreams.len() > 1 {
+            // Smooth WRR visits every upstream within one period (= the
+            // weight sum), so that bounds the re-roll.
+            let bound: usize = self.weights.iter().map(|w| (*w).max(1)).sum();
+            let mut rolls = 0;
+            while last_failed == Some(upstream.as_str()) && rolls < bound {
+                upstream = self.next_upstream().to_string();
+                rolls += 1;
+            }
+        }
+        upstream
     }
 
     /// Set per-upstream capacity weights (must match `upstreams` length).
@@ -150,6 +188,14 @@ impl Route {
         cur[best] -= total;
         &self.upstreams[best]
     }
+}
+
+/// Statuses worth a second attempt against another upstream: the upstream
+/// (or the instance behind it) is gone. NOT 504 — that request's own
+/// deadline budget is already spent — and not 4xx/500, which are
+/// deterministic and would just duplicate work.
+fn retryable_status(status: u16) -> bool {
+    status == 502 || status == 503
 }
 
 /// An API-key consumer.
@@ -308,9 +354,7 @@ impl Gateway {
         let timer = std::time::Instant::now();
 
         // --- forward ---
-        let upstream = route.next_upstream().to_string();
-        let suffix = &req.path[route.prefix.len()..];
-        let url = format!("{}{}{}", upstream, route.rewrite, suffix);
+        let suffix = req.path[route.prefix.len()..].to_string();
         let is_stream = Json::parse(req.body_str())
             .map(|j| j.bool_or("stream", false))
             .unwrap_or(false);
@@ -325,7 +369,9 @@ impl Gateway {
 
         if is_stream {
             let log = self.log.clone();
+            let gw = self.clone();
             Reply::sse(move |sink| {
+                let route = &gw.routes[route_idx];
                 let h: Vec<(&str, &str)> =
                     headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
                 // A failed sink write means the downstream socket died: stop
@@ -336,85 +382,177 @@ impl Gateway {
                 // of a write per token frame. A bounded tail of the stream
                 // is retained so the usage block on the final SSE chunk can
                 // feed the log after the fact.
+                //
+                // An upstream that answers 5xx (or dies) before anything was
+                // forwarded — its instance may just have been preempted or
+                // walltime-killed — is abandoned and the request retried
+                // against the next upstream, up to `route.retries` times.
                 let mut tail: Vec<u8> = Vec::new();
-                let res = http::request_stream_coalesced(&method, &url, &h, &body, |batch| {
-                    let ok = sink.send(batch).is_ok();
-                    if ok {
-                        tail.extend_from_slice(batch);
-                        if tail.len() > 4096 {
-                            let cut = tail.len() - 2048;
-                            tail.drain(..cut);
-                        }
-                    }
-                    ok
-                });
-                metrics
-                    .histogram("gw_latency_seconds", &[("route", &route_name)])
-                    .observe(timer.elapsed().as_secs_f64());
-                let coalesced_ctr =
-                    metrics.counter("gw_sse_frames_coalesced_total", &[("route", &route_name)]);
-                match res {
-                    Ok((_, true, saved)) => {
-                        coalesced_ctr.add(saved);
-                        metrics
-                            .counter("gw_cancelled_total", &[("route", &route_name)])
-                            .inc();
-                        log.mark_cancelled(log_idx);
-                        Ok(())
-                    }
-                    Ok((_, false, saved)) => {
-                        coalesced_ctr.add(saved);
-                        if let Some(cached) = sse_tail_cached_tokens(&tail) {
-                            if cached > 0 {
-                                log.mark_cached_tokens(log_idx, cached);
+                let mut forwarded = false;
+                let mut attempt = 0usize;
+                let mut last_failed: Option<String> = None;
+                loop {
+                    let upstream = route.attempt_upstream(last_failed.as_deref());
+                    let url = format!("{}{}{}", upstream, route.rewrite, suffix);
+                    let res = http::request_stream_coalesced(
+                        &method,
+                        &url,
+                        &h,
+                        &body,
+                        |status, batch| {
+                            if retryable_status(status) && !forwarded {
+                                // Dead upstream: never forward its error
+                                // body as token frames — retry it, or
+                                // surface a structured error below.
+                                return false;
                             }
+                            let ok = sink.send(batch).is_ok();
+                            if ok {
+                                forwarded = true;
+                                tail.extend_from_slice(batch);
+                                if tail.len() > 4096 {
+                                    let cut = tail.len() - 2048;
+                                    tail.drain(..cut);
+                                }
+                            }
+                            ok
+                        },
+                    );
+                    match res {
+                        Ok((status, _, _))
+                            if retryable_status(status)
+                                && !forwarded
+                                && attempt < route.retries =>
+                        {
+                            metrics
+                                .counter("gw_retries_total", &[("route", &route_name)])
+                                .inc();
+                            attempt += 1;
+                            last_failed = Some(upstream);
+                            continue;
                         }
-                        Ok(())
-                    }
-                    Err(e) => {
-                        sink.send_event(&Json::obj().set("error", e.to_string()).dump())?;
-                        Ok(())
+                        Ok((status, aborted, saved)) => {
+                            metrics
+                                .histogram("gw_latency_seconds", &[("route", &route_name)])
+                                .observe(timer.elapsed().as_secs_f64());
+                            metrics
+                                .counter(
+                                    "gw_sse_frames_coalesced_total",
+                                    &[("route", &route_name)],
+                                )
+                                .add(saved);
+                            if retryable_status(status) && !forwarded {
+                                // Retries exhausted, every upstream dead:
+                                // the SSE reply's HTTP status is already
+                                // committed, so surface the failure as a
+                                // structured error event (same envelope
+                                // convention as the transport-error arm).
+                                sink.send_event(
+                                    &Json::obj()
+                                        .set("error", format!("upstream {status}"))
+                                        .dump(),
+                                )?;
+                                return Ok(());
+                            }
+                            if aborted {
+                                metrics
+                                    .counter("gw_cancelled_total", &[("route", &route_name)])
+                                    .inc();
+                                log.mark_cancelled(log_idx);
+                            } else if let Some(cached) = sse_tail_cached_tokens(&tail) {
+                                if cached > 0 {
+                                    log.mark_cached_tokens(log_idx, cached);
+                                }
+                            }
+                            return Ok(());
+                        }
+                        Err(_) if !forwarded && attempt < route.retries => {
+                            metrics
+                                .counter("gw_retries_total", &[("route", &route_name)])
+                                .inc();
+                            attempt += 1;
+                            last_failed = Some(upstream);
+                            continue;
+                        }
+                        Err(e) => {
+                            metrics
+                                .histogram("gw_latency_seconds", &[("route", &route_name)])
+                                .observe(timer.elapsed().as_secs_f64());
+                            sink.send_event(&Json::obj().set("error", e.to_string()).dump())?;
+                            return Ok(());
+                        }
                     }
                 }
             })
         } else {
             let h: Vec<(&str, &str)> =
                 headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
-            let reply = match http::pooled_request(&method, &url, &h, &body) {
-                Ok(resp) => {
-                    metrics
-                        .counter(
-                            "gw_requests_total",
-                            &[("route", &route_name), ("status", &resp.status.to_string())],
-                        )
-                        .inc();
-                    // Usage accounting for the log: how much of the prompt
-                    // the instance's prefix cache absorbed (still no
-                    // prompt/response content, §6.2 — a single integer).
-                    if resp.status == 200 {
-                        if let Ok(j) = resp.json_body() {
-                            let cached = j
-                                .at(&["usage", "cached_tokens"])
-                                .and_then(|c| c.as_u64())
-                                .unwrap_or(0);
-                            if cached > 0 {
-                                self.log.mark_cached_tokens(log_idx, cached);
+            let mut reply = None;
+            let mut last_failed: Option<String> = None;
+            for attempt in 0..=route.retries {
+                let upstream = route.attempt_upstream(last_failed.as_deref());
+                let url = format!("{}{}{}", upstream, route.rewrite, suffix);
+                match http::pooled_request(&method, &url, &h, &body) {
+                    // A dead or instance-less upstream answers 502/503; the
+                    // next attempt may land on a healthy path (a different
+                    // upstream, or the same one after its routing table
+                    // dropped the preempted instance).
+                    Ok(resp) if attempt < route.retries && retryable_status(resp.status) => {
+                        metrics
+                            .counter("gw_retries_total", &[("route", &route_name)])
+                            .inc();
+                        last_failed = Some(upstream);
+                    }
+                    Ok(resp) => {
+                        metrics
+                            .counter(
+                                "gw_requests_total",
+                                &[("route", &route_name), ("status", &resp.status.to_string())],
+                            )
+                            .inc();
+                        // Usage accounting for the log: how much of the
+                        // prompt the instance's prefix cache absorbed
+                        // (still no prompt/response content, §6.2 — a
+                        // single integer).
+                        if resp.status == 200 {
+                            if let Ok(j) = resp.json_body() {
+                                let cached = j
+                                    .at(&["usage", "cached_tokens"])
+                                    .and_then(|c| c.as_u64())
+                                    .unwrap_or(0);
+                                if cached > 0 {
+                                    self.log.mark_cached_tokens(log_idx, cached);
+                                }
                             }
                         }
+                        reply = Some(Reply::full(resp));
+                        break;
                     }
-                    Reply::full(resp)
+                    Err(_) if attempt < route.retries => {
+                        metrics
+                            .counter("gw_retries_total", &[("route", &route_name)])
+                            .inc();
+                        last_failed = Some(upstream);
+                    }
+                    Err(e) => {
+                        metrics
+                            .counter(
+                                "gw_requests_total",
+                                &[("route", &route_name), ("status", "502")],
+                            )
+                            .inc();
+                        reply = Some(Reply::full(Response::json(
+                            502,
+                            &Json::obj().set("error", e.to_string()),
+                        )));
+                        break;
+                    }
                 }
-                Err(e) => {
-                    metrics
-                        .counter("gw_requests_total", &[("route", &route_name), ("status", "502")])
-                        .inc();
-                    Reply::full(Response::json(502, &Json::obj().set("error", e.to_string())))
-                }
-            };
+            }
             metrics
                 .histogram("gw_latency_seconds", &[("route", &route_name)])
                 .observe(timer.elapsed().as_secs_f64());
-            reply
+            reply.expect("the final attempt always produces a reply")
         }
     }
 }
@@ -617,6 +755,101 @@ mod tests {
             }
         }
         assert_eq!((a, b), (6, 2), "3:1 weights over 8 requests");
+    }
+
+    #[test]
+    fn retries_dead_upstream_against_next_one() {
+        // Upstream A always 502 (its instance was preempted between
+        // placement and completion); upstream B is healthy. Smooth WRR
+        // sends the first attempt to A — the retry must land on B and the
+        // client must see a clean 200.
+        let up_a = Server::start(Arc::new(|_req: &Request| {
+            Reply::full(Response::json(502, &Json::obj().set("error", "instance gone")))
+        }))
+        .unwrap();
+        let up_b = upstream_echo();
+        let routes = vec![Route::new("m", "/c/", vec![up_a.url(), up_b.url()], "/x")
+            .public()
+            .with_retries(1)];
+        let metrics = Registry::new();
+        let gateway =
+            Gateway::new(routes, vec![], None, metrics.clone(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let r = http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 200, "retry did not rescue the request");
+        assert_eq!(metrics.counter("gw_retries_total", &[("route", "m")]).get(), 1);
+        // Retries are opt-in: a default route surfaces the 502 as-is.
+        let routes = vec![Route::new("m", "/c/", vec![up_a.url(), up_b.url()], "/x").public()];
+        let gateway = Gateway::new(routes, vec![], None, Registry::new(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let r = http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 502);
+    }
+
+    #[test]
+    fn retry_skips_the_upstream_that_just_failed_despite_weights() {
+        // Upstream A is heavy (weight 3) and dead; smooth WRR would hand
+        // it back on the retry too — the retry path must skip it and
+        // reach B.
+        let up_a = Server::start(Arc::new(|_req: &Request| {
+            Reply::full(Response::json(502, &Json::obj().set("error", "dead")))
+        }))
+        .unwrap();
+        let up_b = upstream_echo();
+        let routes = vec![Route::new("m", "/c/", vec![up_a.url(), up_b.url()], "/x")
+            .public()
+            .with_weights(vec![3, 1])
+            .with_retries(1)];
+        let metrics = Registry::new();
+        let gateway =
+            Gateway::new(routes, vec![], None, metrics.clone(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        for _ in 0..4 {
+            let r = http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+            assert_eq!(r.status, 200, "retry burned its budget on the dead upstream");
+        }
+    }
+
+    #[test]
+    fn stream_retry_before_first_frame_rescues_request() {
+        let up_a = Server::start(Arc::new(|_req: &Request| {
+            Reply::full(Response::json(502, &Json::obj().set("error", "instance gone")))
+        }))
+        .unwrap();
+        let up_b = Server::start(Arc::new(|_req: &Request| {
+            Reply::sse(|sink| {
+                for i in 0..3 {
+                    sink.send_event(&format!("tok{i}"))?;
+                }
+                Ok(())
+            })
+        }))
+        .unwrap();
+        let routes = vec![Route::new("m", "/c/", vec![up_a.url(), up_b.url()], "/x")
+            .public()
+            .with_retries(1)];
+        let metrics = Registry::new();
+        let gateway =
+            Gateway::new(routes, vec![], None, metrics.clone(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let mut parser = http::SseParser::default();
+        let mut events = Vec::new();
+        let status = http::request_stream(
+            "POST",
+            &format!("{}/c/", server.url()),
+            &[],
+            b"{\"stream\":true}",
+            |chunk| events.extend(parser.push(chunk)),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(events, vec!["tok0", "tok1", "tok2"], "stream not rescued");
+        assert_eq!(metrics.counter("gw_retries_total", &[("route", "m")]).get(), 1);
+        assert_eq!(
+            metrics.counter("gw_cancelled_total", &[("route", "m")]).get(),
+            0,
+            "a retried upstream must not count as a client cancellation"
+        );
     }
 
     #[test]

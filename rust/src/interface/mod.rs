@@ -264,10 +264,10 @@ impl CloudInterface {
                 &url,
                 &[("content-type", "application/json")],
                 stdin,
-                |batch| {
+                |status, batch| {
                     if !sent_status {
                         sent_status = true;
-                        if Self::reply_status(out, 200).is_err() {
+                        if Self::reply_status(out, status).is_err() {
                             return false;
                         }
                     }
@@ -275,7 +275,7 @@ impl CloudInterface {
                 },
             );
             match result {
-                Ok((_, aborted, saved)) => {
+                Ok((status, aborted, saved)) => {
                     self.metrics
                         .counter("ci_sse_frames_coalesced_total", &[("service", service)])
                         .add(saved);
@@ -284,7 +284,10 @@ impl CloudInterface {
                             .counter("ci_cancelled_total", &[("service", service)])
                             .inc();
                     } else if !sent_status {
-                        let _ = Self::reply_status(out, 200);
+                        // Body-less upstream reply (the callback never
+                        // fired): forward the real status, not a blanket
+                        // 200 — an instance error must not read as success.
+                        let _ = Self::reply_status(out, status);
                     }
                     EXIT_OK
                 }
@@ -444,6 +447,7 @@ mod tests {
             cpus: 4,
             mem_gb: 16,
             walltime: Duration::from_secs(3600),
+            max_scavengers: 0,
             backend: BackendKind::Sim { profile: "intel-neural-7b".into(), time_scale: 0.0 },
         }
     }
@@ -505,6 +509,8 @@ mod tests {
             port: health.addr.port(),
             addr: health.addr.to_string(),
             ready: true,
+            draining: false,
+            scavenger: false,
             started_us: 0,
         });
         let (code, out) = run(&ci, "probe m", b"");
@@ -537,6 +543,8 @@ mod tests {
             port: server.server.addr.port(),
             addr: server.server.addr.to_string(),
             ready: true,
+            draining: false,
+            scavenger: false,
             started_us: 0,
         });
         let body = Json::obj()
@@ -602,6 +610,8 @@ mod tests {
                 port,
                 addr,
                 ready: true,
+                draining: false,
+                scavenger: false,
                 started_us: 0,
             });
         });
@@ -635,6 +645,8 @@ mod tests {
             port: server.server.addr.port(),
             addr: server.server.addr.to_string(),
             ready: true,
+            draining: false,
+            scavenger: false,
             started_us: 0,
         });
         let plaintext = Json::obj()
@@ -722,6 +734,8 @@ mod tests {
             port: server.server.addr.port(),
             addr: server.server.addr.to_string(),
             ready: true,
+            draining: false,
+            scavenger: false,
             started_us: 0,
         });
         let body = Json::obj()

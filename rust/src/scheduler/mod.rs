@@ -13,6 +13,22 @@
 //!    renews jobs approaching their walltime (the "continuously replaced or
 //!    extended" requirement of §4), and probes not-yet-ready instances.
 //!
+//! Two pool tiers (the paper's "side by side with regular Slurm workloads,
+//! while utilizing gaps in the schedule", §1):
+//!
+//! - **guaranteed** replicas: elevated priority, full walltime, renewed
+//!   `renew_margin` before expiry — the paper's baseline;
+//! - **scavenger** replicas: priority *below* batch, short walltime,
+//!   preemptible, submitted only when `SlurmSim::gap_report` shows idle
+//!   GPUs and a backfill window wide enough for the job — opportunistic
+//!   capacity that arriving batch work reclaims via preemption.
+//!
+//! Replicas never die mid-request if the scheduler can help it: walltime
+//! expiry, scale-down and preemption notices all route through a graceful
+//! **drain** — the routing table stops placing new requests, the job is
+//! scancelled once its in-flight load hits zero, and a drain deadline
+//! bounds the wait.
+//!
 //! Everything is driven by explicit clock reads so the same code runs under
 //! simulated months and live wall time.
 
@@ -22,6 +38,7 @@ pub mod routing;
 pub use instances::{BackendKind, InstanceLauncher, MockLauncher, RealLauncher};
 pub use routing::{DemandTracker, Instance, InstanceGuard, RoutingTable};
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -46,6 +63,10 @@ pub struct ServiceSpec {
     pub mem_gb: u32,
     /// Service-job walltime; jobs are renewed `renew_margin` before expiry.
     pub walltime: Duration,
+    /// Scavenger-tier cap: up to this many extra replicas may be squeezed
+    /// into schedule gaps when demand exceeds what `max_instances`
+    /// guaranteed replicas cover. 0 disables the tier.
+    pub max_scavengers: u32,
     pub backend: BackendKind,
 }
 
@@ -63,6 +84,7 @@ impl ServiceSpec {
             cpus: 8,
             mem_gb: 64,
             walltime: Duration::from_secs(12 * 3600),
+            max_scavengers: 0,
             backend: BackendKind::Sim { profile: name.to_string(), time_scale },
         }
     }
@@ -78,6 +100,7 @@ impl ServiceSpec {
             cpus: 4,
             mem_gb: 16,
             walltime: Duration::from_secs(12 * 3600),
+            max_scavengers: 0,
             backend: BackendKind::Pjrt { model: "tiny".into() },
         }
     }
@@ -92,6 +115,18 @@ pub struct SchedulerConfig {
     pub renew_margin: Duration,
     /// Service jobs run at elevated priority so they outrank batch (§7.1.3).
     pub job_priority: i64,
+    /// Scavenger jobs run BELOW batch priority, so arriving batch work
+    /// outranks them — and, because they are preemptible, reclaims their
+    /// GPUs after the grace window.
+    pub scavenger_priority: i64,
+    /// Scavenger-job walltime: short, so the jobs fit conservative-backfill
+    /// windows instead of delaying pending batch work.
+    pub scavenger_walltime: Duration,
+    /// Graceful-drain budget: a draining replica is scancelled once its
+    /// in-flight load reaches zero, or at this deadline, whichever is
+    /// first. Also the walltime headroom in-flight requests are assumed to
+    /// finish within.
+    pub drain_grace: Duration,
     /// Functional account jobs are submitted under (§4 Monitoring).
     pub account: String,
 }
@@ -102,6 +137,9 @@ impl Default for SchedulerConfig {
             demand_window: Duration::from_secs(60),
             renew_margin: Duration::from_secs(300),
             job_priority: 100,
+            scavenger_priority: -10,
+            scavenger_walltime: Duration::from_secs(900),
+            drain_grace: Duration::from_secs(60),
             account: "svc-chat-ai".into(),
         }
     }
@@ -115,6 +153,12 @@ pub struct RunReport {
     pub cancelled: Vec<JobId>,
     pub renewed: Vec<JobId>,
     pub became_ready: Vec<JobId>,
+    /// Scavenger-tier submissions this run.
+    pub scavenged: Vec<JobId>,
+    /// Jobs newly flipped into graceful drain this run.
+    pub drained: Vec<JobId>,
+    /// Service jobs that received a Slurm preemption notice this run.
+    pub preempted: Vec<JobId>,
 }
 
 /// The scheduler itself.
@@ -129,6 +173,10 @@ pub struct ServiceScheduler {
     lock: AtomicBool,
     cfg: SchedulerConfig,
     metrics: Registry,
+    /// Draining jobs: id → (service, drain deadline). The deadline bounds
+    /// how long the scheduler waits for in-flight load to reach zero
+    /// before cancelling anyway.
+    drains: Mutex<BTreeMap<JobId, (String, u64)>>,
 }
 
 impl ServiceScheduler {
@@ -156,6 +204,7 @@ impl ServiceScheduler {
             lock: AtomicBool::new(false),
             cfg,
             metrics,
+            drains: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -177,17 +226,19 @@ impl ServiceScheduler {
         format!("svc-{service}")
     }
 
-    fn parse_comment(comment: &str) -> Option<(String, u16)> {
+    fn parse_comment(comment: &str) -> Option<(String, u16, bool)> {
         let mut service = None;
         let mut port = None;
+        let mut scavenger = false;
         for kv in comment.split(';') {
             match kv.split_once('=') {
                 Some(("service", v)) => service = Some(v.to_string()),
                 Some(("port", v)) => port = v.parse().ok(),
+                Some(("tier", v)) => scavenger = v == "scavenger",
                 _ => {}
             }
         }
-        Some((service?, port?))
+        Some((service?, port?, scavenger))
     }
 
     /// One scheduler-script execution (triggered per keepalive ping).
@@ -216,7 +267,8 @@ impl ServiceScheduler {
             match ev {
                 JobUpdate::Started { id, nodes } => {
                     let Some(info) = self.slurm.lock().unwrap().job(id) else { continue };
-                    let Some((service, port)) = Self::parse_comment(&info.comment) else {
+                    let Some((service, port, scavenger)) = Self::parse_comment(&info.comment)
+                    else {
                         continue; // not a service job
                     };
                     let Some(spec) = services.iter().find(|s| s.name == service) else {
@@ -231,52 +283,111 @@ impl ServiceScheduler {
                         port,
                         addr: format!("127.0.0.1:{port}"),
                         ready: false,
+                        draining: false,
+                        scavenger,
                         started_us: now,
                     });
                 }
                 JobUpdate::Finished { id, .. } => {
-                    self.routing.remove(id);
-                    self.launcher.terminate(id);
+                    self.decommission(id, now);
+                }
+                JobUpdate::Preempted { id, kill_at_us } => {
+                    // Preemption *notice*: the replica keeps running through
+                    // the grace window — drain it so in-flight requests
+                    // finish before Slurm's kill lands.
+                    let Some(info) = self.slurm.lock().unwrap().job(id) else { continue };
+                    let Some((service, _, _)) = Self::parse_comment(&info.comment) else {
+                        continue; // a preempted batch job is not ours
+                    };
+                    self.metrics
+                        .counter("sched_preemptions_total", &[("service", &service)])
+                        .inc();
+                    let deadline = self.drain_deadline(kill_at_us, now);
+                    self.begin_drain(id, &service, deadline, "preempt", &mut report);
+                    report.preempted.push(id);
                 }
             }
         }
 
         // --- per-service reconciliation ----------------------------------
         let window_us = self.cfg.demand_window.as_micros() as u64;
+        let renew_us = self.cfg.renew_margin.as_micros() as u64;
+        let grace_us = self.cfg.drain_grace.as_micros() as u64;
         for spec in &services {
             self.demand.sample(&spec.name, now, window_us);
             let avg = self.demand.average(&spec.name);
-            let desired = ((avg / spec.target_concurrency).ceil() as u32)
-                .clamp(spec.min_instances, spec.max_instances);
+            // Total replica demand, then the tier split: the guaranteed
+            // tier covers up to `max_instances`; overflow (capped by
+            // `max_scavengers`) is served opportunistically from gaps.
+            let desired_total = (avg / spec.target_concurrency).ceil() as u32;
+            let desired = desired_total.clamp(spec.min_instances, spec.max_instances);
             self.metrics
                 .gauge("sched_desired_instances", &[("service", &spec.name)])
                 .set(desired as i64);
 
             let jobs = self.service_jobs(&spec.name);
-            let active: Vec<&JobInfo> =
-                jobs.iter().filter(|j| !j.state.is_terminal()).collect();
+            let (scav_jobs, guar_jobs): (Vec<JobInfo>, Vec<JobInfo>) = jobs
+                .into_iter()
+                .filter(|j| !j.state.is_terminal())
+                .partition(|j| {
+                    Self::parse_comment(&j.comment).map(|(_, _, s)| s).unwrap_or(false)
+                });
 
-            // Jobs close to their walltime are "draining": they will expire
-            // and cannot be extended (batch semantics, §4), so they no
-            // longer count toward the desired pool. That makes renewal fall
-            // out of ordinary scale-up, and keeps scale-down from
-            // cannibalising the freshly-submitted replacements.
-            let renew_us = self.cfg.renew_margin.as_micros() as u64;
-            let walltime_us = spec.walltime.as_micros() as u64;
-            let is_draining = |j: &&JobInfo| {
-                j.state == JobState::Running
-                    && (j.start_us.unwrap_or(now) + walltime_us).saturating_sub(now) < renew_us
+            // ---- guaranteed tier ---------------------------------------
+            // Jobs close to their walltime are "expiring": they cannot be
+            // extended (batch semantics, §4) and no longer count toward
+            // the pool — renewal falls out of ordinary scale-up, and
+            // scale-down never cannibalises fresh replacements. Expiry
+            // projects from the walltime each job was *submitted* with
+            // (JobInfo.time_limit), not the current config: a config
+            // change cannot stretch a job Slurm will still kill on time.
+            let expiry_of = |j: &JobInfo| {
+                j.start_us.unwrap_or(now).saturating_add(j.time_limit.as_micros() as u64)
             };
-            let draining = active.iter().filter(|j| is_draining(j)).count() as u32;
-            let countable: Vec<&&JobInfo> =
-                active.iter().filter(|j| !is_draining(j)).collect();
+            let expiring = |j: &JobInfo| {
+                j.state == JobState::Running && expiry_of(j).saturating_sub(now) < renew_us
+            };
 
-            // Scale up (covers walltime renewal: a draining job stops
+            // Graceful drain for expiring jobs. Flipping the routing flag
+            // too early would open an availability gap while the
+            // replacement cold-starts, so each drain must be *paired*
+            // with a distinct routable NON-expiring guaranteed replica
+            // (a fresh replacement, or a peer with real life left) — a
+            // cohort of same-aged replicas must not cascade-drain against
+            // each other. Unpaired drains happen only inside the last
+            // `drain_grace` of walltime, the point past which in-flight
+            // requests could no longer finish before the kill.
+            let safe_ids: BTreeSet<JobId> =
+                guar_jobs.iter().filter(|j| !expiring(j)).map(|j| j.id).collect();
+            let mut safe_peers = self
+                .routing
+                .routable_instances(&spec.name)
+                .iter()
+                .filter(|i| !i.scavenger && safe_ids.contains(&i.job_id))
+                .count();
+            for j in guar_jobs.iter().filter(|j| expiring(j) && !self.is_drained(j.id)) {
+                let remaining = expiry_of(j).saturating_sub(now);
+                if safe_peers > 0 {
+                    safe_peers -= 1; // this drain's traffic has a home
+                } else if remaining > grace_us {
+                    continue; // keep serving until a replacement is ready
+                }
+                let deadline = self.drain_deadline(expiry_of(j), now);
+                self.begin_drain(j.id, &spec.name, deadline, "walltime", &mut report);
+            }
+
+            let countable: Vec<&JobInfo> = guar_jobs
+                .iter()
+                .filter(|j| !expiring(j) && !self.is_drained(j.id))
+                .collect();
+            let expiring_count = guar_jobs.iter().filter(|j| expiring(j)).count() as u32;
+
+            // Scale up (covers walltime renewal: an expiring job stops
             // counting, so its replacement is submitted here).
             if (countable.len() as u32) < desired {
                 for _ in 0..(desired - countable.len() as u32) {
-                    let id = self.submit_job(spec, now);
-                    if draining > 0 {
+                    let id = self.submit_job(spec, now, false);
+                    if expiring_count > 0 {
                         report.renewed.push(id);
                     } else {
                         report.submitted.push(id);
@@ -284,31 +395,80 @@ impl ServiceScheduler {
                 }
             }
 
-            // Scale down: prefer cancelling pending (never-started) jobs,
-            // then the youngest running ones (§5.6 lets excess expire; we
-            // also support active cancellation to free GPUs promptly).
+            // Scale down through the drain path: pending victims first
+            // (nothing in flight to protect), then the youngest running
+            // ones — drained, not killed.
             if (countable.len() as u32) > desired {
-                let mut excess = countable.len() as u32 - desired;
-                let mut victims: Vec<JobId> = countable
-                    .iter()
-                    .filter(|j| j.state == JobState::Pending)
-                    .map(|j| j.id)
-                    .collect();
-                let mut running: Vec<&&&JobInfo> =
-                    countable.iter().filter(|j| j.state == JobState::Running).collect();
-                running.sort_by_key(|j| std::cmp::Reverse(j.start_us.unwrap_or(0)));
-                victims.extend(running.iter().map(|j| j.id));
-                for id in victims.into_iter().take(excess as usize) {
-                    self.slurm.lock().unwrap().scancel(id, now);
-                    self.routing.remove(id);
-                    self.launcher.terminate(id);
-                    report.cancelled.push(id);
-                    excess -= 1;
-                    if excess == 0 {
-                        break;
-                    }
+                let excess = countable.len() as u32 - desired;
+                self.scale_down(&countable, excess, &spec.name, now, &mut report);
+            }
+
+            // ---- scavenger tier ----------------------------------------
+            let scav_desired = if desired_total > spec.max_instances {
+                (desired_total - spec.max_instances).min(spec.max_scavengers)
+            } else {
+                0
+            };
+
+            // A scavenger nearing its (short) walltime drains; there is no
+            // renewal — a replacement is submitted below only if a gap
+            // still exists.
+            let scav_wall_us = self.cfg.scavenger_walltime.as_micros() as u64;
+            for j in scav_jobs.iter().filter(|j| {
+                j.state == JobState::Running && !self.is_drained(j.id)
+            }) {
+                if expiry_of(j).saturating_sub(now) <= grace_us {
+                    let deadline = self.drain_deadline(expiry_of(j), now);
+                    self.begin_drain(j.id, &spec.name, deadline, "walltime", &mut report);
                 }
             }
+
+            let scav_countable: Vec<&JobInfo> =
+                scav_jobs.iter().filter(|j| !self.is_drained(j.id)).collect();
+
+            // Submit into gaps only: placeable *right now* (per-node
+            // fragmentation and CPU/memory included, not just a free-GPU
+            // total) AND a conservative-backfill window wide enough that
+            // the scavenger cannot delay pending batch work (the sim
+            // enforces the same bound).
+            if (scav_countable.len() as u32) < scav_desired {
+                let deficit = scav_desired - scav_countable.len() as u32;
+                let probe = JobSpec {
+                    nodes: 1,
+                    gpus_per_node: spec.gpus,
+                    cpus_per_node: spec.cpus,
+                    mem_gb_per_node: spec.mem_gb,
+                    time_limit: self.cfg.scavenger_walltime,
+                    priority: self.cfg.scavenger_priority,
+                    preemptible: true,
+                    ..Default::default()
+                };
+                let fit = {
+                    let slurm = self.slurm.lock().unwrap();
+                    if slurm.gap_report(now).gap_us >= scav_wall_us {
+                        slurm.placeable_count(&probe, deficit)
+                    } else {
+                        0
+                    }
+                };
+                for _ in 0..fit {
+                    let id = self.submit_job(spec, now, true);
+                    report.scavenged.push(id);
+                }
+            }
+            if (scav_countable.len() as u32) > scav_desired {
+                let excess = scav_countable.len() as u32 - scav_desired;
+                self.scale_down(&scav_countable, excess, &spec.name, now, &mut report);
+            }
+            self.metrics
+                .gauge("sched_scavenger_instances", &[("service", &spec.name)])
+                .set(
+                    self.routing
+                        .routable_instances(&spec.name)
+                        .iter()
+                        .filter(|i| i.scavenger)
+                        .count() as i64,
+                );
 
             // Readiness probing.
             for inst in self.routing.instances(&spec.name) {
@@ -321,7 +481,125 @@ impl ServiceScheduler {
                 .gauge("sched_ready_instances", &[("service", &spec.name)])
                 .set(self.routing.ready_instances(&spec.name).len() as i64);
         }
+
+        // --- drain completion sweep --------------------------------------
+        // A draining job is cancelled once nothing is in flight against it,
+        // or when its drain deadline passes (forced: better to kill one
+        // stuck request than to leak the allocation).
+        let due: Vec<(JobId, String, u64)> = self
+            .drains
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&id, (svc, deadline))| (id, svc.clone(), *deadline))
+            .collect();
+        for (id, service, deadline) in due {
+            let load = self.routing.instance_load(id);
+            if load > 0 && now < deadline {
+                continue; // still draining
+            }
+            if load > 0 {
+                self.metrics
+                    .counter("sched_drain_forced_total", &[("service", &service)])
+                    .inc();
+            }
+            self.decommission(id, now);
+            self.metrics
+                .counter("sched_drain_completed_total", &[("service", &service)])
+                .inc();
+            report.cancelled.push(id);
+        }
         report
+    }
+
+    fn is_drained(&self, id: JobId) -> bool {
+        self.drains.lock().unwrap().contains_key(&id)
+    }
+
+    /// Tear one replica down everywhere it is known: Slurm (scancel is a
+    /// no-op on already-terminal jobs), the routing table (frees the
+    /// reserved port), the launcher, and the drain book-keeping.
+    fn decommission(&self, id: JobId, now: u64) {
+        self.slurm.lock().unwrap().scancel(id, now);
+        self.routing.remove(id);
+        self.launcher.terminate(id);
+        self.drains.lock().unwrap().remove(&id);
+    }
+
+    /// Deadline for the forced drain-cancel: a beat before the external
+    /// kill (walltime expiry or preemption GraceTime), so a stuck request
+    /// dies by controlled scancel instead of TIMEOUT/PREEMPTED — giving
+    /// away at most half of whatever window actually remains, and at most
+    /// half the configured `drain_grace`.
+    fn drain_deadline(&self, kill_us: u64, now: u64) -> u64 {
+        let margin = (self.cfg.drain_grace.as_micros() as u64 / 2)
+            .min(kill_us.saturating_sub(now) / 2);
+        kill_us.saturating_sub(margin).max(now + 1)
+    }
+
+    /// Flip a running job into graceful drain (idempotent; a later call
+    /// can only tighten the deadline).
+    fn begin_drain(
+        &self,
+        id: JobId,
+        service: &str,
+        deadline_us: u64,
+        reason: &str,
+        report: &mut RunReport,
+    ) {
+        let is_new = {
+            let mut drains = self.drains.lock().unwrap();
+            let prev = drains.remove(&id);
+            let deadline = match &prev {
+                Some((_, d)) => (*d).min(deadline_us), // only ever tighten
+                None => deadline_us,
+            };
+            drains.insert(id, (service.to_string(), deadline));
+            prev.is_none()
+        };
+        if is_new {
+            self.routing.mark_draining(id);
+            self.metrics
+                .counter(
+                    "sched_drain_started_total",
+                    &[("service", service), ("reason", reason)],
+                )
+                .inc();
+            report.drained.push(id);
+        }
+    }
+
+    /// Remove `excess` replicas from `candidates`: pending jobs are
+    /// cancelled outright (no traffic yet), then running jobs —
+    /// youngest-first — are drained rather than killed.
+    fn scale_down(
+        &self,
+        candidates: &[&JobInfo],
+        excess: u32,
+        service: &str,
+        now: u64,
+        report: &mut RunReport,
+    ) {
+        let mut remaining = excess as usize;
+        for j in candidates.iter().filter(|j| j.state == JobState::Pending) {
+            if remaining == 0 {
+                return;
+            }
+            self.decommission(j.id, now);
+            report.cancelled.push(j.id);
+            remaining -= 1;
+        }
+        let mut running: Vec<&&JobInfo> =
+            candidates.iter().filter(|j| j.state == JobState::Running).collect();
+        running.sort_by_key(|j| std::cmp::Reverse(j.start_us.unwrap_or(0)));
+        let deadline = now + self.cfg.drain_grace.as_micros() as u64;
+        for j in running {
+            if remaining == 0 {
+                return;
+            }
+            self.begin_drain(j.id, service, deadline, "scaledown", report);
+            remaining -= 1;
+        }
     }
 
     fn service_jobs(&self, service: &str) -> Vec<JobInfo> {
@@ -335,8 +613,20 @@ impl ServiceScheduler {
             .collect()
     }
 
-    fn submit_job(&self, spec: &ServiceSpec, now: u64) -> JobId {
+    fn submit_job(&self, spec: &ServiceSpec, now: u64, scavenger: bool) -> JobId {
         let port = self.routing.alloc_port(&mut self.rng.lock().unwrap());
+        // Scavenger jobs invert the guaranteed tier's Slurm posture: below
+        // batch priority instead of above, a short walltime that fits
+        // backfill windows, and preemptible so batch reclaims them.
+        let (priority, walltime) = if scavenger {
+            (self.cfg.scavenger_priority, self.cfg.scavenger_walltime)
+        } else {
+            (self.cfg.job_priority, spec.walltime)
+        };
+        let mut comment = format!("service={};port={port}", spec.name);
+        if scavenger {
+            comment.push_str(";tier=scavenger");
+        }
         let job = JobSpec {
             name: Self::job_name(&spec.name),
             account: self.cfg.account.clone(),
@@ -344,10 +634,11 @@ impl ServiceScheduler {
             gpus_per_node: spec.gpus,
             cpus_per_node: spec.cpus,
             mem_gb_per_node: spec.mem_gb,
-            time_limit: spec.walltime,
-            priority: self.cfg.job_priority,
+            time_limit: walltime,
+            priority,
             duration: None,
-            comment: format!("service={};port={port}", spec.name),
+            preemptible: scavenger,
+            comment,
         };
         let id = self.slurm.lock().unwrap().sbatch(job, now);
         // Reserve the port in the routing table immediately (pending, not
@@ -359,6 +650,8 @@ impl ServiceScheduler {
             port,
             addr: format!("127.0.0.1:{port}"),
             ready: false,
+            draining: false,
+            scavenger,
             started_us: now,
         });
         self.metrics.counter("sched_jobs_submitted_total", &[("service", &spec.name)]).inc();
@@ -399,7 +692,38 @@ mod tests {
             cpus: 8,
             mem_gb: 64,
             walltime: Duration::from_secs(3600),
+            max_scavengers: 0,
             backend: BackendKind::Sim { profile: "intel-neural-7b".into(), time_scale: 0.0 },
+        }
+    }
+
+    /// A scheduler on a custom (usually small) cluster.
+    fn setup_on(
+        cluster: ClusterSpec,
+        services: Vec<ServiceSpec>,
+        cfg: SchedulerConfig,
+    ) -> (ServiceScheduler, Arc<SimClock>, Arc<MockLauncher>, Arc<Mutex<SlurmSim>>) {
+        let slurm = Arc::new(Mutex::new(SlurmSim::new(cluster)));
+        let clock = SimClock::new();
+        let launcher = MockLauncher::new();
+        let sched = ServiceScheduler::new(
+            slurm.clone(),
+            clock.clone(),
+            launcher.clone(),
+            services,
+            cfg,
+            Registry::new(),
+        );
+        (sched, clock, launcher, slurm)
+    }
+
+    fn small_cluster(gpus: u32) -> ClusterSpec {
+        ClusterSpec {
+            nodes: 1,
+            gpus_per_node: gpus,
+            cpus_per_node: 64,
+            mem_gb_per_node: 512,
+            prefix: "n".into(),
         }
     }
 
@@ -498,10 +822,18 @@ mod tests {
         // Kill the node under the instance.
         slurm.lock().unwrap().fail_node(&inst.node, clock.now_us());
         let r = cycle(&sched, &clock);
-        // Old instance gone, replacement submitted.
+        // Old instance gone, replacement submitted within the same run.
         assert!(sched.routing.instances("m").iter().all(|i| i.job_id != inst.job_id));
         assert_eq!(r.submitted.len(), 1);
         assert!(launcher.terminated.lock().unwrap().contains(&inst.job_id));
+        // The dead instance's reserved port is released — unless the
+        // replacement (randomly) drew the same one, nothing may hold it.
+        assert!(
+            !sched.routing.port_in_use(inst.port)
+                || sched.routing.instances("m").iter().any(|i| i.port == inst.port),
+            "node failure leaked reserved port {}",
+            inst.port
+        );
     }
 
     #[test]
@@ -555,10 +887,366 @@ mod tests {
     fn comment_parsing() {
         assert_eq!(
             ServiceScheduler::parse_comment("service=m;port=1234"),
-            Some(("m".into(), 1234))
+            Some(("m".into(), 1234, false))
+        );
+        assert_eq!(
+            ServiceScheduler::parse_comment("service=m;port=9;tier=scavenger"),
+            Some(("m".into(), 9, true))
         );
         assert_eq!(ServiceScheduler::parse_comment("garbage"), None);
         assert_eq!(ServiceScheduler::parse_comment("service=m"), None);
+    }
+
+    #[test]
+    fn scale_down_cancels_pending_first_then_drains_youngest_running() {
+        // 1 node × 4 GPUs, 2-GPU instances: at desired=3 the third job can
+        // only pend — the exact mix the victim ordering is specified for.
+        let (sched, clock, launcher, slurm) =
+            setup_on(small_cluster(4), vec![svc("m", 1, 4)], SchedulerConfig::default());
+        sched.run_once();
+        cycle(&sched, &clock); // oldest starts
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        let oldest = sched.routing.instances("m")[0].job_id;
+
+        let guards: Vec<_> = (0..12).map(|_| sched.demand.begin("m")).collect();
+        for _ in 0..15 {
+            cycle(&sched, &clock);
+            launcher.all_healthy();
+        }
+        let jobs = slurm.lock().unwrap().squeue();
+        let running: Vec<&JobInfo> = jobs
+            .iter()
+            .filter(|j| j.name == "svc-m" && j.state == JobState::Running)
+            .collect();
+        let pending: Vec<&JobInfo> = jobs
+            .iter()
+            .filter(|j| j.name == "svc-m" && j.state == JobState::Pending)
+            .collect();
+        assert_eq!(running.len(), 2, "cluster fits two 2-GPU instances");
+        assert_eq!(pending.len(), 1, "third desired replica can only pend");
+        let pending_id = pending[0].id;
+        let youngest = running
+            .iter()
+            .max_by_key(|j| (j.start_us.unwrap_or(0), j.id))
+            .unwrap()
+            .id;
+        assert_ne!(youngest, oldest);
+
+        // Keep one request in flight on the youngest running instance: the
+        // seed behaviour would have scancelled it mid-request.
+        let inflight = sched.routing.begin_request(youngest);
+
+        // Demand collapses. Victim order: the pending job is cancelled
+        // outright; the youngest running one is drained, NOT killed.
+        drop(guards);
+        let mut cancelled = Vec::new();
+        let mut drained = Vec::new();
+        for _ in 0..13 {
+            let r = cycle(&sched, &clock);
+            cancelled.extend(r.cancelled.clone());
+            drained.extend(r.drained.clone());
+        }
+        assert!(cancelled.contains(&pending_id), "pending victim not cancelled");
+        assert!(drained.contains(&youngest), "running victim not drained");
+        assert!(
+            !drained.contains(&pending_id),
+            "pending victims must be cancelled outright, not drained"
+        );
+        assert!(
+            !cancelled.contains(&youngest),
+            "drained instance was cancelled while a request was in flight"
+        );
+        let pos_cancel = cancelled.iter().position(|&id| id == pending_id).unwrap();
+        assert_eq!(pos_cancel, 0, "pending victim must go first");
+        assert_eq!(
+            slurm.lock().unwrap().job(youngest).unwrap().state,
+            JobState::Running,
+            "in-flight instance killed"
+        );
+        // Draining: no new placements land on it.
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..20 {
+            assert_eq!(sched.routing.pick_least_loaded("m", &mut rng).unwrap().job_id, oldest);
+        }
+        // The request finishes -> the drain completes with a scancel.
+        drop(inflight);
+        let r = cycle(&sched, &clock);
+        assert!(r.cancelled.contains(&youngest), "drain did not complete");
+        assert_eq!(
+            slurm.lock().unwrap().job(youngest).unwrap().state,
+            JobState::Cancelled
+        );
+        assert_eq!(sched.routing.instances("m").len(), 1);
+        assert_eq!(sched.routing.instances("m")[0].job_id, oldest, "oldest survives");
+    }
+
+    #[test]
+    fn walltime_drain_never_kills_inflight_requests() {
+        let mut spec = svc("m", 1, 4);
+        spec.walltime = Duration::from_secs(600);
+        let (sched, clock, launcher, slurm) =
+            setup_on(ClusterSpec::kisski(), vec![spec], SchedulerConfig::default());
+        sched.run_once();
+        cycle(&sched, &clock);
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        let old = sched.routing.instances("m")[0].job_id;
+        let inflight = sched.routing.begin_request(old);
+
+        // Walk to the renew margin: a replacement appears, and once it is
+        // ready the old instance flips to draining — while its in-flight
+        // request keeps it alive.
+        let mut drained = false;
+        for _ in 0..80 {
+            let r = cycle(&sched, &clock);
+            launcher.all_healthy();
+            assert_eq!(
+                slurm.lock().unwrap().job(old).unwrap().state,
+                JobState::Running,
+                "old instance killed while a request was in flight"
+            );
+            if r.drained.contains(&old) {
+                drained = true;
+                break;
+            }
+        }
+        assert!(drained, "old instance never drained before walltime");
+        let insts = sched.routing.instances("m");
+        assert!(insts.iter().any(|i| i.job_id == old && i.draining));
+        let replacement =
+            insts.iter().find(|i| i.job_id != old).expect("replacement missing").job_id;
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..20 {
+            assert_eq!(
+                sched.routing.pick_least_loaded("m", &mut rng).unwrap().job_id,
+                replacement,
+                "draining instance still receiving placements"
+            );
+        }
+        // The request completes inside the drain window: clean scancel,
+        // zero walltime (TIMEOUT) kills.
+        drop(inflight);
+        cycle(&sched, &clock);
+        assert_eq!(slurm.lock().unwrap().job(old).unwrap().state, JobState::Cancelled);
+        assert!(
+            slurm
+                .lock()
+                .unwrap()
+                .squeue()
+                .iter()
+                .all(|j| j.state != JobState::Timeout),
+            "a service job died by walltime expiry despite draining"
+        );
+    }
+
+    #[test]
+    fn same_aged_cohort_drains_paired_with_ready_replacements_only() {
+        // Three replicas provisioned in one burst expire together. At the
+        // renew margin they must NOT cascade-drain against each other —
+        // every drain needs a distinct *ready, non-expiring* replacement.
+        let mut spec = svc("m", 3, 3);
+        spec.walltime = Duration::from_secs(600);
+        let (sched, clock, launcher, slurm) =
+            setup_on(ClusterSpec::kisski(), vec![spec], SchedulerConfig::default());
+        sched.run_once();
+        cycle(&sched, &clock);
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        let originals: BTreeSet<JobId> =
+            sched.routing.instances("m").iter().map(|i| i.job_id).collect();
+        assert_eq!(originals.len(), 3);
+        assert_eq!(sched.routing.routable_instances("m").len(), 3);
+
+        // Walk into the renew margin while replacements stay cold (no
+        // all_healthy): renewals are submitted but nothing may drain —
+        // the old cohort is still the only serving capacity.
+        let mut renewed = false;
+        for _ in 0..80 {
+            let r = cycle(&sched, &clock);
+            renewed |= !r.renewed.is_empty();
+            assert!(
+                r.drained.is_empty(),
+                "cohort cascade-drained with no ready replacement: {r:?}"
+            );
+            assert_eq!(sched.routing.routable_instances("m").len(), 3);
+        }
+        assert!(renewed, "renewals never submitted");
+
+        // Replacements become ready: the originals drain (paired) and,
+        // idle, are cancelled — capacity never dips below 3.
+        for _ in 0..6 {
+            launcher.all_healthy();
+            cycle(&sched, &clock);
+            assert!(sched.routing.routable_instances("m").len() >= 3);
+        }
+        let survivors: Vec<JobId> =
+            sched.routing.routable_instances("m").iter().map(|i| i.job_id).collect();
+        assert_eq!(survivors.len(), 3);
+        assert!(survivors.iter().all(|id| !originals.contains(id)), "old cohort lingers");
+        for id in &originals {
+            assert_eq!(
+                slurm.lock().unwrap().job(*id).unwrap().state,
+                JobState::Cancelled,
+                "original replica not cleanly cancelled"
+            );
+        }
+    }
+
+    #[test]
+    fn scavengers_serve_demand_overflow_from_schedule_gaps() {
+        // 1 node × 8 GPUs: one guaranteed 2-GPU replica leaves a 6-GPU gap.
+        let mut spec = svc("m", 1, 1);
+        spec.max_scavengers = 2;
+        let (sched, clock, launcher, slurm) =
+            setup_on(small_cluster(8), vec![spec], SchedulerConfig::default());
+        sched.run_once();
+        cycle(&sched, &clock);
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        assert_eq!(sched.routing.routable_instances("m").len(), 1);
+
+        // Demand for 3 replicas; the guaranteed tier is capped at 1 — the
+        // overflow is served by scavengers squeezed into the gap.
+        let _guards: Vec<_> = (0..12).map(|_| sched.demand.begin("m")).collect();
+        let mut scavenged = Vec::new();
+        for _ in 0..15 {
+            let r = cycle(&sched, &clock);
+            launcher.all_healthy();
+            scavenged.extend(r.scavenged.clone());
+        }
+        assert_eq!(scavenged.len(), 2, "scavenger submissions");
+        let insts = sched.routing.routable_instances("m");
+        assert_eq!(insts.len(), 3, "guaranteed + 2 scavengers all serving");
+        assert_eq!(insts.iter().filter(|i| i.scavenger).count(), 2);
+        // Scavenger jobs carry the inverted Slurm posture: below-batch
+        // priority, short walltime, the tier tag.
+        let cfg = SchedulerConfig::default();
+        for id in &scavenged {
+            let j = slurm.lock().unwrap().job(*id).unwrap();
+            assert_eq!(j.priority, cfg.scavenger_priority);
+            assert!(j.comment.contains("tier=scavenger"), "{}", j.comment);
+        }
+        // The tier never exceeds its cap even under far higher demand.
+        let _more: Vec<_> = (0..60).map(|_| sched.demand.begin("m")).collect();
+        for _ in 0..15 {
+            let r = cycle(&sched, &clock);
+            launcher.all_healthy();
+            assert!(r.scavenged.is_empty(), "scavenger cap exceeded");
+        }
+    }
+
+    #[test]
+    fn scavenger_submission_respects_backfill_window() {
+        // 1 node × 8 GPUs. Guaranteed replica holds 2; a 4-GPU batch job
+        // runs for a while; a blocked 6-GPU batch job reserves a shadow
+        // right after it — the 2 free GPUs are NOT a gap a 900 s scavenger
+        // fits, so none may be submitted.
+        let mut spec = svc("m", 1, 1);
+        spec.max_scavengers = 2;
+        let (sched, clock, launcher, slurm) =
+            setup_on(small_cluster(8), vec![spec], SchedulerConfig::default());
+        sched.run_once();
+        cycle(&sched, &clock);
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        slurm.lock().unwrap().sbatch(
+            crate::slurm::JobSpec {
+                name: "batch-running".into(),
+                gpus_per_node: 4,
+                time_limit: Duration::from_secs(500),
+                duration: Some(Duration::from_secs(500)),
+                ..Default::default()
+            },
+            clock.now_us(),
+        );
+        cycle(&sched, &clock); // the 4-GPU batch job starts: 2 GPUs left
+        slurm.lock().unwrap().sbatch(
+            crate::slurm::JobSpec {
+                name: "batch-blocked".into(),
+                gpus_per_node: 6,
+                priority: 1,
+                time_limit: Duration::from_secs(500),
+                duration: Some(Duration::from_secs(500)),
+                ..Default::default()
+            },
+            clock.now_us(),
+        );
+        let _guards: Vec<_> = (0..12).map(|_| sched.demand.begin("m")).collect();
+        let mut blocked_id = 0;
+        for _ in 0..15 {
+            let r = cycle(&sched, &clock);
+            launcher.all_healthy();
+            assert!(
+                r.scavenged.is_empty(),
+                "scavenger submitted into a window it cannot fit"
+            );
+            blocked_id = slurm
+                .lock()
+                .unwrap()
+                .squeue()
+                .iter()
+                .find(|j| j.name == "batch-blocked")
+                .unwrap()
+                .id;
+        }
+        // The blocked job goes away -> the window opens -> exactly one
+        // scavenger fits the 2 remaining free GPUs.
+        slurm.lock().unwrap().scancel(blocked_id, clock.now_us());
+        let r = cycle(&sched, &clock);
+        assert_eq!(r.scavenged.len(), 1, "gap opened but no scavenger followed");
+    }
+
+    #[test]
+    fn preemption_notice_drains_scavengers_and_batch_reclaims_gpus() {
+        let mut spec = svc("m", 1, 1);
+        spec.max_scavengers = 2;
+        let (sched, clock, launcher, slurm) =
+            setup_on(small_cluster(8), vec![spec], SchedulerConfig::default());
+        slurm.lock().unwrap().set_preempt_grace(Duration::from_secs(60));
+        sched.run_once();
+        cycle(&sched, &clock);
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        let _guards: Vec<_> = (0..12).map(|_| sched.demand.begin("m")).collect();
+        for _ in 0..15 {
+            cycle(&sched, &clock);
+            launcher.all_healthy();
+        }
+        let scavs: Vec<JobId> = sched
+            .routing
+            .instances("m")
+            .iter()
+            .filter(|i| i.scavenger)
+            .map(|i| i.job_id)
+            .collect();
+        assert_eq!(scavs.len(), 2);
+
+        // Ordinary batch work arrives needing the scavengers' GPUs: the
+        // sim serves notices; the scheduler drains; idle scavengers are
+        // scancelled immediately; the batch job starts next tick.
+        let batch = slurm.lock().unwrap().sbatch(
+            crate::slurm::JobSpec {
+                name: "batch-reclaim".into(),
+                gpus_per_node: 6,
+                time_limit: Duration::from_secs(500),
+                duration: Some(Duration::from_secs(500)),
+                ..Default::default()
+            },
+            clock.now_us(),
+        );
+        let r = cycle(&sched, &clock);
+        assert_eq!(r.preempted.len(), 2, "both scavengers noticed: {r:?}");
+        assert!(scavs.iter().all(|id| r.preempted.contains(id)));
+        // Nothing in flight -> drained and scancelled in the same run.
+        assert!(scavs.iter().all(|id| r.cancelled.contains(id)));
+        cycle(&sched, &clock);
+        assert_eq!(
+            slurm.lock().unwrap().job(batch).unwrap().state,
+            JobState::Running,
+            "batch job did not reclaim the scavenged GPUs"
+        );
+        assert!(sched.routing.instances("m").iter().all(|i| !i.scavenger));
     }
 
     #[test]

@@ -30,6 +30,14 @@ pub struct Instance {
     pub addr: String,
     /// Set once the readiness probe has seen a healthy /health.
     pub ready: bool,
+    /// Graceful-drain flag: a draining instance keeps serving its in-flight
+    /// requests but receives no new placements (`pick`/`pick_least_loaded`
+    /// skip it). Set by the scheduler near walltime, on scale-down, and on
+    /// a preemption notice; cleared only by removal.
+    pub draining: bool,
+    /// Scavenger-tier replica: a low-priority, short-walltime, preemptible
+    /// job squeezed into a schedule gap (vs the guaranteed tier).
+    pub scavenger: bool,
     pub started_us: u64,
 }
 
@@ -87,6 +95,19 @@ impl RoutingTable {
         }
     }
 
+    /// Flip an instance into graceful drain: it finishes what it has but
+    /// gets nothing new. Idempotent.
+    pub fn mark_draining(&self, job_id: JobId) {
+        let mut t = self.inner.lock().unwrap();
+        for v in t.values_mut() {
+            for i in v.iter_mut() {
+                if i.job_id == job_id {
+                    i.draining = true;
+                }
+            }
+        }
+    }
+
     /// All instances of a service (ready or not).
     pub fn instances(&self, service: &str) -> Vec<Instance> {
         self.inner.lock().unwrap().get(service).cloned().unwrap_or_default()
@@ -96,13 +117,18 @@ impl RoutingTable {
         self.instances(service).into_iter().filter(|i| i.ready).collect()
     }
 
+    /// Instances new requests may be placed on: ready and not draining.
+    pub fn routable_instances(&self, service: &str) -> Vec<Instance> {
+        self.instances(service).into_iter().filter(|i| i.ready && !i.draining).collect()
+    }
+
     pub fn services(&self) -> Vec<String> {
         self.inner.lock().unwrap().keys().cloned().collect()
     }
 
-    /// Random load balancing over ready instances (§5.6).
+    /// Random load balancing over routable instances (§5.6).
     pub fn pick(&self, service: &str, rng: &mut Rng) -> Option<Instance> {
-        let ready = self.ready_instances(service);
+        let ready = self.routable_instances(service);
         rng.choose(&ready).cloned()
     }
 
@@ -123,10 +149,10 @@ impl RoutingTable {
             .unwrap_or(0)
     }
 
-    /// Least-loaded placement over ready instances; the paper's random
+    /// Least-loaded placement over routable instances; the paper's random
     /// balancing survives as the tie-break among equally loaded ones.
     pub fn pick_least_loaded(&self, service: &str, rng: &mut Rng) -> Option<Instance> {
-        let ready = self.ready_instances(service);
+        let ready = self.routable_instances(service);
         if ready.is_empty() {
             return None;
         }
@@ -246,6 +272,8 @@ mod tests {
             port,
             addr: format!("127.0.0.1:{port}"),
             ready,
+            draining: false,
+            scavenger: false,
             started_us: 0,
         }
     }
@@ -313,6 +341,35 @@ mod tests {
         let _g = t.begin_request(2);
         t.remove(2);
         assert_eq!(t.instance_load(2), 0);
+    }
+
+    #[test]
+    fn draining_instances_receive_no_new_placements() {
+        let t = RoutingTable::new();
+        t.upsert(inst(1, "m", 20001, true));
+        t.upsert(inst(2, "m", 20002, true));
+        let mut rng = Rng::new(9);
+        t.mark_draining(1);
+        // Still listed (it finishes its in-flight work)…
+        assert_eq!(t.instances("m").len(), 2);
+        assert_eq!(t.ready_instances("m").len(), 2);
+        // …but never picked, by either policy.
+        assert_eq!(t.routable_instances("m").len(), 1);
+        for _ in 0..50 {
+            assert_eq!(t.pick("m", &mut rng).unwrap().job_id, 2);
+            assert_eq!(t.pick_least_loaded("m", &mut rng).unwrap().job_id, 2);
+        }
+        // Draining beats load: instance 2 is busier yet still wins.
+        let _g = t.begin_request(2);
+        assert_eq!(t.pick_least_loaded("m", &mut rng).unwrap().job_id, 2);
+        // Idempotent; draining everything leaves nothing routable.
+        t.mark_draining(1);
+        t.mark_draining(2);
+        assert!(t.pick("m", &mut rng).is_none());
+        assert!(t.pick_least_loaded("m", &mut rng).is_none());
+        // Removal forgets the drained instance entirely.
+        t.remove(1);
+        assert_eq!(t.instances("m").len(), 1);
     }
 
     #[test]

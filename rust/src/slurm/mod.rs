@@ -14,7 +14,7 @@
 
 mod sim;
 
-pub use sim::{JobUpdate, SlurmSim};
+pub use sim::{GapReport, JobUpdate, SlurmSim};
 
 use std::time::Duration;
 
@@ -43,6 +43,11 @@ pub struct JobSpec {
     /// If set, the job self-completes after this duration (batch work);
     /// service jobs run until walltime or scancel.
     pub duration: Option<Duration>,
+    /// Preemptible (Slurm QOS `PreemptMode=REQUEUE/CANCEL`): a
+    /// higher-priority job blocked on resources may reclaim this job's
+    /// allocation after a grace period. Scavenger service replicas opt in;
+    /// guaranteed replicas and ordinary batch never do.
+    pub preemptible: bool,
     /// Opaque payload (the service job script's arguments; the scheduler
     /// stores "model=...;port=..." here).
     pub comment: String,
@@ -60,6 +65,7 @@ impl Default for JobSpec {
             time_limit: Duration::from_secs(3600),
             priority: 0,
             duration: None,
+            preemptible: false,
             comment: String::new(),
         }
     }
@@ -74,6 +80,7 @@ pub enum JobState {
     Cancelled,
     Timeout,
     NodeFail,
+    Preempted,
 }
 
 impl JobState {
@@ -89,6 +96,7 @@ impl JobState {
             JobState::Cancelled => "CANCELLED",
             JobState::Timeout => "TIMEOUT",
             JobState::NodeFail => "NODE_FAIL",
+            JobState::Preempted => "PREEMPTED",
         }
     }
 }
@@ -116,6 +124,10 @@ pub struct JobInfo {
     pub end_us: Option<u64>,
     pub priority: i64,
     pub gpus_per_node: u32,
+    /// The walltime the job was *submitted* with — a later config change
+    /// cannot alter a queued/running job's limit, so expiry projections
+    /// must use this, not the current service config.
+    pub time_limit: Duration,
     pub comment: String,
 }
 

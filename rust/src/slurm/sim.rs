@@ -57,16 +57,29 @@ struct Job {
     submit_us: u64,
     start_us: Option<u64>,
     end_us: Option<u64>,
+    /// Set when the job received a preemption notice: it will be killed
+    /// with `JobState::Preempted` at this time unless it exits first.
+    preempt_at_us: Option<u64>,
 }
 
 impl Job {
-    /// Projected end for a running job (self-completion or walltime kill).
-    fn projected_end_us(&self) -> u64 {
+    /// End by self-completion or walltime kill, ignoring preemption.
+    fn natural_end_us(&self) -> u64 {
         let start = self.start_us.unwrap_or(0);
         let walltime = self.spec.time_limit.as_micros() as u64;
         match self.spec.duration {
             Some(d) => start + (d.as_micros() as u64).min(walltime),
             None => start + walltime,
+        }
+    }
+
+    /// Projected end for a running job (self-completion, walltime kill, or
+    /// the preemption-grace kill, whichever comes first).
+    fn projected_end_us(&self) -> u64 {
+        let natural = self.natural_end_us();
+        match self.preempt_at_us {
+            Some(p) => natural.min(p),
+            None => natural,
         }
     }
 }
@@ -77,6 +90,30 @@ impl Job {
 pub enum JobUpdate {
     Started { id: JobId, nodes: Vec<String> },
     Finished { id: JobId, state: JobState },
+    /// Preemption *notice*: a higher-priority job blocked on resources has
+    /// claimed this preemptible job's allocation. The job keeps running
+    /// until `kill_at_us` (the grace window, Slurm's `GraceTime`) and is
+    /// then finished with `JobState::Preempted` — unless it exits or is
+    /// scancelled first. The service scheduler uses the window to drain
+    /// the replica instead of dying mid-request.
+    Preempted { id: JobId, kill_at_us: u64 },
+}
+
+/// Schedule-gap report: what a scavenger-replica scheduler needs to know
+/// before it opportunistically claims idle GPUs (the paper's "gaps in the
+/// schedule created by Slurm", §1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GapReport {
+    /// Free GPUs on up nodes right now.
+    pub free_gpus: u32,
+    /// Pending jobs currently blocked on resources — the batch demand a
+    /// scavenger must not delay.
+    pub pending_blocked: u32,
+    /// Width of the backfill window: microseconds until the earliest
+    /// feasible start of the highest-priority blocked job (its shadow).
+    /// `u64::MAX` when nothing is blocked — the gap is unbounded. A
+    /// scavenger job fits the gap iff its walltime is below this.
+    pub gap_us: u64,
 }
 
 /// The simulated cluster.
@@ -87,6 +124,8 @@ pub struct SlurmSim {
     next_id: JobId,
     events: Vec<JobUpdate>,
     accounts: BTreeMap<String, AccountUsage>,
+    /// Grace window between a preemption notice and the kill (GraceTime).
+    preempt_grace: std::time::Duration,
 }
 
 impl SlurmSim {
@@ -104,7 +143,20 @@ impl SlurmSim {
                 running: Vec::new(),
             })
             .collect();
-        SlurmSim { spec, nodes, jobs: BTreeMap::new(), next_id: 1000, events: Vec::new(), accounts: BTreeMap::new() }
+        SlurmSim {
+            spec,
+            nodes,
+            jobs: BTreeMap::new(),
+            next_id: 1000,
+            events: Vec::new(),
+            accounts: BTreeMap::new(),
+            preempt_grace: std::time::Duration::from_secs(30),
+        }
+    }
+
+    /// Configure the preemption grace window (Slurm's `GraceTime`).
+    pub fn set_preempt_grace(&mut self, grace: std::time::Duration) {
+        self.preempt_grace = grace;
     }
 
     pub fn cluster_spec(&self) -> &ClusterSpec {
@@ -126,6 +178,7 @@ impl SlurmSim {
                 submit_us: now_us,
                 start_us: None,
                 end_us: None,
+                preempt_at_us: None,
             },
         );
         id
@@ -164,6 +217,7 @@ impl SlurmSim {
             end_us: j.end_us,
             priority: j.spec.priority,
             gpus_per_node: j.spec.gpus_per_node,
+            time_limit: j.spec.time_limit,
             comment: j.spec.comment.clone(),
         }
     }
@@ -223,19 +277,18 @@ impl SlurmSim {
     /// Advance the cluster to `now_us`: complete/timeout running jobs, then
     /// run the scheduling pass (priority order + conservative backfill).
     pub fn tick(&mut self, now_us: u64) {
-        // Phase 1: completions.
+        // Phase 1: completions (self-completion, walltime kill, or the
+        // preemption-grace kill — whichever bound projected the end).
         let done: Vec<(JobId, JobState)> = self
             .jobs
             .iter()
             .filter(|(_, j)| j.state == JobState::Running)
             .filter(|(_, j)| j.projected_end_us() <= now_us)
             .map(|(&id, j)| {
-                let walltime_end =
-                    j.start_us.unwrap_or(0) + j.spec.time_limit.as_micros() as u64;
-                let state = match j.spec.duration {
-                    Some(_) if j.projected_end_us() < walltime_end => JobState::Completed,
-                    Some(_) => JobState::Completed, // duration == walltime: completed
-                    None => JobState::Timeout,
+                let state = match j.preempt_at_us {
+                    Some(p) if p < j.natural_end_us() => JobState::Preempted,
+                    _ if j.spec.duration.is_some() => JobState::Completed,
+                    _ => JobState::Timeout,
                 };
                 (id, state)
             })
@@ -285,8 +338,32 @@ impl SlurmSim {
                     }
                 }
                 None if shadow_start.is_none() => {
-                    // Head blocked job: reserve its earliest feasible start.
-                    shadow_start = Some(self.earliest_start(&spec, now_us));
+                    // Head blocked job. If it would otherwise wait past the
+                    // preemption-grace window and strictly lower-priority
+                    // preemptible jobs hold the space it needs, serve them
+                    // notices (they die at the grace deadline; the shadow
+                    // then shrinks to that deadline).
+                    let grace_end = now_us + self.preempt_grace.as_micros() as u64;
+                    let mut earliest = self.earliest_start(&spec, now_us);
+                    if earliest > grace_end {
+                        let mut noticed = false;
+                        for victim in self.preemption_victims(&spec) {
+                            let job = self.jobs.get_mut(&victim).unwrap();
+                            if job.preempt_at_us.is_none() {
+                                job.preempt_at_us = Some(grace_end);
+                                self.events.push(JobUpdate::Preempted {
+                                    id: victim,
+                                    kill_at_us: grace_end,
+                                });
+                                noticed = true;
+                            }
+                        }
+                        if noticed {
+                            // Fresh notices shrink the shadow.
+                            earliest = self.earliest_start(&spec, now_us);
+                        }
+                    }
+                    shadow_start = Some(earliest);
                     self.jobs.get_mut(&id).unwrap().reason = PendReason::Resources;
                 }
                 None => {
@@ -339,6 +416,113 @@ impl SlurmSim {
         }
         // Can never fit (cluster too small or nodes down): far future.
         u64::MAX / 2
+    }
+
+    /// Minimal set of running preemptible jobs with priority strictly below
+    /// `spec.priority` whose removal lets `spec` start. Lowest-priority,
+    /// youngest-first victims; empty when no subset achieves a fit.
+    fn preemption_victims(&self, spec: &JobSpec) -> Vec<JobId> {
+        let mut scratch: Vec<Node> = self.nodes.clone();
+        let fits = |nodes: &[Node]| {
+            nodes.iter().filter(|n| n.fits(spec)).count() >= spec.nodes as usize
+        };
+        let mut candidates: Vec<(JobId, &Job)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| {
+                j.state == JobState::Running
+                    && j.spec.preemptible
+                    && j.spec.priority < spec.priority
+            })
+            .map(|(&id, j)| (id, j))
+            .collect();
+        candidates.sort_by_key(|(id, j)| {
+            (j.spec.priority, std::cmp::Reverse(j.start_us.unwrap_or(0)), *id)
+        });
+        let mut chosen: Vec<(JobId, &Job)> = Vec::new();
+        for (id, j) in candidates {
+            for &ni in &j.node_idx {
+                scratch[ni].release(&j.spec, id);
+            }
+            chosen.push((id, j));
+            if !fits(&scratch) {
+                continue;
+            }
+            // The greedy prefix achieves a fit, but may include jobs on
+            // nodes irrelevant to it. Prune: tentatively give each one its
+            // allocation back — whoever the fit survives without is spared.
+            let mut victims = Vec::new();
+            for (vid, vj) in &chosen {
+                for &ni in &vj.node_idx {
+                    scratch[ni].alloc(&vj.spec, *vid);
+                }
+                if fits(&scratch) {
+                    continue; // not actually needed
+                }
+                for &ni in &vj.node_idx {
+                    scratch[ni].release(&vj.spec, *vid);
+                }
+                victims.push(*vid);
+            }
+            return victims;
+        }
+        Vec::new()
+    }
+
+    /// How many more jobs of `spec`'s shape (single- or multi-node) could
+    /// start right now, first-fit on a scratch copy — the placement-aware
+    /// complement to `free_gpus` (which ignores per-node fragmentation and
+    /// CPU/memory). Capped at `limit`.
+    pub fn placeable_count(&self, spec: &JobSpec, limit: u32) -> u32 {
+        let mut scratch: Vec<Node> = self.nodes.clone();
+        let mut count = 0;
+        while count < limit {
+            let mut chosen = Vec::new();
+            for (i, n) in scratch.iter().enumerate() {
+                if n.fits(spec) {
+                    chosen.push(i);
+                    if chosen.len() == spec.nodes as usize {
+                        break;
+                    }
+                }
+            }
+            if chosen.len() < spec.nodes as usize {
+                break;
+            }
+            for i in chosen {
+                scratch[i].alloc(spec, 0);
+            }
+            count += 1;
+        }
+        count
+    }
+
+    /// Report the current schedule gap: idle GPU capacity, blocked batch
+    /// demand, and the conservative-backfill window a scavenger job would
+    /// have to fit (time until the head blocked job's shadow start).
+    pub fn gap_report(&self, now_us: u64) -> GapReport {
+        let mut pending: Vec<(JobId, &Job)> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.state == JobState::Pending)
+            .map(|(&id, j)| (id, j))
+            .collect();
+        pending.sort_by_key(|(id, j)| (-j.spec.priority, *id));
+        let mut pending_blocked = 0u32;
+        let mut shadow: Option<u64> = None;
+        for (_, j) in &pending {
+            if self.find_placement(&j.spec).is_none() {
+                pending_blocked += 1;
+                if shadow.is_none() {
+                    shadow = Some(self.earliest_start(&j.spec, now_us));
+                }
+            }
+        }
+        GapReport {
+            free_gpus: self.free_gpus(),
+            pending_blocked,
+            gap_us: shadow.map(|s| s.saturating_sub(now_us)).unwrap_or(u64::MAX),
+        }
     }
 
     fn start(&mut self, id: JobId, node_idx: Vec<usize>, now_us: u64) {
@@ -645,6 +829,203 @@ mod tests {
     }
 
     #[test]
+    fn preemption_notice_then_grace_kill() {
+        // 1 node, 4 GPUs. A preemptible low-priority job holds the node; a
+        // higher-priority job arrives and cannot start for a long time —
+        // the holder gets a notice, keeps running through the grace
+        // window, dies PREEMPTED, and the high-priority job starts.
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        sim.set_preempt_grace(secs(30));
+        let scav = sim.sbatch(JobSpec { preemptible: true, ..gpu_job(4, -10, None) }, 0);
+        sim.tick(0);
+        assert_eq!(sim.job(scav).unwrap().state, JobState::Running);
+
+        let batch = sim.sbatch(gpu_job(4, 0, Some(10)), 1_000_000);
+        sim.tick(1_000_000);
+        let ev = sim.drain_events();
+        assert!(
+            ev.iter().any(|e| matches!(
+                e,
+                JobUpdate::Preempted { id, kill_at_us: 31_000_000 } if *id == scav
+            )),
+            "no preemption notice: {ev:?}"
+        );
+        // Notice, not a kill: the victim runs through the grace window.
+        assert_eq!(sim.job(scav).unwrap().state, JobState::Running);
+        sim.tick(30_999_999);
+        assert_eq!(sim.job(scav).unwrap().state, JobState::Running);
+        assert_eq!(sim.job(batch).unwrap().state, JobState::Pending);
+        // Grace expires: victim dies PREEMPTED, claimant starts.
+        sim.tick(31_000_000);
+        assert_eq!(sim.job(scav).unwrap().state, JobState::Preempted);
+        assert_eq!(sim.job(batch).unwrap().state, JobState::Running);
+        // Exactly one notice was issued across all those ticks.
+        let ev = sim.drain_events();
+        assert_eq!(
+            ev.iter().filter(|e| matches!(e, JobUpdate::Preempted { .. })).count(),
+            0,
+            "notice re-issued: {ev:?}"
+        );
+        sim.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn no_preemption_for_equal_priority_or_non_preemptible() {
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        // Non-preemptible holder: never preempted.
+        let holder = sim.sbatch(gpu_job(4, 0, None), 0);
+        sim.tick(0);
+        sim.sbatch(gpu_job(4, 5, None), 1_000_000);
+        sim.tick(1_000_000);
+        assert!(!sim
+            .drain_events()
+            .iter()
+            .any(|e| matches!(e, JobUpdate::Preempted { .. })));
+        assert_eq!(sim.job(holder).unwrap().state, JobState::Running);
+        // Preemptible holder at the SAME priority as the claimant: no
+        // preemption either (strictly-lower-priority rule).
+        sim.scancel(holder, 2_000_000);
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        let peer = sim.sbatch(JobSpec { preemptible: true, ..gpu_job(4, 3, None) }, 0);
+        sim.tick(0);
+        sim.sbatch(gpu_job(4, 3, None), 1_000_000);
+        sim.tick(1_000_000);
+        assert!(!sim
+            .drain_events()
+            .iter()
+            .any(|e| matches!(e, JobUpdate::Preempted { .. })));
+        assert_eq!(sim.job(peer).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn no_preemption_when_natural_completion_is_sooner() {
+        // The preemptible holder finishes inside the grace window anyway:
+        // preempting it would buy nothing, so no notice is served.
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        sim.set_preempt_grace(secs(30));
+        let short = sim.sbatch(
+            JobSpec { preemptible: true, time_limit: secs(20), ..gpu_job(4, -10, Some(20)) },
+            0,
+        );
+        sim.tick(0);
+        let batch = sim.sbatch(gpu_job(4, 0, Some(10)), 1_000_000);
+        sim.tick(1_000_000);
+        assert!(!sim
+            .drain_events()
+            .iter()
+            .any(|e| matches!(e, JobUpdate::Preempted { .. })));
+        sim.tick(20_000_000);
+        assert_eq!(sim.job(short).unwrap().state, JobState::Completed);
+        assert_eq!(sim.job(batch).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn scancel_during_grace_frees_before_deadline() {
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        sim.set_preempt_grace(secs(30));
+        let scav = sim.sbatch(JobSpec { preemptible: true, ..gpu_job(4, -10, None) }, 0);
+        sim.tick(0);
+        let batch = sim.sbatch(gpu_job(4, 0, None), 1_000_000);
+        sim.tick(1_000_000);
+        // The drained replica exits early (the scheduler's scancel): the
+        // claimant starts well before the grace deadline.
+        assert!(sim.scancel(scav, 5_000_000));
+        sim.tick(5_000_000);
+        assert_eq!(sim.job(scav).unwrap().state, JobState::Cancelled);
+        assert_eq!(sim.job(batch).unwrap().state, JobState::Running);
+        sim.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn placeable_count_respects_per_node_fragmentation() {
+        // 2 nodes × 4 GPUs, 3 busy on each: 2 GPUs free cluster-wide but
+        // no node can host a 2-GPU job.
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 2,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        sim.sbatch(gpu_job(3, 0, None), 0);
+        sim.sbatch(gpu_job(3, 0, None), 0);
+        sim.tick(0);
+        assert_eq!(sim.free_gpus(), 2);
+        assert_eq!(sim.placeable_count(&gpu_job(2, 0, None), 8), 0, "fragmented");
+        assert_eq!(sim.placeable_count(&gpu_job(1, 0, None), 8), 2);
+        assert_eq!(sim.placeable_count(&gpu_job(1, 0, None), 1), 1, "capped at limit");
+        // CPU-bound shape: plenty of GPUs but no cores left.
+        let cpu_hog = JobSpec { cpus_per_node: 8, ..gpu_job(0, 0, None) };
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 8,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        sim.sbatch(cpu_hog.clone(), 0);
+        sim.tick(0);
+        assert_eq!(sim.free_gpus(), 4);
+        assert_eq!(sim.placeable_count(&JobSpec { cpus_per_node: 2, ..gpu_job(1, 0, None) }, 8), 0);
+    }
+
+    #[test]
+    fn gap_report_reflects_free_capacity_and_backfill_window() {
+        // 1 node, 4 GPUs: a 2-GPU job runs until t=100s; the cluster has
+        // 2 free GPUs and no blocked demand -> unbounded gap.
+        let mut sim = SlurmSim::new(ClusterSpec {
+            nodes: 1,
+            gpus_per_node: 4,
+            cpus_per_node: 16,
+            mem_gb_per_node: 64,
+            prefix: "n".into(),
+        });
+        sim.sbatch(JobSpec { time_limit: secs(100), ..gpu_job(2, 0, Some(100)) }, 0);
+        sim.tick(0);
+        let g = sim.gap_report(0);
+        assert_eq!(g.free_gpus, 2);
+        assert_eq!(g.pending_blocked, 0);
+        assert_eq!(g.gap_us, u64::MAX);
+        // A blocked 4-GPU job bounds the gap at the running job's end.
+        sim.sbatch(gpu_job(4, 5, Some(10)), 1_000_000);
+        sim.tick(1_000_000);
+        let g = sim.gap_report(1_000_000);
+        assert_eq!(g.free_gpus, 2);
+        assert_eq!(g.pending_blocked, 1);
+        assert_eq!(g.gap_us, 99_000_000, "window ends at the 2-GPU job's end");
+    }
+
+    #[test]
     fn prop_invariants_under_random_ops() {
         run_prop("slurm_invariants", 0x51_0e_a1, 40, |rng| {
             let mut sim = SlurmSim::new(ClusterSpec {
@@ -671,6 +1052,7 @@ mod tests {
                                     None
                                 },
                                 time_limit: secs(1 + rng.below(200)),
+                                preemptible: rng.chance(0.2),
                                 ..Default::default()
                             },
                             now,

@@ -71,6 +71,8 @@ pub struct StackConfig {
     /// the prefill-everything baseline the multi-turn bench measures
     /// against.
     pub prefix_cache: bool,
+    /// Scheduler tuning (renew margin, scavenger tier, drain grace).
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for StackConfig {
@@ -87,6 +89,7 @@ impl Default for StackConfig {
             abort_on_disconnect: true,
             prefill_chunk: crate::llmserver::EngineConfig::default().prefill_chunk,
             prefix_cache: true,
+            scheduler: SchedulerConfig::default(),
         }
     }
 }
@@ -133,7 +136,7 @@ impl ChatAiStack {
             clock,
             launcher,
             cfg.services.clone(),
-            SchedulerConfig::default(),
+            cfg.scheduler.clone(),
             metrics.clone(),
         ));
         // §7.1.4 E2EE platform key + §7.1.3 cold-start queueing are on by
@@ -192,6 +195,10 @@ impl ChatAiStack {
         for name in &model_names {
             // The proxy advertises capacity = connections × channels; with
             // several proxy upstreams the gateway balances by that weight.
+            // One retry: a request that dies because its instance was
+            // preempted or walltime-killed re-enters the interface, which
+            // picks a healthy instance — duplicating at worst some
+            // inference compute, never a side effect.
             routes.push(
                 Route::new(
                     name,
@@ -199,11 +206,15 @@ impl ChatAiStack {
                     vec![proxy_http.url()],
                     &format!("/infer/{name}"),
                 )
-                .with_weights(vec![proxy.capacity()]),
+                .with_weights(vec![proxy.capacity()])
+                .with_retries(1),
             );
         }
         if let Some(ext) = &external {
-            // §5.8: strict rate limit + group restriction on the paid route.
+            // §5.8: strict rate limit + group restriction on the paid
+            // route — and NO retries: a transport error after the paid
+            // provider accepted the POST must not double-bill a
+            // generation.
             routes.push(
                 Route::new("gpt-4", "/v1/m/gpt-4/", vec![ext.url()], "/v1/chat/completions")
                     .with_rate_limit(50.0)

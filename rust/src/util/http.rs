@@ -593,7 +593,7 @@ pub fn request_stream_ctl(
     // Thin wrapper over the coalescing reader: a delivered "chunk" may
     // carry several already-arrived transfer frames back to back, which
     // every caller (SSE parsing, byte pumps) is agnostic to.
-    request_stream_coalesced(method, url, headers, body, |batch| on_chunk(batch))
+    request_stream_coalesced(method, url, headers, body, |_status, batch| on_chunk(batch))
         .map(|(status, aborted, _saved)| (status, aborted))
 }
 
@@ -604,6 +604,10 @@ pub fn request_stream_ctl(
 /// one per frame — the streaming-overhead fix the ISSUE's STREAM reference
 /// batches for.
 ///
+/// The callback also receives the response status (known before the first
+/// batch), so a caller can decide to abort-and-retry an upstream that
+/// answered 5xx without forwarding its error body downstream.
+///
 /// Returns `(status, aborted, frames_saved)`: `frames_saved` counts frames
 /// that rode an earlier frame's batch (total frames = callbacks + saved).
 pub fn request_stream_coalesced(
@@ -611,7 +615,7 @@ pub fn request_stream_coalesced(
     url: &str,
     headers: &[(&str, &str)],
     body: &[u8],
-    mut on_batch: impl FnMut(&[u8]) -> bool,
+    mut on_batch: impl FnMut(u16, &[u8]) -> bool,
 ) -> Result<(u16, bool, u64)> {
     let (addr, path) = split_url(url)?;
     let stream = TcpStream::connect(&addr)?;
@@ -649,7 +653,7 @@ pub fn request_stream_coalesced(
                 batch.extend_from_slice(&extra);
                 saved += 1;
             }
-            if !on_batch(&batch) {
+            if !on_batch(status, &batch) {
                 let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
                 return Ok((status, true, saved));
             }
@@ -661,7 +665,7 @@ pub fn request_stream_coalesced(
         let len: usize = len.parse()?;
         let mut buf = vec![0u8; len];
         reader.read_exact(&mut buf)?;
-        if !on_batch(&buf) {
+        if !on_batch(status, &buf) {
             let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
             return Ok((status, true, saved));
         }
@@ -970,7 +974,8 @@ mod tests {
             &format!("{}/s", server.url()),
             &[],
             &[],
-            |batch| {
+            |status, batch| {
+                assert_eq!(status, 200);
                 batches += 1;
                 events.extend(parser.push(batch));
                 if batches == 1 {
@@ -1013,7 +1018,7 @@ mod tests {
             &format!("{}/s", server.url()),
             &[],
             &[],
-            |_| {
+            |_, _| {
                 seen += 1;
                 seen < 3
             },

@@ -345,6 +345,67 @@ fn mid_stream_disconnect_frees_engine_slot_across_all_hops() {
 }
 
 #[test]
+fn node_failure_recovers_end_to_end() {
+    // §7.1.1: a GPU node dies under the only instance. The scheduler must
+    // observe NODE_FAIL on its next keepalive tick, drop the instance from
+    // the routing table, resubmit a replacement, and release the dead
+    // instance's reserved port — and the service must come back without
+    // operator action.
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim("intel-neural-7b", 0.0)],
+        with_external: false,
+        ..Default::default()
+    })
+    .expect("stack start");
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(15)).unwrap();
+    let inst = stack.scheduler.routing.ready_instances("intel-neural-7b")[0].clone();
+    let (status, _) = stack.chat("intel-neural-7b", "hello").unwrap();
+    assert_eq!(status, 200, "sanity: service healthy before the failure");
+
+    // The timestamp only feeds job accounting; the failure itself is
+    // immediate.
+    stack.slurm.lock().unwrap().fail_node(&inst.node, 1);
+
+    // Recovery: a *different* job serves the route, end to end.
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let ready = stack.scheduler.routing.ready_instances("intel-neural-7b");
+        if ready.iter().any(|i| i.job_id != inst.job_id) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "no replacement instance became ready after node failure"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        stack
+            .scheduler
+            .routing
+            .instances("intel-neural-7b")
+            .iter()
+            .all(|i| i.job_id != inst.job_id),
+        "dead instance still in the routing table"
+    );
+    // The failed job's reserved port is free again (unless the replacement
+    // happened to draw the very same port).
+    assert!(
+        !stack.scheduler.routing.port_in_use(inst.port)
+            || stack
+                .scheduler
+                .routing
+                .instances("intel-neural-7b")
+                .iter()
+                .any(|i| i.port == inst.port),
+        "node failure leaked reserved port {}",
+        inst.port
+    );
+    let (status, body) = stack.chat("intel-neural-7b", "hello again").unwrap();
+    assert_eq!(status, 200, "service did not recover: {body:?}");
+}
+
+#[test]
 fn deadline_ms_propagates_from_client_to_engine() {
     // A relative deadline budget rides the request body end-to-end; the
     // engine is the enforcement point and answers `finish_reason:

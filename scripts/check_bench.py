@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json paper-figure report.
+
+Usage: check_bench.py <file.json> <required-key> [<required-key> ...]
+
+Fails (exit 1) when the file is missing, unparseable, lacks a required
+sweep key, or a sweep lacks the four numeric fields of the BenchReport
+schema ({rps, p50_ms, p99_ms, ttft_ms}). CI runs this after the --smoke
+bench runs so a paper-figure reproduction that silently stops emitting
+results breaks the build instead of rotting.
+"""
+
+import json
+import sys
+
+FIELDS = ("rps", "p50_ms", "p99_ms", "ttft_ms")
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print("usage: check_bench.py <file.json> <required-key>...", file=sys.stderr)
+        return 2
+    path, keys = sys.argv[1], sys.argv[2:]
+    try:
+        with open(path, encoding="utf-8") as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        print(f"FAIL {path}: not emitted", file=sys.stderr)
+        return 1
+    except json.JSONDecodeError as exc:
+        print(f"FAIL {path}: invalid JSON: {exc}", file=sys.stderr)
+        return 1
+    bad = False
+    for key in keys:
+        row = data.get(key)
+        if not isinstance(row, dict):
+            print(f"FAIL {path}: missing sweep {key!r}", file=sys.stderr)
+            bad = True
+            continue
+        for field in FIELDS:
+            if not isinstance(row.get(field), (int, float)):
+                print(f"FAIL {path}: {key}.{field} missing or non-numeric", file=sys.stderr)
+                bad = True
+    if bad:
+        return 1
+    print(f"OK {path}: {len(keys)} required sweeps present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
