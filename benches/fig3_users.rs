@@ -1,11 +1,41 @@
 //! Figure 3 reproduction: total number of distinct users, Feb 22 → Jul 30
 //! 2024 (paper: 0 → 9 000+ with a bump after the April 8 advertisement).
+//!
+//! `--serving [--seed N]` runs the fig3-class sweep on the virtual-time
+//! serving path instead: a 100 000-user diurnal population pushes ~100k
+//! chat requests through the full SimStack (gateway admission → scheduler
+//! → routing → engine) over one simulated hour, in seconds of wall-clock.
+//! The discrete-event clock makes the run a pure function of the seed, so
+//! `BENCH_fig3_serving.json` is byte-identical across replays — CI runs it
+//! twice and diffs (ci.sh sim-determinism).
+
+use std::time::Duration;
 
 use chat_hpc::analytics::adoption::{date_label, DAY_AD_CAMPAIGN, EXTERNAL_MODELS};
 use chat_hpc::analytics::{aggregate_daily, AdoptionConfig, AdoptionSim, RequestLog};
-use chat_hpc::util::bench::{table_header, table_row};
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{SimRequest, SimStack, SimStackConfig};
+use chat_hpc::util::bench::{table_header, table_row, BenchReport};
+use chat_hpc::util::rng::Rng;
+use chat_hpc::workload::DiurnalArrivals;
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--serving") {
+        let seed = args
+            .iter()
+            .position(|a| a == "--seed")
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(7);
+        serving_sweep(seed);
+        return;
+    }
+    adoption_curve();
+}
+
+/// The original figure: the adoption (distinct-user growth) curve.
+fn adoption_curve() {
     let cfg = AdoptionConfig::default();
     let log = RequestLog::new();
     let summary = AdoptionSim::new(cfg.clone()).run(&log);
@@ -35,4 +65,113 @@ fn main() {
     );
     let monotone = days.windows(2).all(|w| w[1].total_users >= w[0].total_users);
     println!("cumulative curve monotone: {}", if monotone { "REPRODUCED" } else { "DIVERGED" });
+}
+
+fn pctl_us(sorted: &[u64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx] as f64
+}
+
+/// Virtual-time serving sweep: one diurnal hour of a 100k-user population
+/// against the full serving path, bucketed per quarter hour.
+fn serving_sweep(seed: u64) {
+    let wall_start = std::time::Instant::now();
+    let stack = SimStack::start(SimStackConfig {
+        seed,
+        services: vec![ServiceSpec::sim("intel-neural-7b", 1.0)],
+        ..Default::default()
+    });
+
+    let wl = DiurnalArrivals {
+        users: 100_000,
+        mean_rps: 30.0,
+        amplitude: 0.8,
+        period: Duration::from_secs(3600),
+    };
+    let horizon = Duration::from_secs(3600);
+    let arrivals = wl.generate(horizon, &mut Rng::new(seed ^ 0xF16_3));
+    // Shift past the 30s model load + 5s keepalive so the sweep measures
+    // steady-state serving, not the first cold start.
+    const WARM_US: u64 = 40_000_000;
+    for &(t_us, user) in &arrivals {
+        stack.submit_chat_at(
+            WARM_US + t_us,
+            SimRequest {
+                user: format!("user-{user}"),
+                prompt: format!("chat turn from simulated user {user}"),
+                max_tokens: 24,
+                ..Default::default()
+            },
+        );
+    }
+    assert!(
+        stack.run_until_settled(Duration::from_secs(3 * 3600)),
+        "sweep never settled: {} open",
+        stack.open_requests()
+    );
+
+    let recs = stack.records();
+    let users: std::collections::BTreeSet<&str> =
+        recs.iter().map(|r| r.user.as_str()).collect();
+    let served = recs
+        .iter()
+        .filter(|r| matches!(r.finish_reason.as_str(), "stop" | "length"))
+        .count();
+
+    let mut report = BenchReport::new();
+    table_header(
+        "Figure 3 (serving) — one diurnal hour, 100k-user population",
+        &["quarter", "served rps", "p50 ms", "p99 ms", "p50 ttft ms"],
+    );
+    let bucket_us = horizon.as_micros() as u64 / 4;
+    let mut sweep = |name: &str, lo_us: u64, hi_us: u64| {
+        let mut lat: Vec<u64> = Vec::new();
+        let mut ttft: Vec<u64> = Vec::new();
+        for r in recs.iter().filter(|r| {
+            (lo_us..hi_us).contains(&r.submit_us)
+                && matches!(r.finish_reason.as_str(), "stop" | "length")
+        }) {
+            lat.push(r.finish_us - r.submit_us);
+            if let Some(t) = r.ttft_us {
+                ttft.push(t);
+            }
+        }
+        lat.sort_unstable();
+        ttft.sort_unstable();
+        let rps = lat.len() as f64 / ((hi_us - lo_us) as f64 / 1e6);
+        let p50 = pctl_us(&lat, 0.50) / 1e3;
+        let p99 = pctl_us(&lat, 0.99) / 1e3;
+        let t50 = pctl_us(&ttft, 0.50) / 1e3;
+        table_row(&[
+            name.to_string(),
+            format!("{rps:.2}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            format!("{t50:.2}"),
+        ]);
+        report.entry(name, rps, p50, p99, t50);
+    };
+    for q in 0..4u64 {
+        let lo = WARM_US + q * bucket_us;
+        sweep(&format!("hour_q{}", q + 1), lo, lo + bucket_us);
+    }
+    sweep("overall", WARM_US, WARM_US + horizon.as_micros() as u64);
+
+    println!();
+    println!(
+        "seed {seed}: {} requests from {} distinct users (population 100000), {} served",
+        recs.len(),
+        users.len(),
+        served
+    );
+    println!(
+        "simulated {}s of traffic via {} events in {:.1}s wall-clock",
+        stack.now_us() / 1_000_000,
+        stack.executed_events(),
+        wall_start.elapsed().as_secs_f64()
+    );
+    report.write("BENCH_fig3_serving.json").expect("write BENCH_fig3_serving.json");
 }

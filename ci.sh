@@ -33,6 +33,23 @@ cargo test -q
 echo "==> cargo test --release -q"
 cargo test --release -q
 
+# Seed-replay determinism: the virtual-time serving path must be a pure
+# function of its seed. The replay suite runs in two separate processes
+# and the trace artifacts are byte-compared; then the fig3 serving sweep
+# (one diurnal hour, 100k-user population) runs twice and its BENCH json
+# is byte-compared. `timeout 60` on the pre-built second sweep enforces
+# the "simulated hour in under a minute of wall-clock" bound.
+echo "==> sim-determinism: seed-replay trace diff"
+SIM_TRACE_OUT="$PWD/target/sim_trace_a.txt" cargo test --release --test sim_determinism -q
+SIM_TRACE_OUT="$PWD/target/sim_trace_b.txt" cargo test --release --test sim_determinism -q
+cmp target/sim_trace_a.txt target/sim_trace_b.txt
+
+echo "==> sim-determinism: fig3 serving sweep byte-compare"
+cargo bench --bench fig3_users -- --serving --seed 7
+mv BENCH_fig3_serving.json target/BENCH_fig3_serving_a.json
+timeout 60 cargo bench --bench fig3_users -- --serving --seed 7
+cmp target/BENCH_fig3_serving_a.json BENCH_fig3_serving.json
+
 # Paper-figure smoke runs: tiny sweeps, seconds not minutes — the benches
 # must not just compile but *run* and emit their machine-readable results
 # with every required sweep present.
@@ -54,6 +71,8 @@ if python3 --version >/dev/null 2>&1; then
         multiturn_cache_off multiturn_cache_on
     python3 scripts/check_bench.py BENCH_ablation_scheduler.json \
         scavenger_off scavenger_on
+    python3 scripts/check_bench.py BENCH_fig3_serving.json \
+        hour_q1 hour_q2 hour_q3 hour_q4 overall
 else
     echo "    python3 not installed; skipping schema validation (CI runs it)"
 fi

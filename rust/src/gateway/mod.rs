@@ -22,26 +22,33 @@ use anyhow::Result;
 
 use crate::analytics::RequestLog;
 use crate::auth::SsoProvider;
+use crate::util::clock::{Clock, WallClock};
 use crate::util::http::{self, Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
 
-/// Token-bucket rate limiter.
+/// Token-bucket rate limiter. Reads time from the owning gateway's clock,
+/// so refill (and the refill-horizon eviction below, which compares
+/// last-used stamps *across* buckets) is exact under the virtual-time
+/// driver and free of `Instant`/`Clock` mixing.
 pub struct TokenBucket {
     capacity: f64,
     refill_per_sec: f64,
-    state: Mutex<(f64, std::time::Instant)>,
+    clock: Arc<dyn Clock>,
+    /// (tokens, last refill/use in clock-us).
+    state: Mutex<(f64, u64)>,
 }
 
 impl TokenBucket {
-    pub fn new(capacity: f64, refill_per_sec: f64) -> TokenBucket {
-        TokenBucket { capacity, refill_per_sec, state: Mutex::new((capacity, std::time::Instant::now())) }
+    pub fn new(capacity: f64, refill_per_sec: f64, clock: Arc<dyn Clock>) -> TokenBucket {
+        let now = clock.now_us();
+        TokenBucket { capacity, refill_per_sec, clock, state: Mutex::new((capacity, now)) }
     }
 
     pub fn try_take(&self) -> bool {
         let mut s = self.state.lock().unwrap();
-        let now = std::time::Instant::now();
-        let elapsed = now.duration_since(s.1).as_secs_f64();
+        let now = self.clock.now_us();
+        let elapsed = now.saturating_sub(s.1) as f64 / 1e6;
         s.0 = (s.0 + elapsed * self.refill_per_sec).min(self.capacity);
         s.1 = now;
         if s.0 >= 1.0 {
@@ -52,8 +59,9 @@ impl TokenBucket {
         }
     }
 
-    /// When the bucket was last used (drives eviction at the map cap).
-    fn last_used(&self) -> std::time::Instant {
+    /// When the bucket was last used, in clock-us (drives eviction at the
+    /// map cap).
+    fn last_used_us(&self) -> u64 {
         self.state.lock().unwrap().1
     }
 }
@@ -213,12 +221,36 @@ pub struct Gateway {
     sso: Option<SsoProvider>,
     metrics: Registry,
     log: RequestLog,
+    clock: Arc<dyn Clock>,
     buckets: Mutex<std::collections::BTreeMap<(String, String), Arc<TokenBucket>>>,
 }
 
 impl Gateway {
     pub fn new(routes: Vec<Route>, consumers: Vec<Consumer>, sso: Option<SsoProvider>, metrics: Registry, log: RequestLog) -> Arc<Gateway> {
-        Arc::new(Gateway { routes, consumers, sso, metrics, log, buckets: Mutex::new(Default::default()) })
+        let clock: Arc<dyn Clock> = WallClock::new();
+        Gateway::new_with_clock(routes, consumers, sso, metrics, log, clock)
+    }
+
+    /// Like [`Gateway::new`] with an explicit time source: rate-limit
+    /// refill, bucket eviction, and latency accounting all read this clock
+    /// (a `SimClock` under the virtual-time harness).
+    pub fn new_with_clock(
+        routes: Vec<Route>,
+        consumers: Vec<Consumer>,
+        sso: Option<SsoProvider>,
+        metrics: Registry,
+        log: RequestLog,
+        clock: Arc<dyn Clock>,
+    ) -> Arc<Gateway> {
+        Arc::new(Gateway {
+            routes,
+            consumers,
+            sso,
+            metrics,
+            log,
+            clock,
+            buckets: Mutex::new(Default::default()),
+        })
     }
 
     /// Resolve the caller: API key first (bypasses the web SSO, §5.2),
@@ -250,13 +282,13 @@ impl Gateway {
             // EVICT_BATCH under the cap, so this walk amortizes to O(1)
             // per insert. Evicting a live consumer hands back at most one
             // refilled burst — bounded memory beats perfect accounting.
-            let now = std::time::Instant::now();
+            let now = self.clock.now_us();
             let mut expired: Vec<(String, String)> = Vec::new();
-            let mut live: Vec<(std::time::Instant, (String, String))> = Vec::new();
+            let mut live: Vec<(u64, (String, String))> = Vec::new();
             for (k, b) in buckets.iter() {
-                let used = b.last_used();
+                let used = b.last_used_us();
                 let horizon = (b.capacity / b.refill_per_sec).max(1.0);
-                if now.duration_since(used).as_secs_f64() > horizon {
+                if now.saturating_sub(used) as f64 / 1e6 > horizon {
                     expired.push(k.clone());
                 } else {
                     live.push((used, k.clone()));
@@ -272,10 +304,11 @@ impl Gateway {
                 buckets.remove(k);
             }
         }
+        let clock = self.clock.clone();
         Some(
             buckets
                 .entry(key)
-                .or_insert_with(|| Arc::new(TokenBucket::new(rps.max(1.0), rps)))
+                .or_insert_with(|| Arc::new(TokenBucket::new(rps.max(1.0), rps, clock)))
                 .clone(),
         )
     }
@@ -351,7 +384,7 @@ impl Gateway {
 
         // --- usage log: user id, timestamp, model. Nothing else (§6.2). ---
         let log_idx = self.log.record(&user, &route.name);
-        let timer = std::time::Instant::now();
+        let t0 = self.clock.now_us();
 
         // --- forward ---
         let suffix = req.path[route.prefix.len()..].to_string();
@@ -434,7 +467,7 @@ impl Gateway {
                         Ok((status, aborted, saved)) => {
                             metrics
                                 .histogram("gw_latency_seconds", &[("route", &route_name)])
-                                .observe(timer.elapsed().as_secs_f64());
+                                .observe(gw.clock.now_us().saturating_sub(t0) as f64 / 1e6);
                             metrics
                                 .counter(
                                     "gw_sse_frames_coalesced_total",
@@ -477,7 +510,7 @@ impl Gateway {
                         Err(e) => {
                             metrics
                                 .histogram("gw_latency_seconds", &[("route", &route_name)])
-                                .observe(timer.elapsed().as_secs_f64());
+                                .observe(gw.clock.now_us().saturating_sub(t0) as f64 / 1e6);
                             sink.send_event(&Json::obj().set("error", e.to_string()).dump())?;
                             return Ok(());
                         }
@@ -551,7 +584,7 @@ impl Gateway {
             }
             metrics
                 .histogram("gw_latency_seconds", &[("route", &route_name)])
-                .observe(timer.elapsed().as_secs_f64());
+                .observe(self.clock.now_us().saturating_sub(t0) as f64 / 1e6);
             reply.expect("the final attempt always produces a reply")
         }
     }
@@ -940,6 +973,61 @@ mod tests {
         // Legit consumers keep working after the churn.
         let b = gateway.bucket(&gateway.routes[0], "real-user").unwrap();
         assert!(b.try_take());
+    }
+
+    #[test]
+    fn rate_limit_refills_on_the_injected_clock() {
+        use crate::util::clock::SimClock;
+        let clock = SimClock::new();
+        let routes =
+            vec![Route::new("m", "/c/", vec!["http://127.0.0.1:1".into()], "/x")
+                .with_rate_limit(2.0)];
+        let gateway = Gateway::new_with_clock(
+            routes,
+            vec![],
+            None,
+            Registry::new(),
+            RequestLog::new(),
+            clock.clone(),
+        );
+        let b = gateway.bucket(&gateway.routes[0], "u1").unwrap();
+        // Capacity 2: a burst of two, then dry.
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take());
+        // No wall time passes; half a virtual second refills exactly one
+        // token at 2/s.
+        clock.advance(Duration::from_millis(500));
+        assert!(b.try_take());
+        assert!(!b.try_take());
+    }
+
+    #[test]
+    fn bucket_eviction_follows_the_injected_clock() {
+        use crate::util::clock::SimClock;
+        let clock = SimClock::new();
+        let routes =
+            vec![Route::new("m", "/c/", vec!["http://127.0.0.1:1".into()], "/x")
+                .with_rate_limit(10.0)];
+        let gateway = Gateway::new_with_clock(
+            routes,
+            vec![],
+            None,
+            Registry::new(),
+            RequestLog::new(),
+            clock.clone(),
+        );
+        // Fill the map to the cap, then move virtual time past the refill
+        // horizon (capacity/rate = 1 s): every idle bucket is expired, so
+        // the next insert prunes them all instead of evicting a live batch.
+        for i in 0..MAX_BUCKETS {
+            let _ = gateway.bucket(&gateway.routes[0], &format!("idle-{i}"));
+        }
+        assert_eq!(gateway.buckets.lock().unwrap().len(), MAX_BUCKETS);
+        clock.advance(Duration::from_secs(2));
+        let _ = gateway.bucket(&gateway.routes[0], "fresh").unwrap();
+        let n = gateway.buckets.lock().unwrap().len();
+        assert_eq!(n, 1, "expired buckets survived the virtual-time horizon");
     }
 
     #[test]

@@ -27,6 +27,7 @@ use anyhow::{anyhow, Result};
 
 use crate::interface::parse_reply;
 use crate::sshsim::{KeyPair, SshClient, EXIT_CANCELLED, EXIT_CHANNEL_REJECTED};
+use crate::util::clock::{Clock, WallClock};
 use crate::util::http::{Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
@@ -79,6 +80,9 @@ pub struct HpcProxy {
     /// Placements that saturated every data lane and borrowed capacity.
     pub overflows: AtomicU64,
     metrics: Registry,
+    /// Time source for the keepalive interval, reconnect backoff, latency
+    /// accounting, and the emulated wire delay on pooled connections.
+    clock: Arc<dyn Clock>,
 }
 
 impl HpcProxy {
@@ -87,6 +91,19 @@ impl HpcProxy {
         key: KeyPair,
         cfg: ProxyConfig,
         metrics: Registry,
+    ) -> Result<Arc<HpcProxy>> {
+        let clock: Arc<dyn Clock> = WallClock::new();
+        HpcProxy::connect_with_clock(ssh_addr, key, cfg, metrics, clock)
+    }
+
+    /// Like [`HpcProxy::connect`] with an explicit time source for every
+    /// delay the proxy takes (keepalive, backoff, wire emulation).
+    pub fn connect_with_clock(
+        ssh_addr: &str,
+        key: KeyPair,
+        cfg: ProxyConfig,
+        metrics: Registry,
+        clock: Arc<dyn Clock>,
     ) -> Result<Arc<HpcProxy>> {
         let n = cfg.pool_size.max(1);
         let members = (0..n)
@@ -105,6 +122,7 @@ impl HpcProxy {
             reconnects: AtomicU64::new(0),
             overflows: AtomicU64::new(0),
             metrics,
+            clock,
         });
         // The control connection must come up; data lanes are best-effort
         // (the keepalive loop keeps retrying them). Sequential connects so
@@ -124,7 +142,7 @@ impl HpcProxy {
 
     fn keepalive_loop(self: Arc<Self>) {
         while !self.stop.load(Ordering::SeqCst) {
-            std::thread::sleep(self.cfg.keepalive);
+            self.clock.sleep(self.cfg.keepalive);
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
@@ -177,7 +195,12 @@ impl HpcProxy {
         }
         let mut last_err = anyhow!("unreachable");
         for _ in 0..3 {
-            match SshClient::connect_with(&self.ssh_addr, &self.key, self.cfg.link_frame_delay) {
+            match SshClient::connect_with_clock(
+                &self.ssh_addr,
+                &self.key,
+                self.cfg.link_frame_delay,
+                self.clock.clone(),
+            ) {
                 Ok(c) => {
                     let c = Arc::new(c);
                     *guard = Some(c.clone());
@@ -186,7 +209,7 @@ impl HpcProxy {
                 }
                 Err(e) => {
                     last_err = e;
-                    std::thread::sleep(self.cfg.reconnect_backoff);
+                    self.clock.sleep(self.cfg.reconnect_backoff);
                 }
             }
         }
@@ -270,7 +293,7 @@ impl HpcProxy {
     /// Forward one inference call, buffered.
     pub fn infer(&self, service: &str, body: &[u8]) -> Result<(u16, Vec<u8>)> {
         let client = self.pick_bulk()?;
-        let t = std::time::Instant::now();
+        let t0 = self.clock.now_us();
         let reply = client.exec(&format!("infer {service}"), body)?;
         if reply.exit_code == EXIT_CHANNEL_REJECTED {
             // Server-side MaxSessions refusal carries no status header;
@@ -279,7 +302,7 @@ impl HpcProxy {
         }
         self.metrics
             .histogram("proxy_infer_seconds", &[("service", service)])
-            .observe(t.elapsed().as_secs_f64());
+            .observe(self.clock.now_us().saturating_sub(t0) as f64 / 1e6);
         Ok(parse_reply(&reply.stdout)).map(|(s, b)| (s, b))
     }
 

@@ -26,6 +26,7 @@ use anyhow::Result;
 
 use crate::scheduler::ServiceScheduler;
 use crate::sshsim::CommandHandler;
+use crate::util::clock::{Clock, WallClock};
 use crate::util::http;
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
@@ -47,6 +48,9 @@ pub struct CloudInterface {
     queue_timeout: Duration,
     /// §7.1.4 E2EE: the platform key sealed request bodies are opened with.
     platform_key: Option<crate::sshsim::KeyPair>,
+    /// Time source for arrival stamps, queue-wait deadlines, and the
+    /// cold-start poll — a `SimClock` under the virtual-time harness.
+    clock: Arc<dyn Clock>,
 }
 
 impl CloudInterface {
@@ -60,7 +64,15 @@ impl CloudInterface {
             rng: std::sync::Mutex::new(Rng::new(0xc1)),
             queue_timeout: Duration::from_secs(30),
             platform_key: None,
+            clock: WallClock::new(),
         }
+    }
+
+    /// Builder: time source. Every timestamp the interface takes (arrival,
+    /// queue-wait deadline, budget burn-down) reads this clock.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> CloudInterface {
+        self.clock = clock;
+        self
     }
 
     /// Builder: scale-to-zero queue wait (0 = fail fast, the paper's
@@ -184,7 +196,7 @@ impl CloudInterface {
 
         // Parse the (by now plaintext) body once: the streaming flag and
         // the request's deadline budget (DESIGN.md §Request lifecycle).
-        let arrived = std::time::Instant::now();
+        let arrived_us = self.clock.now_us();
         let parsed = Json::parse(std::str::from_utf8(stdin).unwrap_or("")).ok();
         let budget_ms = parsed.as_ref().map_or(0, |j| j.u64_or("deadline_ms", 0));
 
@@ -197,7 +209,7 @@ impl CloudInterface {
             0 => self.queue_timeout,
             ms => self.queue_timeout.min(Duration::from_millis(ms)),
         };
-        let deadline = arrived + max_wait;
+        let deadline_us = arrived_us + max_wait.as_micros() as u64;
         let inst = loop {
             let picked = {
                 let mut rng = self.rng.lock().unwrap();
@@ -205,17 +217,17 @@ impl CloudInterface {
             };
             match picked {
                 Some(i) => break Some(i),
-                None if std::time::Instant::now() < deadline => {
+                None if self.clock.now_us() < deadline_us => {
                     self.metrics.gauge("ci_queued_requests", &[("service", service)]).add(1);
-                    std::thread::sleep(Duration::from_millis(20));
+                    self.clock.sleep(Duration::from_millis(20));
                     self.metrics.gauge("ci_queued_requests", &[("service", service)]).add(-1);
                 }
                 None => break None,
             }
         };
         let Some(inst) = inst else {
-            let out_of_time =
-                budget_ms > 0 && arrived.elapsed() >= Duration::from_millis(budget_ms);
+            let out_of_time = budget_ms > 0
+                && self.clock.now_us().saturating_sub(arrived_us) >= budget_ms.saturating_mul(1000);
             let (status, msg) = if out_of_time {
                 self.metrics.counter("ci_deadline_total", &[("service", service)]).inc();
                 (504, format!("deadline exceeded while queued for {service}"))
@@ -236,7 +248,7 @@ impl CloudInterface {
         let rewritten;
         let stdin: &[u8] = match &parsed {
             Some(j) if budget_ms > 0 => {
-                let spent = arrived.elapsed().as_millis() as u64;
+                let spent = self.clock.now_us().saturating_sub(arrived_us) / 1000;
                 let remaining = budget_ms.saturating_sub(spent).max(1);
                 rewritten = j.clone().set("deadline_ms", remaining).dump().into_bytes();
                 &rewritten

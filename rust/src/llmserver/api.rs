@@ -7,7 +7,6 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -68,10 +67,12 @@ fn parse_gen_request(body: &Json) -> GenRequest {
     // `deadline_ms` is a relative budget re-anchored at every hop that
     // parses it (gRPC-style deadline propagation): the body travels
     // verbatim through gateway → proxy → SSH → interface, so the engine is
-    // the single enforcement point and no hop needs clock sync.
-    let deadline = match body.u64_or("deadline_ms", 0) {
+    // the single enforcement point and no hop needs clock sync. The budget
+    // stays relative all the way into `GenRequest`; the engine anchors it
+    // against its own injected clock at submission.
+    let deadline_ms = match body.u64_or("deadline_ms", 0) {
         0 => None,
-        ms => Some(Instant::now() + Duration::from_millis(ms)),
+        ms => Some(ms),
     };
     GenRequest {
         prompt,
@@ -79,7 +80,7 @@ fn parse_gen_request(body: &Json) -> GenRequest {
         temperature: body.f64_or("temperature", 0.0),
         top_k: body.u64_or("top_k", 0) as usize,
         seed: body.u64_or("seed", 0),
-        deadline,
+        deadline_ms,
     }
 }
 
@@ -288,6 +289,7 @@ mod tests {
     use crate::llmserver::engine::EngineConfig;
     use crate::util::http::{self, SseParser};
     use crate::util::metrics::Registry;
+    use std::time::Duration;
 
     fn server() -> LlmHttpServer {
         let engine = Engine::start(

@@ -11,10 +11,13 @@
 //!   calibrated step delays while every byte of the serving path (batching,
 //!   paging, streaming) stays identical.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::tokenizer;
 use crate::runtime::{KvState, ModelRuntime};
+use crate::util::clock::Clock;
 
 /// Static batch geometry a backend exposes to the engine.
 #[derive(Debug, Clone)]
@@ -190,6 +193,11 @@ pub struct SimBackend {
     /// Wall-time multiplier: 1.0 = realistic delays, 0.0 = as fast as
     /// possible (unit tests), <1 = sped-up benches.
     time_scale: f64,
+    /// Where compute time is charged. `None` = the wall clock
+    /// (`thread::sleep`, the serving default); a `SimClock` makes a charge
+    /// advance virtual time instead, so the discrete-event harness pays
+    /// model latencies in simulated microseconds rather than CPU seconds.
+    clock: Option<Arc<dyn Clock>>,
     /// Per-slot emitted-byte counters into `profile.completion`.
     progress: Vec<usize>,
 }
@@ -205,18 +213,28 @@ impl SimBackend {
             vocab: tokenizer::VOCAB,
         };
         let progress = vec![0; profile.batch];
-        SimBackend { profile, geometry, time_scale, progress }
+        SimBackend { profile, geometry, time_scale, clock: None, progress }
     }
 
     pub fn by_name(name: &str, time_scale: f64) -> Option<SimBackend> {
         SimProfile::by_name(name).map(|p| SimBackend::new(p, time_scale))
     }
 
+    /// Charge compute to an injected clock instead of `thread::sleep`.
+    /// With a `SimClock`, a decode step advances virtual time by its
+    /// calibrated cost and returns immediately.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> SimBackend {
+        self.clock = Some(clock);
+        self
+    }
+
     fn charge(&self, ms: f64) {
         if self.time_scale > 0.0 && ms > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(
-                ms * self.time_scale / 1000.0,
-            ));
+            let d = std::time::Duration::from_secs_f64(ms * self.time_scale / 1000.0);
+            match &self.clock {
+                Some(c) => c.sleep(d),
+                None => std::thread::sleep(d),
+            }
         }
     }
 
@@ -382,6 +400,21 @@ mod tests {
             small < full / 4,
             "chunk charge not proportional: {small:?} vs {full:?}"
         );
+    }
+
+    #[test]
+    fn charge_goes_to_the_injected_clock() {
+        use crate::util::clock::SimClock;
+        let clock = SimClock::new();
+        let mut b = SimBackend::by_name("llama3-70b", 1.0).unwrap().with_clock(clock.clone());
+        let g = b.geometry().clone();
+        let active = vec![true; g.batch];
+        let t = std::time::Instant::now();
+        let _ = b.decode(&[], &[], &[], &active).unwrap();
+        // step = 160 + 3.8*8 = 190.4 ms — charged virtually, not slept.
+        assert!(t.elapsed().as_millis() < 100, "charge hit the wall clock");
+        let us = clock.now_us();
+        assert!((190_000..191_000).contains(&us), "virtual charge off: {us}");
     }
 
     #[test]

@@ -19,18 +19,26 @@
 //! long prompts, which is exactly the property the paper buys by deploying
 //! vLLM (§2, §5.7), extended with vLLM's prefix caching and chunked
 //! prefill (DESIGN.md §Prefix cache).
+//!
+//! The loop body lives in [`EngineCore`], which reads time exclusively from
+//! an injected [`Clock`]: [`Engine::start`] wraps it in a thread on the wall
+//! clock (the serving default), while the virtual-time harness
+//! (`stack::sim`, DESIGN.md §Virtual time) steps the same core inline under
+//! a `SimClock` — identical logic, simulated hours per CPU second.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use super::backend::Backend;
+use super::backend::{Backend, BatchGeometry};
 use super::kvcache::{BlockAllocator, CacheStats, SeqBlocks};
 use super::sampler::{sample, SamplingParams};
 use super::tokenizer::{self, StreamDecoder};
-use crate::util::metrics::Registry;
+use crate::util::clock::{Clock, WallClock};
+use crate::util::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::util::rng::Rng;
 
 /// A generation request.
@@ -41,10 +49,14 @@ pub struct GenRequest {
     pub temperature: f64,
     pub top_k: usize,
     pub seed: u64,
-    /// Absolute deadline: generation (and queue waiting) stops here with
-    /// `finish_reason: "deadline"`. Carried end-to-end as a relative
-    /// `deadline_ms` budget in the request body (see `api::parse_gen_request`).
-    pub deadline: Option<Instant>,
+    /// Remaining deadline budget in milliseconds, anchored to the engine's
+    /// clock when the request is submitted (queue waiting counts toward
+    /// it): generation and queueing stop at the anchor + budget with
+    /// `finish_reason: "deadline"`. Relative rather than an absolute
+    /// instant so the same request means the same thing under the wall
+    /// clock and the virtual-time driver (see `api::parse_gen_request` for
+    /// the wire field of the same name).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for GenRequest {
@@ -55,7 +67,7 @@ impl Default for GenRequest {
             temperature: 0.0,
             top_k: 0,
             seed: 0,
-            deadline: None,
+            deadline_ms: None,
         }
     }
 }
@@ -191,26 +203,40 @@ struct Slot {
     max_tokens: usize,
     prompt_tokens: usize,
     cached_tokens: usize,
-    started: Instant,
-    first_token_at: Option<Instant>,
-    deadline: Option<Instant>,
+    /// Clock-us when the request was enqueued (TTFT/total anchor).
+    started_us: u64,
+    first_token_at_us: Option<u64>,
+    /// Absolute clock-us deadline (anchored at submission).
+    deadline_us: Option<u64>,
 }
 
 struct Waiting {
     req: GenRequest,
     tx: Sender<GenEvent>,
-    enqueued: Instant,
+    enqueued_us: u64,
+    deadline_us: Option<u64>,
 }
 
 impl Engine {
-    /// Spawn the engine thread around a backend.
-    pub fn start(mut backend: Box<dyn Backend>, cfg: EngineConfig, metrics: Registry) -> Engine {
+    /// Spawn the engine thread around a backend, on the wall clock.
+    pub fn start(backend: Box<dyn Backend>, cfg: EngineConfig, metrics: Registry) -> Engine {
+        let clock: Arc<dyn Clock> = WallClock::new();
+        Engine::start_with_clock(backend, cfg, metrics, clock)
+    }
+
+    /// Spawn the engine thread with an explicit time source. Tests inject a
+    /// `SimClock` here; production uses [`Engine::start`].
+    pub fn start_with_clock(
+        backend: Box<dyn Backend>,
+        cfg: EngineConfig,
+        metrics: Registry,
+        clock: Arc<dyn Clock>,
+    ) -> Engine {
         let (tx, rx) = channel::<Msg>();
-        let model = backend.model_name().to_string();
-        let m = metrics.clone();
-        let model2 = model.clone();
+        let core = EngineCore::new(backend, cfg, metrics.clone(), clock);
+        let model = core.model().to_string();
         let handle = std::thread::spawn(move || {
-            run_loop(&mut *backend, cfg, rx, m, &model2);
+            run_loop(core, rx);
         });
         Engine { tx, handle: Some(handle), model, metrics }
     }
@@ -247,118 +273,252 @@ impl Drop for Engine {
     }
 }
 
-fn run_loop(
-    backend: &mut dyn Backend,
-    cfg: EngineConfig,
-    rx: Receiver<Msg>,
-    metrics: Registry,
-    model: &str,
-) {
-    let geo = backend.geometry().clone();
-    let mut alloc = BlockAllocator::new(geo.n_blocks, geo.block_size, geo.max_blocks);
-    alloc.set_cache_enabled(cfg.prefix_cache);
-    let mut slots: Vec<Option<Slot>> = (0..geo.batch).map(|_| None).collect();
-    let mut waiting: VecDeque<Waiting> = VecDeque::new();
-    let mut next_seq_id = 1u64;
-
-    // Tokens prefilled per slot per iteration (one backend call covers all
-    // prefilling slots; each row is ≤ chunk_cap and the HLO window).
-    let chunk_cap = if cfg.prefill_chunk == 0 {
-        geo.prefill_len
-    } else {
-        cfg.prefill_chunk.clamp(1, geo.prefill_len)
-    };
-    // Longest admissible prompt: unchunked prefill is bounded by one HLO
-    // window; chunked prefill is bounded by the page budget, minus one page
-    // kept for generation headroom. Oversized prompts keep their tail.
-    let max_prompt = if cfg.prefill_chunk == 0 {
-        geo.prefill_len
-    } else {
-        (geo.block_size * geo.max_blocks).saturating_sub(geo.block_size).max(geo.block_size)
-    };
-
-    let queue_gauge = metrics.gauge("llm_waiting_requests", &[("model", model)]);
-    let running_gauge = metrics.gauge("llm_running_requests", &[("model", model)]);
-    let tokens_ctr = metrics.counter("llm_tokens_generated_total", &[("model", model)]);
-    let req_ctr = metrics.counter("llm_requests_total", &[("model", model)]);
-    let rejected_ctr = metrics.counter("llm_requests_rejected_total", &[("model", model)]);
-    let cancelled_ctr = metrics.counter("llm_cancelled_total", &[("model", model)]);
-    let deadline_ctr = metrics.counter("llm_deadline_total", &[("model", model)]);
-    let prefix_hit_ctr = metrics.counter("llm_prefix_hit_tokens_total", &[("model", model)]);
-    let evict_ctr = metrics.counter("llm_prefix_evictions_total", &[("model", model)]);
-    let cow_ctr = metrics.counter("llm_cow_forks_total", &[("model", model)]);
-    let chunk_ctr = metrics.counter("llm_prefill_chunks_total", &[("model", model)]);
-    let step_hist = metrics.histogram("llm_decode_step_seconds", &[("model", model)]);
-    let ttft_hist = metrics.histogram("llm_ttft_seconds", &[("model", model)]);
-    // Allocator-internal counters are published as deltas once per loop.
-    let mut last_stats = CacheStats::default();
-
+fn run_loop(mut core: EngineCore, rx: Receiver<Msg>) {
     'outer: loop {
-        // --- 1. intake ------------------------------------------------
+        // --- intake -----------------------------------------------------
         loop {
             match rx.try_recv() {
-                Ok(Msg::Submit(req, tx)) => {
-                    req_ctr.inc();
-                    if waiting.len() >= cfg.max_queue {
-                        rejected_ctr.inc();
-                        let _ = tx.send(GenEvent::Error("queue full".into()));
-                    } else {
-                        waiting.push_back(Waiting { req, tx, enqueued: Instant::now() });
-                    }
-                }
+                Ok(Msg::Submit(req, tx)) => core.submit(req, tx),
                 Ok(Msg::Stop) => break 'outer,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => break 'outer,
             }
         }
-        queue_gauge.set(waiting.len() as i64);
-
-        // Expired queue entries never reach a batch slot: answer them with
-        // `finish_reason: "deadline"` while they are still cheap to drop.
-        if !waiting.is_empty() {
-            let now = Instant::now();
-            waiting.retain(|w| match w.req.deadline {
-                Some(d) if d <= now => {
-                    deadline_ctr.inc();
-                    let _ = w.tx.send(GenEvent::Done(Usage {
-                        prompt_tokens: 0,
-                        completion_tokens: 0,
-                        cached_tokens: 0,
-                        ttft: Duration::ZERO,
-                        total: w.enqueued.elapsed(),
-                        finish_reason: "deadline",
-                    }));
-                    false
-                }
-                _ => true,
-            });
+        core.step();
+        if core.is_idle() {
+            // Idle: block briefly for new work.
+            match rx.recv_timeout(core.idle_wait()) {
+                Ok(Msg::Submit(req, tx)) => core.submit(req, tx),
+                Ok(Msg::Stop) => break 'outer,
+                Err(_) => {}
+            }
         }
+    }
+    core.shutdown();
+}
 
-        // --- 2. admission (allocate pages; no backend call yet) ---------
-        for slot_idx in 0..geo.batch {
-            if slots[slot_idx].is_some() {
+/// The engine loop body as a steppable state machine: intake via
+/// [`EngineCore::submit`], one admission+prefill+decode round per
+/// [`EngineCore::step`]. All time is read from the injected [`Clock`], so
+/// the identical core serves requests on a thread under `WallClock` and
+/// inline under a `SimClock` in the discrete-event harness.
+pub struct EngineCore {
+    backend: Box<dyn Backend>,
+    cfg: EngineConfig,
+    clock: Arc<dyn Clock>,
+    model: String,
+    geo: BatchGeometry,
+    alloc: BlockAllocator,
+    slots: Vec<Option<Slot>>,
+    waiting: VecDeque<Waiting>,
+    next_seq_id: u64,
+    /// Tokens prefilled per slot per iteration (one backend call covers all
+    /// prefilling slots; each row is ≤ chunk_cap and the HLO window).
+    chunk_cap: usize,
+    /// Longest admissible prompt (oversized prompts keep their tail).
+    max_prompt: usize,
+    queue_gauge: Arc<Gauge>,
+    running_gauge: Arc<Gauge>,
+    tokens_ctr: Arc<Counter>,
+    req_ctr: Arc<Counter>,
+    rejected_ctr: Arc<Counter>,
+    cancelled_ctr: Arc<Counter>,
+    deadline_ctr: Arc<Counter>,
+    prefix_hit_ctr: Arc<Counter>,
+    evict_ctr: Arc<Counter>,
+    cow_ctr: Arc<Counter>,
+    chunk_ctr: Arc<Counter>,
+    step_hist: Arc<Histogram>,
+    ttft_hist: Arc<Histogram>,
+    /// Allocator-internal counters are published as deltas once per step.
+    last_stats: CacheStats,
+}
+
+impl EngineCore {
+    pub fn new(
+        backend: Box<dyn Backend>,
+        cfg: EngineConfig,
+        metrics: Registry,
+        clock: Arc<dyn Clock>,
+    ) -> EngineCore {
+        let model = backend.model_name().to_string();
+        let geo = backend.geometry().clone();
+        let mut alloc = BlockAllocator::new(geo.n_blocks, geo.block_size, geo.max_blocks);
+        alloc.set_cache_enabled(cfg.prefix_cache);
+        let slots: Vec<Option<Slot>> = (0..geo.batch).map(|_| None).collect();
+        let chunk_cap = if cfg.prefill_chunk == 0 {
+            geo.prefill_len
+        } else {
+            cfg.prefill_chunk.clamp(1, geo.prefill_len)
+        };
+        // Unchunked prefill is bounded by one HLO window; chunked prefill is
+        // bounded by the page budget, minus one page kept for generation
+        // headroom.
+        let max_prompt = if cfg.prefill_chunk == 0 {
+            geo.prefill_len
+        } else {
+            (geo.block_size * geo.max_blocks).saturating_sub(geo.block_size).max(geo.block_size)
+        };
+        let m: &str = &model;
+        EngineCore {
+            queue_gauge: metrics.gauge("llm_waiting_requests", &[("model", m)]),
+            running_gauge: metrics.gauge("llm_running_requests", &[("model", m)]),
+            tokens_ctr: metrics.counter("llm_tokens_generated_total", &[("model", m)]),
+            req_ctr: metrics.counter("llm_requests_total", &[("model", m)]),
+            rejected_ctr: metrics.counter("llm_requests_rejected_total", &[("model", m)]),
+            cancelled_ctr: metrics.counter("llm_cancelled_total", &[("model", m)]),
+            deadline_ctr: metrics.counter("llm_deadline_total", &[("model", m)]),
+            prefix_hit_ctr: metrics.counter("llm_prefix_hit_tokens_total", &[("model", m)]),
+            evict_ctr: metrics.counter("llm_prefix_evictions_total", &[("model", m)]),
+            cow_ctr: metrics.counter("llm_cow_forks_total", &[("model", m)]),
+            chunk_ctr: metrics.counter("llm_prefill_chunks_total", &[("model", m)]),
+            step_hist: metrics.histogram("llm_decode_step_seconds", &[("model", m)]),
+            ttft_hist: metrics.histogram("llm_ttft_seconds", &[("model", m)]),
+            backend,
+            cfg,
+            clock,
+            model,
+            geo,
+            alloc,
+            slots,
+            waiting: VecDeque::new(),
+            next_seq_id: 1,
+            chunk_cap,
+            max_prompt,
+            last_stats: CacheStats::default(),
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn idle_wait(&self) -> Duration {
+        self.cfg.idle_wait
+    }
+
+    /// No running slots and nothing queued: nothing will happen until the
+    /// next `submit`.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// Queued requests that have not reached a batch slot yet (admission may
+    /// be blocked on KV pressure; the driver should keep stepping).
+    pub fn has_waiting(&self) -> bool {
+        !self.waiting.is_empty()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Enqueue a request. The deadline budget (if any) starts now.
+    pub fn submit(&mut self, req: GenRequest, tx: Sender<GenEvent>) {
+        self.req_ctr.inc();
+        if self.waiting.len() >= self.cfg.max_queue {
+            self.rejected_ctr.inc();
+            let _ = tx.send(GenEvent::Error("queue full".into()));
+            return;
+        }
+        let now = self.clock.now_us();
+        let deadline_us = req.deadline_ms.map(|ms| now + ms.saturating_mul(1000));
+        self.waiting.push_back(Waiting { req, tx, enqueued_us: now, deadline_us });
+    }
+
+    /// One engine iteration: queue-deadline expiry, admission, slot-deadline
+    /// expiry, one prefill chunk round, one decode step.
+    pub fn step(&mut self) {
+        self.expire_queue();
+        self.queue_gauge.set(self.waiting.len() as i64);
+        self.admit();
+        self.expire_slots();
+        self.prefill_step();
+
+        let n_active = self.n_active();
+        self.running_gauge.set(n_active as i64);
+        if n_active == 0 {
+            self.publish_cache_stats();
+            return;
+        }
+        self.decode_step();
+        self.publish_cache_stats();
+        #[cfg(debug_assertions)]
+        {
+            let live: Vec<&SeqBlocks> =
+                self.slots.iter().filter_map(|s| s.as_ref().map(|s| &s.seq)).collect();
+            if let Err(e) = self.alloc.check_invariants(&live) {
+                panic!("allocator invariants violated: {e}");
+            }
+        }
+    }
+
+    /// Fail all in-flight and queued work ("engine stopped").
+    pub fn shutdown(&mut self) {
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot.take() {
+                self.alloc.free_seq(&s.seq);
+                let _ = s.tx.send(GenEvent::Error("engine stopped".into()));
+            }
+        }
+        for w in self.waiting.drain(..) {
+            let _ = w.tx.send(GenEvent::Error("engine stopped".into()));
+        }
+        self.running_gauge.set(0);
+        self.queue_gauge.set(0);
+    }
+
+    /// Expired queue entries never reach a batch slot: answer them with
+    /// `finish_reason: "deadline"` while they are still cheap to drop.
+    fn expire_queue(&mut self) {
+        if self.waiting.is_empty() {
+            return;
+        }
+        let now = self.clock.now_us();
+        let deadline_ctr = &self.deadline_ctr;
+        self.waiting.retain(|w| match w.deadline_us {
+            Some(d) if d <= now => {
+                deadline_ctr.inc();
+                let _ = w.tx.send(GenEvent::Done(Usage {
+                    prompt_tokens: 0,
+                    completion_tokens: 0,
+                    cached_tokens: 0,
+                    ttft: Duration::ZERO,
+                    total: Duration::from_micros(now.saturating_sub(w.enqueued_us)),
+                    finish_reason: "deadline",
+                }));
+                false
+            }
+            _ => true,
+        });
+    }
+
+    /// Admission: allocate pages for queued prompts; no backend call yet.
+    fn admit(&mut self) {
+        for slot_idx in 0..self.geo.batch {
+            if self.slots[slot_idx].is_some() {
                 continue;
             }
-            let Some(w) = waiting.front() else { break };
+            let Some(w) = self.waiting.front() else { break };
             let mut toks = tokenizer::encode_prompt(&w.req.prompt);
-            if toks.len() > max_prompt {
-                toks.drain(..toks.len() - max_prompt);
+            if toks.len() > self.max_prompt {
+                toks.drain(..toks.len() - self.max_prompt);
             }
-            if !alloc.can_admit(toks.len()) {
+            if !self.alloc.can_admit(toks.len()) {
                 break; // KV pressure: leave in queue (FIFO order kept)
             }
-            let w = waiting.pop_front().unwrap();
-            let seq = match alloc.create_seq(next_seq_id, &toks) {
+            let w = self.waiting.pop_front().unwrap();
+            let seq = match self.alloc.create_seq(self.next_seq_id, &toks) {
                 Ok(s) => s,
                 Err(e) => {
                     let _ = w.tx.send(GenEvent::Error(e.to_string()));
                     continue;
                 }
             };
-            next_seq_id += 1;
-            prefix_hit_ctr.add(seq.cached as u64);
+            self.next_seq_id += 1;
+            self.prefix_hit_ctr.add(seq.cached as u64);
             let seq_id = seq.seq_id;
-            slots[slot_idx] = Some(Slot {
+            self.slots[slot_idx] = Some(Slot {
                 prefilled: seq.cached,
                 cached_tokens: seq.cached,
                 prompt_tokens: toks.len(),
@@ -376,230 +536,204 @@ fn run_loop(
                 next_token: 0,
                 completion_tokens: 0,
                 max_tokens: w.req.max_tokens.max(1),
-                started: w.enqueued,
-                first_token_at: None,
-                deadline: w.req.deadline,
+                started_us: w.enqueued_us,
+                first_token_at_us: None,
+                deadline_us: w.deadline_us,
             });
         }
+    }
 
-        // --- deadlines (both phases) ------------------------------------
-        let now = Instant::now();
-        for i in 0..geo.batch {
-            let expired =
-                slots[i].as_ref().is_some_and(|s| s.deadline.is_some_and(|d| d <= now));
+    /// Per-slot deadline sweep (covers both prefill and decode phases).
+    fn expire_slots(&mut self) {
+        let now = self.clock.now_us();
+        for i in 0..self.geo.batch {
+            let expired = self.slots[i]
+                .as_ref()
+                .is_some_and(|s| s.deadline_us.is_some_and(|d| d <= now));
             if expired {
-                let s = slots[i].take().unwrap();
-                deadline_ctr.inc();
-                finish(&mut alloc, s, "deadline");
+                let s = self.slots[i].take().unwrap();
+                self.deadline_ctr.inc();
+                finish(&mut self.alloc, s, "deadline", now);
             }
         }
+    }
 
-        // --- 3. prefill step (bounded chunk per slot) -------------------
-        let prefilling: Vec<usize> = (0..geo.batch)
+    /// One bounded prefill chunk for every slot still in `Prefill` state.
+    fn prefill_step(&mut self) {
+        let prefilling: Vec<usize> = (0..self.geo.batch)
             .filter(|&i| {
-                slots[i].as_ref().is_some_and(|s| matches!(s.state, SlotState::Prefill))
+                self.slots[i].as_ref().is_some_and(|s| matches!(s.state, SlotState::Prefill))
             })
             .collect();
-        if !prefilling.is_empty() {
-            let mut tokens = vec![0i32; geo.batch * geo.prefill_len];
-            let mut lens = vec![0i32; geo.batch];
-            let mut offsets = vec![0i32; geo.batch];
-            let mut tables = vec![0i32; geo.batch * geo.max_blocks];
-            for &i in &prefilling {
-                let s = slots[i].as_ref().unwrap();
-                let n = chunk_cap.min(s.prompt.len() - s.prefilled);
-                for (j, &t) in s.prompt[s.prefilled..s.prefilled + n].iter().enumerate() {
-                    tokens[i * geo.prefill_len + j] = t;
-                }
-                lens[i] = n as i32;
-                offsets[i] = s.prefilled as i32;
-                let row = alloc.table_row(&s.seq);
-                tables[i * geo.max_blocks..(i + 1) * geo.max_blocks].copy_from_slice(&row);
+        if prefilling.is_empty() {
+            return;
+        }
+        let geo = &self.geo;
+        let mut tokens = vec![0i32; geo.batch * geo.prefill_len];
+        let mut lens = vec![0i32; geo.batch];
+        let mut offsets = vec![0i32; geo.batch];
+        let mut tables = vec![0i32; geo.batch * geo.max_blocks];
+        for &i in &prefilling {
+            let s = self.slots[i].as_ref().unwrap();
+            let n = self.chunk_cap.min(s.prompt.len() - s.prefilled);
+            for (j, &t) in s.prompt[s.prefilled..s.prefilled + n].iter().enumerate() {
+                tokens[i * geo.prefill_len + j] = t;
             }
-            match backend.prefill(&tokens, &lens, &offsets, &tables) {
-                Ok(logits) => {
-                    for &i in &prefilling {
-                        let mut s = slots[i].take().unwrap();
-                        s.prefilled += lens[i] as usize;
-                        s.seq.written = s.seq.written.max(s.prefilled);
-                        chunk_ctr.inc();
-                        if s.prefilled < s.prompt.len() {
-                            slots[i] = Some(s); // more chunks to go
-                            continue;
-                        }
-                        // Prefill complete: the last chunk's logits carry
-                        // the last prompt position — sample the first token.
-                        let row = &logits[i * geo.vocab..(i + 1) * geo.vocab];
-                        let first = sample(row, &s.params, &mut s.rng);
-                        s.completion_tokens = 1;
-                        s.first_token_at = Some(Instant::now());
-                        ttft_hist.observe(s.started.elapsed().as_secs_f64());
-                        tokens_ctr.inc();
-                        if first == tokenizer::EOS {
-                            finish(&mut alloc, s, "stop");
+            lens[i] = n as i32;
+            offsets[i] = s.prefilled as i32;
+            let row = self.alloc.table_row(&s.seq);
+            tables[i * geo.max_blocks..(i + 1) * geo.max_blocks].copy_from_slice(&row);
+        }
+        match self.backend.prefill(&tokens, &lens, &offsets, &tables) {
+            Ok(logits) => {
+                // Read the clock after the backend call: under a SimClock
+                // the backend's charge has advanced virtual time.
+                let now = self.clock.now_us();
+                for &i in &prefilling {
+                    let mut s = self.slots[i].take().unwrap();
+                    s.prefilled += lens[i] as usize;
+                    s.seq.written = s.seq.written.max(s.prefilled);
+                    self.chunk_ctr.inc();
+                    if s.prefilled < s.prompt.len() {
+                        self.slots[i] = Some(s); // more chunks to go
+                        continue;
+                    }
+                    // Prefill complete: the last chunk's logits carry the
+                    // last prompt position — sample the first token.
+                    let row = &logits[i * self.geo.vocab..(i + 1) * self.geo.vocab];
+                    let first = sample(row, &s.params, &mut s.rng);
+                    s.completion_tokens = 1;
+                    s.first_token_at_us = Some(now);
+                    self.ttft_hist
+                        .observe(now.saturating_sub(s.started_us) as f64 / 1e6);
+                    self.tokens_ctr.inc();
+                    if first == tokenizer::EOS {
+                        finish(&mut self.alloc, s, "stop", now);
+                    } else {
+                        let text = s.decoder.push(first);
+                        let gone =
+                            !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
+                        if gone && self.cfg.abort_on_disconnect {
+                            self.cancelled_ctr.inc();
+                            finish(&mut self.alloc, s, "cancelled", now);
+                        } else if s.completion_tokens >= s.max_tokens {
+                            finish(&mut self.alloc, s, "length", now);
                         } else {
-                            let text = s.decoder.push(first);
-                            let gone =
-                                !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
-                            if gone && cfg.abort_on_disconnect {
-                                cancelled_ctr.inc();
-                                finish(&mut alloc, s, "cancelled");
-                            } else if s.completion_tokens >= s.max_tokens {
-                                finish(&mut alloc, s, "length");
-                            } else {
-                                s.next_token = first;
-                                s.state = SlotState::Decode;
-                                slots[i] = Some(s);
-                            }
-                        }
-                    }
-                }
-                Err(e) => {
-                    for &i in &prefilling {
-                        if let Some(s) = slots[i].take() {
-                            alloc.free_seq(&s.seq);
-                            let _ = s.tx.send(GenEvent::Error(e.to_string()));
+                            s.next_token = first;
+                            s.state = SlotState::Decode;
+                            self.slots[i] = Some(s);
                         }
                     }
                 }
             }
-        }
-
-        // --- 4. decode step ---------------------------------------------
-        let n_active = slots.iter().filter(|s| s.is_some()).count();
-        running_gauge.set(n_active as i64);
-        if n_active == 0 {
-            publish_cache_stats(&alloc, &mut last_stats, &evict_ctr, &cow_ctr);
-            if waiting.is_empty() {
-                // Idle: block briefly for new work.
-                match rx.recv_timeout(cfg.idle_wait) {
-                    Ok(Msg::Submit(req, tx)) => {
-                        req_ctr.inc();
-                        waiting.push_back(Waiting { req, tx, enqueued: Instant::now() });
+            Err(e) => {
+                for &i in &prefilling {
+                    if let Some(s) = self.slots[i].take() {
+                        self.alloc.free_seq(&s.seq);
+                        let _ = s.tx.send(GenEvent::Error(e.to_string()));
                     }
-                    Ok(Msg::Stop) => break 'outer,
-                    Err(_) => {}
                 }
             }
-            continue;
         }
+    }
 
+    /// One decode step advancing every active slot.
+    fn decode_step(&mut self) {
+        let geo = &self.geo;
         let mut tokens = vec![0i32; geo.batch];
         let mut positions = vec![0i32; geo.batch];
         let mut tables = vec![0i32; geo.batch * geo.max_blocks];
         let mut active = vec![false; geo.batch];
         let mut oom: Vec<usize> = Vec::new();
-        for (i, slot) in slots.iter_mut().enumerate() {
+        for (i, slot) in self.slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
             if !matches!(s.state, SlotState::Decode) {
                 continue; // still prefilling: scratch row, inactive
             }
             // The fed token occupies position seq.len; grow the page table.
-            match alloc.append_token(&mut s.seq, s.next_token) {
+            match self.alloc.append_token(&mut s.seq, s.next_token) {
                 Ok(true) => {
                     active[i] = true;
                     tokens[i] = s.next_token;
                     positions[i] = (s.seq.len - 1) as i32;
-                    let row = alloc.table_row(&s.seq);
-                    tables[i * geo.max_blocks..(i + 1) * geo.max_blocks].copy_from_slice(&row);
+                    let row = self.alloc.table_row(&s.seq);
+                    tables[i * geo.max_blocks..(i + 1) * geo.max_blocks]
+                        .copy_from_slice(&row);
                 }
                 Ok(false) | Err(_) => oom.push(i),
             }
         }
+        let now = self.clock.now_us();
         for i in oom {
-            if let Some(s) = slots[i].take() {
-                finish(&mut alloc, s, "kv_exhausted");
+            if let Some(s) = self.slots[i].take() {
+                finish(&mut self.alloc, s, "kv_exhausted", now);
             }
         }
 
-        if active.iter().any(|&a| a) {
-            let t0 = Instant::now();
-            match backend.decode(&tokens, &positions, &tables, &active) {
-                Ok(logits) => {
-                    step_hist.observe(t0.elapsed().as_secs_f64());
-                    for i in 0..geo.batch {
-                        if !active[i] {
+        if !active.iter().any(|&a| a) {
+            return;
+        }
+        let t0 = self.clock.now_us();
+        match self.backend.decode(&tokens, &positions, &tables, &active) {
+            Ok(logits) => {
+                let now = self.clock.now_us();
+                self.step_hist.observe(now.saturating_sub(t0) as f64 / 1e6);
+                for i in 0..self.geo.batch {
+                    if !active[i] {
+                        continue;
+                    }
+                    let Some(mut s) = self.slots[i].take() else { continue };
+                    // The fed position's KV is now resident in its page.
+                    s.seq.written = s.seq.len;
+                    let row = &logits[i * self.geo.vocab..(i + 1) * self.geo.vocab];
+                    let tok = sample(row, &s.params, &mut s.rng);
+                    s.completion_tokens += 1;
+                    self.tokens_ctr.inc();
+                    if tok == tokenizer::EOS {
+                        finish(&mut self.alloc, s, "stop", now);
+                    } else {
+                        let text = s.decoder.push(tok);
+                        // A failed send means the receiver is gone — the
+                        // client disconnected somewhere up the chain.
+                        // Abort: the slot and its KV blocks are back in
+                        // the pool before the next step.
+                        let gone =
+                            !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
+                        if gone && self.cfg.abort_on_disconnect {
+                            self.cancelled_ctr.inc();
+                            finish(&mut self.alloc, s, "cancelled", now);
                             continue;
                         }
-                        let Some(mut s) = slots[i].take() else { continue };
-                        // The fed position's KV is now resident in its page.
-                        s.seq.written = s.seq.len;
-                        let row = &logits[i * geo.vocab..(i + 1) * geo.vocab];
-                        let tok = sample(row, &s.params, &mut s.rng);
-                        s.completion_tokens += 1;
-                        tokens_ctr.inc();
-                        if tok == tokenizer::EOS {
-                            finish(&mut alloc, s, "stop");
+                        s.next_token = tok;
+                        if s.completion_tokens >= s.max_tokens {
+                            finish(&mut self.alloc, s, "length", now);
                         } else {
-                            let text = s.decoder.push(tok);
-                            // A failed send means the receiver is gone — the
-                            // client disconnected somewhere up the chain.
-                            // Abort: the slot and its KV blocks are back in
-                            // the pool before the next step.
-                            let gone =
-                                !text.is_empty() && s.tx.send(GenEvent::Token(text)).is_err();
-                            if gone && cfg.abort_on_disconnect {
-                                cancelled_ctr.inc();
-                                finish(&mut alloc, s, "cancelled");
-                                continue;
-                            }
-                            s.next_token = tok;
-                            if s.completion_tokens >= s.max_tokens {
-                                finish(&mut alloc, s, "length");
-                            } else {
-                                slots[i] = Some(s);
-                            }
-                        }
-                    }
-                }
-                Err(e) => {
-                    for slot in slots.iter_mut() {
-                        if let Some(s) = slot.take() {
-                            alloc.free_seq(&s.seq);
-                            let _ = s.tx.send(GenEvent::Error(e.to_string()));
+                            self.slots[i] = Some(s);
                         }
                     }
                 }
             }
-        }
-
-        publish_cache_stats(&alloc, &mut last_stats, &evict_ctr, &cow_ctr);
-        #[cfg(debug_assertions)]
-        {
-            let live: Vec<&SeqBlocks> =
-                slots.iter().filter_map(|s| s.as_ref().map(|s| &s.seq)).collect();
-            if let Err(e) = alloc.check_invariants(&live) {
-                panic!("allocator invariants violated: {e}");
+            Err(e) => {
+                for slot in self.slots.iter_mut() {
+                    if let Some(s) = slot.take() {
+                        self.alloc.free_seq(&s.seq);
+                        let _ = s.tx.send(GenEvent::Error(e.to_string()));
+                    }
+                }
             }
         }
     }
 
-    // Engine stopping: fail the stragglers.
-    for slot in slots.iter_mut() {
-        if let Some(s) = slot.take() {
-            alloc.free_seq(&s.seq);
-            let _ = s.tx.send(GenEvent::Error("engine stopped".into()));
-        }
-    }
-    for w in waiting {
-        let _ = w.tx.send(GenEvent::Error("engine stopped".into()));
+    /// Publish allocator-internal counter deltas as engine metrics.
+    fn publish_cache_stats(&mut self) {
+        let st = self.alloc.stats();
+        self.evict_ctr.add(st.evictions - self.last_stats.evictions);
+        self.cow_ctr.add(st.cow_forks - self.last_stats.cow_forks);
+        self.last_stats = st;
     }
 }
 
-/// Publish allocator-internal counter deltas as engine metrics.
-fn publish_cache_stats(
-    alloc: &BlockAllocator,
-    last: &mut CacheStats,
-    evict_ctr: &crate::util::metrics::Counter,
-    cow_ctr: &crate::util::metrics::Counter,
-) {
-    let st = alloc.stats();
-    evict_ctr.add(st.evictions - last.evictions);
-    cow_ctr.add(st.cow_forks - last.cow_forks);
-    *last = st;
-}
-
-fn finish(alloc: &mut BlockAllocator, mut slot: Slot, reason: &'static str) {
+fn finish(alloc: &mut BlockAllocator, mut slot: Slot, reason: &'static str, now_us: u64) {
     let tail = slot.decoder.finish();
     if !tail.is_empty() {
         let _ = slot.tx.send(GenEvent::Token(tail));
@@ -610,10 +744,10 @@ fn finish(alloc: &mut BlockAllocator, mut slot: Slot, reason: &'static str) {
         completion_tokens: slot.completion_tokens,
         cached_tokens: slot.cached_tokens,
         ttft: slot
-            .first_token_at
-            .map(|t| t.duration_since(slot.started))
+            .first_token_at_us
+            .map(|t| Duration::from_micros(t.saturating_sub(slot.started_us)))
             .unwrap_or_default(),
-        total: slot.started.elapsed(),
+        total: Duration::from_micros(now_us.saturating_sub(slot.started_us)),
         finish_reason: reason,
     };
     let _ = slot.tx.send(GenEvent::Done(usage));
@@ -645,7 +779,9 @@ pub struct EngineInfo {
 mod tests {
     use super::*;
     use crate::llmserver::backend::SimBackend;
+    use crate::util::clock::SimClock;
     use std::sync::Arc;
+    use std::time::Instant;
 
     fn sim() -> Engine {
         Engine::start(
@@ -758,6 +894,83 @@ mod tests {
             }
         }
         assert!(done || gen.rx.recv().is_err());
+    }
+
+    // --- virtual time: the same core, stepped inline under a SimClock -----
+
+    #[test]
+    fn engine_core_runs_under_virtual_time() {
+        let clock = SimClock::new();
+        let backend =
+            SimBackend::by_name("intel-neural-7b", 1.0).unwrap().with_clock(clock.clone());
+        let mut core = EngineCore::new(
+            Box::new(backend),
+            EngineConfig::default(),
+            Registry::new(),
+            clock.clone(),
+        );
+        let (tx, rx) = channel();
+        core.submit(
+            GenRequest { prompt: "count from 1 to 10".into(), ..Default::default() },
+            tx,
+        );
+        let mut steps = 0;
+        while !core.is_idle() {
+            core.step();
+            steps += 1;
+            assert!(steps < 10_000, "engine never finished under the sim clock");
+        }
+        let (text, usage) = Generation { rx }.collect().unwrap();
+        assert_eq!(text, "1 2 3 4 5 6 7 8 9 10");
+        assert_eq!(usage.finish_reason, "stop");
+        // time_scale 1.0 compute was charged to the virtual clock, not to
+        // this test's wall clock.
+        assert!(clock.now_us() >= 100_000, "virtual clock barely moved: {}", clock.now_us());
+        assert!(usage.ttft > Duration::ZERO);
+        assert!(usage.total >= usage.ttft);
+    }
+
+    #[test]
+    fn engine_core_is_deterministic_for_a_fixed_seed() {
+        let run = || {
+            let clock = SimClock::new();
+            let backend =
+                SimBackend::by_name("intel-neural-7b", 1.0).unwrap().with_clock(clock.clone());
+            let mut core = EngineCore::new(
+                Box::new(backend),
+                EngineConfig::default(),
+                Registry::new(),
+                clock.clone(),
+            );
+            let rxs: Vec<_> = (0..4)
+                .map(|i| {
+                    let (tx, rx) = channel();
+                    core.submit(
+                        GenRequest {
+                            prompt: format!("user {i} says hello"),
+                            temperature: 0.8,
+                            seed: 7,
+                            ..Default::default()
+                        },
+                        tx,
+                    );
+                    rx
+                })
+                .collect();
+            let mut steps = 0;
+            while !core.is_idle() {
+                core.step();
+                steps += 1;
+                assert!(steps < 100_000);
+            }
+            rxs.into_iter()
+                .map(|rx| {
+                    let (text, u) = Generation { rx }.collect().unwrap();
+                    (text, u.ttft, u.total, u.completion_tokens, u.finish_reason)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "same seed must replay bit-identically");
     }
 
     // --- request lifecycle: cancellation + deadlines ----------------------
@@ -905,7 +1118,7 @@ mod tests {
             .generate(GenRequest {
                 prompt: "x".into(),
                 max_tokens: 1_000_000,
-                deadline: Some(Instant::now() + Duration::from_millis(60)),
+                deadline_ms: Some(60),
                 ..Default::default()
             })
             .unwrap();
@@ -929,7 +1142,7 @@ mod tests {
         let (text, usage) = engine
             .generate(GenRequest {
                 prompt: "queued".into(),
-                deadline: Some(Instant::now() + Duration::from_millis(40)),
+                deadline_ms: Some(40),
                 ..Default::default()
             })
             .unwrap();

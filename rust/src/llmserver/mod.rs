@@ -31,4 +31,4 @@ pub mod tokenizer;
 
 pub use api::LlmHttpServer;
 pub use backend::{Backend, PjrtBackend, SimBackend, SimProfile};
-pub use engine::{Engine, EngineConfig, GenEvent, GenRequest, Generation, Usage};
+pub use engine::{Engine, EngineConfig, EngineCore, GenEvent, GenRequest, Generation, Usage};

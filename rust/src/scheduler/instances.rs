@@ -17,6 +17,7 @@ use crate::llmserver::backend::{PjrtBackend, SimBackend};
 use crate::llmserver::engine::{Engine, EngineConfig};
 use crate::llmserver::LlmHttpServer;
 use crate::slurm::JobId;
+use crate::util::clock::{Clock, WallClock};
 use crate::util::http;
 use crate::util::metrics::Registry;
 
@@ -50,6 +51,8 @@ pub struct RealLauncher {
     /// bench flips `abort_on_disconnect` off for its baseline).
     engine_config: EngineConfig,
     artifacts_dir: std::path::PathBuf,
+    /// Where the model-load delay is charged (wall clock by default).
+    clock: Arc<dyn Clock>,
     state: Mutex<BTreeMap<JobId, Arc<InstanceState>>>,
 }
 
@@ -65,8 +68,15 @@ impl RealLauncher {
             load_time_scale,
             engine_config: EngineConfig::default(),
             artifacts_dir: crate::runtime::artifacts_dir(),
+            clock: WallClock::new(),
             state: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Builder: time source the cold-start load delay sleeps against.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> RealLauncher {
+        self.clock = clock;
+        self
     }
 
     pub fn with_artifacts(mut self, dir: std::path::PathBuf) -> RealLauncher {
@@ -93,6 +103,7 @@ impl InstanceLauncher for RealLauncher {
         let engine_cfg = self.engine_config.clone();
         let artifacts = self.artifacts_dir.clone();
         let service_name = service.name.clone();
+        let clock = self.clock.clone();
         std::thread::spawn(move || {
             // Simulated model-load delay: the port stays unbound, so
             // readiness probes get connection-refused — the cold start.
@@ -104,7 +115,7 @@ impl InstanceLauncher for RealLauncher {
             };
             let delay = Duration::from_secs_f64(load_secs * load_scale);
             if !delay.is_zero() {
-                std::thread::sleep(delay);
+                clock.sleep(delay);
             }
             if st.cancelled.load(Ordering::SeqCst) {
                 return;

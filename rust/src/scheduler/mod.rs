@@ -208,6 +208,15 @@ impl ServiceScheduler {
         }
     }
 
+    /// Builder: pin the port-allocation RNG. The default draws a fresh
+    /// seed per scheduler so co-hosted stacks never race for ports; the
+    /// deterministic harness overrides it so two runs of one scenario
+    /// allocate byte-identical ports.
+    pub fn with_seed(self, seed: u64) -> ServiceScheduler {
+        *self.rng.lock().unwrap() = Rng::new(seed);
+        self
+    }
+
     pub fn services(&self) -> Vec<ServiceSpec> {
         self.services.lock().unwrap().clone()
     }

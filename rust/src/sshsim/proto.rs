@@ -25,6 +25,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::crypto::{KeyPair, SessionCrypto};
 use super::AuthorizedKeys;
+use crate::util::clock::{Clock, WallClock};
 
 const FRAME_EXEC: u8 = 0;
 const FRAME_DATA: u8 = 1;
@@ -470,6 +471,9 @@ pub struct SshClient {
     /// this (calibrated against Table 1's measured SSH leg) to reproduce
     /// the single-connection ~200 RPS ceiling of Table 2. Zero by default.
     frame_delay: Duration,
+    /// Where `frame_delay` is charged: the wall clock by default; a
+    /// `SimClock` makes wire time advance virtual microseconds instead.
+    clock: Arc<dyn Clock>,
 }
 
 impl SshClient {
@@ -480,6 +484,17 @@ impl SshClient {
 
     /// Connect with an emulated per-frame wire delay (see `frame_delay`).
     pub fn connect_with(addr: &str, key: &KeyPair, frame_delay: Duration) -> Result<SshClient> {
+        SshClient::connect_with_clock(addr, key, frame_delay, WallClock::new())
+    }
+
+    /// Like [`SshClient::connect_with`], but wire-time charges go to the
+    /// injected clock (virtual microseconds under a `SimClock`).
+    pub fn connect_with_clock(
+        addr: &str,
+        key: &KeyPair,
+        frame_delay: Duration,
+        clock: Arc<dyn Clock>,
+    ) -> Result<SshClient> {
         let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true)?;
         // --- handshake ---
@@ -550,7 +565,7 @@ impl SshClient {
             }
         });
 
-        Ok(SshClient { writer, channels, pong, next_chan: AtomicU32::new(1), dead, frame_delay })
+        Ok(SshClient { writer, channels, pong, next_chan: AtomicU32::new(1), dead, frame_delay, clock })
     }
 
     pub fn is_alive(&self) -> bool {
@@ -565,7 +580,7 @@ impl SshClient {
         if !self.frame_delay.is_zero() {
             // Serialized wire time: held under the writer lock on purpose —
             // one connection, one wire (the paper's SSH bottleneck).
-            std::thread::sleep(self.frame_delay);
+            self.clock.sleep(self.frame_delay);
         }
         let (ref mut sock, ref mut crypto) = *g;
         write_frame(sock, crypto, ty, chan, payload).map_err(|e| {
@@ -585,7 +600,7 @@ impl SshClient {
         let mut g = self.writer.lock().unwrap();
         if !self.frame_delay.is_zero() {
             // Serialized wire time, one slot per frame (see `send`).
-            std::thread::sleep(self.frame_delay * frames.len() as u32);
+            self.clock.sleep(self.frame_delay * frames.len() as u32);
         }
         let (ref mut sock, ref mut crypto) = *g;
         for (ty, payload) in frames {

@@ -18,6 +18,10 @@
 //!
 //! Examples, integration tests and every bench build on this.
 
+pub mod sim;
+
+pub use sim::{SimRecord, SimRequest, SimStack, SimStackConfig};
+
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 

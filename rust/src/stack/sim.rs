@@ -1,0 +1,842 @@
+//! Virtual-time full-stack harness (DESIGN.md §Virtual time).
+//!
+//! [`SimStack`] assembles the same serving path as [`super::ChatAiStack`] —
+//! Slurm simulator, service scheduler, routing table, demand tracker,
+//! per-instance engine cores, gateway rate limits — but drives all of it
+//! single-threaded from a [`SimExecutor`]: every sleep, timeout and tick is
+//! a scheduled event on the shared `SimClock`, and every engine decode step
+//! charges its calibrated latency onto virtual time instead of sleeping.
+//! A fig3-class day of traffic from thousands of users therefore runs in
+//! seconds of CPU, and the entire run — placements, TTFTs, finish reasons,
+//! autoscaling decisions, port numbers — is bit-identical for a fixed seed.
+//!
+//! What is simulated away relative to the wall-clock stack: the real HTTP
+//! transport, the SSH framing and the gateway's header plumbing. Requests
+//! enter at the gateway hop (per-user token-bucket rate limit + a fixed
+//! ingress latency), are placed exactly like the cloud interface places
+//! them (least-loaded routable instance, demand-tracker guard, deadline
+//! budget burned by queue wait), and are served by real [`EngineCore`]s
+//! running the real admission/prefill/decode loop over `SimBackend`'s
+//! calibrated timing model. The scheduler, Slurm simulator and routing
+//! table are the production objects, not mocks.
+//!
+//! Determinism contract: one scenario (same config, same seed, same
+//! scheduled stimuli) produces byte-identical [`SimStack::trace`] output on
+//! every run. `tests/sim_determinism.rs` pins this, and CI diffs two runs.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, BTreeSet};
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::gateway::TokenBucket;
+use crate::llmserver::backend::SimBackend;
+use crate::llmserver::{EngineConfig, EngineCore, GenEvent, GenRequest};
+use crate::scheduler::routing::InflightGuard;
+use crate::scheduler::{
+    BackendKind, InstanceGuard, InstanceLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec,
+};
+use crate::slurm::{ClusterSpec, JobId, SlurmSim};
+use crate::util::clock::{Clock, SimClock};
+use crate::util::metrics::Registry;
+use crate::util::rng::Rng;
+use crate::util::sim::SimExecutor;
+
+/// Virtual-time stack configuration. Unlike [`super::StackConfig`], load
+/// times and model latencies default to *realistic* scales: virtual seconds
+/// are free, so there is nothing to speed up.
+pub struct SimStackConfig {
+    /// Root seed: derives the placement RNG, per-request sampling seeds and
+    /// the scheduler's port allocator. Same seed ⇒ same trace.
+    pub seed: u64,
+    pub cluster: ClusterSpec,
+    pub services: Vec<ServiceSpec>,
+    /// Cold-start scale in virtual time (1.0 = the paper's minutes-long
+    /// 70B model loads).
+    pub load_time_scale: f64,
+    /// Scheduler tick period (the keepalive ping; paper: 5 s).
+    pub keepalive: Duration,
+    /// How long a request may wait for a routable instance before failing
+    /// with `queue_timeout` (mirrors the cloud interface's queue budget).
+    pub queue_timeout: Duration,
+    /// Placement retry interval while no instance is routable.
+    pub placement_poll: Duration,
+    /// Fixed ingress latency between gateway arrival and placement.
+    pub gateway_latency: Duration,
+    /// Per-user token-bucket rate limit at the gateway hop (None = off).
+    pub rate_limit_rps: Option<f64>,
+    /// Engine tuning applied to every instance core.
+    pub engine: EngineConfig,
+    pub scheduler: SchedulerConfig,
+}
+
+impl Default for SimStackConfig {
+    fn default() -> SimStackConfig {
+        SimStackConfig {
+            seed: 7,
+            cluster: ClusterSpec::kisski(),
+            services: vec![ServiceSpec::sim("intel-neural-7b", 1.0)],
+            load_time_scale: 1.0,
+            keepalive: Duration::from_secs(5),
+            queue_timeout: Duration::from_secs(30),
+            placement_poll: Duration::from_millis(20),
+            gateway_latency: Duration::from_millis(1),
+            rate_limit_rps: None,
+            engine: EngineConfig::default(),
+            scheduler: SchedulerConfig::default(),
+        }
+    }
+}
+
+/// One chat request entering at the gateway.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub user: String,
+    pub model: String,
+    pub prompt: String,
+    pub max_tokens: usize,
+    /// End-to-end deadline budget in ms (queue wait counts toward it).
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for SimRequest {
+    fn default() -> SimRequest {
+        SimRequest {
+            user: "user-0".into(),
+            model: "intel-neural-7b".into(),
+            prompt: "hello".into(),
+            max_tokens: 16,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Per-request outcome, one per submitted request.
+#[derive(Debug, Clone)]
+pub struct SimRecord {
+    pub id: u64,
+    pub user: String,
+    pub model: String,
+    /// Virtual-us the request arrived at the gateway.
+    pub submit_us: u64,
+    /// Instance job the request was placed on (None if it never placed:
+    /// rate-limited, queue timeout, pre-placement deadline or cancel).
+    pub placed_job: Option<JobId>,
+    /// Time to first token in virtual us (None if no token was produced).
+    pub ttft_us: Option<u64>,
+    pub finish_us: u64,
+    /// Engine finish reason ("stop", "length", "deadline", "cancelled",
+    /// "kv_exhausted"), a gateway/placement outcome ("rate_limited",
+    /// "queue_timeout", "client_disconnect"), or "error: …".
+    pub finish_reason: String,
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub cached_tokens: usize,
+}
+
+impl SimRecord {
+    /// One deterministic trace line (the seed-replay currency).
+    pub fn trace_line(&self) -> String {
+        format!(
+            "req={} user={} model={} submit_us={} job={} ttft_us={} finish_us={} \
+             reason={} prompt={} completion={} cached={}",
+            self.id,
+            self.user,
+            self.model,
+            self.submit_us,
+            self.placed_job.map(|j| j.to_string()).unwrap_or_else(|| "-".into()),
+            self.ttft_us.map(|t| t.to_string()).unwrap_or_else(|| "-".into()),
+            self.finish_us,
+            self.finish_reason,
+            self.prompt_tokens,
+            self.completion_tokens,
+            self.cached_tokens,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instance launcher: engine cores stepped inline instead of engine threads
+// ---------------------------------------------------------------------------
+
+/// The virtual-time [`InstanceLauncher`]: each launched job is an
+/// [`EngineCore`] the event loop steps inline, plus a ready-at timestamp
+/// standing in for the cold-start model load (the port stays "unbound" —
+/// probes fail — until virtual time passes it, exactly like
+/// `RealLauncher`'s delayed bind).
+struct SimLauncher {
+    clock: Arc<SimClock>,
+    metrics: Registry,
+    load_time_scale: f64,
+    engine_cfg: EngineConfig,
+    instances: Mutex<BTreeMap<JobId, Arc<SimInstance>>>,
+}
+
+struct SimInstance {
+    addr: String,
+    ready_at_us: u64,
+    core: Mutex<EngineCore>,
+}
+
+impl SimLauncher {
+    fn instance(&self, job_id: JobId) -> Option<Arc<SimInstance>> {
+        self.instances.lock().unwrap().get(&job_id).cloned()
+    }
+}
+
+impl InstanceLauncher for SimLauncher {
+    fn launch(&self, job_id: JobId, service: &ServiceSpec, _node: &str, port: u16) {
+        let (backend, load_secs) = match &service.backend {
+            BackendKind::Sim { profile, time_scale } => {
+                let Some(b) = SimBackend::by_name(profile, *time_scale) else {
+                    crate::log_warn!("simstack", "unknown profile {profile}");
+                    return;
+                };
+                let load = crate::llmserver::SimProfile::by_name(profile)
+                    .map(|p| p.load_secs)
+                    .unwrap_or(10.0);
+                (b.with_clock(self.clock.clone()), load)
+            }
+            BackendKind::Pjrt { model } => {
+                // The AOT PJRT path computes on real hardware: it cannot
+                // charge virtual time. Leave the job perpetually unready.
+                crate::log_warn!("simstack", "pjrt model {model} unsupported under virtual time");
+                return;
+            }
+        };
+        let core = EngineCore::new(
+            Box::new(backend),
+            self.engine_cfg.clone(),
+            self.metrics.clone(),
+            self.clock.clone(),
+        );
+        let ready_at_us = self
+            .clock
+            .now_us()
+            .saturating_add((load_secs * self.load_time_scale * 1e6) as u64);
+        self.instances.lock().unwrap().insert(
+            job_id,
+            Arc::new(SimInstance {
+                addr: format!("127.0.0.1:{port}"),
+                ready_at_us,
+                core: Mutex::new(core),
+            }),
+        );
+    }
+
+    fn terminate(&self, job_id: JobId) {
+        if let Some(si) = self.instances.lock().unwrap().remove(&job_id) {
+            // Fails all in-flight and queued work with "engine stopped";
+            // the keepalive sweep turns those into error records.
+            si.core.lock().unwrap().shutdown();
+        }
+    }
+
+    fn probe(&self, addr: &str) -> bool {
+        let now = self.clock.now_us();
+        self.instances
+            .lock()
+            .unwrap()
+            .values()
+            .any(|si| si.addr == addr && now >= si.ready_at_us)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The stack
+// ---------------------------------------------------------------------------
+
+struct Inflight {
+    user: String,
+    model: String,
+    job_id: JobId,
+    submit_us: u64,
+    rx: Receiver<GenEvent>,
+    _demand: InflightGuard,
+    _load: InstanceGuard,
+}
+
+struct PendingReq {
+    id: u64,
+    user: String,
+    model: String,
+    prompt: String,
+    max_tokens: usize,
+    deadline_ms: Option<u64>,
+    submit_us: u64,
+}
+
+struct SimInner {
+    clock: Arc<SimClock>,
+    metrics: Registry,
+    slurm: Arc<Mutex<SlurmSim>>,
+    scheduler: Arc<ServiceScheduler>,
+    launcher: Arc<SimLauncher>,
+    root_seed: u64,
+    keepalive: Duration,
+    queue_timeout_us: u64,
+    placement_poll: Duration,
+    gateway_latency: Duration,
+    rate_limit_rps: Option<f64>,
+    route_rng: RefCell<Rng>,
+    buckets: RefCell<BTreeMap<String, TokenBucket>>,
+    inflight: RefCell<BTreeMap<u64, Inflight>>,
+    /// Secondary index: which in-flight requests ride which instance.
+    by_job: RefCell<BTreeMap<JobId, Vec<u64>>>,
+    /// Instances with a pump event already scheduled (no duplicates).
+    pumping: RefCell<BTreeSet<JobId>>,
+    /// Client cancels that arrived before their request placed.
+    cancelled: RefCell<BTreeSet<u64>>,
+    records: RefCell<Vec<SimRecord>>,
+    next_id: Cell<u64>,
+    /// Submitted-but-unfinished requests (drives `run_until_settled`).
+    open: Cell<u64>,
+}
+
+/// The discrete-event serving stack. Schedule stimuli (`submit_chat_at`,
+/// `cancel_at`, `fail_node_at`), run virtual time forward, read the trace.
+pub struct SimStack {
+    exec: Rc<SimExecutor>,
+    inner: Rc<SimInner>,
+}
+
+impl SimStack {
+    pub fn start(cfg: SimStackConfig) -> SimStack {
+        let exec = Rc::new(SimExecutor::new(cfg.seed));
+        let clock = exec.clock();
+        let metrics = Registry::new();
+        let slurm = Arc::new(Mutex::new(SlurmSim::new(cfg.cluster.clone())));
+        let launcher = Arc::new(SimLauncher {
+            clock: clock.clone(),
+            metrics: metrics.clone(),
+            load_time_scale: cfg.load_time_scale,
+            engine_cfg: cfg.engine.clone(),
+            instances: Mutex::new(BTreeMap::new()),
+        });
+        let scheduler = Arc::new(
+            ServiceScheduler::new(
+                slurm.clone(),
+                clock.clone(),
+                launcher.clone(),
+                cfg.services.clone(),
+                cfg.scheduler.clone(),
+                metrics.clone(),
+            )
+            // Pin the port allocator: two runs of one scenario must place
+            // jobs on byte-identical (node, port) pairs.
+            .with_seed(cfg.seed ^ 0x5EED_0001),
+        );
+        let route_rng = exec.rng("placement");
+        let inner = Rc::new(SimInner {
+            clock,
+            metrics,
+            slurm,
+            scheduler,
+            launcher,
+            root_seed: cfg.seed,
+            keepalive: cfg.keepalive.max(Duration::from_micros(1)),
+            queue_timeout_us: cfg.queue_timeout.as_micros() as u64,
+            placement_poll: cfg.placement_poll.max(Duration::from_micros(1)),
+            gateway_latency: cfg.gateway_latency,
+            rate_limit_rps: cfg.rate_limit_rps,
+            route_rng: RefCell::new(route_rng),
+            buckets: RefCell::new(BTreeMap::new()),
+            inflight: RefCell::new(BTreeMap::new()),
+            by_job: RefCell::new(BTreeMap::new()),
+            pumping: RefCell::new(BTreeSet::new()),
+            cancelled: RefCell::new(BTreeSet::new()),
+            records: RefCell::new(Vec::new()),
+            next_id: Cell::new(1),
+            open: Cell::new(0),
+        });
+        // Boot: the first scheduler pass (t = 0) submits min_instances.
+        {
+            let inner2 = inner.clone();
+            exec.schedule_at_us(0, move |ex| keepalive(&inner2, ex));
+        }
+        SimStack { exec, inner }
+    }
+
+    pub fn clock(&self) -> Arc<SimClock> {
+        self.inner.clock.clone()
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.inner.clock.now_us()
+    }
+
+    pub fn metrics(&self) -> Registry {
+        self.inner.metrics.clone()
+    }
+
+    pub fn scheduler(&self) -> Arc<ServiceScheduler> {
+        self.inner.scheduler.clone()
+    }
+
+    pub fn slurm(&self) -> Arc<Mutex<SlurmSim>> {
+        self.inner.slurm.clone()
+    }
+
+    /// Events executed so far (throughput telemetry for benches).
+    pub fn executed_events(&self) -> u64 {
+        self.exec.executed()
+    }
+
+    /// Schedule a chat request to arrive at absolute virtual time `at_us`.
+    /// Returns the request id its [`SimRecord`] will carry.
+    pub fn submit_chat_at(&self, at_us: u64, req: SimRequest) -> u64 {
+        let id = self.inner.next_id.get();
+        self.inner.next_id.set(id + 1);
+        self.inner.open.set(self.inner.open.get() + 1);
+        let inner = self.inner.clone();
+        self.exec.schedule_at_us(at_us, move |ex| arrive(&inner, ex, id, req));
+        id
+    }
+
+    /// Schedule a client disconnect for request `id` at `at_us`: the
+    /// engine frees its batch slot within one decode step, and the record
+    /// finishes with reason `client_disconnect`.
+    pub fn cancel_at(&self, id: u64, at_us: u64) {
+        let inner = self.inner.clone();
+        self.exec.schedule_at_us(at_us, move |_| {
+            let removed = inner.inflight.borrow_mut().remove(&id);
+            match removed {
+                Some(fl) => {
+                    unindex(&inner, fl.job_id, id);
+                    let now = inner.clock.now_us();
+                    record(
+                        &inner,
+                        SimRecord {
+                            id,
+                            user: fl.user.clone(),
+                            model: fl.model.clone(),
+                            submit_us: fl.submit_us,
+                            placed_job: Some(fl.job_id),
+                            ttft_us: None,
+                            finish_us: now,
+                            finish_reason: "client_disconnect".into(),
+                            prompt_tokens: 0,
+                            completion_tokens: 0,
+                            cached_tokens: 0,
+                        },
+                    );
+                    // Dropping `fl` drops its rx: the engine's next send
+                    // fails and the slot frees with "cancelled".
+                }
+                None => {
+                    // Not placed yet (or already finished): flag it so the
+                    // placement retry gives up instead of submitting.
+                    inner.cancelled.borrow_mut().insert(id);
+                }
+            }
+        });
+    }
+
+    /// Schedule a node failure: its jobs die, and the next scheduler tick
+    /// reconciles (decommission + replacement submission).
+    pub fn fail_node_at(&self, node: &str, at_us: u64) {
+        let inner = self.inner.clone();
+        let node = node.to_string();
+        self.exec.schedule_at_us(at_us, move |_| {
+            let now = inner.clock.now_us();
+            inner.slurm.lock().unwrap().fail_node(&node, now);
+        });
+    }
+
+    pub fn restore_node_at(&self, node: &str, at_us: u64) {
+        let inner = self.inner.clone();
+        let node = node.to_string();
+        self.exec.schedule_at_us(at_us, move |_| {
+            inner.slurm.lock().unwrap().restore_node(&node);
+        });
+    }
+
+    /// Run every event due up to absolute virtual time `until_us`.
+    pub fn run_until_us(&self, until_us: u64) {
+        self.exec.run_until_us(until_us);
+    }
+
+    /// Run virtual time forward by `d`.
+    pub fn run_for(&self, d: Duration) {
+        self.exec.run_for(d);
+    }
+
+    /// Run until every submitted request has a record, or until `horizon`
+    /// of virtual time passes — whichever first. Returns `true` when all
+    /// requests settled.
+    pub fn run_until_settled(&self, horizon: Duration) -> bool {
+        let deadline =
+            self.inner.clock.now_us().saturating_add(horizon.as_micros() as u64);
+        while self.inner.open.get() > 0 {
+            match self.exec.next_due_us() {
+                Some(t) if t <= deadline => {
+                    self.exec.step();
+                }
+                _ => break,
+            }
+        }
+        self.inner.open.get() == 0
+    }
+
+    /// Requests submitted but not yet finished.
+    pub fn open_requests(&self) -> u64 {
+        self.inner.open.get()
+    }
+
+    pub fn records(&self) -> Vec<SimRecord> {
+        self.inner.records.borrow().clone()
+    }
+
+    /// The deterministic per-request event trace, sorted by request id —
+    /// the artifact seed-replay tests and CI byte-compare.
+    pub fn trace(&self) -> String {
+        let mut recs = self.records();
+        recs.sort_by_key(|r| r.id);
+        let mut out = String::new();
+        for r in &recs {
+            out.push_str(&r.trace_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event bodies
+// ---------------------------------------------------------------------------
+
+/// The scheduler tick: exactly what the SSH keepalive ping triggers in the
+/// wall-clock stack, plus a sweep for requests whose instance died since
+/// the last tick (their channels already hold the error).
+fn keepalive(inner: &Rc<SimInner>, ex: &SimExecutor) {
+    inner.scheduler.run_once();
+    let ids: Vec<u64> = inner.inflight.borrow().keys().cloned().collect();
+    for id in ids {
+        drain_one(inner, id);
+    }
+    let inner2 = inner.clone();
+    ex.schedule_in(inner.keepalive, move |ex| keepalive(&inner2, ex));
+}
+
+/// Gateway ingress: rate limit, then forward to placement after the hop
+/// latency.
+fn arrive(inner: &Rc<SimInner>, ex: &SimExecutor, id: u64, req: SimRequest) {
+    let now = inner.clock.now_us();
+    if let Some(rps) = inner.rate_limit_rps {
+        let allowed = {
+            let mut buckets = inner.buckets.borrow_mut();
+            let clock: Arc<dyn Clock> = inner.clock.clone();
+            buckets
+                .entry(req.user.clone())
+                .or_insert_with(|| TokenBucket::new(rps.max(1.0), rps, clock))
+                .try_take()
+        };
+        if !allowed {
+            record(
+                inner,
+                SimRecord {
+                    id,
+                    user: req.user,
+                    model: req.model,
+                    submit_us: now,
+                    placed_job: None,
+                    ttft_us: None,
+                    finish_us: now,
+                    finish_reason: "rate_limited".into(),
+                    prompt_tokens: 0,
+                    completion_tokens: 0,
+                    cached_tokens: 0,
+                },
+            );
+            return;
+        }
+    }
+    let p = PendingReq {
+        id,
+        user: req.user,
+        model: req.model,
+        prompt: req.prompt,
+        max_tokens: req.max_tokens,
+        deadline_ms: req.deadline_ms,
+        submit_us: now,
+    };
+    if inner.gateway_latency.is_zero() {
+        try_place(inner, ex, p);
+    } else {
+        let inner2 = inner.clone();
+        ex.schedule_in(inner.gateway_latency, move |ex| try_place(&inner2, ex, p));
+    }
+}
+
+/// Placement: the cloud interface's loop — least-loaded routable instance,
+/// demand guard, deadline budget burned by the wait — as retried events.
+fn try_place(inner: &Rc<SimInner>, ex: &SimExecutor, p: PendingReq) {
+    if inner.cancelled.borrow_mut().remove(&p.id) {
+        finish_unplaced(inner, &p, "client_disconnect");
+        return;
+    }
+    let now = inner.clock.now_us();
+    let waited_us = now.saturating_sub(p.submit_us);
+    if let Some(ms) = p.deadline_ms {
+        if waited_us >= ms.saturating_mul(1000) {
+            finish_unplaced(inner, &p, "deadline");
+            return;
+        }
+    }
+    if waited_us >= inner.queue_timeout_us {
+        finish_unplaced(inner, &p, "queue_timeout");
+        return;
+    }
+    let pick = {
+        let mut rng = inner.route_rng.borrow_mut();
+        inner.scheduler.routing.pick_least_loaded(&p.model, &mut rng)
+    };
+    let Some(target) = pick else {
+        retry_place(inner, ex, p);
+        return;
+    };
+    let Some(si) = inner.launcher.instance(target.job_id) else {
+        retry_place(inner, ex, p);
+        return;
+    };
+    let demand = inner.scheduler.demand.begin(&p.model);
+    let load = inner.scheduler.routing.begin_request(target.job_id);
+    // Forward the *remaining* budget: transit and queue wait count.
+    let remaining_ms = p.deadline_ms.map(|ms| ms.saturating_sub(waited_us / 1000));
+    let (tx, rx) = channel();
+    si.core.lock().unwrap().submit(
+        GenRequest {
+            prompt: p.prompt,
+            max_tokens: p.max_tokens,
+            temperature: 0.0,
+            top_k: 0,
+            seed: inner.root_seed ^ p.id,
+            deadline_ms: remaining_ms,
+        },
+        tx,
+    );
+    inner.inflight.borrow_mut().insert(
+        p.id,
+        Inflight {
+            user: p.user,
+            model: p.model,
+            job_id: target.job_id,
+            submit_us: p.submit_us,
+            rx,
+            _demand: demand,
+            _load: load,
+        },
+    );
+    inner.by_job.borrow_mut().entry(target.job_id).or_default().push(p.id);
+    ensure_pump(inner, ex, target.job_id);
+}
+
+fn retry_place(inner: &Rc<SimInner>, ex: &SimExecutor, p: PendingReq) {
+    let inner2 = inner.clone();
+    ex.schedule_in(inner.placement_poll, move |ex| try_place(&inner2, ex, p));
+}
+
+/// Schedule a pump event for an instance unless one is already pending.
+fn ensure_pump(inner: &Rc<SimInner>, ex: &SimExecutor, job_id: JobId) {
+    if !inner.pumping.borrow_mut().insert(job_id) {
+        return;
+    }
+    let inner2 = inner.clone();
+    ex.schedule_in(Duration::ZERO, move |ex| pump(&inner2, ex, job_id));
+}
+
+/// One engine iteration for one instance. The backend charge advances the
+/// clock during `step()`, so the follow-up pump lands one step-duration
+/// later in virtual time — the decode cadence, without threads.
+fn pump(inner: &Rc<SimInner>, ex: &SimExecutor, job_id: JobId) {
+    inner.pumping.borrow_mut().remove(&job_id);
+    let Some(si) = inner.launcher.instance(job_id) else {
+        // Decommissioned since this pump was scheduled: its channels were
+        // answered by shutdown(); collect the errors.
+        drain_job(inner, job_id);
+        return;
+    };
+    let idle_after = {
+        let mut core = si.core.lock().unwrap();
+        if core.is_idle() {
+            true
+        } else {
+            core.step();
+            core.is_idle()
+        }
+    };
+    drain_job(inner, job_id);
+    if !idle_after {
+        ensure_pump(inner, ex, job_id);
+    }
+}
+
+/// Drain finished generations for every request riding `job_id`.
+fn drain_job(inner: &Rc<SimInner>, job_id: JobId) {
+    let ids = inner.by_job.borrow().get(&job_id).cloned().unwrap_or_default();
+    for id in ids {
+        drain_one(inner, id);
+    }
+}
+
+/// Poll one in-flight request's event channel; finalize on Done/Error.
+fn drain_one(inner: &Rc<SimInner>, id: u64) {
+    let outcome = {
+        let mut map = inner.inflight.borrow_mut();
+        let Some(fl) = map.get_mut(&id) else { return };
+        let mut terminal = None;
+        loop {
+            match fl.rx.try_recv() {
+                Ok(GenEvent::Token(_)) => {}
+                Ok(GenEvent::Done(usage)) => {
+                    terminal = Some(Ok(usage));
+                    break;
+                }
+                Ok(GenEvent::Error(e)) => {
+                    terminal = Some(Err(e));
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    terminal = Some(Err("engine dropped the generation".into()));
+                    break;
+                }
+            }
+        }
+        terminal.map(|t| (map.remove(&id).unwrap(), t))
+    };
+    let Some((fl, result)) = outcome else { return };
+    unindex(inner, fl.job_id, id);
+    let now = inner.clock.now_us();
+    let rec = match result {
+        Ok(u) => SimRecord {
+            id,
+            user: fl.user.clone(),
+            model: fl.model.clone(),
+            submit_us: fl.submit_us,
+            placed_job: Some(fl.job_id),
+            ttft_us: (u.completion_tokens > 0).then(|| u.ttft.as_micros() as u64),
+            finish_us: now,
+            finish_reason: u.finish_reason.to_string(),
+            prompt_tokens: u.prompt_tokens,
+            completion_tokens: u.completion_tokens,
+            cached_tokens: u.cached_tokens,
+        },
+        Err(e) => SimRecord {
+            id,
+            user: fl.user.clone(),
+            model: fl.model.clone(),
+            submit_us: fl.submit_us,
+            placed_job: Some(fl.job_id),
+            ttft_us: None,
+            finish_us: now,
+            finish_reason: format!("error: {e}"),
+            prompt_tokens: 0,
+            completion_tokens: 0,
+            cached_tokens: 0,
+        },
+    };
+    record(inner, rec);
+}
+
+fn finish_unplaced(inner: &Rc<SimInner>, p: &PendingReq, reason: &str) {
+    let now = inner.clock.now_us();
+    record(
+        inner,
+        SimRecord {
+            id: p.id,
+            user: p.user.clone(),
+            model: p.model.clone(),
+            submit_us: p.submit_us,
+            placed_job: None,
+            ttft_us: None,
+            finish_us: now,
+            finish_reason: reason.to_string(),
+            prompt_tokens: 0,
+            completion_tokens: 0,
+            cached_tokens: 0,
+        },
+    );
+}
+
+fn record(inner: &Rc<SimInner>, rec: SimRecord) {
+    inner.open.set(inner.open.get().saturating_sub(1));
+    inner.records.borrow_mut().push(rec);
+}
+
+fn unindex(inner: &Rc<SimInner>, job_id: JobId, id: u64) {
+    let mut by_job = inner.by_job.borrow_mut();
+    if let Some(v) = by_job.get_mut(&job_id) {
+        v.retain(|&x| x != id);
+        if v.is_empty() {
+            by_job.remove(&job_id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_chat_requests_deterministically_under_virtual_time() {
+        let run = || {
+            let stack = SimStack::start(SimStackConfig { seed: 11, ..Default::default() });
+            // Cold start: job submitted at t=0, launched on the next tick,
+            // ready after the 30 s simulated model load. Arrive after that.
+            for i in 0..5u64 {
+                stack.submit_chat_at(
+                    40_000_000 + i * 250_000,
+                    SimRequest {
+                        user: format!("user-{i}"),
+                        prompt: format!("hello from user {i}"),
+                        max_tokens: 8,
+                        ..Default::default()
+                    },
+                );
+            }
+            assert!(
+                stack.run_until_settled(Duration::from_secs(600)),
+                "all requests settle within the horizon"
+            );
+            stack.trace()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed + same scenario => byte-identical traces");
+        assert_eq!(a.lines().count(), 5);
+        for line in a.lines() {
+            assert!(
+                line.contains("reason=length") || line.contains("reason=stop"),
+                "request should complete normally: {line}"
+            );
+            assert!(!line.contains("ttft_us=-"), "completed request has a TTFT: {line}");
+        }
+    }
+
+    #[test]
+    fn rate_limit_and_queue_timeout_paths_produce_records() {
+        let stack = SimStack::start(SimStackConfig {
+            seed: 3,
+            rate_limit_rps: Some(1.0),
+            queue_timeout: Duration::from_secs(5),
+            ..Default::default()
+        });
+        // A burst of 3 from one user at t=1s: bucket capacity 1 ⇒ two are
+        // rejected at the gateway. No instance is ready yet (cold start
+        // lasts ~35 s), so the surviving request times out in queue.
+        for _ in 0..3 {
+            stack.submit_chat_at(
+                1_000_000,
+                SimRequest { user: "burster".into(), ..Default::default() },
+            );
+        }
+        assert!(stack.run_until_settled(Duration::from_secs(60)));
+        let mut reasons: Vec<String> =
+            stack.records().iter().map(|r| r.finish_reason.clone()).collect();
+        reasons.sort();
+        assert_eq!(reasons, vec!["queue_timeout", "rate_limited", "rate_limited"]);
+    }
+}

@@ -13,3 +13,4 @@ pub mod metrics;
 pub mod http;
 pub mod prop;
 pub mod bench;
+pub mod sim;

@@ -1,0 +1,354 @@
+//! Discrete-event virtual-time executor.
+//!
+//! The serving path abstracts time behind [`Clock`]; this module supplies
+//! the driver that makes the simulated side of that abstraction *run*: an
+//! event queue keyed on [`SimClock`] microseconds with deterministic
+//! tie-breaking by `(time, sequence)`. Everything that would be a
+//! `thread::sleep`, timeout or tick in wall-clock mode becomes a scheduled
+//! closure; the executor pops events in order, advances the shared
+//! `SimClock` to each event's due time, and runs the closure — which may
+//! schedule (or cancel) further events.
+//!
+//! Determinism contract (pinned by the property tests below):
+//! - an event never runs before its scheduled time;
+//! - two events scheduled for the same microsecond run in schedule order
+//!   (sequence numbers break the tie — never map/hash iteration order);
+//! - the clock never moves backwards, even when an event body advances it
+//!   past the next event's due time (e.g. a simulated backend "sleeping"
+//!   compute time onto the clock mid-event: the later event then runs at
+//!   the advanced now, exactly like a late wake-up under wall clock).
+//!
+//! Randomness is per-component: [`SimExecutor::rng`] derives a seeded
+//! [`Rng`] from the executor's root seed and a component name, so adding a
+//! new random consumer never perturbs the draw sequence of existing ones.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::clock::{Clock, SimClock};
+use crate::util::rng::Rng;
+
+/// Handle to a scheduled event (for cancellation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EventId {
+    at_us: u64,
+    seq: u64,
+}
+
+impl EventId {
+    /// The virtual time this event is due.
+    pub fn at_us(&self) -> u64 {
+        self.at_us
+    }
+}
+
+type EventFn = Box<dyn FnOnce(&SimExecutor)>;
+
+/// Single-threaded discrete-event executor over a shared [`SimClock`].
+pub struct SimExecutor {
+    clock: Arc<SimClock>,
+    queue: RefCell<BTreeMap<(u64, u64), EventFn>>,
+    next_seq: Cell<u64>,
+    executed: Cell<u64>,
+    seed: u64,
+}
+
+impl SimExecutor {
+    pub fn new(seed: u64) -> SimExecutor {
+        SimExecutor {
+            clock: SimClock::new(),
+            queue: RefCell::new(BTreeMap::new()),
+            next_seq: Cell::new(0),
+            executed: Cell::new(0),
+            seed,
+        }
+    }
+
+    /// The shared clock every component under this executor must use.
+    pub fn clock(&self) -> Arc<SimClock> {
+        self.clock.clone()
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Seeded RNG for a named component, derived from the root seed. The
+    /// same `(root seed, name)` pair always yields the same stream, and
+    /// distinct names yield independent streams.
+    pub fn rng(&self, component: &str) -> Rng {
+        // FNV-1a over the component name, folded into the root seed.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in component.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Rng::new(self.seed ^ h)
+    }
+
+    /// Schedule `f` at absolute virtual time `at_us` (clamped to now: a
+    /// past due time runs at the current instant, like an expired timer).
+    pub fn schedule_at_us(&self, at_us: u64, f: impl FnOnce(&SimExecutor) + 'static) -> EventId {
+        let at_us = at_us.max(self.clock.now_us());
+        let seq = self.next_seq.get();
+        self.next_seq.set(seq + 1);
+        let id = EventId { at_us, seq };
+        self.queue.borrow_mut().insert((at_us, seq), Box::new(f));
+        id
+    }
+
+    /// Schedule `f` after a virtual delay.
+    pub fn schedule_in(&self, d: Duration, f: impl FnOnce(&SimExecutor) + 'static) -> EventId {
+        self.schedule_at_us(self.clock.now_us().saturating_add(d.as_micros() as u64), f)
+    }
+
+    /// Cancel a pending event. Returns `false` if it already ran (or was
+    /// already cancelled).
+    pub fn cancel(&self, id: EventId) -> bool {
+        self.queue.borrow_mut().remove(&(id.at_us, id.seq)).is_some()
+    }
+
+    /// Due time of the earliest pending event.
+    pub fn next_due_us(&self) -> Option<u64> {
+        self.queue.borrow().keys().next().map(|&(t, _)| t)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.borrow().len()
+    }
+
+    /// Events executed so far (telemetry for benches).
+    pub fn executed(&self) -> u64 {
+        self.executed.get()
+    }
+
+    /// Run the earliest pending event, advancing the clock to its due time
+    /// (never backwards). Returns `false` when the queue is empty.
+    pub fn step(&self) -> bool {
+        // Pop before running: the event body may schedule or cancel, so the
+        // queue borrow must not be held across the call.
+        let Some(((at_us, _), f)) = self.queue.borrow_mut().pop_first() else {
+            return false;
+        };
+        if at_us > self.clock.now_us() {
+            self.clock.set_us(at_us);
+        }
+        self.executed.set(self.executed.get() + 1);
+        f(self);
+        true
+    }
+
+    /// Run every event due up to and including `until_us`, then advance the
+    /// clock to `until_us` (events an event body schedules inside the
+    /// window are run too).
+    pub fn run_until_us(&self, until_us: u64) {
+        loop {
+            match self.next_due_us() {
+                Some(t) if t <= until_us => {
+                    self.step();
+                }
+                _ => break,
+            }
+        }
+        if self.clock.now_us() < until_us {
+            self.clock.set_us(until_us);
+        }
+    }
+
+    /// Run for a virtual duration from the current instant.
+    pub fn run_for(&self, d: Duration) {
+        self.run_until_us(self.clock.now_us().saturating_add(d.as_micros() as u64));
+    }
+
+    /// Drain the queue completely (careful with self-rescheduling ticks:
+    /// prefer `run_until_us` when any recurring event exists).
+    pub fn run_until_idle(&self) {
+        while self.step() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::run_prop;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_run_in_time_order_with_clock_advanced() {
+        let ex = SimExecutor::new(1);
+        let seen: Rc<RefCell<Vec<(u64, u64)>>> = Rc::default();
+        for &t in &[300u64, 100, 200] {
+            let seen = seen.clone();
+            ex.schedule_at_us(t, move |ex| seen.borrow_mut().push((t, ex.now_us())));
+        }
+        ex.run_until_us(1_000);
+        assert_eq!(&*seen.borrow(), &[(100, 100), (200, 200), (300, 300)]);
+        assert_eq!(ex.now_us(), 1_000, "run_until advances to the horizon");
+    }
+
+    #[test]
+    fn same_time_events_run_in_schedule_order() {
+        let ex = SimExecutor::new(1);
+        let seen: Rc<RefCell<Vec<u32>>> = Rc::default();
+        for i in 0..16u32 {
+            let seen = seen.clone();
+            ex.schedule_at_us(50, move |_| seen.borrow_mut().push(i));
+        }
+        ex.run_until_idle();
+        assert_eq!(&*seen.borrow(), &(0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_and_cancel_events() {
+        let ex = SimExecutor::new(1);
+        let seen: Rc<RefCell<Vec<&'static str>>> = Rc::default();
+        let doomed = {
+            let seen = seen.clone();
+            ex.schedule_at_us(500, move |_| seen.borrow_mut().push("doomed"))
+        };
+        {
+            let seen = seen.clone();
+            ex.schedule_at_us(100, move |ex| {
+                seen.borrow_mut().push("first");
+                assert!(ex.cancel(doomed), "pending event must cancel");
+                let seen2 = seen.clone();
+                ex.schedule_in(Duration::from_micros(50), move |_| {
+                    seen2.borrow_mut().push("chained");
+                });
+            });
+        }
+        ex.run_until_idle();
+        assert_eq!(&*seen.borrow(), &["first", "chained"]);
+        assert!(!ex.cancel(doomed), "double-cancel reports false");
+    }
+
+    #[test]
+    fn mid_event_clock_advance_never_rolls_back() {
+        // An event that burns virtual compute (clock.sleep) past the next
+        // event's due time: the later event runs late but the clock is
+        // monotone throughout.
+        let ex = SimExecutor::new(1);
+        let seen: Rc<RefCell<Vec<u64>>> = Rc::default();
+        ex.schedule_at_us(100, |ex| {
+            ex.clock.sleep(Duration::from_micros(500)); // now = 600
+        });
+        {
+            let seen = seen.clone();
+            ex.schedule_at_us(200, move |ex| seen.borrow_mut().push(ex.now_us()));
+        }
+        ex.run_until_idle();
+        assert_eq!(&*seen.borrow(), &[600], "late event runs at the advanced now");
+    }
+
+    #[test]
+    fn component_rngs_are_stable_and_independent() {
+        let a = SimExecutor::new(42);
+        let b = SimExecutor::new(42);
+        assert_eq!(a.rng("gateway").next_u64(), b.rng("gateway").next_u64());
+        assert_ne!(a.rng("gateway").next_u64(), a.rng("arrivals").next_u64());
+        let c = SimExecutor::new(43);
+        assert_ne!(a.rng("gateway").next_u64(), c.rng("gateway").next_u64());
+    }
+
+    // --- satellite: property tests over arbitrary interleavings ---------
+
+    #[test]
+    fn prop_no_event_runs_early_and_clock_is_monotone() {
+        run_prop("sim_executor_ordering", 0x51e5, 60, |rng| {
+            let ex = SimExecutor::new(rng.next_u64());
+            // (scheduled_at, seq-within-time) per run, in execution order.
+            let ran: Rc<RefCell<Vec<(u64, u64, u64)>>> = Rc::default(); // (due, id, ran_at)
+            let mut live: Vec<EventId> = Vec::new();
+            let mut next_id = 0u64;
+            let ops = rng.range(20, 120);
+            for _ in 0..ops {
+                match rng.below(10) {
+                    // schedule (dominant op)
+                    0..=5 => {
+                        let at = ex.now_us() + rng.below(5_000);
+                        let id = next_id;
+                        next_id += 1;
+                        let ran = ran.clone();
+                        let ev = ex.schedule_at_us(at, move |ex| {
+                            ran.borrow_mut().push((at.max(0), id, ex.now_us()));
+                        });
+                        live.push(ev);
+                    }
+                    // cancel a random pending event
+                    6..=7 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            ex.cancel(live.swap_remove(i));
+                        }
+                    }
+                    // advance by a random window
+                    _ => {
+                        let before = ex.now_us();
+                        ex.run_until_us(before + rng.below(3_000));
+                        prop_assert!(ex.now_us() >= before, "clock moved backwards");
+                    }
+                }
+            }
+            ex.run_until_idle();
+            let ran = ran.borrow();
+            let mut last_ran_at = 0u64;
+            for &(due, _, ran_at) in ran.iter() {
+                prop_assert!(ran_at >= due, "event ran at {ran_at} before its due time {due}");
+                prop_assert!(ran_at >= last_ran_at, "execution times not monotone");
+                last_ran_at = ran_at;
+            }
+            // Same-due-time events must execute in schedule (id) order:
+            // ids are assigned in schedule order, and within one due time
+            // the executor must preserve them.
+            for w in ran.windows(2) {
+                let (d0, i0, _) = w[0];
+                let (d1, i1, _) = w[1];
+                if d0 == d1 {
+                    prop_assert!(i0 < i1, "same-time events reordered: {i0} after {i1}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cancelled_events_never_run() {
+        run_prop("sim_executor_cancel", 0xca9c, 40, |rng| {
+            let ex = SimExecutor::new(rng.next_u64());
+            let ran: Rc<RefCell<Vec<u64>>> = Rc::default();
+            let mut cancelled = Vec::new();
+            let mut kept = Vec::new();
+            for id in 0..rng.range(5, 60) {
+                let at = rng.below(10_000);
+                let ran = ran.clone();
+                let ev = ex.schedule_at_us(at, move |_| ran.borrow_mut().push(id));
+                if rng.chance(0.5) {
+                    cancelled.push((id, ev));
+                } else {
+                    kept.push(id);
+                }
+            }
+            for &(_, ev) in &cancelled {
+                prop_assert!(ex.cancel(ev), "cancel of pending event failed");
+            }
+            ex.run_until_idle();
+            let ran = ran.borrow();
+            for &(id, _) in &cancelled {
+                prop_assert!(!ran.contains(&id), "cancelled event {id} ran");
+            }
+            let mut sorted_ran: Vec<u64> = ran.clone();
+            sorted_ran.sort_unstable();
+            let mut kept_sorted = kept.clone();
+            kept_sorted.sort_unstable();
+            prop_assert!(sorted_ran == kept_sorted, "kept events did not all run");
+            Ok(())
+        });
+    }
+}

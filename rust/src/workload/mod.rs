@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 
 use crate::util::bench::{stats, Stats};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// One Table-1 row: a named pipeline stage measured over N probes.
 #[derive(Debug, Clone)]
@@ -116,6 +117,61 @@ impl LoadGen {
             errors: errors.load(Ordering::Relaxed),
             latency: if lat.is_empty() { stats(&[0.0]) } else { stats(&lat) },
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop arrival process (virtual-time serving sweeps)
+// ---------------------------------------------------------------------------
+
+/// Deterministic diurnal Poisson arrivals for the virtual-time harness: a
+/// population of users issuing requests as an inhomogeneous Poisson process
+/// whose rate swings over a day (the fig3-class traffic shape — quiet
+/// nights, busy afternoons). Same `Rng` seed ⇒ byte-identical arrival
+/// schedule, which is what makes seed-replay over millions of simulated
+/// requests possible.
+pub struct DiurnalArrivals {
+    /// Distinct user ids arrivals are drawn from (uniformly).
+    pub users: usize,
+    /// Day-average request rate in requests per (virtual) second.
+    pub mean_rps: f64,
+    /// Peak-to-mean swing in [0, 1): rate(t) = mean × (1 + amp·sin(…)),
+    /// troughing at t = 0 (night) and peaking half a period in.
+    pub amplitude: f64,
+    /// Length of one diurnal cycle (24 h for the paper's traffic).
+    pub period: Duration,
+}
+
+impl DiurnalArrivals {
+    /// Arrival rate at virtual second `t` (for tests and plotting).
+    pub fn rate_at(&self, t_secs: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * (t_secs / self.period.as_secs_f64());
+        // Shift so t=0 is the trough: sin(phase - π/2) = -cos(phase).
+        self.mean_rps * (1.0 + self.amplitude * -phase.cos())
+    }
+
+    /// Generate `(arrival_us, user_index)` pairs over `[0, horizon)` by
+    /// thinning a homogeneous process at the peak rate. Strictly increasing
+    /// in time; deterministic for a given `rng` state.
+    pub fn generate(&self, horizon: Duration, rng: &mut Rng) -> Vec<(u64, usize)> {
+        let horizon_secs = horizon.as_secs_f64();
+        let peak = self.mean_rps * (1.0 + self.amplitude.abs());
+        if peak <= 0.0 || self.users == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exp(peak);
+            if t >= horizon_secs {
+                break;
+            }
+            // Thinning: keep this candidate with probability rate/peak.
+            if rng.chance(self.rate_at(t) / peak) {
+                out.push(((t * 1e6) as u64, rng.below(self.users as u64) as usize));
+            }
+        }
+        out
     }
 }
 
@@ -287,6 +343,43 @@ mod tests {
         // Distinct users/turns never collide in message text.
         assert_ne!(wl.user_message(0, 1), wl.user_message(1, 1));
         assert_ne!(wl.user_message(0, 1), wl.user_message(0, 2));
+    }
+
+    #[test]
+    fn diurnal_arrivals_are_deterministic_and_rate_shaped() {
+        let wl = DiurnalArrivals {
+            users: 1000,
+            mean_rps: 20.0,
+            amplitude: 0.8,
+            period: Duration::from_secs(3600),
+        };
+        let horizon = Duration::from_secs(3600);
+        let a = wl.generate(horizon, &mut Rng::new(42));
+        let b = wl.generate(horizon, &mut Rng::new(42));
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x == y), "same seed, same schedule");
+        let c = wl.generate(horizon, &mut Rng::new(43));
+        assert_ne!(a, c, "different seeds diverge");
+
+        // Total volume ≈ mean_rps × horizon (one full period averages out
+        // the modulation).
+        let expect = 20.0 * 3600.0;
+        assert!(
+            (a.len() as f64) > expect * 0.9 && (a.len() as f64) < expect * 1.1,
+            "got {} arrivals, expected ≈{expect}",
+            a.len()
+        );
+        // Strictly ordered, in range, users in range.
+        for w in a.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        assert!(a.iter().all(|&(t, u)| t < 3_600_000_000 && u < 1000));
+        // Peak half (middle of the period) sees more traffic than the
+        // trough halves combined edges: compare 2nd+3rd quarter vs 1st+4th.
+        let q = 3_600_000_000u64 / 4;
+        let mid = a.iter().filter(|&&(t, _)| t >= q && t < 3 * q).count();
+        let edge = a.len() - mid;
+        assert!(mid > edge, "diurnal peak not visible: mid={mid} edge={edge}");
     }
 
     #[test]
