@@ -43,6 +43,8 @@ fn main() -> anyhow::Result<()> {
         link_frame_delay: Duration::from_micros(1700),
         pool_size,
         max_channels_per_conn: 8,
+        dual_channel: false,
+        bulk_lanes: 2,
     };
 
     let mut base = 0.0f64;

@@ -11,9 +11,12 @@ use std::time::Duration;
 use chat_hpc::llmserver::kvcache::BlockAllocator;
 use chat_hpc::runtime::{artifacts_dir, ModelRuntime};
 use chat_hpc::scheduler::{Instance, RoutingTable};
-use chat_hpc::sshsim::{AuthorizedKey, AuthorizedKeys, CommandHandler, KeyPair, SshClient, SshServer};
+use chat_hpc::sshsim::{
+    decode_frame, encode_frame, AuthorizedKey, AuthorizedKeys, CommandHandler, KeyPair, SshClient,
+    SshServer,
+};
 use chat_hpc::util::bench::{stats, table_header, table_row, time_n};
-use chat_hpc::util::http::{self, Reply, Request, Response, Server};
+use chat_hpc::util::http::{self, Reply, Request, Response, Server, SseParser};
 use chat_hpc::util::json::Json;
 use chat_hpc::util::rng::Rng;
 
@@ -82,6 +85,50 @@ fn main() -> anyhow::Result<()> {
     row("ssh keepalive ping", &time_n(20, 300, || {
         let _ = ssh.ping().unwrap();
     }));
+
+    // --- per-frame streaming ops (the dual-channel token hot path) ---
+    // SSE round-trip: render one token chunk the way the engine does,
+    // parse it back the way the gateway tail-scanner / client does.
+    let chunk = Json::obj()
+        .set("id", "chatcmpl-1")
+        .set("object", "chat.completion.chunk")
+        .set("model", "tiny")
+        .set(
+            "choices",
+            vec![Json::obj()
+                .set("index", 0u64)
+                .set("delta", Json::obj().set("content", " 7"))],
+        );
+    let mut sse = SseParser::default();
+    row("sse chunk encode+decode roundtrip", &time_n(1000, 20000, || {
+        let event = format!("data: {}\n\n", chunk.dump());
+        let events = sse.push(event.as_bytes());
+        std::hint::black_box(&events);
+    }));
+
+    // Bulk-frame seal/open with live session crypto. The replay counters
+    // must advance in lockstep, so each iteration seals one frame
+    // server-side and opens it client-side (the full wire cost of one
+    // coalesced token batch on a bulk lane).
+    let bulk_kp = KeyPair::generate(2);
+    let (cn, sn) = ([3u8; 16], [4u8; 16]);
+    let mut bulk_tx = bulk_kp.derive_session(&cn, &sn, false); // server sends tokens
+    let mut bulk_rx = bulk_kp.derive_session(&cn, &sn, true);
+    let batch = vec![0x2eu8; 256];
+    row("bulk frame encode+decode (256 B, AES+HMAC)", &time_n(500, 10000, || {
+        let wire = encode_frame(&mut bulk_tx, 8 /* BULK_DATA */, 1, &batch);
+        let mut r: &[u8] = &wire;
+        let (ty, chan, _frame) = decode_frame(&mut r, &mut bulk_rx).unwrap();
+        std::hint::black_box((ty, chan));
+    }));
+
+    // The shared frame-buffer pool behind seal_into/open_into.
+    row("frame buffer pool acquire+release (256 B)", &time_n(1000, 50000, || {
+        let mut buf = http::frame_buf_acquire();
+        buf.extend_from_slice(&batch);
+        http::frame_buf_release(buf);
+    }));
+    let _ = std::hint::black_box(http::frame_pool_stats());
 
     // --- routing table ---
     let table = RoutingTable::new();

@@ -1,0 +1,202 @@
+//! Stream-saturation sweep: single-channel vs dual-channel vs
+//! dual-channel + zero-copy SSE (DESIGN.md §Dual-channel streaming).
+//!
+//! The stack runs with an emulated SSH wire delay
+//! (`StackConfig::ssh_server_frame_delay`): every server→client frame
+//! holds the per-connection writer lock for a fixed slot, exactly like a
+//! saturated uplink. Generation itself is unpaced (`time_scale 0.0`), so
+//! the wire — not the engine — is the bottleneck. Closed-loop workers
+//! then hammer the gateway with streaming chats and we measure delivered
+//! tokens/sec/core per mode:
+//!
+//!   single_channel   tokens and control share the pooled SSH lanes
+//!   dual_channel     tokens ride dedicated bulk lanes, control stays pooled
+//!   dual_zero_copy   dual-channel + zero-copy SSE render in the engine
+//!
+//! Acceptance shape (ISSUE 7): dual_zero_copy >= 2x single_channel
+//! tokens/sec/core at saturation, and single_channel itself must not
+//! regress. Results land in BENCH_stream.json (schema-checked by
+//! scripts/check_bench.py in the CI stream-modes step).
+//!
+//!   cargo bench --bench stream_saturation [-- --smoke]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{ChatAiStack, StackConfig};
+use chat_hpc::util::bench::stats;
+use chat_hpc::util::http;
+use chat_hpc::util::json::Json;
+
+const MODEL: &str = "intel-neural-7b";
+
+struct ModeResult {
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    ttft_ms: f64,
+    tok_per_sec: f64,
+}
+
+/// Occurrences of `needle` in `hay` (token chunks carry one `"content"`
+/// key each; the finish chunk and `[DONE]` carry none).
+fn count(hay: &[u8], needle: &[u8]) -> u64 {
+    if hay.len() < needle.len() {
+        return 0;
+    }
+    hay.windows(needle.len()).filter(|w| *w == needle).count() as u64
+}
+
+fn run_mode(
+    dual: bool,
+    zero_copy: bool,
+    wire_slot: Duration,
+    workers: usize,
+    secs: f64,
+) -> anyhow::Result<ModeResult> {
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim(MODEL, 0.0)],
+        with_external: false,
+        dual_channel: dual,
+        zero_copy_sse: zero_copy,
+        ssh_server_frame_delay: wire_slot,
+        ..Default::default()
+    })?;
+    stack.wait_ready(MODEL, Duration::from_secs(30))?;
+
+    let url = format!("{}/v1/m/{MODEL}/", stack.gateway_url());
+    let auth = format!("Bearer {}", stack.api_key);
+    let body = Json::obj()
+        .set("model", MODEL)
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "count")])
+        .set("stream", true)
+        .dump();
+    let one_stream = || -> anyhow::Result<(f64, Option<f64>, u64)> {
+        let t = Instant::now();
+        let mut first: Option<f64> = None;
+        let mut toks = 0u64;
+        let status = http::request_stream(
+            "POST",
+            &url,
+            &[("authorization", &auth), ("content-type", "application/json")],
+            body.as_bytes(),
+            |chunk| {
+                if first.is_none() {
+                    first = Some(t.elapsed().as_secs_f64());
+                }
+                toks += count(chunk, b"\"content\"");
+            },
+        )?;
+        anyhow::ensure!(status == 200, "stream returned {status}");
+        Ok((t.elapsed().as_secs_f64(), first, toks))
+    };
+
+    // Warm the route, the SSH lanes and the instance before measuring.
+    for _ in 0..3 {
+        one_stream()?;
+    }
+
+    let stop = AtomicBool::new(false);
+    let lats = Mutex::new(Vec::new());
+    let ttfts = Mutex::new(Vec::new());
+    let tokens = AtomicU64::new(0);
+    let streams = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    match one_stream() {
+                        Ok((lat, first, toks)) => {
+                            lats.lock().unwrap().push(lat);
+                            if let Some(f) = first {
+                                ttfts.lock().unwrap().push(f);
+                            }
+                            tokens.fetch_add(toks, Ordering::Relaxed);
+                            streams.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let lats = lats.into_inner().unwrap();
+    let ttfts = ttfts.into_inner().unwrap();
+    anyhow::ensure!(!lats.is_empty(), "no stream completed during the measurement window");
+    let ls = stats(&lats);
+    let ts = stats(&ttfts);
+    Ok(ModeResult {
+        rps: streams.load(Ordering::Relaxed) as f64 / elapsed,
+        p50_ms: ls.p50 * 1e3,
+        p99_ms: ls.p99 * 1e3,
+        ttft_ms: ts.p50 * 1e3,
+        tok_per_sec: tokens.load(Ordering::Relaxed) as f64 / elapsed,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // The wire slot dominates the per-stream budget; smoke keeps the same
+    // regime with a shorter window so CI just checks the plumbing.
+    let (wire_slot, workers, secs) = if smoke {
+        (Duration::from_micros(1500), 8, 1.5)
+    } else {
+        (Duration::from_millis(2), 12, 6.0)
+    };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64;
+
+    println!(
+        "stream saturation sweep: wire slot {:?}/frame, {} closed-loop workers, {}s/mode, {} core(s)\n",
+        wire_slot, workers, secs, cores
+    );
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "mode", "streams/s", "p50 ms", "p99 ms", "ttft ms", "tok/s/core"
+    );
+
+    let mut report = Json::obj();
+    let mut per_core = Vec::new();
+    for (key, dual, zc) in [
+        ("single_channel", false, false),
+        ("dual_channel", true, false),
+        ("dual_zero_copy", true, true),
+    ] {
+        let r = run_mode(dual, zc, wire_slot, workers, secs)?;
+        let tpc = r.tok_per_sec / cores;
+        println!(
+            "{key:<16} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>12.1}",
+            r.rps, r.p50_ms, r.p99_ms, r.ttft_ms, tpc
+        );
+        let round = |v: f64| (v * 1000.0).round() / 1000.0;
+        report = report.set(
+            key,
+            Json::obj()
+                .set("rps", round(r.rps))
+                .set("p50_ms", round(r.p50_ms))
+                .set("p99_ms", round(r.p99_ms))
+                .set("ttft_ms", round(r.ttft_ms))
+                .set("tokens_per_sec_core", round(tpc)),
+        );
+        per_core.push(tpc);
+    }
+
+    let (single, dual, dual_zc) = (per_core[0], per_core[1], per_core[2]);
+    let ratio = dual_zc / single;
+    println!();
+    println!("dual-channel            vs single: {:.2}x tokens/sec/core", dual / single);
+    println!(
+        "dual-channel+zero-copy  vs single: {ratio:.2}x tokens/sec/core -> {}",
+        if ratio >= 2.0 { "REPRODUCED (>= 2x at saturation)" } else { "DIVERGED (< 2x)" }
+    );
+
+    std::fs::write("BENCH_stream.json", report.dump())?;
+    println!("\nwrote BENCH_stream.json (3 sweeps)");
+    Ok(())
+}

@@ -44,6 +44,18 @@ SIM_TRACE_OUT="$PWD/target/sim_trace_a.txt" cargo test --release --test sim_dete
 SIM_TRACE_OUT="$PWD/target/sim_trace_b.txt" cargo test --release --test sim_determinism -q
 cmp target/sim_trace_a.txt target/sim_trace_b.txt
 
+# Dual-channel streaming: the stream_modes suite runs the e2e matrix
+# (dual on/off SSE byte-identity, cancel/failure slot accounting, sim
+# twins); then the seed-replay suite re-runs with dual-channel enabled —
+# the flag is trace-neutral by contract (stack/sim.rs), so the trace
+# artifact must be byte-identical to run A above.
+echo "==> stream-modes: dual-channel e2e suite"
+cargo test --release --test stream_modes -q
+echo "==> stream-modes: seed-replay with SIM_DUAL_CHANNEL=1"
+SIM_DUAL_CHANNEL=1 SIM_TRACE_OUT="$PWD/target/sim_trace_dual.txt" \
+    cargo test --release --test sim_determinism -q
+cmp target/sim_trace_a.txt target/sim_trace_dual.txt
+
 echo "==> sim-determinism: fig3 serving sweep byte-compare"
 cargo bench --bench fig3_users -- --serving --seed 7
 mv BENCH_fig3_serving.json target/BENCH_fig3_serving_a.json
@@ -59,6 +71,8 @@ echo "==> bench smoke: table2_throughput"
 cargo bench --bench table2_throughput -- --smoke
 echo "==> bench smoke: ablation_scheduler"
 cargo bench --bench ablation_scheduler -- --smoke
+echo "==> bench smoke: stream_saturation"
+cargo bench --bench stream_saturation -- --smoke
 
 echo "==> validate BENCH_*.json schemas"
 if python3 --version >/dev/null 2>&1; then
@@ -73,6 +87,8 @@ if python3 --version >/dev/null 2>&1; then
         scavenger_off scavenger_on
     python3 scripts/check_bench.py BENCH_fig3_serving.json \
         hour_q1 hour_q2 hour_q3 hour_q4 overall
+    python3 scripts/check_bench.py BENCH_stream.json \
+        single_channel dual_channel dual_zero_copy
 else
     echo "    python3 not installed; skipping schema validation (CI runs it)"
 fi

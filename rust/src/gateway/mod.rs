@@ -412,15 +412,15 @@ impl Gateway {
                 // the whole chain (proxy → SSH → interface → engine) unwind.
                 // Frames the upstream already delivered are drained per
                 // wake-up into ONE downstream write (single flush) instead
-                // of a write per token frame. A bounded tail of the stream
-                // is retained so the usage block on the final SSE chunk can
-                // feed the log after the fact.
+                // of a write per token frame. The usage block for the log
+                // is picked up by a needle scan on each forwarded batch —
+                // no per-frame tail copy of the stream is retained.
                 //
                 // An upstream that answers 5xx (or dies) before anything was
                 // forwarded — its instance may just have been preempted or
                 // walltime-killed — is abandoned and the request retried
                 // against the next upstream, up to `route.retries` times.
-                let mut tail: Vec<u8> = Vec::new();
+                let mut cached_tokens: Option<u64> = None;
                 let mut forwarded = false;
                 let mut attempt = 0usize;
                 let mut last_failed: Option<String> = None;
@@ -442,10 +442,15 @@ impl Gateway {
                             let ok = sink.send(batch).is_ok();
                             if ok {
                                 forwarded = true;
-                                tail.extend_from_slice(batch);
-                                if tail.len() > 4096 {
-                                    let cut = tail.len() - 2048;
-                                    tail.drain(..cut);
+                                // The usage block rides the finish chunk,
+                                // which the api layer frames as ONE chunked
+                                // write (so it is never split across
+                                // batches): a cheap needle scan per batch
+                                // replaces copying every frame into a
+                                // rolling tail buffer.
+                                if batch.windows(7).any(|w| w == b"\"usage\"") {
+                                    cached_tokens =
+                                        sse_tail_cached_tokens(batch).or(cached_tokens);
                                 }
                             }
                             ok
@@ -492,7 +497,7 @@ impl Gateway {
                                     .counter("gw_cancelled_total", &[("route", &route_name)])
                                     .inc();
                                 log.mark_cancelled(log_idx);
-                            } else if let Some(cached) = sse_tail_cached_tokens(&tail) {
+                            } else if let Some(cached) = cached_tokens {
                                 if cached > 0 {
                                     log.mark_cached_tokens(log_idx, cached);
                                 }

@@ -26,7 +26,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::interface::parse_reply;
-use crate::sshsim::{KeyPair, SshClient, EXIT_CANCELLED, EXIT_CHANNEL_REJECTED};
+use crate::sshsim::{BulkChannel, KeyPair, SshClient, EXIT_CANCELLED, EXIT_CHANNEL_REJECTED};
 use crate::util::clock::{Clock, WallClock};
 use crate::util::http::{Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
@@ -46,6 +46,13 @@ pub struct ProxyConfig {
     /// Per-connection concurrent-channel cap used for placement (OpenSSH
     /// `MaxSessions` is ~10 by default).
     pub max_channels_per_conn: usize,
+    /// Dual-channel streaming: exec setup/cancel/exit stay on the pooled
+    /// control lanes; token payloads stream over dedicated bulk
+    /// connections. Off by default (single-channel is the baseline and
+    /// byte-identical to dual-channel at the consumer).
+    pub dual_channel: bool,
+    /// Bulk (token-delivery) connections when `dual_channel` is on.
+    pub bulk_lanes: usize,
 }
 
 impl Default for ProxyConfig {
@@ -56,6 +63,8 @@ impl Default for ProxyConfig {
             link_frame_delay: Duration::ZERO,
             pool_size: 1,
             max_channels_per_conn: 8,
+            dual_channel: false,
+            bulk_lanes: 2,
         }
     }
 }
@@ -68,12 +77,26 @@ struct PoolMember {
     reconnecting: AtomicBool,
 }
 
+/// One bulk (token-delivery) lane and its lifecycle state.
+struct BulkMember {
+    chan: Mutex<Option<Arc<BulkChannel>>>,
+    /// A background reconnect for this lane is in flight.
+    reconnecting: AtomicBool,
+}
+
+/// Process-global bulk-lane id generator: every (re)connect gets a fresh
+/// id, so a stale lane's server-side cleanup can never deregister its
+/// replacement.
+static BULK_ID_GEN: AtomicU64 = AtomicU64::new(1);
+
 /// Connection-pool manager + request forwarder.
 pub struct HpcProxy {
     ssh_addr: String,
     key: KeyPair,
     cfg: ProxyConfig,
     members: Vec<PoolMember>,
+    /// Token-delivery lanes (empty unless `cfg.dual_channel`).
+    bulk_members: Vec<BulkMember>,
     stop: Arc<AtomicBool>,
     /// Total reconnects detected by the keepalive, across all members.
     pub reconnects: AtomicU64,
@@ -113,11 +136,19 @@ impl HpcProxy {
                 reconnecting: AtomicBool::new(false),
             })
             .collect();
+        let n_bulk = if cfg.dual_channel { cfg.bulk_lanes.max(1) } else { 0 };
+        let bulk_members = (0..n_bulk)
+            .map(|_| BulkMember {
+                chan: Mutex::new(None),
+                reconnecting: AtomicBool::new(false),
+            })
+            .collect();
         let proxy = Arc::new(HpcProxy {
             ssh_addr: ssh_addr.to_string(),
             key,
             cfg,
             members,
+            bulk_members,
             stop: Arc::new(AtomicBool::new(false)),
             reconnects: AtomicU64::new(0),
             overflows: AtomicU64::new(0),
@@ -131,6 +162,13 @@ impl HpcProxy {
         for idx in 1..proxy.members.len() {
             if let Err(e) = proxy.ensure_connected(idx) {
                 crate::log_warn!("hpcproxy", "pool member {idx} connect failed: {e}");
+            }
+        }
+        // Bulk lanes come up best-effort too: with none alive the proxy
+        // falls back to single-channel streaming.
+        for idx in 0..proxy.bulk_members.len() {
+            if let Err(e) = proxy.ensure_bulk_connected(idx) {
+                crate::log_warn!("hpcproxy", "bulk lane {idx} connect failed: {e}");
             }
         }
         // Keepalive thread: ping every member + scheduler tick (connection
@@ -170,6 +208,23 @@ impl HpcProxy {
                     std::thread::spawn(move || {
                         let _ = p.reconnect(idx);
                         p.members[idx].reconnecting.store(false, Ordering::SeqCst);
+                    });
+                }
+            }
+            // Bulk lanes have no ping traffic of their own (their liveness
+            // shows up as reader-thread death); revive dead ones in the
+            // background like any other pool member.
+            for idx in 0..self.bulk_members.len() {
+                if self.current_bulk(idx).is_some() {
+                    continue;
+                }
+                if !self.bulk_members[idx].reconnecting.swap(true, Ordering::SeqCst) {
+                    self.metrics.counter("proxy_bulk_reconnects_total", &[]).inc();
+                    self.reconnects.fetch_add(1, Ordering::SeqCst);
+                    let p = self.clone();
+                    std::thread::spawn(move || {
+                        let _ = p.reconnect_bulk(idx);
+                        p.bulk_members[idx].reconnecting.store(false, Ordering::SeqCst);
                     });
                 }
             }
@@ -214,6 +269,65 @@ impl HpcProxy {
             }
         }
         Err(last_err)
+    }
+
+    fn current_bulk(&self, idx: usize) -> Option<Arc<BulkChannel>> {
+        let guard = self.bulk_members[idx].chan.lock().unwrap();
+        guard.as_ref().filter(|b| b.is_alive()).cloned()
+    }
+
+    fn ensure_bulk_connected(&self, idx: usize) -> Result<Arc<BulkChannel>> {
+        if let Some(b) = self.current_bulk(idx) {
+            return Ok(b);
+        }
+        self.reconnect_bulk(idx)
+    }
+
+    fn reconnect_bulk(&self, idx: usize) -> Result<Arc<BulkChannel>> {
+        let mut guard = self.bulk_members[idx].chan.lock().unwrap();
+        if let Some(b) = guard.as_ref().filter(|b| b.is_alive()) {
+            return Ok(b.clone());
+        }
+        let mut last_err = anyhow!("unreachable");
+        for _ in 0..3 {
+            // Fresh id per attempt: the server keys its registry by id, so
+            // a stale lane's cleanup can never evict this replacement.
+            let id = BULK_ID_GEN.fetch_add(1, Ordering::SeqCst);
+            match BulkChannel::connect_with_clock(
+                &self.ssh_addr,
+                &self.key,
+                id,
+                self.cfg.link_frame_delay,
+                self.clock.clone(),
+            ) {
+                Ok(b) => {
+                    let b = Arc::new(b);
+                    *guard = Some(b.clone());
+                    crate::log_info!("hpcproxy", "bulk lane {idx} (re)established (id {id})");
+                    return Ok(b);
+                }
+                Err(e) => {
+                    last_err = e;
+                    self.clock.sleep(self.cfg.reconnect_backoff);
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Pick the token-delivery lane for one dual-channel stream:
+    /// least-loaded by active subchannels. `None` when no bulk lane is
+    /// alive (the caller falls back to single-channel streaming).
+    fn pick_bulk_lane(&self) -> Option<Arc<BulkChannel>> {
+        let mut best: Option<(usize, Arc<BulkChannel>)> = None;
+        for idx in 0..self.bulk_members.len() {
+            let Some(b) = self.current_bulk(idx) else { continue };
+            let load = b.active_subchannels();
+            if best.as_ref().map_or(true, |(l, _)| load < *l) {
+                best = Some((load, b));
+            }
+        }
+        best.map(|(_, b)| b)
     }
 
     /// Pick the connection for a bulk (`infer`/`probe`) request.
@@ -286,6 +400,19 @@ impl HpcProxy {
             .collect()
     }
 
+    /// Bulk lanes currently holding a live connection (0 unless
+    /// `dual_channel`).
+    pub fn alive_bulk_lanes(&self) -> usize {
+        (0..self.bulk_members.len()).filter(|&i| self.current_bulk(i).is_some()).count()
+    }
+
+    /// Per-bulk-lane in-flight subchannel counts (`None` = disconnected).
+    pub fn bulk_lane_loads(&self) -> Vec<Option<usize>> {
+        (0..self.bulk_members.len())
+            .map(|i| self.current_bulk(i).map(|b| b.active_subchannels()))
+            .collect()
+    }
+
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
     }
@@ -324,7 +451,10 @@ impl HpcProxy {
         let client = self.pick_bulk()?;
         let mut header_buf: Vec<u8> = Vec::new();
         let mut status: Option<u16> = None;
-        let code = client.exec_stream_ctl(&format!("infer {service}"), body, |chunk| {
+        // Peel the `status: <code>\n\n` reply header off the stream; every
+        // byte after it forwards opaquely. Shared by both stream modes so
+        // the client-visible bytes are identical.
+        let mut peel = |chunk: &[u8], on_chunk: &mut dyn FnMut(&[u8]) -> bool| -> bool {
             if status.is_none() {
                 header_buf.extend_from_slice(chunk);
                 if let Some(pos) = find_double_newline(&header_buf) {
@@ -339,7 +469,31 @@ impl HpcProxy {
             } else {
                 on_chunk(chunk)
             }
-        })?;
+        };
+        let cmd = format!("infer {service}");
+        let code = if self.cfg.dual_channel {
+            match self.pick_bulk_lane() {
+                Some(bulk) => {
+                    // Dual-channel: ONE control frame sets the exec up,
+                    // reply header + tokens + EOF ride the bulk lane, and
+                    // only the exit status returns on control.
+                    self.metrics
+                        .counter("proxy_bulk_streams_total", &[("service", service)])
+                        .inc();
+                    client.exec_stream_bulk_ctl(&bulk, &cmd, body, |chunk| {
+                        peel(chunk, &mut on_chunk)
+                    })?
+                }
+                None => {
+                    // No bulk lane alive: degrade to single-channel rather
+                    // than failing the request.
+                    self.metrics.counter("proxy_bulk_fallbacks_total", &[]).inc();
+                    client.exec_stream_ctl(&cmd, body, |chunk| peel(chunk, &mut on_chunk))?
+                }
+            }
+        } else {
+            client.exec_stream_ctl(&cmd, body, |chunk| peel(chunk, &mut on_chunk))?
+        };
         if code == EXIT_CHANNEL_REJECTED {
             // The refusal text never contains the header separator, so no
             // chunk has been emitted yet; fail cleanly.
@@ -393,7 +547,10 @@ impl HpcProxy {
                             .set("ssh_connected", alive > 0)
                             .set("pool_size", proxy.members.len())
                             .set("alive_connections", alive)
-                            .set("capacity", proxy.capacity()),
+                            .set("capacity", proxy.capacity())
+                            .set("dual_channel", proxy.cfg.dual_channel)
+                            .set("bulk_lanes", proxy.bulk_members.len())
+                            .set("alive_bulk_lanes", proxy.alive_bulk_lanes()),
                     ))
                 }
                 ("POST", path) if path.starts_with("/infer/") => {
@@ -541,6 +698,8 @@ mod tests {
             link_frame_delay: Duration::ZERO,
             pool_size: 1,
             max_channels_per_conn: 8,
+            dual_channel: false,
+            bulk_lanes: 2,
         }
     }
 
@@ -818,6 +977,8 @@ mod tests {
         let j = h.json_body().unwrap();
         assert_eq!(j.u64_or("pool_size", 0), 1);
         assert_eq!(j.u64_or("capacity", 0), 8);
+        assert_eq!(j.u64_or("bulk_lanes", 9), 0, "no bulk lanes unless dual_channel");
+        assert_eq!(j.u64_or("alive_bulk_lanes", 9), 0);
         proxy.stop();
     }
 
@@ -825,5 +986,125 @@ mod tests {
     fn stream_header_parsing_across_chunks() {
         assert_eq!(find_double_newline(b"status: 200\n\nrest"), Some(11));
         assert_eq!(find_double_newline(b"status: 2"), None);
+    }
+
+    fn dual_cfg() -> ProxyConfig {
+        // Quiet keepalive: the dual tests control lane lifecycles by hand.
+        ProxyConfig {
+            keepalive: Duration::from_secs(60),
+            dual_channel: true,
+            ..fast_cfg()
+        }
+    }
+
+    #[test]
+    fn dual_stream_roundtrip_matches_single_channel() {
+        let kp = KeyPair::generate(41);
+        let server = ssh_server(&kp);
+        let addr = server.addr.to_string();
+
+        let single = HpcProxy::connect(
+            &addr,
+            kp.clone(),
+            ProxyConfig { keepalive: Duration::from_secs(60), ..fast_cfg() },
+            Registry::new(),
+        )
+        .unwrap();
+        let mut single_bytes = Vec::new();
+        let s = single
+            .infer_stream("m", b"{\"x\":1}", |c| {
+                single_bytes.extend_from_slice(c);
+                true
+            })
+            .unwrap();
+        assert_eq!(s, 200);
+        single.stop();
+
+        let metrics = Registry::new();
+        let dual = HpcProxy::connect(&addr, kp, dual_cfg(), metrics.clone()).unwrap();
+        assert_eq!(dual.alive_bulk_lanes(), 2, "both bulk lanes up");
+        let mut dual_bytes = Vec::new();
+        let s = dual
+            .infer_stream("m", b"{\"x\":1}", |c| {
+                dual_bytes.extend_from_slice(c);
+                true
+            })
+            .unwrap();
+        assert_eq!(s, 200);
+        assert_eq!(dual_bytes, single_bytes, "dual-channel must be byte-identical");
+        assert_eq!(dual_bytes, b"echo:{\"x\":1}");
+        assert_eq!(
+            metrics.counter("proxy_bulk_streams_total", &[("service", "m")]).get(),
+            1
+        );
+        assert!(server.stats.bulk_execs.load(Ordering::Relaxed) >= 1, "rode the bulk lane");
+        assert_eq!(server.stats.bulk_conns.load(Ordering::Relaxed), 2);
+        // Stream done: both control channel and bulk subchannel freed.
+        assert_eq!(dual.member_loads(), vec![Some(0)]);
+        assert_eq!(dual.bulk_lane_loads(), vec![Some(0), Some(0)]);
+        dual.stop();
+    }
+
+    #[test]
+    fn dual_cancel_frees_control_channel_and_bulk_subchannel() {
+        let kp = KeyPair::generate(42);
+        let server = ssh_server_with(&kp, slow_ci(Duration::from_millis(1500)));
+        let metrics = Registry::new();
+        let proxy =
+            HpcProxy::connect(&server.addr.to_string(), kp, dual_cfg(), metrics.clone()).unwrap();
+        let mut chunks = 0usize;
+        let t = std::time::Instant::now();
+        let status = proxy
+            .infer_stream("m", b"x", |_| {
+                chunks += 1;
+                chunks < 2
+            })
+            .unwrap();
+        assert_eq!(status, 200);
+        assert!(t.elapsed() < Duration::from_millis(1200), "{:?}", t.elapsed());
+        assert_eq!(
+            metrics.counter("proxy_cancelled_total", &[("service", "m")]).get(),
+            1
+        );
+        // Cancel freed both sides of the dual channel immediately.
+        assert_eq!(proxy.member_loads(), vec![Some(0)], "control channel freed");
+        assert_eq!(proxy.bulk_lane_loads().iter().flatten().sum::<usize>(), 0, "sub freed");
+        // The server saw the cancel (control CLOSE or bulk CLOSE).
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while server.stats.channels_cancelled.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "close frame never arrived");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        proxy.stop();
+    }
+
+    #[test]
+    fn dual_falls_back_to_single_channel_when_bulk_lanes_die() {
+        let kp = KeyPair::generate(43);
+        let server = ssh_server(&kp);
+        let metrics = Registry::new();
+        let proxy =
+            HpcProxy::connect(&server.addr.to_string(), kp, dual_cfg(), metrics.clone()).unwrap();
+        assert_eq!(proxy.alive_bulk_lanes(), 2);
+        // Accept order: control is session 0; the bulk lanes are 1 and 2.
+        assert!(server.kill_session(1));
+        assert!(server.kill_session(2));
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while proxy.alive_bulk_lanes() > 0 {
+            assert!(std::time::Instant::now() < deadline, "bulk lane death undetected");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Streams still succeed, degraded to single-channel.
+        let mut bytes = Vec::new();
+        let status = proxy
+            .infer_stream("m", b"y", |c| {
+                bytes.extend_from_slice(c);
+                true
+            })
+            .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(bytes, b"echo:y");
+        assert_eq!(metrics.counter("proxy_bulk_fallbacks_total", &[]).get(), 1);
+        proxy.stop();
     }
 }

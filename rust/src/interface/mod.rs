@@ -99,7 +99,26 @@ impl CloudInterface {
     }
 
     fn reply_status(out: &mut dyn FnMut(&[u8]) -> Result<()>, code: u16) -> Result<()> {
-        out(format!("status: {code}\n\n").as_bytes())
+        // Rendered on the stack: this line fronts every reply, including the
+        // streaming hot path, so it must not take a `format!` heap round-trip.
+        let mut buf = [0u8; 15]; // "status: " + up to 5 digits + "\n\n"
+        buf[..8].copy_from_slice(b"status: ");
+        let mut digits = [0u8; 5];
+        let mut i = digits.len();
+        let mut n = code;
+        loop {
+            i -= 1;
+            digits[i] = b'0' + (n % 10) as u8;
+            n /= 10;
+            if n == 0 {
+                break;
+            }
+        }
+        let ndig = digits.len() - i;
+        buf[8..8 + ndig].copy_from_slice(&digits[i..]);
+        buf[8 + ndig] = b'\n';
+        buf[9 + ndig] = b'\n';
+        out(&buf[..10 + ndig])
     }
 
     fn handle_tick(&self, out: &mut dyn FnMut(&[u8]) -> Result<()>) -> i32 {
@@ -210,6 +229,10 @@ impl CloudInterface {
             ms => self.queue_timeout.min(Duration::from_millis(ms)),
         };
         let deadline_us = arrived_us + max_wait.as_micros() as u64;
+        // One registry lookup for the whole wait: each `gauge()` call renders
+        // a label key and takes the registry lock, which the 20 ms poll loop
+        // would otherwise repeat dozens of times per cold start.
+        let queued_gauge = self.metrics.gauge("ci_queued_requests", &[("service", service)]);
         let inst = loop {
             let picked = {
                 let mut rng = self.rng.lock().unwrap();
@@ -218,9 +241,9 @@ impl CloudInterface {
             match picked {
                 Some(i) => break Some(i),
                 None if self.clock.now_us() < deadline_us => {
-                    self.metrics.gauge("ci_queued_requests", &[("service", service)]).add(1);
+                    queued_gauge.add(1);
                     self.clock.sleep(Duration::from_millis(20));
-                    self.metrics.gauge("ci_queued_requests", &[("service", service)]).add(-1);
+                    queued_gauge.add(-1);
                 }
                 None => break None,
             }
@@ -584,6 +607,21 @@ mod tests {
         assert_eq!(code, EXIT_OK);
         let j = Json::parse(std::str::from_utf8(&parse_reply(&out).1).unwrap()).unwrap();
         assert_eq!(j.at(&["data", "0", "id"]).unwrap().as_str().unwrap(), "m");
+    }
+
+    #[test]
+    fn reply_status_renders_all_code_widths() {
+        // The stack renderer must stay byte-identical to the old
+        // `format!("status: {code}\n\n")` framing for every code width.
+        for code in [0u16, 7, 42, 200, 404, 503, 999, 1000, 65535] {
+            let mut buf = Vec::new();
+            let mut out = |c: &[u8]| {
+                buf.extend_from_slice(c);
+                Ok(())
+            };
+            CloudInterface::reply_status(&mut out, code).unwrap();
+            assert_eq!(buf, format!("status: {code}\n\n").into_bytes(), "code={code}");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use super::engine::{Engine, GenEvent, GenRequest, Generation, Usage};
 use crate::util::http::{Handler, Reply, Request, Response, Server, StreamSink};
-use crate::util::json::Json;
+use crate::util::json::{escape_str_into, Json};
 use crate::util::metrics::Counter;
 
 static COMPLETION_ID: AtomicU64 = AtomicU64::new(1);
@@ -137,15 +137,27 @@ fn make_handler(engine: Engine) -> Handler {
                     let coalesced_ctr = engine
                         .metrics()
                         .counter("llm_sse_frames_coalesced_total", &[("model", &model)]);
+                    let zero_copy = engine.zero_copy_sse;
                     Reply::sse(move |sink| {
-                        pump_generation(
-                            &generation,
-                            sink,
-                            &id,
-                            &model,
-                            &coalesced_ctr,
-                            &cancelled_ctr,
-                        )
+                        if zero_copy {
+                            pump_generation_zero_copy(
+                                &generation,
+                                sink,
+                                &id,
+                                &model,
+                                &coalesced_ctr,
+                                &cancelled_ctr,
+                            )
+                        } else {
+                            pump_generation(
+                                &generation,
+                                sink,
+                                &id,
+                                &model,
+                                &coalesced_ctr,
+                                &cancelled_ctr,
+                            )
+                        }
                     })
                 } else {
                     match generation.collect() {
@@ -231,6 +243,107 @@ fn pump_generation(
                 // Client disconnected mid-stream. Returning drops
                 // `generation`, which the engine sees as a failed send and
                 // aborts within one decode step, freeing the batch slot.
+                cancelled_ctr.inc();
+                return Ok(());
+            }
+        }
+        match terminal {
+            Some(GenEvent::Done(usage)) => {
+                let chunk =
+                    stream_chunk(id, model, None, Some(usage.finish_reason), Some(&usage));
+                sink.send_event(&chunk.dump())?;
+                sink.send_event("[DONE]")?;
+                return Ok(());
+            }
+            Some(GenEvent::Error(e)) => {
+                sink.send_event(&Json::obj().set("error", e.as_str()).dump())?;
+                return Ok(());
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Per-request SSE chunk template (the zero-copy streaming path): `id`,
+/// `model`, and the whole delta envelope are constant across a stream, so
+/// the hot path splices the escaped token between a pre-dumped prefix and
+/// suffix instead of building and dumping a `Json` value per token.
+/// Byte-identical to framing `stream_chunk(..).dump()` (pinned by
+/// `chunk_template_matches_full_dump`).
+struct ChunkTemplate {
+    /// `data: {...,"content":` — up to (not including) the token's quote.
+    prefix: String,
+    /// Everything after the token's closing quote, plus the SSE `\n\n`.
+    suffix: String,
+}
+
+impl ChunkTemplate {
+    fn new(id: &str, model: &str) -> ChunkTemplate {
+        // A raw control char cannot survive `dump` unescaped (and `id` /
+        // `model` never contain one), so the dumped sentinel locates the
+        // token slot unambiguously.
+        const SENTINEL: &str = "\u{1}tok\u{1}";
+        let dumped = stream_chunk(id, model, Some(SENTINEL), None, None).dump();
+        let needle = Json::Str(SENTINEL.to_string()).dump();
+        let pos = dumped.find(&needle).expect("sentinel token present in template");
+        ChunkTemplate {
+            prefix: format!("data: {}", &dumped[..pos]),
+            suffix: format!("{}\n\n", &dumped[pos + needle.len()..]),
+        }
+    }
+
+    /// Append one framed SSE event carrying `token`.
+    fn render_sse_into(&self, token: &str, out: &mut String) {
+        out.push_str(&self.prefix);
+        escape_str_into(token, out);
+        out.push_str(&self.suffix);
+    }
+}
+
+/// [`pump_generation`] with the per-token JSON build/dump replaced by
+/// [`ChunkTemplate`] splicing into ONE reused buffer per wake-up
+/// (`EngineConfig::zero_copy_sse`). Emits byte-identical SSE.
+fn pump_generation_zero_copy(
+    generation: &Generation,
+    sink: &mut dyn StreamSink,
+    id: &str,
+    model: &str,
+    coalesced_ctr: &Counter,
+    cancelled_ctr: &Counter,
+) -> Result<()> {
+    let template = ChunkTemplate::new(id, model);
+    let mut payload = String::new();
+    loop {
+        let first = match generation.rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => return Ok(()),
+        };
+        payload.clear();
+        let mut frames = 0usize;
+        let mut terminal: Option<GenEvent> = None;
+        match first {
+            GenEvent::Token(t) => {
+                template.render_sse_into(&t, &mut payload);
+                frames += 1;
+            }
+            other => terminal = Some(other),
+        }
+        while terminal.is_none() {
+            match generation.rx.try_recv() {
+                Ok(GenEvent::Token(t)) => {
+                    template.render_sse_into(&t, &mut payload);
+                    frames += 1;
+                }
+                Ok(other) => terminal = Some(other),
+                Err(_) => break,
+            }
+        }
+        if frames > 0 {
+            if frames > 1 {
+                coalesced_ctr.add(frames as u64 - 1);
+            }
+            // Pre-framed SSE: one send, no per-event re-framing.
+            if sink.send(payload.as_bytes()).is_err() {
                 cancelled_ctr.inc();
                 return Ok(());
             }
@@ -439,6 +552,54 @@ mod tests {
             Some("stop")
         );
         assert!(finish.at(&["usage", "cached_tokens"]).is_some());
+    }
+
+    #[test]
+    fn chunk_template_matches_full_dump() {
+        let template = ChunkTemplate::new("chatcmpl-9", "mixtral-8x7b");
+        for token in ["plain", " 7", "quote\" nl\n tab\t \\back", "ünïcode 😀", ""] {
+            let mut got = String::new();
+            template.render_sse_into(token, &mut got);
+            let want = format!(
+                "data: {}\n\n",
+                stream_chunk("chatcmpl-9", "mixtral-8x7b", Some(token), None, None).dump()
+            );
+            assert_eq!(got, want, "token {token:?}");
+        }
+    }
+
+    #[test]
+    fn zero_copy_pump_is_byte_identical() {
+        use crate::llmserver::engine::{GenEvent, Generation, Usage};
+        use std::sync::mpsc::channel;
+        let run = |zero_copy: bool| -> Vec<Vec<u8>> {
+            let (tx, rx) = channel();
+            for t in ["a", "b\"c", " \n ", "😀"] {
+                tx.send(GenEvent::Token(t.into())).unwrap();
+            }
+            tx.send(GenEvent::Done(Usage { finish_reason: "stop", ..Default::default() }))
+                .unwrap();
+            let generation = Generation { rx };
+            let mut sink = RecordingSink(Vec::new());
+            let metrics = Registry::new();
+            let coalesced = metrics.counter("c", &[]);
+            let cancelled = metrics.counter("x", &[]);
+            if zero_copy {
+                super::pump_generation_zero_copy(
+                    &generation, &mut sink, "id", "m", &coalesced, &cancelled,
+                )
+                .unwrap();
+            } else {
+                super::pump_generation(
+                    &generation, &mut sink, "id", "m", &coalesced, &cancelled,
+                )
+                .unwrap();
+            }
+            sink.0
+        };
+        let classic = run(false);
+        let zero_copy = run(true);
+        assert_eq!(classic, zero_copy, "same writes, same bytes");
     }
 
     #[test]

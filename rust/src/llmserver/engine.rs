@@ -152,6 +152,10 @@ pub struct EngineConfig {
     /// Content-hash prefix reuse in the paged KV allocator; `false`
     /// reproduces the prefill-everything baseline.
     pub prefix_cache: bool,
+    /// Serve SSE chunks by splicing escaped tokens into a pre-dumped JSON
+    /// template instead of building a `Json` value per token (the API
+    /// layer reads this; output is byte-identical either way).
+    pub zero_copy_sse: bool,
 }
 
 impl Default for EngineConfig {
@@ -162,6 +166,7 @@ impl Default for EngineConfig {
             abort_on_disconnect: true,
             prefill_chunk: 128,
             prefix_cache: true,
+            zero_copy_sse: false,
         }
     }
 }
@@ -176,6 +181,9 @@ pub struct Engine {
     tx: Sender<Msg>,
     handle: Option<std::thread::JoinHandle<()>>,
     pub model: String,
+    /// Copied from [`EngineConfig::zero_copy_sse`] so the API layer can
+    /// pick the token-splicing SSE encoder without holding the config.
+    pub zero_copy_sse: bool,
     metrics: Registry,
 }
 
@@ -233,12 +241,13 @@ impl Engine {
         clock: Arc<dyn Clock>,
     ) -> Engine {
         let (tx, rx) = channel::<Msg>();
+        let zero_copy_sse = cfg.zero_copy_sse;
         let core = EngineCore::new(backend, cfg, metrics.clone(), clock);
         let model = core.model().to_string();
         let handle = std::thread::spawn(move || {
             run_loop(core, rx);
         });
-        Engine { tx, handle: Some(handle), model, metrics }
+        Engine { tx, handle: Some(handle), model, zero_copy_sse, metrics }
     }
 
     /// Submit a request; events stream on the returned handle.

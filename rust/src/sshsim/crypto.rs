@@ -126,18 +126,34 @@ fn frame_mac(key: &[u8; 32], frame_ctr: u64, ciphertext: &[u8]) -> [u8; 32] {
 impl SessionCrypto {
     /// Encrypt-then-MAC one frame: returns `ciphertext || tag(32)`.
     pub fn seal(&mut self, plaintext: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(plaintext.len() + 32);
+        self.seal_into(plaintext, &mut out);
+        out
+    }
+
+    /// [`seal`](Self::seal) appending into a caller-supplied buffer (the
+    /// pooled hot path: no allocation per frame).
+    pub fn seal_into(&mut self, plaintext: &[u8], out: &mut Vec<u8>) {
         let ctr = self.send_ctr;
         self.send_ctr += 1;
-        let mut buf = plaintext.to_vec();
-        ctr_xor(&self.send_cipher, ctr, &mut buf);
-        let tag = frame_mac(&self.send_mac_key, ctr, &buf);
-        buf.extend_from_slice(&tag);
-        buf
+        let start = out.len();
+        out.extend_from_slice(plaintext);
+        ctr_xor(&self.send_cipher, ctr, &mut out[start..]);
+        let tag = frame_mac(&self.send_mac_key, ctr, &out[start..]);
+        out.extend_from_slice(&tag);
     }
 
     /// Verify + decrypt one frame. Enforces the monotonic counter (replay
     /// and reorder protection).
     pub fn open(&mut self, sealed: &[u8]) -> Result<Vec<u8>, String> {
+        let mut out = Vec::with_capacity(sealed.len().saturating_sub(32));
+        self.open_into(sealed, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`open`](Self::open) appending the plaintext into a caller-supplied
+    /// buffer (the pooled hot path: no allocation per frame).
+    pub fn open_into(&mut self, sealed: &[u8], out: &mut Vec<u8>) -> Result<(), String> {
         if sealed.len() < 32 {
             return Err("frame too short".into());
         }
@@ -153,9 +169,10 @@ impl SessionCrypto {
             return Err("MAC verification failed (tamper or replay)".into());
         }
         self.recv_ctr += 1;
-        let mut buf = ciphertext.to_vec();
-        ctr_xor(&self.recv_cipher, ctr, &mut buf);
-        Ok(buf)
+        let start = out.len();
+        out.extend_from_slice(ciphertext);
+        ctr_xor(&self.recv_cipher, ctr, &mut out[start..]);
+        Ok(())
     }
 }
 
@@ -184,6 +201,17 @@ mod tests {
         // And the reverse direction with independent keys.
         let sealed = s.seal(b"reply");
         assert_eq!(c.open(&sealed).unwrap(), b"reply");
+    }
+
+    #[test]
+    fn seal_into_open_into_append_without_clobbering() {
+        let (mut c, mut s) = pair();
+        let mut sealed = b"prefix".to_vec();
+        c.seal_into(b"payload", &mut sealed);
+        assert_eq!(&sealed[..6], b"prefix");
+        let mut plain = b"head".to_vec();
+        s.open_into(&sealed[6..], &mut plain).unwrap();
+        assert_eq!(plain, b"headpayload");
     }
 
     #[test]

@@ -21,7 +21,13 @@
 //!   pooled proxy in [`crate::hpcproxy`] breaks that ceiling with N such
 //!   connections), plus OpenSSH `MaxSessions`-style per-connection channel
 //!   caps ([`SshServerConfig`]);
-//! - keepalive pings (every 5 s in the paper) and reconnect detection.
+//! - keepalive pings (every 5 s in the paper) and reconnect detection;
+//! - an opt-in dual-channel mode ([`BulkChannel`]): control traffic (exec
+//!   setup, cancel, keepalive, exit status) stays on the pooled lanes while
+//!   token payloads stream over dedicated bulk connections with
+//!   length-prefixed binary frames — the stand-in for an SSH
+//!   subsystem/port-forward data channel (DESIGN.md §Dual-channel
+//!   streaming).
 //!
 //! What is simulated: identity. Key pairs are a 32-byte secret whose
 //! "public key" is its SHA-256 fingerprint; the handshake proves possession
@@ -34,8 +40,8 @@ mod proto;
 
 pub use crypto::{hex, KeyPair, SessionCrypto};
 pub use proto::{
-    CommandHandler, ExecReply, SshClient, SshServer, SshServerConfig, StreamChunk,
-    EXIT_CANCELLED, EXIT_CHANNEL_REJECTED,
+    decode_frame, encode_frame, BulkChannel, CommandHandler, ExecReply, SshClient, SshServer,
+    SshServerConfig, StreamChunk, EXIT_CANCELLED, EXIT_CHANNEL_REJECTED,
 };
 
 use std::collections::BTreeMap;

@@ -26,6 +26,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::crypto::{KeyPair, SessionCrypto};
 use super::AuthorizedKeys;
 use crate::util::clock::{Clock, WallClock};
+use crate::util::http::{frame_buf_acquire, frame_buf_release, write_all_vectored, Frame};
 
 const FRAME_EXEC: u8 = 0;
 const FRAME_DATA: u8 = 1;
@@ -37,6 +38,24 @@ const FRAME_PONG: u8 = 5;
 /// the server stops the handler's output and releases the channel's
 /// `MaxSessions` slot as soon as the handler returns.
 const FRAME_CLOSE: u8 = 6;
+// --- dual-channel streaming (control/bulk split) ---
+/// Sent once, right after the handshake, on a connection that will carry
+/// token payloads only; payload = the lane's `bulk_id` (u64 LE). The server
+/// registers the connection so control-lane execs can route output to it.
+const FRAME_BULK_HELLO: u8 = 7;
+/// Server→client token payload on a bulk connection; `chan` = subchannel.
+const FRAME_BULK_DATA: u8 = 8;
+/// Server→client end-of-payload marker for one bulk subchannel. The exit
+/// code still rides the control lane (FRAME_EXIT).
+const FRAME_BULK_EOF: u8 = 9;
+/// Client→server abandonment of one bulk subchannel (the bulk-side mirror
+/// of FRAME_CLOSE).
+const FRAME_BULK_CLOSE: u8 = 10;
+/// Single-frame exec on a control connection with output redirected to a
+/// bulk lane. Payload: `bulk_id(8 LE) | subchan(4 LE) | cmd_len(4 LE) |
+/// cmd | stdin` — command and stdin inline, so channel setup costs ONE
+/// control frame instead of the classic EXEC+DATA+EOF triple.
+const FRAME_EXEC_BULK: u8 = 11;
 
 const MAX_FRAME: usize = 16 * 1024 * 1024;
 
@@ -57,10 +76,12 @@ pub struct ExecReply {
     pub stdout: Vec<u8>,
 }
 
-/// Streaming chunk delivered to `exec_stream` consumers.
+/// Streaming chunk delivered to `exec_stream` consumers. Data rides a
+/// reference-counted [`Frame`] so the decrypted payload travels from the
+/// reader thread to the consumer without a copy.
 #[derive(Debug)]
 pub enum StreamChunk {
-    Data(Vec<u8>),
+    Data(Frame),
     Exit(i32),
 }
 
@@ -100,39 +121,78 @@ where
 // ---------------------------------------------------------------------------
 
 fn write_frame(
-    w: &mut (impl Write + ?Sized),
+    mut w: &mut (impl Write + ?Sized),
     crypto: &mut SessionCrypto,
     ty: u8,
     chan: u32,
     payload: &[u8],
 ) -> Result<()> {
-    let mut plain = Vec::with_capacity(payload.len() + 5);
+    // Pooled scratch buffers + one vectored write for `len || sealed`:
+    // zero steady-state allocations and one syscall per frame.
+    let mut plain = frame_buf_acquire();
     plain.push(ty);
     plain.extend_from_slice(&chan.to_le_bytes());
     plain.extend_from_slice(payload);
-    let sealed = crypto.seal(&plain);
-    w.write_all(&(sealed.len() as u32).to_le_bytes())?;
-    w.write_all(&sealed)?;
-    w.flush()?;
-    Ok(())
+    let mut sealed = frame_buf_acquire();
+    crypto.seal_into(&plain, &mut sealed);
+    frame_buf_release(plain);
+    let len = (sealed.len() as u32).to_le_bytes();
+    let res = write_all_vectored(&mut w, &[&len, &sealed])
+        .and_then(|_| w.flush().map_err(Into::into));
+    frame_buf_release(sealed);
+    res
 }
 
-fn read_frame(r: &mut impl Read, crypto: &mut SessionCrypto) -> Result<(u8, u32, Vec<u8>)> {
+fn read_frame(r: &mut impl Read, crypto: &mut SessionCrypto) -> Result<(u8, u32, Frame)> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
         bail!("oversized frame {len}");
     }
-    let mut sealed = vec![0u8; len];
-    r.read_exact(&mut sealed)?;
-    let plain = crypto.open(&sealed).map_err(|e| anyhow!(e))?;
+    let mut sealed = frame_buf_acquire();
+    sealed.resize(len, 0);
+    if let Err(e) = r.read_exact(&mut sealed) {
+        frame_buf_release(sealed);
+        return Err(e.into());
+    }
+    let mut plain = frame_buf_acquire();
+    if let Err(e) = crypto.open_into(&sealed, &mut plain) {
+        frame_buf_release(sealed);
+        frame_buf_release(plain);
+        return Err(anyhow!(e));
+    }
+    frame_buf_release(sealed);
     if plain.len() < 5 {
+        frame_buf_release(plain);
         bail!("short frame");
     }
     let ty = plain[0];
     let chan = u32::from_le_bytes([plain[1], plain[2], plain[3], plain[4]]);
-    Ok((ty, chan, plain[5..].to_vec()))
+    // The payload is exposed as an offset view over the decrypted buffer:
+    // the 5 header bytes ride along unseen, nothing is re-copied, and the
+    // buffer returns to the pool when the last Frame clone drops.
+    Ok((ty, chan, Frame::from_vec_offset(plain, 5)))
+}
+
+/// Seal one frame into its on-wire form (`len(4 LE) || sealed`). Public for
+/// the framing property test and the per-frame microbench.
+pub fn encode_frame(crypto: &mut SessionCrypto, ty: u8, chan: u32, payload: &[u8]) -> Vec<u8> {
+    let mut plain = Vec::with_capacity(payload.len() + 5);
+    plain.push(ty);
+    plain.extend_from_slice(&chan.to_le_bytes());
+    plain.extend_from_slice(payload);
+    let sealed = crypto.seal(&plain);
+    let mut wire = Vec::with_capacity(sealed.len() + 4);
+    wire.extend_from_slice(&(sealed.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&sealed);
+    wire
+}
+
+/// Decode one frame from a reader — the exact inverse of [`encode_frame`]
+/// (and the code path every live connection runs).
+pub fn decode_frame(r: &mut impl Read, crypto: &mut SessionCrypto) -> Result<(u8, u32, Frame)> {
+    read_frame(r, crypto)
 }
 
 // ---------------------------------------------------------------------------
@@ -151,6 +211,10 @@ pub struct SshServerStats {
     pub channel_rejections: AtomicU64,
     /// Client-initiated CHANNEL_CLOSE frames received (cancelled channels).
     pub channels_cancelled: AtomicU64,
+    /// Bulk (token-delivery) connections registered via BULK_HELLO.
+    pub bulk_conns: AtomicU64,
+    /// Execs whose output was routed to a bulk lane (FRAME_EXEC_BULK).
+    pub bulk_execs: AtomicU64,
 }
 
 /// Server tuning knobs.
@@ -159,11 +223,18 @@ pub struct SshServerConfig {
     /// Maximum concurrent exec channels per connection, like OpenSSH
     /// `MaxSessions`. `0` = unlimited (the seed behaviour).
     pub max_sessions: usize,
+    /// Emulated serialized wire time charged per server→client frame, held
+    /// under the writer lock of whichever connection carries the frame —
+    /// the reply-direction mirror of `SshClient`'s `frame_delay`, so the
+    /// stream-saturation bench can reproduce a congested SSH leg in both
+    /// directions. Always the wall clock (`SimStack` never sets it).
+    /// Zero (off) by default.
+    pub frame_delay: Duration,
 }
 
 impl Default for SshServerConfig {
     fn default() -> SshServerConfig {
-        SshServerConfig { max_sessions: 0 }
+        SshServerConfig { max_sessions: 0, frame_delay: Duration::ZERO }
     }
 }
 
@@ -176,6 +247,15 @@ pub struct SshServer {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
+/// A registered bulk (token-delivery) connection, shared between the
+/// control sessions that route exec output to it.
+#[derive(Clone)]
+struct BulkConn {
+    writer: Arc<Mutex<(TcpStream, SessionCrypto)>>,
+    /// subchannel -> cancel flag of the handler streaming to it.
+    cancels: Arc<Mutex<BTreeMap<u32, Arc<AtomicBool>>>>,
+}
+
 struct ServerShared {
     authorized: AuthorizedKeys,
     /// Host-side key material (the functional account's keys).
@@ -184,6 +264,28 @@ struct ServerShared {
     handlers: BTreeMap<String, Arc<dyn CommandHandler>>,
     stats: Arc<SshServerStats>,
     cfg: SshServerConfig,
+    /// bulk_id -> registered bulk connection (dual-channel mode). Lives on
+    /// the server (not the session) because EXEC_BULK arrives on a control
+    /// connection but streams to a different, bulk connection.
+    bulks: Mutex<BTreeMap<u64, BulkConn>>,
+}
+
+/// One serialized server→client frame: the emulated wire-time charge and
+/// the write both happen under the connection's writer lock (one wire per
+/// connection; bulk lanes are extra wires).
+fn server_send(
+    writer: &Mutex<(TcpStream, SessionCrypto)>,
+    delay: Duration,
+    ty: u8,
+    chan: u32,
+    payload: &[u8],
+) -> Result<()> {
+    let mut g = writer.lock().unwrap();
+    if !delay.is_zero() {
+        std::thread::sleep(delay);
+    }
+    let (ref mut sock, ref mut crypto) = *g;
+    write_frame(sock, crypto, ty, chan, payload)
 }
 
 impl SshServer {
@@ -218,6 +320,7 @@ impl SshServer {
             handlers: handlers.into_iter().collect(),
             stats: stats.clone(),
             cfg,
+            bulks: Mutex::new(BTreeMap::new()),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -324,6 +427,10 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
     let send_crypto = key.derive_session(&client_nonce, &server_nonce, false);
     let writer = Arc::new(Mutex::new((stream.try_clone()?, send_crypto)));
 
+    // Server→client emulated wire time (see `SshServerConfig::frame_delay`).
+    let delay = shared.cfg.frame_delay;
+    // Set when this connection declared itself a bulk lane (BULK_HELLO).
+    let mut my_bulk_id: Option<u64> = None;
     // Per-channel stdin accumulators.
     let mut stdin_bufs: BTreeMap<u32, Vec<u8>> = BTreeMap::new();
     // Concurrent exec channels on THIS connection (MaxSessions accounting):
@@ -343,29 +450,24 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
         match ty {
             FRAME_PING => {
                 shared.stats.pings.fetch_add(1, Ordering::Relaxed);
-                let w = writer.clone();
-                let mut g = w.lock().unwrap();
-                let (ref mut sock, ref mut crypto) = *g;
-                let _ = write_frame(sock, crypto, FRAME_PONG, chan, &payload);
+                let _ = server_send(&writer, delay, FRAME_PONG, chan, &payload);
             }
             FRAME_EXEC => {
                 // *** MaxSessions: refuse the channel open outright. ***
                 let cap = shared.cfg.max_sessions;
                 if cap > 0 && inflight.load(Ordering::SeqCst) >= cap {
                     shared.stats.channel_rejections.fetch_add(1, Ordering::Relaxed);
-                    let mut g = writer.lock().unwrap();
-                    let (ref mut sock, ref mut crypto) = *g;
-                    let _ = write_frame(
-                        sock,
-                        crypto,
+                    let _ = server_send(
+                        &writer,
+                        delay,
                         FRAME_DATA,
                         chan,
                         format!("sshsim: channel open failed: MaxSessions {cap} reached\n")
                             .as_bytes(),
                     );
-                    let _ = write_frame(
-                        sock,
-                        crypto,
+                    let _ = server_send(
+                        &writer,
+                        delay,
                         FRAME_EXIT,
                         chan,
                         &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
@@ -373,7 +475,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     continue;
                 }
                 inflight.fetch_add(1, Ordering::SeqCst);
-                stdin_bufs.insert(chan, payload);
+                stdin_bufs.insert(chan, payload.to_vec());
             }
             FRAME_DATA => {
                 if let Some(buf) = stdin_bufs.get_mut(&chan) {
@@ -412,9 +514,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                             if cancelled.load(Ordering::SeqCst) {
                                 bail!("channel {chan} closed by client");
                             }
-                            let mut g = w.lock().unwrap();
-                            let (ref mut sock, ref mut crypto) = *g;
-                            write_frame(sock, crypto, ty, chan, payload)
+                            server_send(&w, delay, ty, chan, payload)
                         };
                     let code = match handler {
                         Some(h) => {
@@ -438,6 +538,157 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     inflight.fetch_sub(1, Ordering::SeqCst);
                 });
             }
+            FRAME_BULK_HELLO => {
+                // This connection becomes a registered token-delivery lane.
+                if payload.len() >= 8 {
+                    let id = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                    let conn = BulkConn {
+                        writer: writer.clone(),
+                        cancels: Arc::new(Mutex::new(BTreeMap::new())),
+                    };
+                    shared.bulks.lock().unwrap().insert(id, conn);
+                    shared.stats.bulk_conns.fetch_add(1, Ordering::Relaxed);
+                    my_bulk_id = Some(id);
+                }
+            }
+            FRAME_BULK_CLOSE => {
+                // Client abandoned one bulk subchannel: fail the producing
+                // handler's next write (arrives on the bulk connection;
+                // `chan` is the subchannel id).
+                if let Some(id) = my_bulk_id {
+                    let flag = shared
+                        .bulks
+                        .lock()
+                        .unwrap()
+                        .get(&id)
+                        .and_then(|b| b.cancels.lock().unwrap().get(&chan).cloned());
+                    if let Some(flag) = flag {
+                        shared.stats.channels_cancelled.fetch_add(1, Ordering::Relaxed);
+                        flag.store(true, Ordering::SeqCst);
+                    }
+                }
+            }
+            FRAME_EXEC_BULK => {
+                // Dual-channel exec: setup, cancel and exit stay on THIS
+                // control connection; payload bytes stream to the named
+                // bulk lane. Command + stdin arrive inline in this single
+                // frame (no DATA/EOF phase).
+                if payload.len() < 16 {
+                    continue;
+                }
+                let bulk_id = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                let sub = u32::from_le_bytes(payload[8..12].try_into().unwrap());
+                let cmd_len =
+                    u32::from_le_bytes(payload[12..16].try_into().unwrap()) as usize;
+                if payload.len() < 16 + cmd_len {
+                    continue;
+                }
+                let bulk = shared.bulks.lock().unwrap().get(&bulk_id).cloned();
+                let Some(bulk) = bulk else {
+                    let _ = server_send(
+                        &writer,
+                        delay,
+                        FRAME_DATA,
+                        chan,
+                        format!("sshsim: unknown bulk lane {bulk_id}\n").as_bytes(),
+                    );
+                    let _ = server_send(
+                        &writer,
+                        delay,
+                        FRAME_EXIT,
+                        chan,
+                        &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
+                    );
+                    continue;
+                };
+                let cap = shared.cfg.max_sessions;
+                if cap > 0 && inflight.load(Ordering::SeqCst) >= cap {
+                    shared.stats.channel_rejections.fetch_add(1, Ordering::Relaxed);
+                    // Resolve the client's bulk wait, then reject on control
+                    // exactly like a classic channel-open failure.
+                    let _ = server_send(&bulk.writer, delay, FRAME_BULK_EOF, sub, &[]);
+                    let _ = server_send(
+                        &writer,
+                        delay,
+                        FRAME_DATA,
+                        chan,
+                        format!("sshsim: channel open failed: MaxSessions {cap} reached\n")
+                            .as_bytes(),
+                    );
+                    let _ = server_send(
+                        &writer,
+                        delay,
+                        FRAME_EXIT,
+                        chan,
+                        &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
+                    );
+                    continue;
+                }
+                inflight.fetch_add(1, Ordering::SeqCst);
+                let requested =
+                    String::from_utf8_lossy(&payload[16..16 + cmd_len]).into_owned();
+                let stdin = payload[16 + cmd_len..].to_vec();
+
+                // *** The ForceCommand circuit breaker (same as FRAME_EOF). ***
+                let (command, original) = match &entry.force_command {
+                    Some(forced) => {
+                        shared.stats.forced_commands.fetch_add(1, Ordering::Relaxed);
+                        (forced.clone(), requested)
+                    }
+                    None => (requested.clone(), requested),
+                };
+                shared.stats.execs.fetch_add(1, Ordering::Relaxed);
+                shared.stats.bulk_execs.fetch_add(1, Ordering::Relaxed);
+
+                let path = command.split_whitespace().next().unwrap_or("").to_string();
+                let handler = shared.handlers.get(&path).cloned();
+                let w = writer.clone();
+                let inflight = inflight.clone();
+                let cancelled = Arc::new(AtomicBool::new(false));
+                // One flag, reachable from BOTH lanes: FRAME_CLOSE on the
+                // control channel and FRAME_BULK_CLOSE on the subchannel.
+                cancels.lock().unwrap().insert(chan, cancelled.clone());
+                bulk.cancels.lock().unwrap().insert(sub, cancelled.clone());
+                let cancels_map = cancels.clone();
+                std::thread::spawn(move || {
+                    let bulk_send = |ty: u8, payload: &[u8]| -> Result<()> {
+                        if cancelled.load(Ordering::SeqCst) {
+                            bail!("bulk subchannel {sub} closed by client");
+                        }
+                        server_send(&bulk.writer, delay, ty, sub, payload)
+                    };
+                    let code = match handler {
+                        Some(h) => {
+                            let mut out = |chunk: &[u8]| -> Result<()> {
+                                bulk_send(FRAME_BULK_DATA, chunk)
+                            };
+                            h.exec(&command, &original, &stdin, &mut out)
+                        }
+                        None => {
+                            let _ = bulk_send(
+                                FRAME_BULK_DATA,
+                                format!("sshsim: {path}: command not found\n").as_bytes(),
+                            );
+                            127
+                        }
+                    };
+                    // Payload end on the bulk lane, exit code on control;
+                    // both suppressed after a cancel by the flag check.
+                    let _ = bulk_send(FRAME_BULK_EOF, &[]);
+                    if !cancelled.load(Ordering::SeqCst) {
+                        let _ = server_send(
+                            &w,
+                            delay,
+                            FRAME_EXIT,
+                            chan,
+                            &(code as u32).to_le_bytes(),
+                        );
+                    }
+                    bulk.cancels.lock().unwrap().remove(&sub);
+                    cancels_map.lock().unwrap().remove(&chan);
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
             FRAME_CLOSE => {
                 shared.stats.channels_cancelled.fetch_add(1, Ordering::Relaxed);
                 if stdin_bufs.remove(&chan).is_some() {
@@ -452,12 +703,53 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
             _ => {}
         }
     }
+    // Bulk lane died: deregister it and cancel every handler still
+    // streaming to it, so lane slots and MaxSessions accounting free up
+    // exactly like a control-lane disconnect (PR 2/PR 4 guarantees).
+    if let Some(id) = my_bulk_id {
+        if let Some(conn) = shared.bulks.lock().unwrap().remove(&id) {
+            for flag in conn.cancels.lock().unwrap().values() {
+                flag.store(true, Ordering::SeqCst);
+            }
+        }
+    }
     Ok(())
 }
 
 // ---------------------------------------------------------------------------
 // Client
 // ---------------------------------------------------------------------------
+
+/// Connect + authenticate (shared by control and bulk connections).
+/// Returns the stream and the directional send/recv crypto states.
+fn client_handshake(
+    addr: &str,
+    key: &KeyPair,
+) -> Result<(TcpStream, SessionCrypto, SessionCrypto)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream.write_all(key.fingerprint().as_bytes())?;
+    let mut client_nonce = [0u8; 16];
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    client_nonce[..8].copy_from_slice(&t.as_nanos().to_le_bytes()[..8]);
+    client_nonce[8..].copy_from_slice(&std::process::id().to_le_bytes().repeat(4)[..8]);
+    stream.write_all(&client_nonce)?;
+
+    let mut accept = [0u8; 1];
+    stream.read_exact(&mut accept)?;
+    if accept[0] != 1 {
+        bail!("server rejected key {}", key.fingerprint());
+    }
+    let mut server_nonce = [0u8; 16];
+    stream.read_exact(&mut server_nonce)?;
+    stream.write_all(&key.prove(&client_nonce, &server_nonce))?;
+
+    let send_crypto = key.derive_session(&client_nonce, &server_nonce, true);
+    let recv_crypto = key.derive_session(&client_nonce, &server_nonce, true);
+    Ok((stream, send_crypto, recv_crypto))
+}
 
 /// Client side of the persistent SSH connection (held by the HPC Proxy).
 pub struct SshClient {
@@ -495,30 +787,7 @@ impl SshClient {
         frame_delay: Duration,
         clock: Arc<dyn Clock>,
     ) -> Result<SshClient> {
-        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        stream.set_nodelay(true)?;
-        // --- handshake ---
-        stream.write_all(key.fingerprint().as_bytes())?;
-        let mut client_nonce = [0u8; 16];
-        let t = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .unwrap_or_default();
-        client_nonce[..8].copy_from_slice(&t.as_nanos().to_le_bytes()[..8]);
-        client_nonce[8..].copy_from_slice(&std::process::id().to_le_bytes().repeat(4)[..8]);
-        stream.write_all(&client_nonce)?;
-
-        let mut accept = [0u8; 1];
-        stream.read_exact(&mut accept)?;
-        if accept[0] != 1 {
-            bail!("server rejected key {}", key.fingerprint());
-        }
-        let mut server_nonce = [0u8; 16];
-        stream.read_exact(&mut server_nonce)?;
-        stream.write_all(&key.prove(&client_nonce, &server_nonce))?;
-
-        let send_crypto = key.derive_session(&client_nonce, &server_nonce, true);
-        let mut recv_crypto = key.derive_session(&client_nonce, &server_nonce, true);
-
+        let (stream, send_crypto, mut recv_crypto) = client_handshake(addr, key)?;
         let writer = Arc::new(Mutex::new((stream.try_clone()?, send_crypto)));
         let channels: Arc<Mutex<BTreeMap<u32, Sender<StreamChunk>>>> =
             Arc::new(Mutex::new(BTreeMap::new()));
@@ -684,6 +953,110 @@ impl SshClient {
         }
     }
 
+    /// Dual-channel exec: setup/cancel/exit ride THIS control connection
+    /// (one EXEC_BULK frame carrying command + stdin inline), while every
+    /// payload byte streams over `bulk`'s subchannel. Cancellation via
+    /// `on_chunk -> false` mirrors [`exec_stream_ctl`](Self::exec_stream_ctl):
+    /// both lanes' accounting is freed immediately and the server handler's
+    /// next write fails.
+    pub fn exec_stream_bulk_ctl(
+        &self,
+        bulk: &BulkChannel,
+        command: &str,
+        stdin: &[u8],
+        mut on_chunk: impl FnMut(&[u8]) -> bool,
+    ) -> Result<i32> {
+        let (chan, ctl_rx) = self.open_channel();
+        let (sub, bulk_rx) = bulk.open_sub();
+        let cmd = command.as_bytes();
+        let mut payload = Vec::with_capacity(16 + cmd.len() + stdin.len());
+        payload.extend_from_slice(&bulk.id().to_le_bytes());
+        payload.extend_from_slice(&sub.to_le_bytes());
+        payload.extend_from_slice(&(cmd.len() as u32).to_le_bytes());
+        payload.extend_from_slice(cmd);
+        payload.extend_from_slice(stdin);
+        if let Err(e) = self.send(FRAME_EXEC_BULK, chan, &payload) {
+            self.channels.lock().unwrap().remove(&chan);
+            bulk.forget_sub(sub);
+            return Err(e);
+        }
+        drop(payload);
+        let deadline = Instant::now() + Duration::from_secs(60);
+        // Exit observed on the control lane while the bulk side is still
+        // open (rejection, early handler exit, cross-connection races).
+        let mut ctl_exit: Option<i32> = None;
+        loop {
+            match bulk_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(StreamChunk::Data(d)) => {
+                    if !on_chunk(&d) {
+                        // Abandon on both lanes; local accounting freed now.
+                        self.channels.lock().unwrap().remove(&chan);
+                        let _ = self.send(FRAME_CLOSE, chan, &[]);
+                        bulk.close_sub(sub);
+                        return Ok(EXIT_CANCELLED);
+                    }
+                }
+                Ok(StreamChunk::Exit(_)) => {
+                    // BULK_EOF: payload complete; the real exit code rides
+                    // the control lane (possibly already here).
+                    if let Some(code) = ctl_exit {
+                        return Ok(code);
+                    }
+                    loop {
+                        match ctl_rx.recv_timeout(Duration::from_secs(60)) {
+                            Ok(StreamChunk::Exit(code)) => return Ok(code),
+                            // Notices (e.g. rejection text) ride control.
+                            Ok(StreamChunk::Data(_)) => {}
+                            Err(_) => {
+                                self.channels.lock().unwrap().remove(&chan);
+                                bail!("ssh exec (bulk): control exit never arrived");
+                            }
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if ctl_exit.is_none() {
+                        match ctl_rx.try_recv() {
+                            Ok(StreamChunk::Exit(code)) => ctl_exit = Some(code),
+                            Ok(StreamChunk::Data(_)) => {}
+                            Err(_) => {}
+                        }
+                    }
+                    if let Some(code) = ctl_exit {
+                        // Control finished but no BULK_EOF yet: grace-drain
+                        // in-flight bulk frames, then surface the verdict.
+                        let drain_until = Instant::now() + Duration::from_millis(50);
+                        loop {
+                            let left = drain_until.saturating_duration_since(Instant::now());
+                            match bulk_rx.recv_timeout(left) {
+                                Ok(StreamChunk::Data(d)) => {
+                                    let _ = on_chunk(&d);
+                                }
+                                Ok(StreamChunk::Exit(_)) | Err(_) => break,
+                            }
+                        }
+                        bulk.forget_sub(sub);
+                        return Ok(code);
+                    }
+                    if Instant::now() >= deadline {
+                        self.channels.lock().unwrap().remove(&chan);
+                        let _ = self.send(FRAME_CLOSE, chan, &[]);
+                        bulk.close_sub(sub);
+                        bail!("ssh exec (bulk) timed out");
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    // The bulk connection died mid-stream. Free the control
+                    // channel too (best-effort close; a dead control lane
+                    // already freed the server side).
+                    self.channels.lock().unwrap().remove(&chan);
+                    let _ = self.send(FRAME_CLOSE, chan, &[]);
+                    bail!("bulk channel lost mid-stream");
+                }
+            }
+        }
+    }
+
     /// Execute and collect stdout.
     pub fn exec(&self, command: &str, stdin: &[u8]) -> Result<ExecReply> {
         let mut stdout = Vec::new();
@@ -703,6 +1076,146 @@ impl SshClient {
         rx.recv_timeout(Duration::from_secs(10))
             .map_err(|_| anyhow!("ping timeout"))?;
         Ok(start.elapsed())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bulk channel (dual-channel streaming, token-delivery side)
+// ---------------------------------------------------------------------------
+
+/// The token-delivery half of dual-channel streaming: one extra
+/// authenticated TCP connection that carries ONLY bulk frames (token
+/// payloads + their EOF markers), keeping the pooled control lanes free
+/// for exec setup, cancel, keepalive and exit status. Many concurrent
+/// requests multiplex subchannels over one bulk lane; the proxy places
+/// each request on its least-loaded lane via [`active_subchannels`]
+/// (BulkChannel::active_subchannels).
+pub struct BulkChannel {
+    writer: Arc<Mutex<(TcpStream, SessionCrypto)>>,
+    subs: Arc<Mutex<BTreeMap<u32, Sender<StreamChunk>>>>,
+    next_sub: AtomicU32,
+    dead: Arc<AtomicBool>,
+    id: u64,
+    /// Emulated serialized wire time for client→server bulk frames (rare:
+    /// only HELLO and BULK_CLOSE go this direction).
+    frame_delay: Duration,
+    clock: Arc<dyn Clock>,
+}
+
+impl BulkChannel {
+    /// Connect, authenticate, and register as bulk lane `id`. The id must
+    /// be unique per live lane (the proxy derives it from a generation
+    /// counter so a reconnect never collides with its stale predecessor).
+    pub fn connect(addr: &str, key: &KeyPair, id: u64) -> Result<BulkChannel> {
+        BulkChannel::connect_with_clock(addr, key, id, Duration::ZERO, WallClock::new())
+    }
+
+    /// Like [`BulkChannel::connect`] with an emulated per-frame wire delay
+    /// charged to the injected clock.
+    pub fn connect_with_clock(
+        addr: &str,
+        key: &KeyPair,
+        id: u64,
+        frame_delay: Duration,
+        clock: Arc<dyn Clock>,
+    ) -> Result<BulkChannel> {
+        let (stream, send_crypto, mut recv_crypto) = client_handshake(addr, key)?;
+        let writer = Arc::new(Mutex::new((stream.try_clone()?, send_crypto)));
+        {
+            // Declare this connection a bulk lane before anything rides it.
+            let mut g = writer.lock().unwrap();
+            let (ref mut sock, ref mut crypto) = *g;
+            write_frame(sock, crypto, FRAME_BULK_HELLO, 0, &id.to_le_bytes())?;
+        }
+        let subs: Arc<Mutex<BTreeMap<u32, Sender<StreamChunk>>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+
+        // Reader thread: route bulk frames to subchannel receivers.
+        let subs2 = subs.clone();
+        let dead2 = dead.clone();
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            loop {
+                match read_frame(&mut stream, &mut recv_crypto) {
+                    Ok((ty, sub, payload)) => match ty {
+                        FRAME_BULK_DATA => {
+                            if let Some(tx) = subs2.lock().unwrap().get(&sub) {
+                                let _ = tx.send(StreamChunk::Data(payload));
+                            }
+                        }
+                        FRAME_BULK_EOF => {
+                            // Payload complete. Exit(0) is only the EOF
+                            // sentinel; the real code rides control.
+                            if let Some(tx) = subs2.lock().unwrap().remove(&sub) {
+                                let _ = tx.send(StreamChunk::Exit(0));
+                            }
+                        }
+                        _ => {}
+                    },
+                    Err(_) => {
+                        dead2.store(true, Ordering::SeqCst);
+                        // Wake all waiters by dropping their senders.
+                        subs2.lock().unwrap().clear();
+                        break;
+                    }
+                }
+            }
+        });
+
+        Ok(BulkChannel {
+            writer,
+            subs,
+            next_sub: AtomicU32::new(1),
+            dead,
+            id,
+            frame_delay,
+            clock,
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn is_alive(&self) -> bool {
+        !self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Subchannels currently streaming — the lane-load signal the proxy
+    /// uses for least-loaded bulk placement.
+    pub fn active_subchannels(&self) -> usize {
+        self.subs.lock().unwrap().len()
+    }
+
+    fn open_sub(&self) -> (u32, Receiver<StreamChunk>) {
+        let sub = self.next_sub.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        self.subs.lock().unwrap().insert(sub, tx);
+        (sub, rx)
+    }
+
+    /// Drop local accounting for a subchannel without telling the server
+    /// (used when the server already finished it on the control lane).
+    fn forget_sub(&self, sub: u32) {
+        self.subs.lock().unwrap().remove(&sub);
+    }
+
+    /// Abandon a subchannel: local accounting freed immediately, and the
+    /// server is told to stop the producer (the bulk-side CHANNEL_CLOSE).
+    fn close_sub(&self, sub: u32) {
+        self.subs.lock().unwrap().remove(&sub);
+        if !self.is_alive() {
+            return;
+        }
+        let mut g = self.writer.lock().unwrap();
+        if !self.frame_delay.is_zero() {
+            self.clock.sleep(self.frame_delay);
+        }
+        let (ref mut sock, ref mut crypto) = *g;
+        if write_frame(sock, crypto, FRAME_BULK_CLOSE, sub, &[]).is_err() {
+            self.dead.store(true, Ordering::SeqCst);
+        }
     }
 }
 
@@ -866,7 +1379,7 @@ mod tests {
             ak,
             vec![kp.clone()],
             vec![("/slow".into(), slow_handler(200))],
-            SshServerConfig { max_sessions: 2 },
+            SshServerConfig { max_sessions: 2, ..Default::default() },
         )
         .unwrap();
         let client = Arc::new(SshClient::connect(&server.addr.to_string(), &kp).unwrap());
@@ -980,7 +1493,7 @@ mod tests {
             ak,
             vec![kp.clone()],
             vec![("/slow".into(), slow_handler(400))],
-            SshServerConfig { max_sessions: 1 },
+            SshServerConfig { max_sessions: 1, ..Default::default() },
         )
         .unwrap();
         let client = Arc::new(SshClient::connect(&server.addr.to_string(), &kp).unwrap());
@@ -1002,6 +1515,253 @@ mod tests {
             assert!(Instant::now() < deadline, "MaxSessions slot never released");
             std::thread::sleep(Duration::from_millis(25));
         }
+    }
+
+    #[test]
+    fn bulk_exec_roundtrip_and_accounting() {
+        let kp = KeyPair::generate(23);
+        let server = forced_server(&kp);
+        let addr = server.addr.to_string();
+        let ctl = SshClient::connect(&addr, &kp).unwrap();
+        let bulk = BulkChannel::connect(&addr, &kp, 77).unwrap();
+        assert!(bulk.is_alive());
+        let mut chunks: Vec<String> = Vec::new();
+        let code = ctl
+            .exec_stream_bulk_ctl(&bulk, "rm -rf /", b"PAYLOAD", |c| {
+                chunks.push(String::from_utf8_lossy(c).into_owned());
+                true
+            })
+            .unwrap();
+        assert_eq!(code, 0);
+        let text = chunks.concat();
+        // ForceCommand applies to bulk execs exactly like classic ones.
+        assert!(text.contains("cmd=/opt/saia/cloud_interface"), "{text}");
+        assert!(text.contains("orig=rm -rf /"), "{text}");
+        assert!(text.contains("stdin=PAYLOAD"), "{text}");
+        // Accounting drains on both lanes.
+        assert_eq!(ctl.active_channels(), 0);
+        assert_eq!(bulk.active_subchannels(), 0);
+        assert_eq!(server.stats.bulk_conns.load(Ordering::Relaxed), 1);
+        assert_eq!(server.stats.bulk_execs.load(Ordering::Relaxed), 1);
+        // The pair keeps working for subsequent requests.
+        let code = ctl.exec_stream_bulk_ctl(&bulk, "again", b"x", |_| true).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn bulk_cancel_stops_handler_and_frees_both_lanes() {
+        let kp = KeyPair::generate(24);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/drip".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let stopped_early = Arc::new(AtomicBool::new(false));
+        let st = stopped_early.clone();
+        let dripper: Arc<dyn CommandHandler> = Arc::new(
+            move |_c: &str, _o: &str, _i: &[u8], out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                for _ in 0..50 {
+                    std::thread::sleep(Duration::from_millis(10));
+                    if out(b"tok;").is_err() {
+                        st.store(true, Ordering::SeqCst);
+                        return 1;
+                    }
+                }
+                0
+            },
+        );
+        let server = SshServer::start_with(
+            ak,
+            vec![kp.clone()],
+            vec![("/drip".into(), dripper)],
+            SshServerConfig { max_sessions: 1, ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.addr.to_string();
+        let ctl = SshClient::connect(&addr, &kp).unwrap();
+        let bulk = BulkChannel::connect(&addr, &kp, 5).unwrap();
+
+        let mut seen = 0usize;
+        let code = ctl
+            .exec_stream_bulk_ctl(&bulk, "x", b"", |_| {
+                seen += 1;
+                seen < 3 // abandon after the third chunk
+            })
+            .unwrap();
+        assert_eq!(code, EXIT_CANCELLED);
+        // Both lanes' accounting freed immediately on the client side.
+        assert_eq!(ctl.active_channels(), 0, "control lane not released");
+        assert_eq!(bulk.active_subchannels(), 0, "bulk subchannel not released");
+        // The close reached the server and the handler stopped.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while !stopped_early.load(Ordering::SeqCst) {
+            assert!(Instant::now() < deadline, "server handler never noticed the close");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // MaxSessions slot (cap 1) released: the next bulk exec is admitted.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        loop {
+            let code = ctl.exec_stream_bulk_ctl(&bulk, "y", b"", |_| true).unwrap();
+            if code != EXIT_CHANNEL_REJECTED {
+                break;
+            }
+            assert!(Instant::now() < deadline, "MaxSessions slot never released");
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    #[test]
+    fn bulk_exec_rejected_when_cap_full() {
+        let kp = KeyPair::generate(25);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/slow".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let server = SshServer::start_with(
+            ak,
+            vec![kp.clone()],
+            vec![("/slow".into(), slow_handler(400))],
+            SshServerConfig { max_sessions: 1, ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.addr.to_string();
+        let ctl = Arc::new(SshClient::connect(&addr, &kp).unwrap());
+        let bulk = Arc::new(BulkChannel::connect(&addr, &kp, 9).unwrap());
+        let (c, b) = (ctl.clone(), bulk.clone());
+        let h = std::thread::spawn(move || {
+            c.exec_stream_bulk_ctl(&b, "x", b"", |_| true).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(100)); // let it occupy the slot
+        let code = ctl.exec_stream_bulk_ctl(&bulk, "y", b"", |_| true).unwrap();
+        assert_eq!(code, EXIT_CHANNEL_REJECTED, "cap 1 must reject the second exec");
+        assert_eq!(bulk.active_subchannels(), 1, "only the in-flight sub remains");
+        assert_eq!(h.join().unwrap(), 0);
+        assert_eq!(bulk.active_subchannels(), 0);
+    }
+
+    #[test]
+    fn bulk_conn_death_cancels_stream_and_frees_slot() {
+        let kp = KeyPair::generate(26);
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/drip".into()),
+            options: vec![],
+            comment: String::new(),
+        });
+        let stopped_early = Arc::new(AtomicBool::new(false));
+        let st = stopped_early.clone();
+        let dripper: Arc<dyn CommandHandler> = Arc::new(
+            move |_c: &str, _o: &str, _i: &[u8], out: &mut dyn FnMut(&[u8]) -> Result<()>| {
+                for _ in 0..50 {
+                    std::thread::sleep(Duration::from_millis(10));
+                    if out(b"tok;").is_err() {
+                        st.store(true, Ordering::SeqCst);
+                        return 1;
+                    }
+                }
+                0
+            },
+        );
+        let server = SshServer::start_with(
+            ak,
+            vec![kp.clone()],
+            vec![("/drip".into(), dripper)],
+            SshServerConfig { max_sessions: 1, ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.addr.to_string();
+        let ctl = SshClient::connect(&addr, &kp).unwrap();
+        let bulk = BulkChannel::connect(&addr, &kp, 3).unwrap();
+        let mut seen = 0usize;
+        let res = ctl.exec_stream_bulk_ctl(&bulk, "x", b"", |_| {
+            seen += 1;
+            if seen == 3 {
+                // Sever the bulk TCP connection under the stream.
+                assert!(server.kill_session(1), "bulk session index");
+            }
+            true
+        });
+        assert!(res.is_err(), "bulk death must surface as an error: {res:?}");
+        assert!(!bulk.is_alive());
+        // The server cancelled the orphaned handler (slot freed).
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while !stopped_early.load(Ordering::SeqCst) {
+            assert!(Instant::now() < deadline, "handler kept streaming to a dead lane");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Control lane survives; a classic exec still works (slot is free).
+        let deadline = Instant::now() + Duration::from_secs(3);
+        loop {
+            let code = ctl.exec("z", b"").unwrap().exit_code;
+            if code == 1 || code == 0 {
+                break; // dripper exits 1 after its failed write
+            }
+            assert!(Instant::now() < deadline, "MaxSessions slot never released");
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Reader that dribbles bytes in caller-chosen step sizes, so frames
+    /// split across arbitrarily small reads.
+    struct SplitReader {
+        data: Vec<u8>,
+        pos: usize,
+        steps: Vec<usize>,
+        i: usize,
+    }
+
+    impl Read for SplitReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let step = self.steps[self.i % self.steps.len()].max(1);
+            self.i += 1;
+            let n = step.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn prop_bulk_frame_framing_roundtrips() {
+        use crate::prop_assert;
+        use crate::util::prop::run_prop;
+        run_prop("bulk_frame_framing", 0xB01D, 60, |rng| {
+            let kp = KeyPair::generate(31);
+            let cn = [3u8; 16];
+            let sn = [4u8; 16];
+            let mut enc = kp.derive_session(&cn, &sn, true);
+            let mut dec = kp.derive_session(&cn, &sn, true);
+            // Sizes stressing empty, small, and >64KiB (past the pool cap).
+            let size = match rng.below(3) {
+                0 => 0,
+                1 => rng.below(2048) as usize,
+                _ => 64 * 1024 + rng.below(100_000) as usize,
+            };
+            let payload: Vec<u8> = (0..size).map(|i| (rng.below(256) ^ i as u64) as u8).collect();
+            let ty = (7 + rng.below(5)) as u8; // the bulk frame types
+            let chan = rng.below(u32::MAX as u64) as u32;
+            let wire = encode_frame(&mut enc, ty, chan, &payload);
+            let mut steps = Vec::new();
+            for _ in 0..8 {
+                steps.push(1 + rng.below(4096) as usize);
+            }
+            let mut r = SplitReader { data: wire, pos: 0, steps, i: 0 };
+            let (ty2, chan2, got) = decode_frame(&mut r, &mut dec)
+                .map_err(|e| format!("decode failed (size={size}): {e}"))?;
+            prop_assert!(ty2 == ty, "type mismatch: {ty2} != {ty}");
+            prop_assert!(chan2 == chan, "chan mismatch: {chan2} != {chan}");
+            prop_assert!(&got[..] == &payload[..], "payload mismatch at size {size}");
+            Ok(())
+        });
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::hpcproxy::{HpcProxy, ProxyConfig};
 use crate::interface::CloudInterface;
 use crate::scheduler::{RealLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec};
 use crate::slurm::{ClusterSpec, SlurmSim};
-use crate::sshsim::{AuthorizedKey, AuthorizedKeys, KeyPair, SshServer};
+use crate::sshsim::{AuthorizedKey, AuthorizedKeys, KeyPair, SshServer, SshServerConfig};
 use crate::util::clock::WallClock;
 use crate::util::http::{self, Server};
 use crate::util::json::Json;
@@ -64,6 +64,22 @@ pub struct StackConfig {
     pub ssh_pool_size: usize,
     /// Per-connection channel cap used for pool placement (MaxSessions).
     pub ssh_max_channels: usize,
+    /// Dual-channel streaming (off = the paper's single-channel baseline):
+    /// control traffic stays on the pooled lanes while `infer` reply bytes
+    /// ride dedicated bulk connections. Client-visible output is
+    /// byte-identical in both modes.
+    pub dual_channel: bool,
+    /// Bulk token-delivery connections the proxy keeps per upstream when
+    /// `dual_channel` is on.
+    pub ssh_bulk_lanes: usize,
+    /// Zero-copy SSE serving in every instance engine: token frames are
+    /// spliced into a pre-dumped JSON template instead of re-serializing a
+    /// `Json` tree per chunk (byte-identical output either way).
+    pub zero_copy_sse: bool,
+    /// Emulated serialized wire time per *server→client* SSH frame — the
+    /// reply-direction mirror of `ssh_link_frame_delay`, used by the
+    /// stream-saturation bench; everything else leaves it at zero.
+    pub ssh_server_frame_delay: Duration,
     /// Engine-side disconnect handling: `true` frees a batch slot the
     /// moment its client vanishes; `false` is the run-to-completion
     /// baseline the abandonment bench measures against.
@@ -90,6 +106,10 @@ impl Default for StackConfig {
             ssh_link_frame_delay: Duration::ZERO,
             ssh_pool_size: 1,
             ssh_max_channels: 8,
+            dual_channel: false,
+            ssh_bulk_lanes: 2,
+            zero_copy_sse: false,
+            ssh_server_frame_delay: Duration::ZERO,
             abort_on_disconnect: true,
             prefill_chunk: crate::llmserver::EngineConfig::default().prefill_chunk,
             prefix_cache: true,
@@ -131,6 +151,7 @@ impl ChatAiStack {
                     abort_on_disconnect: cfg.abort_on_disconnect,
                     prefill_chunk: cfg.prefill_chunk,
                     prefix_cache: cfg.prefix_cache,
+                    zero_copy_sse: cfg.zero_copy_sse,
                     ..Default::default()
                 },
             ),
@@ -162,10 +183,14 @@ impl ChatAiStack {
             options: vec!["no-pty".into(), "no-port-forwarding".into(), "restrict".into()],
             comment: "esx-hpc-proxy (functional account)".into(),
         });
-        let ssh_server = SshServer::start(
+        let ssh_server = SshServer::start_with(
             authorized,
             vec![key.clone()],
             vec![(CLOUD_INTERFACE_CMD.into(), interface)],
+            SshServerConfig {
+                frame_delay: cfg.ssh_server_frame_delay,
+                ..SshServerConfig::default()
+            },
         )?;
 
         // --- ESX side -----------------------------------------------------
@@ -178,6 +203,8 @@ impl ChatAiStack {
                 link_frame_delay: cfg.ssh_link_frame_delay,
                 pool_size: cfg.ssh_pool_size,
                 max_channels_per_conn: cfg.ssh_max_channels,
+                dual_channel: cfg.dual_channel,
+                bulk_lanes: cfg.ssh_bulk_lanes,
             },
             metrics.clone(),
         )?;

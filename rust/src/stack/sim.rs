@@ -70,6 +70,13 @@ pub struct SimStackConfig {
     /// Engine tuning applied to every instance core.
     pub engine: EngineConfig,
     pub scheduler: SchedulerConfig,
+    /// Dual-channel streaming flag, mirroring `StackConfig::dual_channel`.
+    /// The virtual-time harness simulates the SSH transport away, so this
+    /// MUST be trace-neutral: the same seed produces a byte-identical
+    /// trace whether it is set or not (CI pins that by running the
+    /// determinism suite with it enabled). It is surfaced through the
+    /// `sim_dual_channel` gauge only — metrics are not part of the trace.
+    pub dual_channel: bool,
 }
 
 impl Default for SimStackConfig {
@@ -86,6 +93,7 @@ impl Default for SimStackConfig {
             rate_limit_rps: None,
             engine: EngineConfig::default(),
             scheduler: SchedulerConfig::default(),
+            dual_channel: false,
         }
     }
 }
@@ -307,6 +315,8 @@ impl SimStack {
         let exec = Rc::new(SimExecutor::new(cfg.seed));
         let clock = exec.clock();
         let metrics = Registry::new();
+        // Trace-neutral by contract (see `SimStackConfig::dual_channel`).
+        metrics.gauge("sim_dual_channel", &[]).set(cfg.dual_channel as i64);
         let slurm = Arc::new(Mutex::new(SlurmSim::new(cfg.cluster.clone())));
         let launcher = Arc::new(SimLauncher {
             clock: clock.clone(),

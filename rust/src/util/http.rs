@@ -6,9 +6,9 @@
 //! and a threaded accept loop.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -147,6 +147,184 @@ pub trait StreamSink {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pooled frame buffers + reference-counted frames (zero-copy hot path)
+// ---------------------------------------------------------------------------
+
+/// Buffers retained in the process-wide frame pool.
+const FRAME_POOL_MAX: usize = 256;
+/// Buffers that grew past this are dropped instead of pooled, so one
+/// oversized frame cannot pin megabytes in the free-list forever.
+const FRAME_POOL_MAX_CAP: usize = 64 * 1024;
+
+/// Process-wide free-list of byte buffers for the streaming hot path (SSE
+/// batches, SSH frame seal/open scratch). Steady-state streams allocate
+/// nothing: every buffer cycles acquire → fill → [`Frame`] → drop → release.
+static FRAME_POOL: Mutex<Vec<Vec<u8>>> = Mutex::new(Vec::new());
+static POOL_HITS: AtomicU64 = AtomicU64::new(0);
+static POOL_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Take a cleared buffer from the frame pool (or allocate a fresh one).
+pub fn frame_buf_acquire() -> Vec<u8> {
+    if let Some(mut b) = FRAME_POOL.lock().unwrap().pop() {
+        b.clear();
+        POOL_HITS.fetch_add(1, Ordering::Relaxed);
+        return b;
+    }
+    POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+    Vec::new()
+}
+
+/// Return a buffer to the frame pool (dropped when the pool is full or the
+/// buffer never grew / grew oversized).
+pub fn frame_buf_release(buf: Vec<u8>) {
+    if buf.capacity() == 0 || buf.capacity() > FRAME_POOL_MAX_CAP {
+        return;
+    }
+    let mut pool = FRAME_POOL.lock().unwrap();
+    if pool.len() < FRAME_POOL_MAX {
+        pool.push(buf);
+    }
+}
+
+/// `(hits, misses)` acquire counters — the microbench and pool tests read
+/// these; they are monotonic process-wide.
+pub fn frame_pool_stats() -> (u64, u64) {
+    (POOL_HITS.load(Ordering::Relaxed), POOL_MISSES.load(Ordering::Relaxed))
+}
+
+/// A cheaply clonable, reference-counted view of a byte buffer (the
+/// `Bytes` idea, sized to what this stack needs). Streaming layers hand a
+/// `Frame` around instead of copying `Vec<u8>`s; an offset view lets a
+/// payload travel without its header being sliced out, and when the last
+/// clone drops the backing buffer returns to the frame pool.
+pub struct Frame {
+    buf: Option<Arc<Vec<u8>>>,
+    start: usize,
+}
+
+impl Frame {
+    /// Wrap a whole buffer.
+    pub fn from_vec(buf: Vec<u8>) -> Frame {
+        Frame { buf: Some(Arc::new(buf)), start: 0 }
+    }
+
+    /// Wrap a buffer exposing only `buf[start..]` (a frame payload after
+    /// its header): the header bytes ride along unseen instead of being
+    /// copied out.
+    pub fn from_vec_offset(buf: Vec<u8>, start: usize) -> Frame {
+        debug_assert!(start <= buf.len());
+        Frame { buf: Some(Arc::new(buf)), start }
+    }
+
+    /// Copy a slice into a pooled buffer.
+    pub fn copy_from_slice(data: &[u8]) -> Frame {
+        let mut b = frame_buf_acquire();
+        b.extend_from_slice(data);
+        Frame::from_vec(b)
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.buf {
+            Some(b) => b.len() - self.start,
+            None => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Deref for Frame {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match &self.buf {
+            Some(b) => &b[self.start..],
+            None => &[],
+        }
+    }
+}
+
+impl AsRef<[u8]> for Frame {
+    fn as_ref(&self) -> &[u8] {
+        self
+    }
+}
+
+impl Clone for Frame {
+    fn clone(&self) -> Frame {
+        Frame { buf: self.buf.clone(), start: self.start }
+    }
+}
+
+impl Drop for Frame {
+    fn drop(&mut self) {
+        if let Some(arc) = self.buf.take() {
+            // Last reference returns the allocation to the pool.
+            if let Ok(v) = Arc::try_unwrap(arc) {
+                frame_buf_release(v);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Frame {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Frame({} bytes)", self.len())
+    }
+}
+
+/// `write_all` across several buffers with one `writev` in the common
+/// case; finishes part-by-part only on a short vectored write. At most 4
+/// parts (all call sites frame header + payload + trailer).
+pub fn write_all_vectored(w: &mut dyn Write, parts: &[&[u8]]) -> Result<()> {
+    debug_assert!(parts.len() <= 4);
+    let mut slices = [IoSlice::new(&[]); 4];
+    let n_parts = parts.len().min(4);
+    for (i, p) in parts[..n_parts].iter().enumerate() {
+        slices[i] = IoSlice::new(p);
+    }
+    let total: usize = parts[..n_parts].iter().map(|p| p.len()).sum();
+    let mut written = w.write_vectored(&slices[..n_parts])?;
+    if written < total {
+        for part in &parts[..n_parts] {
+            if written >= part.len() {
+                written -= part.len();
+                continue;
+            }
+            w.write_all(&part[written..])?;
+            written = 0;
+        }
+    }
+    Ok(())
+}
+
+/// Format `{len:x}\r\n` into `out` without allocating; returns byte count.
+fn hex_len_header(len: usize, out: &mut [u8; 18]) -> usize {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut digits = [0u8; 16];
+    let mut n = len;
+    let mut i = 0;
+    loop {
+        digits[i] = HEX[n & 0xf];
+        n >>= 4;
+        i += 1;
+        if n == 0 {
+            break;
+        }
+    }
+    let mut w = 0;
+    while i > 0 {
+        i -= 1;
+        out[w] = digits[i];
+        w += 1;
+    }
+    out[w] = b'\r';
+    out[w + 1] = b'\n';
+    w + 2
+}
+
 struct ChunkedWriter<'a> {
     w: &'a mut dyn Write,
 }
@@ -156,9 +334,13 @@ impl StreamSink for ChunkedWriter<'_> {
         if chunk.is_empty() {
             return Ok(());
         }
-        write!(self.w, "{:x}\r\n", chunk.len())?;
-        self.w.write_all(chunk)?;
-        self.w.write_all(b"\r\n")?;
+        // Chunked framing in ONE vectored write (size line + data + CRLF)
+        // instead of three write calls — per-frame syscalls are a dominant
+        // fixed cost of token streaming (DESIGN.md §Dual-channel
+        // streaming).
+        let mut head = [0u8; 18];
+        let head_len = hex_len_header(chunk.len(), &mut head);
+        write_all_vectored(self.w, &[&head[..head_len], chunk, b"\r\n"])?;
         self.w.flush()?;
         Ok(())
     }
@@ -637,30 +819,41 @@ pub fn request_stream_coalesced(
         .unwrap_or(false);
     let mut saved = 0u64;
     if chunked {
+        // One pooled buffer serves every batch of the stream: zero
+        // steady-state allocations on the coalescing read path.
+        let mut batch = frame_buf_acquire();
+        let mut line = String::new();
         loop {
-            let mut line = String::new();
+            line.clear();
             reader.read_line(&mut line)?;
-            let size = usize::from_str_radix(line.trim(), 16).context("chunk size")?;
+            let size = match usize::from_str_radix(line.trim(), 16) {
+                Ok(s) => s,
+                Err(_) => {
+                    frame_buf_release(batch);
+                    bail!("chunk size {line:?}");
+                }
+            };
             if size == 0 {
                 break;
             }
-            let mut batch = vec![0u8; size + 2];
+            batch.resize(size + 2, 0);
             reader.read_exact(&mut batch)?;
             batch.truncate(size);
             // Drain frames the kernel already delivered into this batch.
             let mut done = false;
-            while let Some(extra) = buffered_chunk(&mut reader, &mut done) {
-                batch.extend_from_slice(&extra);
+            while buffered_chunk_into(&mut reader, &mut done, &mut batch) {
                 saved += 1;
             }
             if !on_batch(status, &batch) {
                 let _ = reader.get_ref().shutdown(std::net::Shutdown::Both);
+                frame_buf_release(batch);
                 return Ok((status, true, saved));
             }
             if done {
                 break;
             }
         }
+        frame_buf_release(batch);
     } else if let Some(len) = resp_headers.get("content-length") {
         let len: usize = len.parse()?;
         let mut buf = vec![0u8; len];
@@ -677,26 +870,40 @@ pub fn request_stream_coalesced(
 /// buffer without touching the socket. Sets `done` (and consumes the bytes)
 /// when the terminal 0-length chunk is fully buffered. Returns `None` when
 /// the buffered bytes don't contain a complete frame.
-fn buffered_chunk(reader: &mut BufReader<TcpStream>, done: &mut bool) -> Option<Vec<u8>> {
+fn buffered_chunk_into(
+    reader: &mut BufReader<TcpStream>,
+    done: &mut bool,
+    out: &mut Vec<u8>,
+) -> bool {
     let buf = reader.buffer();
-    let nl = buf.iter().position(|&b| b == b'\n')?;
-    let size =
-        usize::from_str_radix(std::str::from_utf8(&buf[..nl]).ok()?.trim(), 16).ok()?;
+    let nl = match buf.iter().position(|&b| b == b'\n') {
+        Some(nl) => nl,
+        None => return false,
+    };
+    let size = match std::str::from_utf8(&buf[..nl])
+        .ok()
+        .and_then(|s| usize::from_str_radix(s.trim(), 16).ok())
+    {
+        Some(size) => size,
+        None => return false,
+    };
     if size == 0 {
         // Terminal chunk "0\r\n\r\n": needs its trailing blank line too.
         if buf.len() >= nl + 3 {
             reader.consume(nl + 3);
             *done = true;
         }
-        return None;
+        return false;
     }
     let total = nl + 1 + size + 2; // size line + data + CRLF
     if buf.len() < total {
-        return None;
+        return false;
     }
-    let data = buf[nl + 1..nl + 1 + size].to_vec();
+    // Append straight from the BufReader's internal buffer: no
+    // intermediate Vec per coalesced frame.
+    out.extend_from_slice(&buf[nl + 1..nl + 1 + size]);
     reader.consume(total);
-    Some(data)
+    true
 }
 
 /// Parse SSE `data:` payloads out of a raw chunk stream.

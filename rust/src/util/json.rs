@@ -175,6 +175,14 @@ impl Json {
     }
 }
 
+/// Escape `s` as a JSON string literal (quotes included), appending to
+/// `out`. Byte-identical to how [`Json::dump`] serializes `Json::Str` —
+/// the zero-copy SSE path splices tokens into a pre-dumped chunk template
+/// with this and must match a full re-serialization exactly.
+pub fn escape_str_into(s: &str, out: &mut String) {
+    write_escaped(s, out)
+}
+
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -518,6 +526,15 @@ mod tests {
     fn builder() {
         let j = Json::obj().set("model", "tiny").set("n", 3u64).set("ok", true);
         assert_eq!(j.dump(), r#"{"model":"tiny","n":3,"ok":true}"#);
+    }
+
+    #[test]
+    fn escape_str_into_matches_dump() {
+        for s in ["plain", "quote\" nl\n tab\t \\back", "ünïcode 😀 ctrl\u{1}"] {
+            let mut out = String::new();
+            escape_str_into(s, &mut out);
+            assert_eq!(out, Json::Str(s.into()).dump());
+        }
     }
 
     #[test]

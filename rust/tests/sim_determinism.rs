@@ -25,6 +25,10 @@ fn scenario(seed: u64) -> (SimStack, usize) {
             ServiceSpec::sim("mixtral-8x7b", 1.0),
         ],
         rate_limit_rps: Some(4.0),
+        // CI's stream-modes step re-runs this suite with SIM_DUAL_CHANNEL=1
+        // and byte-compares the trace artifact against the default run: the
+        // flag is trace-neutral by contract (stack/sim.rs).
+        dual_channel: std::env::var("SIM_DUAL_CHANNEL").map_or(false, |v| v == "1"),
         ..Default::default()
     });
 

@@ -1,0 +1,286 @@
+//! Dual-channel streaming, end to end (DESIGN.md §Dual-channel streaming).
+//!
+//! The contract under test: with `StackConfig::dual_channel` enabled,
+//! control traffic (exec setup, cancel, keepalive, exit status) stays on
+//! the pooled SSH lanes while `infer` reply bytes ride dedicated bulk
+//! connections — and the client-visible SSE byte stream is IDENTICAL to
+//! the single-channel baseline. Cancels and bulk-lane failures must free
+//! lane slots and bulk subchannels in both wall-clock and virtual-time
+//! modes, and the flag must be trace-neutral under `SimStack`.
+
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{ChatAiStack, SimRequest, SimStack, SimStackConfig, StackConfig};
+use chat_hpc::util::http;
+use chat_hpc::util::json::Json;
+
+fn start_stack(model: &str, time_scale: f64, dual: bool, zero_copy: bool) -> ChatAiStack {
+    let stack = ChatAiStack::start(StackConfig {
+        services: vec![ServiceSpec::sim(model, time_scale)],
+        with_external: false,
+        dual_channel: dual,
+        zero_copy_sse: zero_copy,
+        ..Default::default()
+    })
+    .expect("stack start");
+    stack.wait_ready(model, Duration::from_secs(15)).unwrap();
+    stack
+}
+
+/// One streaming chat; returns the HTTP status and the raw SSE bytes
+/// exactly as the client socket saw them.
+fn raw_sse(stack: &ChatAiStack, model: &str) -> (u16, Vec<u8>) {
+    let body = Json::obj()
+        .set("model", model)
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "count")])
+        .set("stream", true);
+    let mut bytes = Vec::new();
+    let status = http::request_stream(
+        "POST",
+        &format!("{}/v1/m/{model}/", stack.gateway_url()),
+        &[
+            ("authorization", &format!("Bearer {}", stack.api_key)),
+            ("content-type", "application/json"),
+        ],
+        body.dump().as_bytes(),
+        |chunk| bytes.extend_from_slice(chunk),
+    )
+    .unwrap();
+    (status, bytes)
+}
+
+/// Completion ids come from one process-global counter shared by every
+/// in-process engine, so stacks started in sequence disagree on the
+/// number. Everything else must match byte for byte.
+fn normalize_ids(raw: &[u8]) -> String {
+    let s = String::from_utf8(raw.to_vec()).expect("SSE stream is UTF-8");
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s.as_str();
+    while let Some(pos) = rest.find("chatcmpl-") {
+        let after = pos + "chatcmpl-".len();
+        out.push_str(&rest[..after]);
+        out.push('N');
+        let tail = &rest[after..];
+        let digits = tail.bytes().take_while(|b| b.is_ascii_digit()).count();
+        rest = &tail[digits..];
+    }
+    out.push_str(rest);
+    out
+}
+
+#[test]
+fn dual_channel_sse_bytes_match_single_channel_baseline() {
+    // Single-channel baseline first, then dual, then dual + zero-copy SSE:
+    // three stacks, one prompt, byte-compared streams.
+    let single = {
+        let stack = start_stack("intel-neural-7b", 0.0, false, false);
+        let (status, bytes) = raw_sse(&stack, "intel-neural-7b");
+        assert_eq!(status, 200);
+        bytes
+    };
+    let dual = {
+        let stack = start_stack("intel-neural-7b", 0.0, true, false);
+        let (status, bytes) = raw_sse(&stack, "intel-neural-7b");
+        assert_eq!(status, 200);
+        // The stream really rode a bulk lane, not the fallback path.
+        assert!(
+            stack
+                .metrics
+                .render()
+                .contains("proxy_bulk_streams_total{service=\"intel-neural-7b\"} 1"),
+            "dual-channel stream did not use a bulk lane:\n{}",
+            stack.metrics.render()
+        );
+        assert!(stack.ssh_server.stats.bulk_execs.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        bytes
+    };
+    let dual_zero_copy = {
+        let stack = start_stack("intel-neural-7b", 0.0, true, true);
+        let (status, bytes) = raw_sse(&stack, "intel-neural-7b");
+        assert_eq!(status, 200);
+        bytes
+    };
+
+    let (a, b, c) =
+        (normalize_ids(&single), normalize_ids(&dual), normalize_ids(&dual_zero_copy));
+    assert!(a.contains("1 2 3"), "baseline stream lost its tokens:\n{a}");
+    assert!(a.contains("[DONE]"), "baseline stream lost its terminator:\n{a}");
+    assert_eq!(a, b, "dual-channel changed the client-visible bytes");
+    assert_eq!(a, c, "zero-copy SSE changed the client-visible bytes");
+}
+
+#[test]
+fn dual_mid_stream_cancel_frees_lane_and_bulk_subchannel() {
+    // A client hangs up two events into a real-paced dual-channel stream.
+    // The cancel must cross gateway → proxy → SSH → interface → engine,
+    // and both the control-lane channel slot and the bulk subchannel must
+    // return to zero.
+    let stack = start_stack("mixtral-8x7b", 1.0, true, false);
+    let body = Json::obj()
+        .set("model", "mixtral-8x7b")
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "count")])
+        .set("stream", true);
+    let mut events = 0usize;
+    let (status, aborted) = http::request_stream_ctl(
+        "POST",
+        &format!("{}/v1/m/mixtral-8x7b/", stack.gateway_url()),
+        &[
+            ("authorization", &format!("Bearer {}", stack.api_key)),
+            ("content-type", "application/json"),
+        ],
+        body.dump().as_bytes(),
+        |_| {
+            events += 1;
+            events < 2 // hang up mid-stream
+        },
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(aborted, "stream finished before we could abandon it");
+
+    for needle in [
+        "proxy_bulk_streams_total{service=\"mixtral-8x7b\"} 1",
+        "proxy_cancelled_total{service=\"mixtral-8x7b\"} 1",
+        "ci_cancelled_total{service=\"mixtral-8x7b\"} 1",
+        "llm_cancelled_total{model=\"mixtral-8x7b\"} 1",
+    ] {
+        assert!(
+            stack.metrics.wait_for_metric(needle, Duration::from_secs(10)),
+            "cancellation never reached this layer ({needle}):\n{}",
+            stack.metrics.render()
+        );
+    }
+    // Slot accounting: no leaked control channels, no leaked bulk
+    // subchannels (the EOF/close bookkeeping can lag the metrics tick).
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let ctl: usize = stack.proxy.member_loads().iter().flatten().sum();
+        let bulk: usize = stack.proxy.bulk_lane_loads().iter().flatten().sum();
+        if ctl == 0 && bulk == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "leaked slots after cancel: control={:?} bulk={:?}",
+            stack.proxy.member_loads(),
+            stack.proxy.bulk_lane_loads()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn dual_bulk_lane_failure_frees_slots_and_recovers() {
+    // Both bulk lanes die mid-stream (node/network failure on the token
+    // path). The victim stream may end with an error — but nothing may
+    // leak: the keepalive revives the lanes, subchannel accounting returns
+    // to zero, and the next stream serves normally.
+    let stack = start_stack("mixtral-8x7b", 1.0, true, false);
+    assert_eq!(stack.proxy.alive_bulk_lanes(), 2, "sanity: both bulk lanes up");
+
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            // Accept order with pool_size 1: session 0 = control lane,
+            // sessions 1 and 2 = the bulk lanes.
+            std::thread::sleep(Duration::from_millis(300));
+            assert!(stack.ssh_server.kill_session(1));
+            assert!(stack.ssh_server.kill_session(2));
+        });
+        // Real-paced stream (~0.9 s): in flight when the lanes die.
+        let _ = raw_sse(&stack, "mixtral-8x7b");
+    });
+
+    // The keepalive re-establishes both lanes and no subchannel leaked.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let loads = stack.proxy.bulk_lane_loads();
+        if loads.iter().all(|l| *l == Some(0)) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "bulk lanes never recovered cleanly: {loads:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let conns = stack.ssh_server.stats.bulk_conns.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(conns >= 4, "expected revived bulk lanes (2 initial + 2 new), saw {conns}");
+
+    // Service intact end to end after the failure.
+    let text = stack.chat_stream("mixtral-8x7b", "count").unwrap();
+    assert!(text.starts_with("1 2 3"), "post-recovery stream wrong: {text:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time variants
+// ---------------------------------------------------------------------------
+
+fn sim_scenario(dual: bool) -> String {
+    let stack = SimStack::start(SimStackConfig {
+        seed: 33,
+        dual_channel: dual,
+        ..Default::default()
+    });
+    for i in 0..6u64 {
+        stack.submit_chat_at(
+            40_000_000 + i * 300_000,
+            SimRequest {
+                user: format!("user-{i}"),
+                max_tokens: 12,
+                ..Default::default()
+            },
+        );
+    }
+    let victim = stack.submit_chat_at(42_000_000, SimRequest::default());
+    stack.cancel_at(victim, 42_050_000);
+    assert!(stack.run_until_settled(Duration::from_secs(600)), "scenario never settled");
+    stack.trace()
+}
+
+#[test]
+fn sim_trace_is_byte_identical_with_dual_channel_enabled() {
+    // The virtual-time harness simulates the SSH transport away, so the
+    // dual-channel flag MUST be trace-neutral (the CI determinism step
+    // additionally byte-compares across processes with SIM_DUAL_CHANNEL=1).
+    assert_eq!(
+        sim_scenario(false),
+        sim_scenario(true),
+        "dual_channel leaked into the virtual-time trace"
+    );
+}
+
+#[test]
+fn sim_dual_mid_stream_cancel_frees_engine_slot() {
+    // The sim twin of `dual_mid_stream_cancel_frees_lane_and_bulk_subchannel`:
+    // with dual-channel enabled, a mid-generation disconnect still frees
+    // the engine batch slot and the follow-up request completes.
+    let stack = SimStack::start(SimStackConfig {
+        seed: 21,
+        services: vec![ServiceSpec::sim("mixtral-8x7b", 1.0)],
+        dual_channel: true,
+        ..Default::default()
+    });
+    let victim = stack.submit_chat_at(
+        130_000_000,
+        SimRequest { model: "mixtral-8x7b".into(), max_tokens: 64, ..Default::default() },
+    );
+    stack.cancel_at(victim, 130_500_000);
+    let survivor = stack.submit_chat_at(
+        131_000_000,
+        SimRequest { model: "mixtral-8x7b".into(), max_tokens: 64, ..Default::default() },
+    );
+    assert!(stack.run_until_settled(Duration::from_secs(600)), "requests never settled");
+
+    let recs = stack.records();
+    let v = recs.iter().find(|r| r.id == victim).unwrap();
+    assert_eq!(v.finish_reason, "client_disconnect", "{v:?}");
+    let s = recs.iter().find(|r| r.id == survivor).unwrap();
+    assert_eq!(s.finish_reason, "stop", "slot not reusable after the disconnect: {s:?}");
+    let m = stack.metrics().render();
+    assert!(
+        m.contains("llm_cancelled_total{model=\"mixtral-8x7b\"} 1"),
+        "engine never observed the disconnect:\n{m}"
+    );
+    assert!(m.contains("sim_dual_channel 1"), "dual-channel flag not surfaced:\n{m}");
+}
