@@ -1,0 +1,342 @@
+//! Chaos drills: the failure-policy acceptance matrix (DESIGN.md §Failure
+//! policy), run entirely under virtual time so every drill is
+//! deterministic — the same `--seed` produces a byte-identical
+//! BENCH_chaos.json on every machine.
+//!
+//! Four drills over [`SimStack`] + [`FaultPlan`]:
+//!
+//!   preemption_storm   batch burst outranking the scavenger tier lands
+//!                      mid-burst; the guaranteed replica rides it out
+//!   lane_flap          the proxy<->cluster link drops for 2 s while
+//!                      streams are mid-flight; they freeze, then resume
+//!   gray_node          every node runs 4x slow without failing a probe;
+//!                      requests finish, visibly slower than healthy
+//!   upstream_outage    placement outage + flash crowd; the shed
+//!                      watermark refuses the overflow, the rest drain
+//!
+//! Each drill runs twice and byte-compares its traces (the in-process
+//! half of the determinism contract; CI also diffs two full JSON
+//! artifacts across processes), then applies shape checks. Any failed
+//! check fails the bench with a nonzero exit after writing the report.
+//!
+//!   cargo bench --bench chaos_drills [-- --smoke] [-- --seed N]
+
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{SimRecord, SimRequest, SimStack, SimStackConfig};
+use chat_hpc::util::bench::stats;
+use chat_hpc::util::faults::{FaultEvent, FaultPlan};
+use chat_hpc::util::json::Json;
+
+const MODEL: &str = "intel-neural-7b";
+
+/// One drill's scenario: the stack configuration plus its workload.
+struct Scenario {
+    seed: u64,
+    plan: FaultPlan,
+    shed_watermark: u32,
+    spec: ServiceSpec,
+    /// (at_us, user, max_tokens) per request.
+    arrivals: Vec<(u64, u32, usize)>,
+}
+
+struct RunOut {
+    trace: String,
+    records: Vec<SimRecord>,
+}
+
+fn run(sc: &Scenario) -> RunOut {
+    let stack = SimStack::start(SimStackConfig {
+        seed: sc.seed,
+        services: vec![sc.spec.clone()],
+        faults: sc.plan.clone(),
+        shed_watermark: sc.shed_watermark,
+        ..Default::default()
+    });
+    for &(at_us, user, max_tokens) in &sc.arrivals {
+        stack.submit_chat_at(
+            at_us,
+            SimRequest {
+                user: format!("user-{user}"),
+                model: MODEL.into(),
+                max_tokens,
+                ..Default::default()
+            },
+        );
+    }
+    assert!(
+        stack.run_until_settled(Duration::from_secs(3600)),
+        "drill never settled: {} requests still open",
+        stack.open_requests()
+    );
+    RunOut { trace: stack.trace(), records: stack.records() }
+}
+
+fn completed(records: &[SimRecord]) -> Vec<&SimRecord> {
+    records
+        .iter()
+        .filter(|r| r.finish_reason == "stop" || r.finish_reason == "length")
+        .collect()
+}
+
+struct DrillMetrics {
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    ttft_ms: f64,
+}
+
+/// Latency/throughput shape of a drill, from virtual-time numbers only —
+/// the wall clock never leaks into the report.
+fn metrics(records: &[SimRecord]) -> DrillMetrics {
+    let done = completed(records);
+    assert!(!done.is_empty(), "drill completed no requests");
+    let lats: Vec<f64> =
+        done.iter().map(|r| (r.finish_us - r.submit_us) as f64 / 1e3).collect();
+    let ttfts: Vec<f64> =
+        done.iter().filter_map(|r| r.ttft_us.map(|t| t as f64 / 1e3)).collect();
+    let first = done.iter().map(|r| r.submit_us).min().unwrap();
+    let last = done.iter().map(|r| r.finish_us).max().unwrap();
+    let window = ((last - first) as f64 / 1e6).max(1e-9);
+    let ls = stats(&lats);
+    let ts = if ttfts.is_empty() { None } else { Some(stats(&ttfts)) };
+    DrillMetrics {
+        rps: done.len() as f64 / window,
+        p50_ms: ls.p50,
+        p99_ms: ls.p99,
+        ttft_ms: ts.map(|t| t.p50).unwrap_or(0.0),
+    }
+}
+
+/// Run a drill twice (replay must be byte-identical), then shape-check.
+fn drill(
+    name: &str,
+    sc: &Scenario,
+    check: impl Fn(&RunOut, &mut Vec<String>),
+) -> (DrillMetrics, bool, Vec<String>) {
+    let a = run(sc);
+    let b = run(sc);
+    let mut fails = Vec::new();
+    if a.trace != b.trace {
+        fails.push(format!("{name}: replay diverged (trace not byte-identical)"));
+    }
+    check(&a, &mut fails);
+    (metrics(&a.records), fails.is_empty(), fails)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let seed: u64 = args
+        .iter()
+        .position(|a| a == "--seed")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    // Smoke shrinks the workloads, not the drill structure: every fault
+    // still fires mid-burst and every shape check still runs.
+    let n: u64 = if smoke { 30 } else { 120 };
+
+    println!("chaos drills: seed {seed}, {n} requests/drill{}\n", if smoke { " (smoke)" } else { "" });
+    println!(
+        "{:<18} {:>8} {:>10} {:>10} {:>10} {:>8}",
+        "drill", "rps", "p50 ms", "p99 ms", "ttft ms", "pass"
+    );
+
+    let base_spec = ServiceSpec::sim(MODEL, 1.0);
+    let mut report = Json::obj();
+    let mut all_pass = true;
+
+    // Arrivals start at 40 s (past the 30 s cold start + scheduler ticks).
+    let spread = |every_us: u64, max_tokens: usize| -> Vec<(u64, u32, usize)> {
+        (0..n).map(|i| (40_000_000 + i * every_us, (i % 9) as u32, max_tokens)).collect()
+    };
+
+    // Healthy reference for the gray-node drill: same workload, no faults.
+    let gray_baseline_p50 = {
+        let sc = Scenario {
+            seed,
+            plan: FaultPlan::new(),
+            shed_watermark: 0,
+            spec: base_spec.clone(),
+            arrivals: spread(500_000, 16),
+        };
+        metrics(&run(&sc).records).p50_ms
+    };
+
+    let drills: Vec<(&str, Scenario, Box<dyn Fn(&RunOut, &mut Vec<String>)>)> = vec![
+        (
+            "preemption_storm",
+            Scenario {
+                seed,
+                // 8 batch jobs x 4 GPUs at priority 10: above the
+                // scavenger tier (-10), below guaranteed replicas (100).
+                plan: FaultPlan::new().at(
+                    55_000_000,
+                    FaultEvent::PreemptionStorm {
+                        jobs: 8,
+                        gpus_per_job: 4,
+                        walltime: Duration::from_secs(60),
+                    },
+                ),
+                shed_watermark: 0,
+                spec: ServiceSpec {
+                    max_instances: 1,
+                    max_scavengers: 2,
+                    target_concurrency: 1.0,
+                    ..base_spec.clone()
+                },
+                arrivals: spread(500_000, 16),
+            },
+            Box::new(move |out, fails| {
+                if completed(&out.records).len() as u64 != n {
+                    fails.push(format!(
+                        "preemption_storm: guaranteed tier did not ride out the storm \
+                         ({}/{n} completed)",
+                        completed(&out.records).len()
+                    ));
+                }
+                if !out.trace.contains("preemption_storm jobs=8") {
+                    fails.push("preemption_storm: fault missing from trace".into());
+                }
+            }),
+        ),
+        (
+            "lane_flap",
+            Scenario {
+                seed,
+                // Drop the link for 2 s while long streams are in flight.
+                plan: FaultPlan::new()
+                    .at(45_000_000, FaultEvent::LinkDown)
+                    .at(47_000_000, FaultEvent::LinkUp),
+                shed_watermark: 0,
+                spec: base_spec.clone(),
+                arrivals: spread(200_000, 64),
+            },
+            Box::new(move |out, fails| {
+                if completed(&out.records).len() as u64 != n {
+                    fails.push(format!(
+                        "lane_flap: a frozen stream was dropped ({}/{n} completed)",
+                        completed(&out.records).len()
+                    ));
+                }
+                let max_lat_us = completed(&out.records)
+                    .iter()
+                    .map(|r| r.finish_us - r.submit_us)
+                    .max()
+                    .unwrap_or(0);
+                if max_lat_us < 2_000_000 {
+                    fails.push(format!(
+                        "lane_flap: no stream spanned the 2 s outage (max latency {max_lat_us} us)"
+                    ));
+                }
+            }),
+        ),
+        (
+            "gray_node",
+            Scenario {
+                seed,
+                // Gray every node: wherever the replica landed, it now
+                // charges 4x per decode step — and still passes probes.
+                plan: (1..=10).fold(FaultPlan::new(), |p, i| {
+                    p.at(
+                        39_000_000,
+                        FaultEvent::GraySlow {
+                            node: format!("ggpu{i:02}"),
+                            factor_milli: 4000,
+                        },
+                    )
+                }),
+                shed_watermark: 0,
+                spec: base_spec.clone(),
+                arrivals: spread(500_000, 16),
+            },
+            Box::new(move |out, fails| {
+                if completed(&out.records).len() as u64 != n {
+                    fails.push(format!(
+                        "gray_node: gray failure killed requests ({}/{n} completed)",
+                        completed(&out.records).len()
+                    ));
+                }
+                let p50 = metrics(&out.records).p50_ms;
+                if p50 <= gray_baseline_p50 * 1.5 {
+                    fails.push(format!(
+                        "gray_node: 4x gray slowdown invisible in latency \
+                         (p50 {p50:.2} ms vs healthy {gray_baseline_p50:.2} ms)"
+                    ));
+                }
+            }),
+        ),
+        (
+            "upstream_outage",
+            Scenario {
+                seed,
+                // Placement outage for 5 s, flash crowd arriving through
+                // it: the shed watermark refuses the overflow, everything
+                // admitted drains once the upstream returns.
+                plan: FaultPlan::new()
+                    .at(45_000_000, FaultEvent::UpstreamDown)
+                    .at(50_000_000, FaultEvent::UpstreamUp),
+                shed_watermark: 8,
+                spec: base_spec.clone(),
+                arrivals: (0..n).map(|i| (44_000_000 + i * 100_000, (i % 9) as u32, 16)).collect(),
+            },
+            Box::new(move |out, fails| {
+                let shed = out
+                    .records
+                    .iter()
+                    .filter(|r| r.finish_reason == "shed_overload")
+                    .count();
+                let done = completed(&out.records).len();
+                if shed == 0 {
+                    fails.push("upstream_outage: flash crowd never hit the shed watermark".into());
+                }
+                if done == 0 {
+                    fails.push("upstream_outage: nothing completed after the outage".into());
+                }
+                if (shed + done) as u64 != n {
+                    fails.push(format!(
+                        "upstream_outage: admitted requests leaked \
+                         ({done} completed + {shed} shed != {n})"
+                    ));
+                }
+            }),
+        ),
+    ];
+
+    for (name, sc, check) in &drills {
+        let (m, passed, fails) = drill(name, sc, check);
+        all_pass &= passed;
+        println!(
+            "{name:<18} {:>8.2} {:>10.2} {:>10.2} {:>10.2} {:>8}",
+            m.rps,
+            m.p50_ms,
+            m.p99_ms,
+            m.ttft_ms,
+            if passed { "ok" } else { "FAIL" }
+        );
+        for f in &fails {
+            println!("  !! {f}");
+        }
+        let round = |v: f64| (v * 1000.0).round() / 1000.0;
+        report = report.set(
+            *name,
+            Json::obj()
+                .set("rps", round(m.rps))
+                .set("p50_ms", round(m.p50_ms))
+                .set("p99_ms", round(m.p99_ms))
+                .set("ttft_ms", round(m.ttft_ms))
+                .set("passed", if passed { 1.0 } else { 0.0 }),
+        );
+    }
+
+    std::fs::write("BENCH_chaos.json", report.dump())?;
+    println!("\nwrote BENCH_chaos.json (4 drills)");
+    if !all_pass {
+        println!("chaos drills FAILED");
+        std::process::exit(1);
+    }
+    println!("all drills passed");
+    Ok(())
+}

@@ -74,6 +74,16 @@ cargo bench --bench ablation_scheduler -- --smoke
 echo "==> bench smoke: stream_saturation"
 cargo bench --bench stream_saturation -- --smoke
 
+# Chaos drills: the failure-policy matrix (preemption storm, lane flap,
+# gray node, upstream outage + flash crowd) under virtual time. The drills
+# are deterministic by contract, so two runs with the same seed must emit
+# a byte-identical BENCH_chaos.json.
+echo "==> chaos-smoke: chaos_drills determinism diff"
+cargo bench --bench chaos_drills -- --smoke --seed 7
+mv BENCH_chaos.json target/BENCH_chaos_a.json
+cargo bench --bench chaos_drills -- --smoke --seed 7
+cmp target/BENCH_chaos_a.json BENCH_chaos.json
+
 echo "==> validate BENCH_*.json schemas"
 if python3 --version >/dev/null 2>&1; then
     python3 scripts/check_bench.py BENCH_table1.json \
@@ -89,6 +99,8 @@ if python3 --version >/dev/null 2>&1; then
         hour_q1 hour_q2 hour_q3 hour_q4 overall
     python3 scripts/check_bench.py BENCH_stream.json \
         single_channel dual_channel dual_zero_copy
+    python3 scripts/check_bench.py BENCH_chaos.json \
+        preemption_storm lane_flap gray_node upstream_outage
 else
     echo "    python3 not installed; skipping schema validation (CI runs it)"
 fi

@@ -30,6 +30,9 @@ pub struct LogEntry {
     /// Prompt tokens the serving instance's KV prefix cache absorbed
     /// (DESIGN.md §Prefix cache) — a single integer, no content.
     pub cached_tokens: u64,
+    /// The gateway refused this request under overload (admission-control
+    /// load shedding, DESIGN.md §Failure policy) — a single flag.
+    pub shed: bool,
 }
 
 /// Append-only usage log shared by the gateway and the analytics jobs.
@@ -59,6 +62,7 @@ impl RequestLog {
             model: model.to_string(),
             cancelled: false,
             cached_tokens: 0,
+            shed: false,
         });
         entries.len() - 1
     }
@@ -67,6 +71,14 @@ impl RequestLog {
     pub fn mark_cancelled(&self, index: usize) {
         if let Some(e) = self.entries.lock().unwrap().get_mut(index) {
             e.cancelled = true;
+        }
+    }
+
+    /// Tag an entry as shed by admission control (it was refused, not
+    /// forwarded — the flag keeps shed traffic visible to analytics).
+    pub fn mark_shed(&self, index: usize) {
+        if let Some(e) = self.entries.lock().unwrap().get_mut(index) {
+            e.shed = true;
         }
     }
 

@@ -15,6 +15,7 @@
 //!   request log feeding the analytics pipeline (timestamp, user, model —
 //!   and deliberately nothing else, §6.2).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -26,6 +27,11 @@ use crate::util::clock::{Clock, WallClock};
 use crate::util::http::{self, Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
+use crate::util::retry::{Backoff, RetryPolicy};
+
+/// Cap on how long the gateway honors an upstream `Retry-After` before
+/// retrying (a hostile or confused upstream must not pin a worker thread).
+const MAX_RETRY_AFTER_SECS: u64 = 5;
 
 /// Token-bucket rate limiter. Reads time from the owning gateway's clock,
 /// so refill (and the refill-horizon eviction below, which compares
@@ -93,18 +99,28 @@ pub struct Route {
     /// Routes may be restricted to specific consumer groups (§5.8).
     pub allowed_groups: Option<Vec<String>>,
     pub require_auth: bool,
-    /// Additional attempts against the next upstream when a request dies
-    /// on a 502/503 or a transport error — e.g. because its instance was
-    /// preempted or walltime-killed between placement and completion. A
-    /// streaming request is only retried while nothing has been forwarded
-    /// downstream yet. With a single upstream the retry re-enters it,
-    /// which still helps: the interface behind it picks a *healthy*
-    /// instance the second time. Default 0 (opt-in via `with_retries`):
-    /// a transport error can strike AFTER the upstream acted on a POST,
-    /// so replay is only safe where the route's handler is idempotent or
-    /// the duplicate is an acceptable trade (model inference is; a paid
-    /// external call is not).
-    pub retries: usize,
+    /// Retry budget + backoff shape for attempts against the next upstream
+    /// when a request dies on a 502/503 or a transport error — e.g. because
+    /// its instance was preempted or walltime-killed between placement and
+    /// completion. A streaming request is only retried while nothing has
+    /// been forwarded downstream yet. With a single upstream the retry
+    /// re-enters it, which still helps: the interface behind it picks a
+    /// *healthy* instance the second time. Attempts are spaced by capped
+    /// exponential backoff with decorrelated jitter, and never scheduled
+    /// past the request's own `deadline_ms` budget. Default 1 attempt = no
+    /// retries (opt-in via `with_retries`): a transport error can strike
+    /// AFTER the upstream acted on a POST, so replay is only safe where
+    /// the route's handler is idempotent or the duplicate is an acceptable
+    /// trade (model inference is; a paid external call is not).
+    pub retry: RetryPolicy,
+    /// Per-upstream circuit breakers: a tripped upstream is ejected from
+    /// the WRR rotation until its `open_for` window expires, then probed
+    /// half-open and reinstated on the first success.
+    breakers: Vec<CircuitBreaker>,
+    /// Load-shedding priority under admission control: 2 (default) sheds
+    /// only at the full `max_inflight` watermark, 1 at half, 0 at a
+    /// quarter — low-priority routes brown out first (§ overload).
+    pub shed_priority: u32,
     /// Smooth weighted-round-robin state (one current weight per upstream).
     wrr: Mutex<Vec<i64>>,
 }
@@ -121,7 +137,9 @@ impl Route {
             rate_limit_per_sec: None,
             allowed_groups: None,
             require_auth: true,
-            retries: 0,
+            retry: RetryPolicy::new(1, Duration::from_millis(10), Duration::from_millis(200)),
+            breakers: (0..n).map(|_| CircuitBreaker::new(BreakerConfig::default())).collect(),
+            shed_priority: 2,
             wrr: Mutex::new(vec![0; n]),
         }
     }
@@ -141,29 +159,54 @@ impl Route {
         self
     }
 
-    /// Set the retry budget (see [`Route::retries`]; 0 = no retries).
+    /// Set the retry budget (see [`Route::retry`]; 0 = no retries).
     pub fn with_retries(mut self, retries: usize) -> Route {
-        self.retries = retries;
+        self.retry.max_attempts = (retries as u32).saturating_add(1);
+        self
+    }
+
+    /// Replace the whole retry policy (budget + backoff shape).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Route {
+        self.retry = policy;
+        self
+    }
+
+    /// Re-tune the per-upstream circuit breakers (rebuilds them closed).
+    pub fn with_breaker(mut self, cfg: BreakerConfig) -> Route {
+        self.breakers = (0..self.upstreams.len()).map(|_| CircuitBreaker::new(cfg)).collect();
+        self
+    }
+
+    /// Set the load-shedding priority (see [`Route::shed_priority`]).
+    pub fn with_shed_priority(mut self, priority: u32) -> Route {
+        self.shed_priority = priority;
         self
     }
 
     /// Pick the attempt's upstream: smooth WRR, re-rolled (bounded) so a
     /// retry never lands on the upstream that just failed when another
     /// one exists — on weighted routes the WRR state can otherwise hand
-    /// back the same heavy, dead upstream twice in a row.
-    fn attempt_upstream(&self, last_failed: Option<&str>) -> String {
-        let mut upstream = self.next_upstream().to_string();
-        if self.upstreams.len() > 1 {
-            // Smooth WRR visits every upstream within one period (= the
-            // weight sum), so that bounds the re-roll.
-            let bound: usize = self.weights.iter().map(|w| (*w).max(1)).sum();
-            let mut rolls = 0;
-            while last_failed == Some(upstream.as_str()) && rolls < bound {
-                upstream = self.next_upstream().to_string();
-                rolls += 1;
-            }
+    /// back the same heavy, dead upstream twice in a row — and so traffic
+    /// skips upstreams whose circuit breaker is open. If every candidate
+    /// is rejected (all breakers open at once), the last roll is used
+    /// anyway: sending the request somewhere keeps probing the fleet and
+    /// cannot livelock, whereas failing fast here would mask recovery.
+    fn attempt_upstream(&self, last_failed: Option<&str>, now_us: u64) -> (usize, String) {
+        // Smooth WRR visits every upstream within one period (= the
+        // weight sum), so that bounds the re-roll.
+        let bound: usize = self.weights.iter().map(|w| (*w).max(1)).sum();
+        let mut pick = self.next_upstream_idx();
+        let mut rolls = 0;
+        // Order matters: check `last_failed` first so a re-roll past the
+        // upstream that just failed does not consume a half-open probe.
+        while rolls < bound
+            && (last_failed == Some(self.upstreams[pick].as_str())
+                || !self.breakers[pick].allow(now_us))
+        {
+            pick = self.next_upstream_idx();
+            rolls += 1;
         }
-        upstream
+        (pick, self.upstreams[pick].clone())
     }
 
     /// Set per-upstream capacity weights (must match `upstreams` length).
@@ -181,7 +224,7 @@ impl Route {
     /// Smooth weighted round-robin (the nginx algorithm): add each weight
     /// to its running total, pick the max, subtract the weight sum. Equal
     /// weights reduce to plain round-robin.
-    fn next_upstream(&self) -> &str {
+    fn next_upstream_idx(&self) -> usize {
         let mut cur = self.wrr.lock().unwrap();
         let mut best = 0;
         let mut total: i64 = 0;
@@ -194,7 +237,157 @@ impl Route {
             }
         }
         cur[best] -= total;
-        &self.upstreams[best]
+        best
+    }
+}
+
+/// Circuit-breaker tuning (DESIGN.md §Failure policy).
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip the breaker open.
+    pub consecutive_failures: u32,
+    /// How long an open breaker ejects its upstream before probing.
+    pub open_for: Duration,
+    /// Concurrent trial requests admitted while half-open.
+    pub half_open_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            consecutive_failures: 3,
+            open_for: Duration::from_millis(500),
+            half_open_probes: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    Open { until_us: u64 },
+    HalfOpen { probes: u32, since_us: u64 },
+}
+
+/// Per-upstream circuit breaker: closed → open after
+/// `consecutive_failures`, open → half-open once `open_for` expires,
+/// half-open → closed on a successful probe (or straight back open on a
+/// failed one). Clock-less by design: every method takes `now_us` from the
+/// caller's clock, so the same type is exact under wall and virtual time.
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    /// (state, consecutive failure count).
+    inner: Mutex<(BreakerState, u32)>,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker { cfg, inner: Mutex::new((BreakerState::Closed, 0)) }
+    }
+
+    /// May a request be sent to this upstream now? An open breaker whose
+    /// window expired transitions to half-open here, consuming the first
+    /// of its `half_open_probes` trial slots.
+    pub fn allow(&self, now_us: u64) -> bool {
+        let open_us = self.cfg.open_for.as_micros() as u64;
+        let mut g = self.inner.lock().unwrap();
+        match g.0 {
+            BreakerState::Closed => true,
+            BreakerState::Open { until_us } if now_us >= until_us => {
+                g.0 = BreakerState::HalfOpen { probes: 1, since_us: now_us };
+                true
+            }
+            BreakerState::Open { .. } => false,
+            BreakerState::HalfOpen { probes, since_us } => {
+                if probes < self.cfg.half_open_probes {
+                    g.0 = BreakerState::HalfOpen { probes: probes + 1, since_us };
+                    true
+                } else if now_us >= since_us.saturating_add(open_us) {
+                    // A probe whose outcome never arrived (lost worker,
+                    // hung request) must not wedge the breaker half-open
+                    // forever: open a fresh probe window.
+                    g.0 = BreakerState::HalfOpen { probes: 1, since_us: now_us };
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful response: any state converges to closed.
+    pub fn on_success(&self) {
+        let mut g = self.inner.lock().unwrap();
+        *g = (BreakerState::Closed, 0);
+    }
+
+    /// Record a failure. Returns true when this failure newly tripped the
+    /// breaker open (drives the trip counter, not logic).
+    pub fn on_failure(&self, now_us: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        g.1 = g.1.saturating_add(1);
+        let trip = match g.0 {
+            BreakerState::Closed => g.1 >= self.cfg.consecutive_failures,
+            // A failed half-open probe goes straight back open; a failure
+            // reported while already open just extends the window.
+            BreakerState::HalfOpen { .. } | BreakerState::Open { .. } => true,
+        };
+        if trip {
+            let newly = !matches!(g.0, BreakerState::Open { .. });
+            g.0 = BreakerState::Open {
+                until_us: now_us.saturating_add(self.cfg.open_for.as_micros() as u64),
+            };
+            return newly;
+        }
+        false
+    }
+
+    /// Gauge encoding for `gw_breaker_state`: 0 closed, 1 open, 2 half-open.
+    pub fn state_code(&self) -> i64 {
+        match self.inner.lock().unwrap().0 {
+            BreakerState::Closed => 0,
+            BreakerState::Open { .. } => 1,
+            BreakerState::HalfOpen { .. } => 2,
+        }
+    }
+}
+
+/// Admission-control knobs for graceful degradation under overload
+/// (DESIGN.md §Failure policy). All off by default.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Bound on concurrently admitted requests; 0 disables shedding.
+    /// Routes shed at `max_inflight >> (2 - shed_priority)` (floor 1), so
+    /// low-priority traffic is refused first as load climbs.
+    pub max_inflight: usize,
+    /// Brownout watermark: at or above this many inflight requests, new
+    /// requests get their `max_tokens` clamped; 0 disables brownout.
+    pub brownout_inflight: usize,
+    /// The `max_tokens` clamp applied while browned out.
+    pub brownout_max_tokens: u64,
+    /// `Retry-After` seconds advertised on shed (503) and rate-limit (429)
+    /// responses.
+    pub retry_after_secs: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            max_inflight: 0,
+            brownout_inflight: 0,
+            brownout_max_tokens: 8,
+            retry_after_secs: 1,
+        }
+    }
+}
+
+/// RAII inflight slot: decrements the gateway's admission counter when the
+/// request finishes (for streams: when the SSE pump ends).
+struct InflightGuard(Arc<Gateway>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -223,6 +416,10 @@ pub struct Gateway {
     log: RequestLog,
     clock: Arc<dyn Clock>,
     buckets: Mutex<std::collections::BTreeMap<(String, String), Arc<TokenBucket>>>,
+    admission: AdmissionConfig,
+    /// Requests currently admitted and being forwarded (drives shedding
+    /// and brownout decisions).
+    inflight: AtomicUsize,
 }
 
 impl Gateway {
@@ -232,8 +429,9 @@ impl Gateway {
     }
 
     /// Like [`Gateway::new`] with an explicit time source: rate-limit
-    /// refill, bucket eviction, and latency accounting all read this clock
-    /// (a `SimClock` under the virtual-time harness).
+    /// refill, bucket eviction, backoff pacing, breaker windows, and
+    /// latency accounting all read this clock (a `SimClock` under the
+    /// virtual-time harness).
     pub fn new_with_clock(
         routes: Vec<Route>,
         consumers: Vec<Consumer>,
@@ -241,6 +439,27 @@ impl Gateway {
         metrics: Registry,
         log: RequestLog,
         clock: Arc<dyn Clock>,
+    ) -> Arc<Gateway> {
+        Gateway::new_with_admission(
+            routes,
+            consumers,
+            sso,
+            metrics,
+            log,
+            clock,
+            AdmissionConfig::default(),
+        )
+    }
+
+    /// Full constructor: explicit clock + admission-control config.
+    pub fn new_with_admission(
+        routes: Vec<Route>,
+        consumers: Vec<Consumer>,
+        sso: Option<SsoProvider>,
+        metrics: Registry,
+        log: RequestLog,
+        clock: Arc<dyn Clock>,
+        admission: AdmissionConfig,
     ) -> Arc<Gateway> {
         Arc::new(Gateway {
             routes,
@@ -250,7 +469,50 @@ impl Gateway {
             log,
             clock,
             buckets: Mutex::new(Default::default()),
+            admission,
+            inflight: AtomicUsize::new(0),
         })
+    }
+
+    /// Report an attempt's outcome to the upstream's breaker and publish
+    /// the trip counter + state gauge.
+    fn report_upstream(&self, route: &Route, idx: usize, ok: bool) {
+        let breaker = &route.breakers[idx];
+        if ok {
+            breaker.on_success();
+        } else if breaker.on_failure(self.clock.now_us()) {
+            self.metrics
+                .counter(
+                    "gw_breaker_trips_total",
+                    &[("route", &route.name), ("upstream", &route.upstreams[idx])],
+                )
+                .inc();
+        }
+        self.metrics
+            .gauge(
+                "gw_breaker_state",
+                &[("route", &route.name), ("upstream", &route.upstreams[idx])],
+            )
+            .set(breaker.state_code());
+    }
+
+    /// Sleep the next backoff delay, bounded by the request's remaining
+    /// `deadline_ms` budget. Returns false when no further attempt fits —
+    /// the caller must stop retrying and surface the last failure.
+    fn retry_pause(&self, backoff: &mut Backoff, deadline_us: Option<u64>) -> bool {
+        let delay = match deadline_us {
+            Some(deadline) => {
+                let remaining =
+                    Duration::from_micros(deadline.saturating_sub(self.clock.now_us()));
+                match backoff.next_delay_within(remaining) {
+                    Some(d) => d,
+                    None => return false,
+                }
+            }
+            None => backoff.next_delay(),
+        };
+        self.clock.sleep(delay);
+        true
     }
 
     /// Resolve the caller: API key first (bypasses the web SSO, §5.2),
@@ -375,10 +637,29 @@ impl Gateway {
                 self.metrics
                     .counter("gw_requests_total", &[("route", &route.name), ("status", "429")])
                     .inc();
-                return Reply::full(Response::json(
-                    429,
-                    &Json::obj().set("error", "rate limit exceeded"),
-                ));
+                return Reply::full(
+                    Response::json(429, &Json::obj().set("error", "rate limit exceeded"))
+                        .header("retry-after", &self.admission.retry_after_secs.to_string()),
+                );
+            }
+        }
+
+        // --- admission: bounded inflight, low-priority routes shed first ---
+        let inflight_now = self.inflight.load(Ordering::SeqCst);
+        if self.admission.max_inflight > 0 {
+            let shed_at =
+                (self.admission.max_inflight >> (2 - route.shed_priority.min(2))).max(1);
+            if inflight_now >= shed_at {
+                let idx = self.log.record(&user, &route.name);
+                self.log.mark_shed(idx);
+                self.metrics.counter("gw_shed_total", &[("route", &route.name)]).inc();
+                self.metrics
+                    .counter("gw_requests_total", &[("route", &route.name), ("status", "503")])
+                    .inc();
+                return Reply::full(
+                    Response::json(503, &Json::obj().set("error", "overloaded, back off"))
+                        .header("retry-after", &self.admission.retry_after_secs.to_string()),
+                );
             }
         }
 
@@ -388,9 +669,16 @@ impl Gateway {
 
         // --- forward ---
         let suffix = req.path[route.prefix.len()..].to_string();
-        let is_stream = Json::parse(req.body_str())
-            .map(|j| j.bool_or("stream", false))
-            .unwrap_or(false);
+        let parsed_body = Json::parse(req.body_str()).ok();
+        let is_stream =
+            parsed_body.as_ref().map(|j| j.bool_or("stream", false)).unwrap_or(false);
+        // Optional client-declared latency budget: retries are never
+        // scheduled past it (the backoff pause is the costly part).
+        let deadline_us = parsed_body
+            .as_ref()
+            .and_then(|j| j.at(&["deadline_ms"]))
+            .and_then(|d| d.as_u64())
+            .map(|ms| t0.saturating_add(ms.saturating_mul(1000)));
         let headers: Vec<(String, String)> = vec![
             ("content-type".into(), "application/json".into()),
             ("x-user-id".into(), user.clone()),
@@ -398,12 +686,34 @@ impl Gateway {
         let route_name = route.name.clone();
         let metrics = self.metrics.clone();
         let method = req.method.clone();
-        let body = req.body.clone();
+        let mut body = req.body.clone();
+
+        // --- brownout: above the watermark, clamp the work per request
+        //     instead of refusing it outright ---
+        if self.admission.brownout_inflight > 0
+            && inflight_now + 1 >= self.admission.brownout_inflight
+        {
+            if let Some(j) = parsed_body.as_ref().filter(|j| matches!(j, Json::Obj(_))) {
+                if j.u64_or("max_tokens", u64::MAX) > self.admission.brownout_max_tokens {
+                    body = j
+                        .clone()
+                        .set("max_tokens", self.admission.brownout_max_tokens)
+                        .dump()
+                        .into_bytes();
+                    metrics.counter("gw_brownout_total", &[("route", &route_name)]).inc();
+                }
+            }
+        }
+
+        // Count this request inflight until its reply (or SSE pump) ends.
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let admit_guard = InflightGuard(self.clone());
 
         if is_stream {
             let log = self.log.clone();
             let gw = self.clone();
             Reply::sse(move |sink| {
+                let _admit = admit_guard;
                 let route = &gw.routes[route_idx];
                 let h: Vec<(&str, &str)> =
                     headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
@@ -419,13 +729,17 @@ impl Gateway {
                 // An upstream that answers 5xx (or dies) before anything was
                 // forwarded — its instance may just have been preempted or
                 // walltime-killed — is abandoned and the request retried
-                // against the next upstream, up to `route.retries` times.
+                // against the next upstream (after a backoff pause), up to
+                // the route's retry budget or the request's deadline.
+                let max_attempts = route.retry.max_attempts;
+                let mut backoff = route.retry.backoff(t0);
                 let mut cached_tokens: Option<u64> = None;
                 let mut forwarded = false;
-                let mut attempt = 0usize;
+                let mut attempt = 0u32;
                 let mut last_failed: Option<String> = None;
                 loop {
-                    let upstream = route.attempt_upstream(last_failed.as_deref());
+                    let (up_idx, upstream) =
+                        route.attempt_upstream(last_failed.as_deref(), gw.clock.now_us());
                     let url = format!("{}{}{}", upstream, route.rewrite, suffix);
                     let res = http::request_stream_coalesced(
                         &method,
@@ -460,16 +774,28 @@ impl Gateway {
                         Ok((status, _, _))
                             if retryable_status(status)
                                 && !forwarded
-                                && attempt < route.retries =>
+                                && attempt + 1 < max_attempts =>
                         {
-                            metrics
-                                .counter("gw_retries_total", &[("route", &route_name)])
-                                .inc();
-                            attempt += 1;
-                            last_failed = Some(upstream);
-                            continue;
+                            gw.report_upstream(route, up_idx, false);
+                            if gw.retry_pause(&mut backoff, deadline_us) {
+                                metrics
+                                    .counter("gw_retries_total", &[("route", &route_name)])
+                                    .inc();
+                                attempt += 1;
+                                last_failed = Some(upstream);
+                                continue;
+                            }
+                            // Deadline budget exhausted: the failure is
+                            // final even with attempts left.
+                            sink.send_event(
+                                &Json::obj()
+                                    .set("error", format!("upstream {status}"))
+                                    .dump(),
+                            )?;
+                            return Ok(());
                         }
                         Ok((status, aborted, saved)) => {
+                            gw.report_upstream(route, up_idx, !retryable_status(status));
                             metrics
                                 .histogram("gw_latency_seconds", &[("route", &route_name)])
                                 .observe(gw.clock.now_us().saturating_sub(t0) as f64 / 1e6);
@@ -504,15 +830,23 @@ impl Gateway {
                             }
                             return Ok(());
                         }
-                        Err(_) if !forwarded && attempt < route.retries => {
-                            metrics
-                                .counter("gw_retries_total", &[("route", &route_name)])
-                                .inc();
-                            attempt += 1;
-                            last_failed = Some(upstream);
-                            continue;
+                        Err(_) if !forwarded && attempt + 1 < max_attempts => {
+                            gw.report_upstream(route, up_idx, false);
+                            if gw.retry_pause(&mut backoff, deadline_us) {
+                                metrics
+                                    .counter("gw_retries_total", &[("route", &route_name)])
+                                    .inc();
+                                attempt += 1;
+                                last_failed = Some(upstream);
+                                continue;
+                            }
+                            sink.send_event(
+                                &Json::obj().set("error", "deadline exhausted").dump(),
+                            )?;
+                            return Ok(());
                         }
                         Err(e) => {
+                            gw.report_upstream(route, up_idx, false);
                             metrics
                                 .histogram("gw_latency_seconds", &[("route", &route_name)])
                                 .observe(gw.clock.now_us().saturating_sub(t0) as f64 / 1e6);
@@ -523,25 +857,82 @@ impl Gateway {
                 }
             })
         } else {
+            let _admit = admit_guard;
             let h: Vec<(&str, &str)> =
                 headers.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            let max_attempts = route.retry.max_attempts;
+            let mut backoff = route.retry.backoff(t0);
             let mut reply = None;
             let mut last_failed: Option<String> = None;
-            for attempt in 0..=route.retries {
-                let upstream = route.attempt_upstream(last_failed.as_deref());
+            for attempt in 0..max_attempts {
+                let (up_idx, upstream) =
+                    route.attempt_upstream(last_failed.as_deref(), self.clock.now_us());
                 let url = format!("{}{}{}", upstream, route.rewrite, suffix);
                 match http::pooled_request(&method, &url, &h, &body) {
                     // A dead or instance-less upstream answers 502/503; the
                     // next attempt may land on a healthy path (a different
                     // upstream, or the same one after its routing table
                     // dropped the preempted instance).
-                    Ok(resp) if attempt < route.retries && retryable_status(resp.status) => {
+                    Ok(resp)
+                        if attempt + 1 < max_attempts && retryable_status(resp.status) =>
+                    {
+                        self.report_upstream(route, up_idx, false);
+                        if !self.retry_pause(&mut backoff, deadline_us) {
+                            // Deadline budget exhausted: surface the last
+                            // failure instead of pausing past it.
+                            metrics
+                                .counter(
+                                    "gw_requests_total",
+                                    &[
+                                        ("route", &route_name),
+                                        ("status", &resp.status.to_string()),
+                                    ],
+                                )
+                                .inc();
+                            reply = Some(Reply::full(resp));
+                            break;
+                        }
                         metrics
                             .counter("gw_retries_total", &[("route", &route_name)])
                             .inc();
                         last_failed = Some(upstream);
                     }
+                    // An upstream 429 is overload, not death: honor its
+                    // Retry-After pacing hint instead of burning the retry
+                    // budget against a neighbour in the same instant. No
+                    // hint = no pacing information → the 429 is final.
+                    Ok(resp) if resp.status == 429 && attempt + 1 < max_attempts => {
+                        self.report_upstream(route, up_idx, true);
+                        match resp
+                            .header_value("retry-after")
+                            .and_then(|v| v.trim().parse::<u64>().ok())
+                        {
+                            Some(secs) => {
+                                metrics
+                                    .counter(
+                                        "gw_retry_after_waits_total",
+                                        &[("route", &route_name)],
+                                    )
+                                    .inc();
+                                self.clock.sleep(Duration::from_secs(
+                                    secs.min(MAX_RETRY_AFTER_SECS),
+                                ));
+                                // Same upstream again: it is busy, not dead.
+                            }
+                            None => {
+                                metrics
+                                    .counter(
+                                        "gw_requests_total",
+                                        &[("route", &route_name), ("status", "429")],
+                                    )
+                                    .inc();
+                                reply = Some(Reply::full(resp));
+                                break;
+                            }
+                        }
+                    }
                     Ok(resp) => {
+                        self.report_upstream(route, up_idx, !retryable_status(resp.status));
                         metrics
                             .counter(
                                 "gw_requests_total",
@@ -566,13 +957,29 @@ impl Gateway {
                         reply = Some(Reply::full(resp));
                         break;
                     }
-                    Err(_) if attempt < route.retries => {
+                    Err(_) if attempt + 1 < max_attempts => {
+                        self.report_upstream(route, up_idx, false);
+                        if !self.retry_pause(&mut backoff, deadline_us) {
+                            metrics
+                                .counter(
+                                    "gw_requests_total",
+                                    &[("route", &route_name), ("status", "502")],
+                                )
+                                .inc();
+                            reply = Some(Reply::full(Response::json(
+                                502,
+                                &Json::obj()
+                                    .set("error", "upstream error, deadline exhausted"),
+                            )));
+                            break;
+                        }
                         metrics
                             .counter("gw_retries_total", &[("route", &route_name)])
                             .inc();
                         last_failed = Some(upstream);
                     }
                     Err(e) => {
+                        self.report_upstream(route, up_idx, false);
                         metrics
                             .counter(
                                 "gw_requests_total",
@@ -1072,5 +1479,275 @@ mod tests {
         // Privacy: the log never contains prompt content (§6.2).
         let dump = format!("{:?}", entries);
         assert!(!dump.contains("SECRET"), "prompt leaked into usage log");
+    }
+
+    #[test]
+    fn breaker_ejects_dead_upstream_and_reinstates_after_recovery() {
+        use std::sync::atomic::AtomicU64;
+        // Upstream A fails its first 3 requests — enough to trip the
+        // breaker — then recovers; B is always healthy.
+        let a_hits = Arc::new(AtomicU64::new(0));
+        let hits = a_hits.clone();
+        let up_a = Server::start(Arc::new(move |_req: &Request| {
+            if hits.fetch_add(1, Ordering::SeqCst) < 3 {
+                Reply::full(Response::json(503, &Json::obj().set("error", "dying")))
+            } else {
+                Reply::full(Response::json(200, &Json::obj().set("up", "a")))
+            }
+        }))
+        .unwrap();
+        let up_b = upstream_echo();
+        let routes = vec![Route::new("m", "/c/", vec![up_a.url(), up_b.url()], "/x")
+            .public()
+            .with_retries(1)
+            .with_breaker(BreakerConfig {
+                consecutive_failures: 3,
+                open_for: Duration::from_millis(500),
+                half_open_probes: 1,
+            })];
+        let a_url = up_a.url();
+        let metrics = Registry::new();
+        let gateway = Gateway::new(routes, vec![], None, metrics.clone(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let call =
+            || http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+        // WRR alternates A,B; the first three A attempts fail (rescued by
+        // the retry), the third trips the breaker, then A is ejected.
+        for _ in 0..6 {
+            assert_eq!(call().status, 200);
+        }
+        assert_eq!(
+            metrics
+                .counter("gw_breaker_trips_total", &[("route", "m"), ("upstream", &a_url)])
+                .get(),
+            1
+        );
+        assert_eq!(a_hits.load(Ordering::SeqCst), 3, "open breaker still admitted traffic");
+        // Once the open window expires, a half-open probe reaches the now
+        // healthy A and reinstates it.
+        std::thread::sleep(Duration::from_millis(600));
+        for _ in 0..4 {
+            assert_eq!(call().status, 200);
+        }
+        assert!(a_hits.load(Ordering::SeqCst) >= 4, "A was never probed and reinstated");
+        assert_eq!(
+            metrics.gauge("gw_breaker_state", &[("route", "m"), ("upstream", &a_url)]).get(),
+            0,
+            "breaker did not converge closed"
+        );
+    }
+
+    #[test]
+    fn prop_breaker_converges_closed_on_healthy_upstream() {
+        use crate::prop_assert;
+        use crate::util::prop::run_prop;
+        run_prop("breaker_converges_closed", 0xb4ea, 200, |rng| {
+            let cfg = BreakerConfig {
+                consecutive_failures: rng.range(1, 5) as u32,
+                open_for: Duration::from_millis(rng.range(1, 500)),
+                half_open_probes: rng.range(1, 3) as u32,
+            };
+            let breaker = CircuitBreaker::new(cfg);
+            let mut now = rng.range(0, 1_000_000);
+            // Chaos phase: arbitrary failures/successes, dangling probes
+            // (an allow() whose outcome never arrives), and time jumps.
+            for _ in 0..rng.range(0, 40) {
+                let roll = rng.f64();
+                if roll < 0.5 {
+                    let _ = breaker.allow(now);
+                    breaker.on_failure(now);
+                } else if roll < 0.75 {
+                    let _ = breaker.allow(now);
+                } else {
+                    breaker.on_success();
+                }
+                now += rng.range(0, 200_000);
+            }
+            // Healthy phase: the upstream answers every admitted request
+            // OK. The breaker must re-admit traffic and converge closed —
+            // half-open probing cannot livelock.
+            let mut ticks = 0u32;
+            while breaker.state_code() != 0 {
+                if breaker.allow(now) {
+                    breaker.on_success();
+                }
+                now += 50_000;
+                ticks += 1;
+                prop_assert!(ticks < 1000, "breaker livelocked against healthy upstream");
+            }
+            // And once closed it stays open for business.
+            prop_assert!(breaker.allow(now), "closed breaker denied traffic");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn upstream_429_honors_retry_after_instead_of_immediate_retry() {
+        use std::sync::atomic::AtomicU64;
+        // First hit: 429 + Retry-After: 1. Second hit: 200.
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        let up = Server::start(Arc::new(move |_req: &Request| {
+            if h2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Reply::full(
+                    Response::json(429, &Json::obj().set("error", "busy"))
+                        .header("retry-after", "1"),
+                )
+            } else {
+                Reply::full(Response::json(200, &Json::obj().set("ok", true)))
+            }
+        }))
+        .unwrap();
+        let routes =
+            vec![Route::new("m", "/c/", vec![up.url()], "/x").public().with_retries(1)];
+        let metrics = Registry::new();
+        let gateway = Gateway::new(routes, vec![], None, metrics.clone(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let t = std::time::Instant::now();
+        let r = http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 200, "retry after the advertised wait should succeed");
+        assert!(
+            t.elapsed() >= Duration::from_secs(1),
+            "Retry-After not honored: retried after {:?}",
+            t.elapsed()
+        );
+        assert_eq!(metrics.counter("gw_retry_after_waits_total", &[("route", "m")]).get(), 1);
+        assert_eq!(
+            metrics.counter("gw_retries_total", &[("route", "m")]).get(),
+            0,
+            "a paced 429 retry must not burn the 5xx retry budget"
+        );
+
+        // Without a Retry-After hint the 429 is final — no blind retry.
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        let up = Server::start(Arc::new(move |_req: &Request| {
+            h2.fetch_add(1, Ordering::SeqCst);
+            Reply::full(Response::json(429, &Json::obj().set("error", "busy")))
+        }))
+        .unwrap();
+        let routes =
+            vec![Route::new("m", "/c/", vec![up.url()], "/x").public().with_retries(1)];
+        let gateway = Gateway::new(routes, vec![], None, Registry::new(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let r = http::request("POST", &format!("{}/c/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 429);
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "hint-less 429 was blindly retried");
+    }
+
+    #[test]
+    fn deadline_budget_stops_retries_early() {
+        // Dead upstream + generous retry budget, but a 1 ms deadline: the
+        // first backoff pause (base 10 ms) no longer fits, so the failure
+        // surfaces immediately instead of burning the whole budget.
+        let routes = vec![Route::new("m", "/c/", vec!["http://127.0.0.1:1".into()], "/x")
+            .public()
+            .with_retries(5)];
+        let metrics = Registry::new();
+        let gateway = Gateway::new(routes, vec![], None, metrics.clone(), RequestLog::new());
+        let server = gateway.start().unwrap();
+        let r = http::request(
+            "POST",
+            &format!("{}/c/", server.url()),
+            &[],
+            b"{\"deadline_ms\":1}",
+        )
+        .unwrap();
+        assert_eq!(r.status, 502);
+        assert_eq!(
+            metrics.counter("gw_retries_total", &[("route", "m")]).get(),
+            0,
+            "retried past the request deadline"
+        );
+    }
+
+    #[test]
+    fn load_shedding_prefers_low_priority_routes() {
+        use crate::util::clock::WallClock;
+        let up = upstream_echo();
+        let routes = vec![
+            Route::new("hi", "/hi/", vec![up.url()], "/x").public(),
+            Route::new("lo", "/lo/", vec![up.url()], "/x").public().with_shed_priority(0),
+        ];
+        let log = RequestLog::new();
+        let metrics = Registry::new();
+        let gateway = Gateway::new_with_admission(
+            routes,
+            vec![],
+            None,
+            metrics.clone(),
+            log.clone(),
+            WallClock::new(),
+            AdmissionConfig {
+                max_inflight: 2,
+                brownout_inflight: 0,
+                brownout_max_tokens: 8,
+                retry_after_secs: 2,
+            },
+        );
+        let server = gateway.clone().start().unwrap();
+        // Standing load: one admitted request currently in flight.
+        gateway.inflight.store(1, Ordering::SeqCst);
+        // The low-priority route's watermark (max_inflight/4, floor 1) is
+        // crossed: shed with pacing guidance...
+        let r = http::request("POST", &format!("{}/lo/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 503);
+        assert_eq!(r.header_value("retry-after"), Some("2"));
+        assert_eq!(metrics.counter("gw_shed_total", &[("route", "lo")]).get(), 1);
+        // ...while the default-priority route still admits.
+        let r = http::request("POST", &format!("{}/hi/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 200);
+        // The shed shows up in the usage log, nothing more (§6.2).
+        let entries = log.entries();
+        assert!(entries.iter().any(|e| e.model == "lo" && e.shed), "shed not logged");
+        assert!(entries.iter().any(|e| e.model == "hi" && !e.shed));
+        // At full saturation everything sheds.
+        gateway.inflight.store(2, Ordering::SeqCst);
+        let r = http::request("POST", &format!("{}/hi/", server.url()), &[], b"{}").unwrap();
+        assert_eq!(r.status, 503);
+    }
+
+    #[test]
+    fn brownout_clamps_max_tokens_under_pressure() {
+        use crate::util::clock::WallClock;
+        // Upstream echoes the body it received, so the clamp is observable.
+        let up = Server::start(Arc::new(|req: &Request| {
+            let body = Json::parse(req.body_str()).unwrap_or_else(|_| Json::obj());
+            Reply::full(Response::json(200, &body))
+        }))
+        .unwrap();
+        let routes = vec![Route::new("m", "/c/", vec![up.url()], "/x").public()];
+        let metrics = Registry::new();
+        let gateway = Gateway::new_with_admission(
+            routes,
+            vec![],
+            None,
+            metrics.clone(),
+            RequestLog::new(),
+            WallClock::new(),
+            AdmissionConfig {
+                max_inflight: 8,
+                brownout_inflight: 2,
+                brownout_max_tokens: 8,
+                retry_after_secs: 1,
+            },
+        );
+        let server = gateway.clone().start().unwrap();
+        let ask = |body: &[u8]| {
+            http::request("POST", &format!("{}/c/", server.url()), &[], body)
+                .unwrap()
+                .json_body()
+                .unwrap()
+                .u64_or("max_tokens", 0)
+        };
+        // Below the watermark the body passes through untouched.
+        assert_eq!(ask(b"{\"max_tokens\":512}"), 512);
+        // Standing load at the watermark: new requests are browned out.
+        gateway.inflight.store(1, Ordering::SeqCst);
+        assert_eq!(ask(b"{\"max_tokens\":512}"), 8, "max_tokens not clamped");
+        assert_eq!(metrics.counter("gw_brownout_total", &[("route", "m")]).get(), 1);
+        // Requests already under the clamp are left alone.
+        assert_eq!(ask(b"{\"max_tokens\":4}"), 4);
+        assert_eq!(metrics.counter("gw_brownout_total", &[("route", "m")]).get(), 1);
     }
 }

@@ -31,13 +31,23 @@ use crate::util::clock::{Clock, WallClock};
 use crate::util::http::{Handler, Reply, Request, Response, Server};
 use crate::util::json::Json;
 use crate::util::metrics::Registry;
+use crate::util::retry::RetryPolicy;
+
+/// Per-member backoff seed: distinct per (lane kind, pool index), so after
+/// a full SSH outage every member retries on its own jittered schedule
+/// instead of thundering-herding the server in lockstep.
+fn backoff_seed(kind: u64, idx: usize) -> u64 {
+    (0xB0FF_5EED ^ kind.rotate_left(32)) ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
 
 /// Proxy tuning.
 #[derive(Debug, Clone)]
 pub struct ProxyConfig {
     /// Keepalive/tick interval (the paper uses 5 s).
     pub keepalive: Duration,
-    /// Backoff between reconnect attempts.
+    /// Base delay of the jittered reconnect backoff (DESIGN.md §Failure
+    /// policy): each member draws decorrelated-jitter delays from
+    /// `[base, 8 × base]` on its own seeded schedule.
     pub reconnect_backoff: Duration,
     /// Emulated ESX↔HPC wire time per SSH frame (benches only; 0 = off).
     pub link_frame_delay: Duration,
@@ -243,13 +253,25 @@ impl HpcProxy {
         self.reconnect(idx)
     }
 
+    /// The shared reconnect budget: 3 attempts, decorrelated-jitter delays
+    /// in `[reconnect_backoff, 8 × reconnect_backoff]`.
+    fn reconnect_policy(&self) -> RetryPolicy {
+        RetryPolicy::new(
+            3,
+            self.cfg.reconnect_backoff,
+            self.cfg.reconnect_backoff.saturating_mul(8),
+        )
+    }
+
     fn reconnect(&self, idx: usize) -> Result<Arc<SshClient>> {
         let mut guard = self.members[idx].client.lock().unwrap();
         if let Some(c) = guard.as_ref().filter(|c| c.is_alive()) {
             return Ok(c.clone());
         }
+        let policy = self.reconnect_policy();
+        let mut backoff = policy.backoff(backoff_seed(0, idx));
         let mut last_err = anyhow!("unreachable");
-        for _ in 0..3 {
+        for _ in 0..policy.max_attempts {
             match SshClient::connect_with_clock(
                 &self.ssh_addr,
                 &self.key,
@@ -264,7 +286,7 @@ impl HpcProxy {
                 }
                 Err(e) => {
                     last_err = e;
-                    self.clock.sleep(self.cfg.reconnect_backoff);
+                    self.clock.sleep(backoff.next_delay());
                 }
             }
         }
@@ -288,8 +310,10 @@ impl HpcProxy {
         if let Some(b) = guard.as_ref().filter(|b| b.is_alive()) {
             return Ok(b.clone());
         }
+        let policy = self.reconnect_policy();
+        let mut backoff = policy.backoff(backoff_seed(1, idx));
         let mut last_err = anyhow!("unreachable");
-        for _ in 0..3 {
+        for _ in 0..policy.max_attempts {
             // Fresh id per attempt: the server keys its registry by id, so
             // a stale lane's cleanup can never evict this replacement.
             let id = BULK_ID_GEN.fetch_add(1, Ordering::SeqCst);
@@ -308,7 +332,7 @@ impl HpcProxy {
                 }
                 Err(e) => {
                     last_err = e;
-                    self.clock.sleep(self.cfg.reconnect_backoff);
+                    self.clock.sleep(backoff.next_delay());
                 }
             }
         }
@@ -705,6 +729,58 @@ mod tests {
 
     fn pool_cfg(pool_size: usize, cap: usize) -> ProxyConfig {
         ProxyConfig { pool_size, max_channels_per_conn: cap, ..fast_cfg() }
+    }
+
+    #[test]
+    fn pool_members_reconnect_on_divergent_jittered_schedules() {
+        use crate::util::clock::SimClock;
+        // Hand-built proxy: no keepalive thread (under a SimClock its
+        // sleeping loop would spin virtual time forward), pointed at a
+        // dead address so every connect attempt fails immediately and the
+        // only virtual time spent is the backoff itself.
+        let clock = SimClock::new();
+        let proxy = HpcProxy {
+            ssh_addr: "127.0.0.1:1".into(),
+            key: KeyPair::generate(40),
+            cfg: ProxyConfig { pool_size: 3, ..fast_cfg() },
+            members: (0..3)
+                .map(|_| PoolMember {
+                    client: Mutex::new(None),
+                    reconnects: AtomicU64::new(0),
+                    reconnecting: AtomicBool::new(false),
+                })
+                .collect(),
+            bulk_members: Vec::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+            reconnects: AtomicU64::new(0),
+            overflows: AtomicU64::new(0),
+            metrics: Registry::new(),
+            clock: clock.clone(),
+        };
+        let policy = proxy.reconnect_policy();
+        let mut slept_us = Vec::new();
+        for idx in 0..3 {
+            let t0 = clock.now_us();
+            assert!(proxy.reconnect(idx).is_err(), "nothing listens on port 1");
+            slept_us.push(clock.now_us() - t0);
+        }
+        // Each member slept exactly its own seeded jitter schedule...
+        for (idx, total) in slept_us.iter().enumerate() {
+            let mut b = policy.backoff(backoff_seed(0, idx));
+            let want: u64 = (0..policy.max_attempts)
+                .map(|_| b.next_delay().as_micros() as u64)
+                .sum();
+            assert_eq!(*total, want, "member {idx} drifted off its schedule");
+        }
+        // ...and no two schedules coincide: after a full outage the pool
+        // spreads its retries instead of thundering-herding the server.
+        let schedule = |idx: usize| {
+            let mut b = policy.backoff(backoff_seed(0, idx));
+            (0..policy.max_attempts).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_ne!(schedule(0), schedule(1));
+        assert_ne!(schedule(1), schedule(2));
+        assert_ne!(schedule(0), schedule(2));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   calibrated step delays while every byte of the serving path (batching,
 //!   paging, streaming) stays identical.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -198,6 +199,11 @@ pub struct SimBackend {
     /// advance virtual time instead, so the discrete-event harness pays
     /// model latencies in simulated microseconds rather than CPU seconds.
     clock: Option<Arc<dyn Clock>>,
+    /// Gray-failure dial, in thousandths: every compute charge is scaled
+    /// by `slowdown_milli / 1000` (1000 = healthy). Shared via
+    /// [`SimBackend::slowdown_handle`] so the fault plane can degrade a
+    /// live instance without touching the engine.
+    slowdown_milli: Arc<AtomicU64>,
     /// Per-slot emitted-byte counters into `profile.completion`.
     progress: Vec<usize>,
 }
@@ -213,7 +219,14 @@ impl SimBackend {
             vocab: tokenizer::VOCAB,
         };
         let progress = vec![0; profile.batch];
-        SimBackend { profile, geometry, time_scale, clock: None, progress }
+        SimBackend {
+            profile,
+            geometry,
+            time_scale,
+            clock: None,
+            slowdown_milli: Arc::new(AtomicU64::new(1000)),
+            progress,
+        }
     }
 
     pub fn by_name(name: &str, time_scale: f64) -> Option<SimBackend> {
@@ -228,7 +241,16 @@ impl SimBackend {
         self
     }
 
+    /// Handle to this instance's gray-failure dial. Store `factor × 1000`
+    /// (`1000` = healthy, `5000` = 5× slower) to degrade every subsequent
+    /// compute charge; the fault plane uses this to model a gray node that
+    /// still passes health probes.
+    pub fn slowdown_handle(&self) -> Arc<AtomicU64> {
+        self.slowdown_milli.clone()
+    }
+
     fn charge(&self, ms: f64) {
+        let ms = ms * self.slowdown_milli.load(Ordering::Relaxed) as f64 / 1000.0;
         if self.time_scale > 0.0 && ms > 0.0 {
             let d = std::time::Duration::from_secs_f64(ms * self.time_scale / 1000.0);
             match &self.clock {
@@ -415,6 +437,31 @@ mod tests {
         assert!(t.elapsed().as_millis() < 100, "charge hit the wall clock");
         let us = clock.now_us();
         assert!((190_000..191_000).contains(&us), "virtual charge off: {us}");
+    }
+
+    #[test]
+    fn slowdown_dial_scales_the_charge() {
+        use crate::util::clock::SimClock;
+        let clock = SimClock::new();
+        let mut b = SimBackend::by_name("llama3-70b", 1.0).unwrap().with_clock(clock.clone());
+        let dial = b.slowdown_handle();
+        let g = b.geometry().clone();
+        let active = vec![true; g.batch];
+        let _ = b.decode(&[], &[], &[], &active).unwrap();
+        let healthy = clock.now_us();
+        // Gray node: 5× slower; the same step must now charge 5× the time.
+        dial.store(5000, Ordering::Relaxed);
+        let _ = b.decode(&[], &[], &[], &active).unwrap();
+        let gray = clock.now_us() - healthy;
+        assert!(
+            (healthy * 5).abs_diff(gray) <= 5,
+            "gray charge not 5x: healthy={healthy} gray={gray}"
+        );
+        // Recovery restores the calibrated cost exactly.
+        dial.store(1000, Ordering::Relaxed);
+        let before = clock.now_us();
+        let _ = b.decode(&[], &[], &[], &active).unwrap();
+        assert_eq!(clock.now_us() - before, healthy);
     }
 
     #[test]

@@ -46,6 +46,7 @@ use std::time::Duration;
 use crate::slurm::{JobId, JobInfo, JobSpec, JobState, JobUpdate, SlurmSim};
 use crate::util::clock::Clock;
 use crate::util::metrics::Registry;
+use crate::util::retry::{Backoff, RetryPolicy};
 use crate::util::rng::Rng;
 
 /// Declarative description of one service the scheduler maintains.
@@ -129,6 +130,14 @@ pub struct SchedulerConfig {
     pub drain_grace: Duration,
     /// Functional account jobs are submitted under (§4 Monitoring).
     pub account: String,
+    /// Opt-in crash-loop damper: after a service job dies abnormally
+    /// (NODE_FAIL / TIMEOUT), further scale-up submissions for that
+    /// service are held off by this jittered backoff — a service whose
+    /// image is broken or whose nodes keep failing must not hammer the
+    /// Slurm controller with a resubmit every keepalive tick. The holdoff
+    /// resets the first time a replica becomes ready again. `None`
+    /// (default) keeps the seed behaviour: immediate resubmission.
+    pub resubmit_backoff: Option<RetryPolicy>,
 }
 
 impl Default for SchedulerConfig {
@@ -141,6 +150,7 @@ impl Default for SchedulerConfig {
             scavenger_walltime: Duration::from_secs(900),
             drain_grace: Duration::from_secs(60),
             account: "svc-chat-ai".into(),
+            resubmit_backoff: None,
         }
     }
 }
@@ -177,6 +187,9 @@ pub struct ServiceScheduler {
     /// how long the scheduler waits for in-flight load to reach zero
     /// before cancelling anyway.
     drains: Mutex<BTreeMap<JobId, (String, u64)>>,
+    /// Resubmit holdoff per service: (backoff schedule, next-allowed-us).
+    /// Populated only when `cfg.resubmit_backoff` is set.
+    resubmit: Mutex<BTreeMap<String, (Backoff, u64)>>,
 }
 
 impl ServiceScheduler {
@@ -205,6 +218,7 @@ impl ServiceScheduler {
             cfg,
             metrics,
             drains: Mutex::new(BTreeMap::new()),
+            resubmit: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -297,7 +311,13 @@ impl ServiceScheduler {
                         started_us: now,
                     });
                 }
-                JobUpdate::Finished { id, .. } => {
+                JobUpdate::Finished { id, state } => {
+                    // An abnormal death (node failure, walltime kill that
+                    // slipped past the drain) arms the per-service resubmit
+                    // holdoff when the damper is configured.
+                    if matches!(state, JobState::NodeFail | JobState::Timeout) {
+                        self.arm_resubmit_holdoff(id, now);
+                    }
                     self.decommission(id, now);
                 }
                 JobUpdate::Preempted { id, kill_at_us } => {
@@ -392,14 +412,22 @@ impl ServiceScheduler {
             let expiring_count = guar_jobs.iter().filter(|j| expiring(j)).count() as u32;
 
             // Scale up (covers walltime renewal: an expiring job stops
-            // counting, so its replacement is submitted here).
+            // counting, so its replacement is submitted here) — unless the
+            // service is inside its resubmit holdoff after an abnormal
+            // death (crash-loop damper).
             if (countable.len() as u32) < desired {
-                for _ in 0..(desired - countable.len() as u32) {
-                    let id = self.submit_job(spec, now, false);
-                    if expiring_count > 0 {
-                        report.renewed.push(id);
-                    } else {
-                        report.submitted.push(id);
+                if self.resubmit_blocked(&spec.name, now) {
+                    self.metrics
+                        .counter("sched_resubmit_deferred_total", &[("service", &spec.name)])
+                        .inc();
+                } else {
+                    for _ in 0..(desired - countable.len() as u32) {
+                        let id = self.submit_job(spec, now, false);
+                        if expiring_count > 0 {
+                            report.renewed.push(id);
+                        } else {
+                            report.submitted.push(id);
+                        }
                     }
                 }
             }
@@ -479,11 +507,13 @@ impl ServiceScheduler {
                         .count() as i64,
                 );
 
-            // Readiness probing.
+            // Readiness probing. A replica coming up healthy also clears
+            // the service's resubmit holdoff (and resets its schedule).
             for inst in self.routing.instances(&spec.name) {
                 if !inst.ready && self.launcher.probe(&inst.addr) {
                     self.routing.mark_ready(inst.job_id);
                     report.became_ready.push(inst.job_id);
+                    self.resubmit.lock().unwrap().remove(&spec.name);
                 }
             }
             self.metrics
@@ -523,6 +553,30 @@ impl ServiceScheduler {
 
     fn is_drained(&self, id: JobId) -> bool {
         self.drains.lock().unwrap().contains_key(&id)
+    }
+
+    /// Push the dead job's service into (or further along) its resubmit
+    /// holdoff. No-op unless `cfg.resubmit_backoff` is configured.
+    fn arm_resubmit_holdoff(&self, id: JobId, now: u64) {
+        let Some(policy) = self.cfg.resubmit_backoff else { return };
+        let Some(info) = self.slurm.lock().unwrap().job(id) else { return };
+        let Some((service, _, _)) = Self::parse_comment(&info.comment) else { return };
+        let mut holdoffs = self.resubmit.lock().unwrap();
+        let entry = holdoffs
+            .entry(service.clone())
+            .or_insert_with(|| (policy.backoff(0x5e5_0b1d), 0));
+        entry.1 = now.saturating_add(entry.0.next_delay().as_micros() as u64);
+        self.metrics
+            .counter("sched_resubmit_holdoffs_total", &[("service", &service)])
+            .inc();
+    }
+
+    /// Is guaranteed-tier scale-up currently held off for this service?
+    fn resubmit_blocked(&self, service: &str, now: u64) -> bool {
+        if self.cfg.resubmit_backoff.is_none() {
+            return false;
+        }
+        self.resubmit.lock().unwrap().get(service).map(|e| now < e.1).unwrap_or(false)
     }
 
     /// Tear one replica down everywhere it is known: Slurm (scancel is a
@@ -843,6 +897,54 @@ mod tests {
             "node failure leaked reserved port {}",
             inst.port
         );
+    }
+
+    #[test]
+    fn resubmit_backoff_dampens_crash_loops() {
+        // With the damper configured, an abnormal death defers the
+        // replacement instead of resubmitting on the next keepalive tick.
+        let cfg = SchedulerConfig {
+            resubmit_backoff: Some(RetryPolicy::new(
+                3,
+                Duration::from_secs(60),
+                Duration::from_secs(480),
+            )),
+            ..SchedulerConfig::default()
+        };
+        let (sched, clock, launcher, slurm) =
+            setup_on(ClusterSpec::kisski(), vec![svc("m", 1, 1)], cfg);
+        sched.run_once();
+        cycle(&sched, &clock);
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+        let inst = sched.routing.instances("m")[0].clone();
+        assert!(inst.ready);
+
+        // Node dies. The seed behaviour resubmits within the same run;
+        // the damper must hold the replacement back for >= 60 s (the
+        // backoff base), i.e. at least the next 11 five-second cycles.
+        slurm.lock().unwrap().fail_node(&inst.node, clock.now_us());
+        let r = cycle(&sched, &clock);
+        assert!(r.submitted.is_empty(), "resubmitted during holdoff: {r:?}");
+        let mut first_submit_cycle = None;
+        for i in 0..60 {
+            let r = cycle(&sched, &clock);
+            if !r.submitted.is_empty() {
+                first_submit_cycle = Some(i);
+                break;
+            }
+        }
+        let c = first_submit_cycle.expect("replacement never submitted after holdoff");
+        assert!(c >= 10, "holdoff shorter than the backoff base: {c} cycles");
+
+        // The replacement comes up healthy: the holdoff clears, so a later
+        // failure starts from a fresh (short) schedule rather than the
+        // grown one.
+        cycle(&sched, &clock); // replacement job starts, instance launches
+        launcher.all_healthy();
+        let r = cycle(&sched, &clock);
+        assert!(!r.became_ready.is_empty());
+        assert!(sched.resubmit.lock().unwrap().is_empty(), "holdoff not cleared on ready");
     }
 
     #[test]

@@ -43,6 +43,8 @@ pub use proto::{
     decode_frame, encode_frame, BulkChannel, CommandHandler, ExecReply, SshClient, SshServer,
     SshServerConfig, StreamChunk, EXIT_CANCELLED, EXIT_CHANNEL_REJECTED,
 };
+// Wire-fault source consumed by `SshServerConfig::faults`.
+pub use crate::util::faults::{FrameFault, LinkFaults};
 
 use std::collections::BTreeMap;
 

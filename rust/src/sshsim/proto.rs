@@ -26,6 +26,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::crypto::{KeyPair, SessionCrypto};
 use super::AuthorizedKeys;
 use crate::util::clock::{Clock, WallClock};
+use crate::util::faults::{FrameFault, LinkFaults};
 use crate::util::http::{frame_buf_acquire, frame_buf_release, write_all_vectored, Frame};
 
 const FRAME_EXEC: u8 = 0;
@@ -230,11 +231,16 @@ pub struct SshServerConfig {
     /// directions. Always the wall clock (`SimStack` never sets it).
     /// Zero (off) by default.
     pub frame_delay: Duration,
+    /// Seeded wire-fault source consulted once per server→client frame:
+    /// latency spikes, corruption (the peer's MAC check fails), truncation
+    /// (mid-frame lane death). `None` (default) is the exact pre-fault
+    /// write path.
+    pub faults: Option<Arc<LinkFaults>>,
 }
 
 impl Default for SshServerConfig {
     fn default() -> SshServerConfig {
-        SshServerConfig { max_sessions: 0, frame_delay: Duration::ZERO }
+        SshServerConfig { max_sessions: 0, frame_delay: Duration::ZERO, faults: None }
     }
 }
 
@@ -270,21 +276,61 @@ struct ServerShared {
     bulks: Mutex<BTreeMap<u64, BulkConn>>,
 }
 
+/// Per-connection server→client wire model: the emulated serialized frame
+/// delay plus the optional fault source. Cloned into each handler thread.
+#[derive(Clone)]
+struct Wire {
+    delay: Duration,
+    faults: Option<Arc<LinkFaults>>,
+}
+
 /// One serialized server→client frame: the emulated wire-time charge and
 /// the write both happen under the connection's writer lock (one wire per
-/// connection; bulk lanes are extra wires).
+/// connection; bulk lanes are extra wires). When a fault source is armed,
+/// each frame may instead be delayed, delivered corrupted (the peer's MAC
+/// check kills the lane), or truncated mid-frame with the wire dropped.
 fn server_send(
     writer: &Mutex<(TcpStream, SessionCrypto)>,
-    delay: Duration,
+    wire: &Wire,
     ty: u8,
     chan: u32,
     payload: &[u8],
 ) -> Result<()> {
     let mut g = writer.lock().unwrap();
-    if !delay.is_zero() {
-        std::thread::sleep(delay);
+    if !wire.delay.is_zero() {
+        std::thread::sleep(wire.delay);
     }
     let (ref mut sock, ref mut crypto) = *g;
+    if let Some(faults) = &wire.faults {
+        match faults.next_frame_fault() {
+            FrameFault::Pass => {}
+            FrameFault::Delay(spike) => {
+                if !spike.is_zero() {
+                    std::thread::sleep(spike);
+                }
+            }
+            FrameFault::Corrupt => {
+                // Seal normally, then flip bits in the sealed body: the
+                // frame arrives, fails the peer's integrity check, and the
+                // lane dies exactly as if the wire corrupted it.
+                let mut on_wire = encode_frame(crypto, ty, chan, payload);
+                *on_wire.last_mut().expect("sealed frame is never empty") ^= 0xFF;
+                sock.write_all(&on_wire)?;
+                sock.flush()?;
+                return Ok(());
+            }
+            FrameFault::Truncate => {
+                // Deliver a prefix of the sealed frame, then drop the wire:
+                // the peer observes a mid-frame connection death.
+                let on_wire = encode_frame(crypto, ty, chan, payload);
+                let cut = 4 + (on_wire.len() - 4) / 2;
+                let _ = sock.write_all(&on_wire[..cut]);
+                let _ = sock.flush();
+                let _ = sock.shutdown(std::net::Shutdown::Both);
+                bail!("fault injection truncated frame on channel {chan}");
+            }
+        }
+    }
     write_frame(sock, crypto, ty, chan, payload)
 }
 
@@ -427,8 +473,9 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
     let send_crypto = key.derive_session(&client_nonce, &server_nonce, false);
     let writer = Arc::new(Mutex::new((stream.try_clone()?, send_crypto)));
 
-    // Server→client emulated wire time (see `SshServerConfig::frame_delay`).
-    let delay = shared.cfg.frame_delay;
+    // Server→client wire model: emulated frame time + optional fault
+    // source (see `SshServerConfig`).
+    let wire = Wire { delay: shared.cfg.frame_delay, faults: shared.cfg.faults.clone() };
     // Set when this connection declared itself a bulk lane (BULK_HELLO).
     let mut my_bulk_id: Option<u64> = None;
     // Per-channel stdin accumulators.
@@ -450,7 +497,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
         match ty {
             FRAME_PING => {
                 shared.stats.pings.fetch_add(1, Ordering::Relaxed);
-                let _ = server_send(&writer, delay, FRAME_PONG, chan, &payload);
+                let _ = server_send(&writer, &wire, FRAME_PONG, chan, &payload);
             }
             FRAME_EXEC => {
                 // *** MaxSessions: refuse the channel open outright. ***
@@ -459,7 +506,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     shared.stats.channel_rejections.fetch_add(1, Ordering::Relaxed);
                     let _ = server_send(
                         &writer,
-                        delay,
+                        &wire,
                         FRAME_DATA,
                         chan,
                         format!("sshsim: channel open failed: MaxSessions {cap} reached\n")
@@ -467,7 +514,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     );
                     let _ = server_send(
                         &writer,
-                        delay,
+                        &wire,
                         FRAME_EXIT,
                         chan,
                         &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
@@ -508,13 +555,14 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                 let cancelled = Arc::new(AtomicBool::new(false));
                 cancels.lock().unwrap().insert(chan, cancelled.clone());
                 let cancels_map = cancels.clone();
+                let wire = wire.clone();
                 std::thread::spawn(move || {
                     let send =
                         |ty: u8, payload: &[u8]| -> Result<()> {
                             if cancelled.load(Ordering::SeqCst) {
                                 bail!("channel {chan} closed by client");
                             }
-                            server_send(&w, delay, ty, chan, payload)
+                            server_send(&w, &wire, ty, chan, payload)
                         };
                     let code = match handler {
                         Some(h) => {
@@ -587,14 +635,14 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                 let Some(bulk) = bulk else {
                     let _ = server_send(
                         &writer,
-                        delay,
+                        &wire,
                         FRAME_DATA,
                         chan,
                         format!("sshsim: unknown bulk lane {bulk_id}\n").as_bytes(),
                     );
                     let _ = server_send(
                         &writer,
-                        delay,
+                        &wire,
                         FRAME_EXIT,
                         chan,
                         &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
@@ -606,10 +654,10 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     shared.stats.channel_rejections.fetch_add(1, Ordering::Relaxed);
                     // Resolve the client's bulk wait, then reject on control
                     // exactly like a classic channel-open failure.
-                    let _ = server_send(&bulk.writer, delay, FRAME_BULK_EOF, sub, &[]);
+                    let _ = server_send(&bulk.writer, &wire, FRAME_BULK_EOF, sub, &[]);
                     let _ = server_send(
                         &writer,
-                        delay,
+                        &wire,
                         FRAME_DATA,
                         chan,
                         format!("sshsim: channel open failed: MaxSessions {cap} reached\n")
@@ -617,7 +665,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     );
                     let _ = server_send(
                         &writer,
-                        delay,
+                        &wire,
                         FRAME_EXIT,
                         chan,
                         &(EXIT_CHANNEL_REJECTED as u32).to_le_bytes(),
@@ -650,12 +698,13 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                 cancels.lock().unwrap().insert(chan, cancelled.clone());
                 bulk.cancels.lock().unwrap().insert(sub, cancelled.clone());
                 let cancels_map = cancels.clone();
+                let wire = wire.clone();
                 std::thread::spawn(move || {
                     let bulk_send = |ty: u8, payload: &[u8]| -> Result<()> {
                         if cancelled.load(Ordering::SeqCst) {
                             bail!("bulk subchannel {sub} closed by client");
                         }
-                        server_send(&bulk.writer, delay, ty, sub, payload)
+                        server_send(&bulk.writer, &wire, ty, sub, payload)
                     };
                     let code = match handler {
                         Some(h) => {
@@ -678,7 +727,7 @@ fn serve_session(mut stream: TcpStream, shared: Arc<ServerShared>) -> Result<()>
                     if !cancelled.load(Ordering::SeqCst) {
                         let _ = server_send(
                             &w,
-                            delay,
+                            &wire,
                             FRAME_EXIT,
                             chan,
                             &(code as u32).to_le_bytes(),
@@ -1350,6 +1399,65 @@ mod tests {
         let _ = client.ping();
         let _ = client.ping();
         assert!(!client.is_alive() || client.ping().is_err());
+    }
+
+    fn faulty_server(kp: &KeyPair, faults: Arc<LinkFaults>) -> SshServer {
+        let mut ak = AuthorizedKeys::new();
+        ak.add(AuthorizedKey {
+            fingerprint: kp.fingerprint(),
+            force_command: Some("/opt/saia/cloud_interface".into()),
+            options: vec!["restrict".into()],
+            comment: "esx".into(),
+        });
+        SshServer::start_with(
+            ak,
+            vec![kp.clone()],
+            vec![("/opt/saia/cloud_interface".into(), echo_handler())],
+            SshServerConfig { faults: Some(faults), ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn corrupted_frame_kills_the_lane() {
+        let kp = KeyPair::generate(31);
+        let faults = Arc::new(LinkFaults::new(1).with_corrupt(1.0));
+        let server = faulty_server(&kp, faults.clone());
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        // The first server→client frame arrives with clobbered bytes: the
+        // MAC check fails and the client treats the lane as dead.
+        assert!(client.exec("x", b"").is_err(), "corrupted lane must fail the exec");
+        assert!(faults.corrupted.load(Ordering::Relaxed) >= 1);
+        assert!(!client.is_alive());
+    }
+
+    #[test]
+    fn truncated_frame_drops_the_lane_mid_frame() {
+        let kp = KeyPair::generate(32);
+        let faults = Arc::new(LinkFaults::new(2).with_truncate(1.0));
+        let server = faulty_server(&kp, faults.clone());
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        assert!(client.exec("x", b"").is_err(), "truncated lane must fail the exec");
+        assert!(faults.truncated.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn delay_spikes_slow_frames_but_deliver_them() {
+        let kp = KeyPair::generate(33);
+        let faults = Arc::new(
+            LinkFaults::new(3).with_delay_spike(1.0, Duration::from_millis(30)),
+        );
+        let server = faulty_server(&kp, faults.clone());
+        let client = SshClient::connect(&server.addr.to_string(), &kp).unwrap();
+        let t = Instant::now();
+        let reply = client.exec("x", b"ok").unwrap();
+        assert_eq!(reply.exit_code, 0, "spiked lane still completes");
+        assert!(
+            t.elapsed() >= Duration::from_millis(30),
+            "spike not charged: {:?}",
+            t.elapsed()
+        );
+        assert!(faults.delayed.load(Ordering::Relaxed) >= 1);
     }
 
     fn slow_handler(ms: u64) -> Arc<dyn CommandHandler> {

@@ -27,6 +27,7 @@
 use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, BTreeSet};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -38,8 +39,9 @@ use crate::scheduler::routing::InflightGuard;
 use crate::scheduler::{
     BackendKind, InstanceGuard, InstanceLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec,
 };
-use crate::slurm::{ClusterSpec, JobId, SlurmSim};
+use crate::slurm::{ClusterSpec, JobId, JobSpec, SlurmSim};
 use crate::util::clock::{Clock, SimClock};
+use crate::util::faults::{FaultEvent, FaultPlan};
 use crate::util::metrics::Registry;
 use crate::util::rng::Rng;
 use crate::util::sim::SimExecutor;
@@ -77,6 +79,21 @@ pub struct SimStackConfig {
     /// determinism suite with it enabled). It is surfaced through the
     /// `sim_dual_channel` gauge only — metrics are not part of the trace.
     pub dual_channel: bool,
+    /// Deterministic fault schedule applied on the virtual clock
+    /// (DESIGN.md §Failure policy). Applied events fold `fault …` lines
+    /// into [`SimStack::trace`]; an *empty* plan is contractually
+    /// invisible — byte-identical traces to a build without this field.
+    pub faults: FaultPlan,
+    /// Admission watermark: an arriving request is refused with reason
+    /// `shed_overload` when more than this many requests are already open
+    /// at the gateway (0 = shedding off).
+    pub shed_watermark: u32,
+    /// Brownout watermark: above this many open requests, arriving
+    /// requests have `max_tokens` clamped to `brownout_max_tokens`
+    /// (0 = brownout off).
+    pub brownout_watermark: u32,
+    /// The degraded token budget handed out under brownout.
+    pub brownout_max_tokens: usize,
 }
 
 impl Default for SimStackConfig {
@@ -94,6 +111,10 @@ impl Default for SimStackConfig {
             engine: EngineConfig::default(),
             scheduler: SchedulerConfig::default(),
             dual_channel: false,
+            faults: FaultPlan::new(),
+            shed_watermark: 0,
+            brownout_watermark: 0,
+            brownout_max_tokens: 8,
         }
     }
 }
@@ -180,11 +201,18 @@ struct SimLauncher {
     load_time_scale: f64,
     engine_cfg: EngineConfig,
     instances: Mutex<BTreeMap<JobId, Arc<SimInstance>>>,
+    /// Gray-slow nodes: hostname -> slowdown factor × 1000. Applied to
+    /// every live instance on the node and to later launches there, so a
+    /// replacement replica placed on a still-gray node starts slow too.
+    gray: Mutex<BTreeMap<String, u64>>,
 }
 
 struct SimInstance {
     addr: String,
+    node: String,
     ready_at_us: u64,
+    /// This instance's backend gray-failure dial (1000 = healthy).
+    slowdown: Arc<AtomicU64>,
     core: Mutex<EngineCore>,
 }
 
@@ -192,10 +220,31 @@ impl SimLauncher {
     fn instance(&self, job_id: JobId) -> Option<Arc<SimInstance>> {
         self.instances.lock().unwrap().get(&job_id).cloned()
     }
+
+    /// Degrade every instance on `node` (and future launches there) to
+    /// `factor_milli`/1000 × its calibrated compute cost. Probes still
+    /// pass: that is the point of a gray failure.
+    fn set_gray(&self, node: &str, factor_milli: u64) {
+        self.gray.lock().unwrap().insert(node.to_string(), factor_milli);
+        for si in self.instances.lock().unwrap().values() {
+            if si.node == node {
+                si.slowdown.store(factor_milli, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn clear_gray(&self, node: &str) {
+        self.gray.lock().unwrap().remove(node);
+        for si in self.instances.lock().unwrap().values() {
+            if si.node == node {
+                si.slowdown.store(1000, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 impl InstanceLauncher for SimLauncher {
-    fn launch(&self, job_id: JobId, service: &ServiceSpec, _node: &str, port: u16) {
+    fn launch(&self, job_id: JobId, service: &ServiceSpec, node: &str, port: u16) {
         let (backend, load_secs) = match &service.backend {
             BackendKind::Sim { profile, time_scale } => {
                 let Some(b) = SimBackend::by_name(profile, *time_scale) else {
@@ -214,6 +263,10 @@ impl InstanceLauncher for SimLauncher {
                 return;
             }
         };
+        let slowdown = backend.slowdown_handle();
+        if let Some(factor) = self.gray.lock().unwrap().get(node) {
+            slowdown.store(*factor, Ordering::Relaxed);
+        }
         let core = EngineCore::new(
             Box::new(backend),
             self.engine_cfg.clone(),
@@ -228,7 +281,9 @@ impl InstanceLauncher for SimLauncher {
             job_id,
             Arc::new(SimInstance {
                 addr: format!("127.0.0.1:{port}"),
+                node: node.to_string(),
                 ready_at_us,
+                slowdown,
                 core: Mutex::new(core),
             }),
         );
@@ -301,6 +356,23 @@ struct SimInner {
     next_id: Cell<u64>,
     /// Submitted-but-unfinished requests (drives `run_until_settled`).
     open: Cell<u64>,
+    // --- Fault plane + admission control (DESIGN.md §Failure policy) ---
+    /// Proxy↔cluster link state: while down, token pumps park in
+    /// `deferred_pumps` (streams freeze) instead of stepping engines.
+    link_down: Cell<bool>,
+    /// Pumps parked by a link outage, re-armed on `LinkUp`.
+    deferred_pumps: RefCell<BTreeSet<JobId>>,
+    /// Placement outage: `try_place` keeps polling (and burning queue /
+    /// deadline budgets) without reaching any instance.
+    upstream_down: Cell<bool>,
+    /// Requests past the gateway hop and not yet finished — the load
+    /// signal the shed and brownout watermarks compare against.
+    active: Cell<u64>,
+    shed_watermark: u32,
+    brownout_watermark: u32,
+    brownout_max_tokens: usize,
+    /// Applied fault events, folded into `trace()` after the records.
+    fault_log: RefCell<Vec<String>>,
 }
 
 /// The discrete-event serving stack. Schedule stimuli (`submit_chat_at`,
@@ -324,6 +396,7 @@ impl SimStack {
             load_time_scale: cfg.load_time_scale,
             engine_cfg: cfg.engine.clone(),
             instances: Mutex::new(BTreeMap::new()),
+            gray: Mutex::new(BTreeMap::new()),
         });
         let scheduler = Arc::new(
             ServiceScheduler::new(
@@ -360,11 +433,26 @@ impl SimStack {
             records: RefCell::new(Vec::new()),
             next_id: Cell::new(1),
             open: Cell::new(0),
+            link_down: Cell::new(false),
+            deferred_pumps: RefCell::new(BTreeSet::new()),
+            upstream_down: Cell::new(false),
+            active: Cell::new(0),
+            shed_watermark: cfg.shed_watermark,
+            brownout_watermark: cfg.brownout_watermark,
+            brownout_max_tokens: cfg.brownout_max_tokens,
+            fault_log: RefCell::new(Vec::new()),
         });
         // Boot: the first scheduler pass (t = 0) submits min_instances.
         {
             let inner2 = inner.clone();
             exec.schedule_at_us(0, move |ex| keepalive(&inner2, ex));
+        }
+        // Schedule the fault plan. An empty plan schedules nothing — the
+        // trace-neutrality contract (`SimStackConfig::faults`).
+        for tf in cfg.faults.events() {
+            let inner2 = inner.clone();
+            let event = tf.event.clone();
+            exec.schedule_at_us(tf.at_us, move |ex| apply_fault(&inner2, ex, &event));
         }
         SimStack { exec, inner }
     }
@@ -509,6 +597,14 @@ impl SimStack {
             out.push_str(&r.trace_line());
             out.push('\n');
         }
+        // Applied faults are part of the canonical trace: a replay must
+        // reproduce the failure schedule, not just the request outcomes.
+        // With no faults applied this appends nothing — traces stay
+        // byte-identical to a fault-free build.
+        for line in self.inner.fault_log.borrow().iter() {
+            out.push_str(line);
+            out.push('\n');
+        }
         out
     }
 }
@@ -534,6 +630,9 @@ fn keepalive(inner: &Rc<SimInner>, ex: &SimExecutor) {
 /// latency.
 fn arrive(inner: &Rc<SimInner>, ex: &SimExecutor, id: u64, req: SimRequest) {
     let now = inner.clock.now_us();
+    // Count this request toward gateway load from arrival to its record;
+    // `record()` is the single finish funnel, so the decrement is exact.
+    inner.active.set(inner.active.get() + 1);
     if let Some(rps) = inner.rate_limit_rps {
         let allowed = {
             let mut buckets = inner.buckets.borrow_mut();
@@ -563,12 +662,44 @@ fn arrive(inner: &Rc<SimInner>, ex: &SimExecutor, id: u64, req: SimRequest) {
             return;
         }
     }
+    // Load shedding: refuse outright above the watermark — a fast 503 is
+    // kinder than queueing a request that will time out anyway.
+    if inner.shed_watermark > 0 && inner.active.get() > inner.shed_watermark as u64 {
+        inner.metrics.counter("sim_shed_total", &[]).inc();
+        record(
+            inner,
+            SimRecord {
+                id,
+                user: req.user,
+                model: req.model,
+                submit_us: now,
+                placed_job: None,
+                ttft_us: None,
+                finish_us: now,
+                finish_reason: "shed_overload".into(),
+                prompt_tokens: 0,
+                completion_tokens: 0,
+                cached_tokens: 0,
+            },
+        );
+        return;
+    }
+    // Brownout: past the (lower) watermark, admit but clamp the token
+    // budget so every accepted request stays cheap.
+    let mut max_tokens = req.max_tokens;
+    if inner.brownout_watermark > 0
+        && inner.active.get() > inner.brownout_watermark as u64
+        && max_tokens > inner.brownout_max_tokens
+    {
+        max_tokens = inner.brownout_max_tokens;
+        inner.metrics.counter("sim_brownout_total", &[]).inc();
+    }
     let p = PendingReq {
         id,
         user: req.user,
         model: req.model,
         prompt: req.prompt,
-        max_tokens: req.max_tokens,
+        max_tokens,
         deadline_ms: req.deadline_ms,
         submit_us: now,
     };
@@ -597,6 +728,13 @@ fn try_place(inner: &Rc<SimInner>, ex: &SimExecutor, p: PendingReq) {
     }
     if waited_us >= inner.queue_timeout_us {
         finish_unplaced(inner, &p, "queue_timeout");
+        return;
+    }
+    // Placement outage: every upstream unreachable. Keep polling — the
+    // deadline and queue-timeout checks above still burn the budget, so a
+    // long enough outage fails queued requests exactly like a real one.
+    if inner.upstream_down.get() {
+        retry_place(inner, ex, p);
         return;
     }
     let pick = {
@@ -662,6 +800,13 @@ fn ensure_pump(inner: &Rc<SimInner>, ex: &SimExecutor, job_id: JobId) {
 /// later in virtual time — the decode cadence, without threads.
 fn pump(inner: &Rc<SimInner>, ex: &SimExecutor, job_id: JobId) {
     inner.pumping.borrow_mut().remove(&job_id);
+    if inner.link_down.get() {
+        // Link outage: park the pump instead of stepping the engine. The
+        // stream freezes mid-flight and resumes where it left off when
+        // `LinkUp` re-arms every deferred pump.
+        inner.deferred_pumps.borrow_mut().insert(job_id);
+        return;
+    }
     let Some(si) = inner.launcher.instance(job_id) else {
         // Decommissioned since this pump was scheduled: its channels were
         // answered by shutdown(); collect the errors.
@@ -773,6 +918,7 @@ fn finish_unplaced(inner: &Rc<SimInner>, p: &PendingReq, reason: &str) {
 
 fn record(inner: &Rc<SimInner>, rec: SimRecord) {
     inner.open.set(inner.open.get().saturating_sub(1));
+    inner.active.set(inner.active.get().saturating_sub(1));
     inner.records.borrow_mut().push(rec);
 }
 
@@ -783,6 +929,57 @@ fn unindex(inner: &Rc<SimInner>, job_id: JobId, id: u64) {
         if v.is_empty() {
             by_job.remove(&job_id);
         }
+    }
+}
+
+/// Apply one scheduled [`FaultEvent`] and fold it into the canonical
+/// trace. Everything here runs on the virtual clock, so a plan replays
+/// bit-identically under the same seed.
+fn apply_fault(inner: &Rc<SimInner>, ex: &SimExecutor, event: &FaultEvent) {
+    let now = inner.clock.now_us();
+    inner.fault_log.borrow_mut().push(format!("fault at_us={now} {}", event.trace_tag()));
+    inner.metrics.counter("sim_faults_applied_total", &[]).inc();
+    match event {
+        FaultEvent::NodeFail { node } => {
+            inner.slurm.lock().unwrap().fail_node(node, now);
+        }
+        FaultEvent::NodeRestore { node } => {
+            inner.slurm.lock().unwrap().restore_node(node);
+        }
+        FaultEvent::PreemptionStorm { jobs, gpus_per_job, walltime } => {
+            // A burst of batch work above the scavenger tier (priority 10
+            // sits between scavenger −10 and guaranteed 100): Slurm's
+            // backfill grants it scavenger allocations after GraceTime.
+            let mut slurm = inner.slurm.lock().unwrap();
+            for i in 0..*jobs {
+                slurm.sbatch(
+                    JobSpec {
+                        name: format!("storm-{i}"),
+                        account: "storm".into(),
+                        gpus_per_node: *gpus_per_job,
+                        time_limit: *walltime,
+                        priority: 10,
+                        duration: Some(*walltime),
+                        ..Default::default()
+                    },
+                    now,
+                );
+            }
+        }
+        FaultEvent::LinkDown => inner.link_down.set(true),
+        FaultEvent::LinkUp => {
+            inner.link_down.set(false);
+            let deferred = std::mem::take(&mut *inner.deferred_pumps.borrow_mut());
+            for job_id in deferred {
+                ensure_pump(inner, ex, job_id);
+            }
+        }
+        FaultEvent::GraySlow { node, factor_milli } => {
+            inner.launcher.set_gray(node, *factor_milli);
+        }
+        FaultEvent::GrayRecover { node } => inner.launcher.clear_gray(node),
+        FaultEvent::UpstreamDown => inner.upstream_down.set(true),
+        FaultEvent::UpstreamUp => inner.upstream_down.set(false),
     }
 }
 
@@ -848,5 +1045,115 @@ mod tests {
             stack.records().iter().map(|r| r.finish_reason.clone()).collect();
         reasons.sort();
         assert_eq!(reasons, vec!["queue_timeout", "rate_limited", "rate_limited"]);
+    }
+
+    #[test]
+    fn fault_plan_replays_identically_and_folds_into_trace() {
+        // Gray every node (the single replica lands on one of them), then
+        // flap the link for ~1 s mid-stream.
+        let run = |with_faults: bool| {
+            let mut plan = FaultPlan::new();
+            if with_faults {
+                for i in 1..=10 {
+                    plan = plan.at(
+                        39_000_000,
+                        FaultEvent::GraySlow {
+                            node: format!("ggpu{i:02}"),
+                            factor_milli: 3000,
+                        },
+                    );
+                }
+                plan = plan
+                    .at(40_050_000, FaultEvent::LinkDown)
+                    .at(41_000_000, FaultEvent::LinkUp);
+            }
+            let stack =
+                SimStack::start(SimStackConfig { seed: 11, faults: plan, ..Default::default() });
+            for i in 0..5u64 {
+                stack.submit_chat_at(
+                    40_000_000 + i * 10_000,
+                    SimRequest {
+                        user: format!("user-{i}"),
+                        prompt: format!("hello from user {i}"),
+                        max_tokens: 8,
+                        ..Default::default()
+                    },
+                );
+            }
+            assert!(stack.run_until_settled(Duration::from_secs(600)));
+            stack.trace()
+        };
+        let a = run(true);
+        let b = run(true);
+        assert_eq!(a, b, "same seed + same fault plan => byte-identical traces");
+        assert_eq!(a.matches("fault at_us=").count(), 12, "all applied faults fold in");
+        assert!(a.contains("fault at_us=40050000 link_down"));
+        assert!(a.contains("fault at_us=41000000 link_up"));
+        assert!(a.contains("gray_slow node=ggpu01 factor_milli=3000"));
+        for line in a.lines().filter(|l| l.starts_with("req=")) {
+            assert!(
+                line.contains("reason=length") || line.contains("reason=stop"),
+                "faults degrade but do not kill these requests: {line}"
+            );
+        }
+        // The plan must change behaviour, not just annotate: request lines
+        // (slower decode, frozen stream) differ from the fault-free run.
+        let baseline = run(false);
+        assert!(!baseline.contains("fault at_us="), "empty plan stays invisible");
+        let req_lines = |t: &str| {
+            t.lines().filter(|l| l.starts_with("req=")).map(String::from).collect::<Vec<_>>()
+        };
+        assert_ne!(req_lines(&a), req_lines(&baseline));
+    }
+
+    #[test]
+    fn shed_watermark_refuses_excess_load_deterministically() {
+        let stack = SimStack::start(SimStackConfig {
+            seed: 11,
+            shed_watermark: 2,
+            ..Default::default()
+        });
+        for i in 0..6u64 {
+            stack.submit_chat_at(
+                40_000_000,
+                SimRequest { user: format!("user-{i}"), max_tokens: 8, ..Default::default() },
+            );
+        }
+        assert!(stack.run_until_settled(Duration::from_secs(600)));
+        let shed = stack
+            .records()
+            .iter()
+            .filter(|r| r.finish_reason == "shed_overload")
+            .count();
+        assert_eq!(shed, 4, "watermark 2 admits two of a six-deep instant burst");
+        assert_eq!(stack.metrics().counter("sim_shed_total", &[]).get(), 4);
+        assert!(stack
+            .records()
+            .iter()
+            .filter(|r| r.finish_reason != "shed_overload")
+            .all(|r| r.placed_job.is_some()));
+    }
+
+    #[test]
+    fn brownout_clamps_token_budgets_past_the_watermark() {
+        let stack = SimStack::start(SimStackConfig {
+            seed: 11,
+            brownout_watermark: 1,
+            brownout_max_tokens: 4,
+            ..Default::default()
+        });
+        for i in 0..3u64 {
+            stack.submit_chat_at(
+                40_000_000,
+                SimRequest { user: format!("user-{i}"), max_tokens: 64, ..Default::default() },
+            );
+        }
+        assert!(stack.run_until_settled(Duration::from_secs(600)));
+        assert_eq!(stack.metrics().counter("sim_brownout_total", &[]).get(), 2);
+        let mut recs = stack.records();
+        recs.sort_by_key(|r| r.id);
+        // Requests 2 and 3 arrived above the watermark: clamped budgets.
+        assert!(recs[1].completion_tokens <= 4, "{recs:?}");
+        assert!(recs[2].completion_tokens <= 4, "{recs:?}");
     }
 }

@@ -1,0 +1,291 @@
+//! Deterministic fault-injection plane (DESIGN.md §Failure policy).
+//!
+//! Two halves:
+//!
+//! - [`FaultPlan`]: a scripted (optionally seed-scattered) schedule of
+//!   cluster-level fault events — node crashes, preemption storms, link
+//!   flaps, gray-slow nodes, upstream outages — that `SimStack` applies on
+//!   its virtual clock. A plan is pure data: the same plan against the
+//!   same seed replays bit-identically, and the applied events fold into
+//!   the canonical trace. An *empty* plan is contractually invisible — no
+//!   trace line, no RNG draw, no behaviour change.
+//! - [`LinkFaults`]: a per-frame wire-fault source for the real (wall
+//!   clock) SSH transport — latency spikes, frame corruption, frame
+//!   truncation — consulted by `sshsim`'s server write path. Decisions
+//!   come from a seeded [`Rng`], so a given seed injects the same fault
+//!   sequence on every run.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One cluster-level fault `SimStack` knows how to apply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Hard node crash (`SlurmSim::fail_node`): its jobs die NODE_FAIL.
+    NodeFail { node: String },
+    /// Bring a failed node back into service.
+    NodeRestore { node: String },
+    /// A burst of batch jobs outranking the scavenger tier: each claims
+    /// `gpus_per_job` GPUs for `walltime`, preempting scavenger replicas.
+    PreemptionStorm { jobs: u32, gpus_per_job: u32, walltime: Duration },
+    /// The proxy↔cluster link drops: token pumps stall (streams freeze but
+    /// are not dropped) until [`FaultEvent::LinkUp`].
+    LinkDown,
+    LinkUp,
+    /// Gray failure: every instance on `node` runs its compute charges at
+    /// `factor_milli`/1000 × the calibrated cost (e.g. `5000` = 5× slower)
+    /// without failing any health probe.
+    GraySlow { node: String, factor_milli: u64 },
+    GrayRecover { node: String },
+    /// Placement outage: no request can reach an instance (the cloud
+    /// interface sees every upstream down) until [`FaultEvent::UpstreamUp`];
+    /// queued requests keep burning their deadline/queue budgets.
+    UpstreamDown,
+    UpstreamUp,
+}
+
+impl FaultEvent {
+    /// Canonical tag folded into the trace when the event is applied.
+    pub fn trace_tag(&self) -> String {
+        match self {
+            FaultEvent::NodeFail { node } => format!("node_fail node={node}"),
+            FaultEvent::NodeRestore { node } => format!("node_restore node={node}"),
+            FaultEvent::PreemptionStorm { jobs, gpus_per_job, walltime } => format!(
+                "preemption_storm jobs={jobs} gpus={gpus_per_job} walltime_s={}",
+                walltime.as_secs()
+            ),
+            FaultEvent::LinkDown => "link_down".into(),
+            FaultEvent::LinkUp => "link_up".into(),
+            FaultEvent::GraySlow { node, factor_milli } => {
+                format!("gray_slow node={node} factor_milli={factor_milli}")
+            }
+            FaultEvent::GrayRecover { node } => format!("gray_recover node={node}"),
+            FaultEvent::UpstreamDown => "upstream_down".into(),
+            FaultEvent::UpstreamUp => "upstream_up".into(),
+        }
+    }
+}
+
+/// A fault scheduled at an absolute virtual time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimedFault {
+    pub at_us: u64,
+    pub event: FaultEvent,
+}
+
+/// A deterministic schedule of fault events. Build scripted timelines with
+/// [`FaultPlan::at`]; scatter probabilistic ones with [`FaultPlan::scatter`]
+/// (seeded, so "random" plans replay exactly).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<TimedFault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Script one fault at `at_us`.
+    pub fn at(mut self, at_us: u64, event: FaultEvent) -> FaultPlan {
+        self.events.push(TimedFault { at_us, event });
+        self
+    }
+
+    /// Probabilistic expansion: draw `n` event times uniformly in
+    /// `[start_us, end_us]` from `rng` and script `make(rng, at_us)` at
+    /// each. Everything derives from the caller's seeded `rng`, so the
+    /// scatter is as replayable as a hand-written script.
+    pub fn scatter(
+        mut self,
+        rng: &mut Rng,
+        n: u32,
+        start_us: u64,
+        end_us: u64,
+        make: impl Fn(&mut Rng, u64) -> FaultEvent,
+    ) -> FaultPlan {
+        for _ in 0..n {
+            let at_us = rng.range(start_us.min(end_us), end_us.max(start_us));
+            let event = make(rng, at_us);
+            self.events.push(TimedFault { at_us, event });
+        }
+        self
+    }
+
+    /// An empty plan is the no-faults contract: trace-neutral by design.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[TimedFault] {
+        &self.events
+    }
+}
+
+/// Per-frame outcome drawn from [`LinkFaults`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFault {
+    /// Deliver the frame untouched.
+    Pass,
+    /// Deliver after an extra wire-latency spike (gray-slow lane).
+    Delay(Duration),
+    /// Deliver with the sealed bytes clobbered: the peer's MAC check
+    /// fails and the lane dies as if the wire flipped bits.
+    Corrupt,
+    /// Deliver a prefix of the frame and drop the connection: the peer
+    /// observes a mid-frame lane death.
+    Truncate,
+}
+
+/// Seeded per-frame wire-fault source for the SSH transport. Probabilities
+/// are per server→client frame; counters record what was actually
+/// injected so tests can assert the fault path really ran.
+pub struct LinkFaults {
+    truncate_per_frame: f64,
+    corrupt_per_frame: f64,
+    delay_per_frame: f64,
+    delay_spike: Duration,
+    rng: Mutex<Rng>,
+    /// Frames delivered with clobbered bytes.
+    pub corrupted: AtomicU64,
+    /// Frames cut short (lane dropped mid-frame).
+    pub truncated: AtomicU64,
+    /// Frames delayed by a latency spike.
+    pub delayed: AtomicU64,
+}
+
+impl LinkFaults {
+    /// A fault source that injects nothing until probabilities are set.
+    pub fn new(seed: u64) -> LinkFaults {
+        LinkFaults {
+            truncate_per_frame: 0.0,
+            corrupt_per_frame: 0.0,
+            delay_per_frame: 0.0,
+            delay_spike: Duration::ZERO,
+            rng: Mutex::new(Rng::new(seed)),
+            corrupted: AtomicU64::new(0),
+            truncated: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_truncate(mut self, per_frame: f64) -> LinkFaults {
+        self.truncate_per_frame = per_frame;
+        self
+    }
+
+    pub fn with_corrupt(mut self, per_frame: f64) -> LinkFaults {
+        self.corrupt_per_frame = per_frame;
+        self
+    }
+
+    pub fn with_delay_spike(mut self, per_frame: f64, spike: Duration) -> LinkFaults {
+        self.delay_per_frame = per_frame;
+        self.delay_spike = spike;
+        self
+    }
+
+    /// Draw the fate of the next frame. Lane-fatal faults win over
+    /// recoverable ones so a plan mixing all three stays meaningful.
+    pub fn next_frame_fault(&self) -> FrameFault {
+        let mut rng = self.rng.lock().unwrap();
+        if self.truncate_per_frame > 0.0 && rng.chance(self.truncate_per_frame) {
+            self.truncated.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Truncate;
+        }
+        if self.corrupt_per_frame > 0.0 && rng.chance(self.corrupt_per_frame) {
+            self.corrupted.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Corrupt;
+        }
+        if self.delay_per_frame > 0.0 && rng.chance(self.delay_per_frame) {
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            return FrameFault::Delay(self.delay_spike);
+        }
+        FrameFault::Pass
+    }
+}
+
+impl fmt::Debug for LinkFaults {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("LinkFaults")
+            .field("truncate_per_frame", &self.truncate_per_frame)
+            .field("corrupt_per_frame", &self.corrupt_per_frame)
+            .field("delay_per_frame", &self.delay_per_frame)
+            .field("delay_spike", &self.delay_spike)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_builder_scripts_and_scatters_deterministically() {
+        let plan = FaultPlan::new()
+            .at(5_000_000, FaultEvent::NodeFail { node: "ggpu01".into() })
+            .at(9_000_000, FaultEvent::LinkDown);
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::new().is_empty());
+
+        let scatter = |seed: u64| {
+            FaultPlan::new().scatter(&mut Rng::new(seed), 4, 1_000_000, 2_000_000, |_, _| {
+                FaultEvent::LinkDown
+            })
+        };
+        assert_eq!(scatter(9), scatter(9), "seeded scatter must replay");
+        assert_ne!(scatter(9), scatter(10));
+        for ev in scatter(9).events() {
+            assert!((1_000_000..=2_000_000).contains(&ev.at_us));
+        }
+    }
+
+    #[test]
+    fn trace_tags_are_stable() {
+        assert_eq!(
+            FaultEvent::GraySlow { node: "n1".into(), factor_milli: 5000 }.trace_tag(),
+            "gray_slow node=n1 factor_milli=5000"
+        );
+        assert_eq!(
+            FaultEvent::PreemptionStorm {
+                jobs: 3,
+                gpus_per_job: 4,
+                walltime: Duration::from_secs(60)
+            }
+            .trace_tag(),
+            "preemption_storm jobs=3 gpus=4 walltime_s=60"
+        );
+    }
+
+    #[test]
+    fn link_faults_inject_with_seeded_probability() {
+        let f = LinkFaults::new(3).with_corrupt(1.0);
+        assert_eq!(f.next_frame_fault(), FrameFault::Corrupt);
+        assert_eq!(f.corrupted.load(Ordering::Relaxed), 1);
+
+        let quiet = LinkFaults::new(3);
+        for _ in 0..50 {
+            assert_eq!(quiet.next_frame_fault(), FrameFault::Pass);
+        }
+
+        // Lane-fatal precedence: truncate beats corrupt beats delay.
+        let all = LinkFaults::new(4)
+            .with_truncate(1.0)
+            .with_corrupt(1.0)
+            .with_delay_spike(1.0, Duration::from_millis(5));
+        assert_eq!(all.next_frame_fault(), FrameFault::Truncate);
+
+        let spiky = LinkFaults::new(5).with_delay_spike(1.0, Duration::from_millis(5));
+        assert_eq!(spiky.next_frame_fault(), FrameFault::Delay(Duration::from_millis(5)));
+        assert_eq!(spiky.delayed.load(Ordering::Relaxed), 1);
+    }
+}

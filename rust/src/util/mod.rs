@@ -14,3 +14,5 @@ pub mod http;
 pub mod prop;
 pub mod bench;
 pub mod sim;
+pub mod retry;
+pub mod faults;

@@ -1,0 +1,130 @@
+//! Unified retry policy (DESIGN.md §Failure policy).
+//!
+//! Every layer that retries — hpcproxy reconnects, gateway upstream
+//! retries, scheduler resubmits — shares one formula: capped exponential
+//! backoff with *decorrelated jitter* (each delay is drawn uniformly from
+//! `[base, 3 × previous]`, clamped to `cap`), so a fleet of failed lanes
+//! never thundering-herds its dependency in lockstep. Delays come from a
+//! seeded [`Rng`], which keeps every schedule reproducible: the same seed
+//! replays the same backoff sequence, bit for bit, under wall or virtual
+//! clocks alike.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Retry budget + backoff shape for one dependency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (the first try included). `1` = no retries.
+    pub max_attempts: u32,
+    /// Lower bound of every backoff delay.
+    pub base: Duration,
+    /// Upper bound the exponential growth saturates at.
+    pub cap: Duration,
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, base: Duration, cap: Duration) -> RetryPolicy {
+        RetryPolicy { max_attempts: max_attempts.max(1), base, cap }
+    }
+
+    /// Retries after the first attempt.
+    pub fn retries(&self) -> u32 {
+        self.max_attempts - 1
+    }
+
+    /// A fresh jittered backoff schedule. Distinct seeds give distinct
+    /// schedules — the anti-thundering-herd property callers lean on.
+    pub fn backoff(&self, seed: u64) -> Backoff {
+        let base_us = (self.base.as_micros() as u64).max(1);
+        Backoff {
+            base_us,
+            cap_us: (self.cap.as_micros() as u64).max(base_us),
+            prev_us: base_us,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+/// One in-progress backoff schedule (decorrelated jitter, AWS-style:
+/// `delay = min(cap, uniform(base, 3 × previous))`).
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base_us: u64,
+    cap_us: u64,
+    prev_us: u64,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// The next delay to sleep before retrying.
+    pub fn next_delay(&mut self) -> Duration {
+        let hi = self.prev_us.saturating_mul(3).clamp(self.base_us, self.cap_us);
+        let d = self.rng.range(self.base_us, hi);
+        self.prev_us = d;
+        Duration::from_micros(d)
+    }
+
+    /// Deadline-aware variant: `None` when the drawn delay would not leave
+    /// any of the remaining deadline budget to actually retry in — a
+    /// caller holding a request deadline must give up rather than sleep
+    /// past it.
+    pub fn next_delay_within(&mut self, remaining: Duration) -> Option<Duration> {
+        if remaining.is_zero() {
+            return None;
+        }
+        let d = self.next_delay();
+        if d >= remaining {
+            return None;
+        }
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy::new(3, Duration::from_millis(10), Duration::from_millis(80))
+    }
+
+    #[test]
+    fn delays_stay_within_base_and_cap() {
+        let mut b = policy().backoff(7);
+        for _ in 0..200 {
+            let d = b.next_delay();
+            assert!(d >= Duration::from_millis(10), "below base: {d:?}");
+            assert!(d <= Duration::from_millis(80), "above cap: {d:?}");
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let seq = |seed: u64| {
+            let mut b = policy().backoff(seed);
+            (0..8).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(42), seq(42));
+        assert_ne!(seq(42), seq(43), "distinct seeds must jitter apart");
+    }
+
+    #[test]
+    fn deadline_budget_is_never_overshot() {
+        let mut b = policy().backoff(1);
+        assert_eq!(b.next_delay_within(Duration::ZERO), None);
+        // A huge budget always admits the delay; the delay itself is
+        // bounded by cap, so it fits.
+        let d = b.next_delay_within(Duration::from_secs(10)).unwrap();
+        assert!(d <= Duration::from_millis(80));
+        // A budget at base or below can never fit a delay.
+        assert_eq!(b.next_delay_within(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn max_attempts_floor_is_one() {
+        assert_eq!(RetryPolicy::new(0, Duration::ZERO, Duration::ZERO).max_attempts, 1);
+        assert_eq!(policy().retries(), 2);
+    }
+}

@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{SimRequest, SimStack, SimStackConfig};
+use chat_hpc::util::faults::{FaultEvent, FaultPlan};
 use chat_hpc::util::rng::Rng;
 use chat_hpc::workload::DiurnalArrivals;
 
@@ -122,6 +123,76 @@ fn same_seed_replays_byte_identical_traces() {
     let placements: std::collections::BTreeSet<_> =
         recs.iter().filter_map(|r| r.placed_job).collect();
     assert!(placements.len() >= 3, "expected pre- and post-failure jobs: {placements:?}");
+}
+
+/// The fault plane is part of the determinism contract: a scenario laced
+/// with scripted *and* seed-scattered faults — link flap, gray nodes, a
+/// node crash + restore, a preemption storm, an upstream outage — must
+/// replay byte-identically, fault lines included.
+#[test]
+fn fault_plan_laden_scenario_replays_byte_identical_traces() {
+    let run = || {
+        let plan = FaultPlan::new()
+            .at(150_000_000, FaultEvent::LinkDown)
+            .at(152_000_000, FaultEvent::LinkUp)
+            .at(160_000_000, FaultEvent::GraySlow {
+                node: "ggpu02".into(),
+                factor_milli: 4000,
+            })
+            .at(200_000_000, FaultEvent::NodeFail { node: "ggpu01".into() })
+            .at(230_000_000, FaultEvent::NodeRestore { node: "ggpu01".into() })
+            .at(240_000_000, FaultEvent::PreemptionStorm {
+                jobs: 4,
+                gpus_per_job: 4,
+                walltime: Duration::from_secs(30),
+            })
+            .at(260_000_000, FaultEvent::UpstreamDown)
+            .at(262_000_000, FaultEvent::UpstreamUp)
+            // The probabilistic half: seed-scattered gray failures.
+            .scatter(
+                &mut Rng::new(0xFA017),
+                3,
+                170_000_000,
+                190_000_000,
+                |r, _| FaultEvent::GraySlow {
+                    node: format!("ggpu{:02}", r.range(1, 10)),
+                    factor_milli: 2000,
+                },
+            );
+        let stack = SimStack::start(SimStackConfig {
+            seed: 1234,
+            faults: plan,
+            ..Default::default()
+        });
+        for i in 0..30u64 {
+            stack.submit_chat_at(
+                140_000_000 + i * 5_000_000,
+                SimRequest {
+                    user: format!("user-{}", i % 7),
+                    max_tokens: 16,
+                    deadline_ms: if i % 5 == 0 { Some(30_000) } else { None },
+                    ..Default::default()
+                },
+            );
+        }
+        assert!(
+            stack.run_until_settled(Duration::from_secs(3600)),
+            "faulted scenario never settled: {} requests still open",
+            stack.open_requests()
+        );
+        stack.trace()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "fault-laden scenario must replay byte-identically");
+    assert_eq!(a.matches("fault at_us=").count(), 11, "all 11 faults applied:\n{a}");
+    assert!(a.contains("fault at_us=200000000 node_fail node=ggpu01"));
+    assert!(a.contains("preemption_storm jobs=4 gpus=4 walltime_s=30"));
+    assert!(a.contains("fault at_us=260000000 upstream_down"));
+    assert!(a.contains("factor_milli=2000"), "scattered gray faults applied:\n{a}");
+    assert!(
+        a.contains("reason=stop") || a.contains("reason=length"),
+        "some requests still complete through the chaos:\n{a}"
+    );
 }
 
 #[test]
