@@ -40,6 +40,7 @@ fn spec(target: f64, walltime_secs: u64) -> ServiceSpec {
         mem_gb: 64,
         walltime: Duration::from_secs(walltime_secs),
         max_scavengers: 0,
+        keep_alive: Duration::ZERO,
         backend: BackendKind::Sim { profile: "llama3-70b".into(), time_scale: 0.0 },
     }
 }

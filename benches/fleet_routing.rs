@@ -1,0 +1,361 @@
+//! Fleet routing drills: the multi-model acceptance matrix for
+//! session-affine routing and scale-from-zero replica groups (DESIGN.md
+//! §Multi-model fleet), run entirely under virtual time so every sweep is
+//! deterministic — the same `--seed` produces a byte-identical
+//! BENCH_fleet.json on every machine.
+//!
+//! Two sweeps over [`SimStack`] via [`StackBuilder`]:
+//!
+//!   affinity           N users × K chat turns against a 3-replica group,
+//!                      routed session-affine vs. random least-loaded.
+//!                      Each turn resends the whole conversation, so the
+//!                      replica that served turn t-1 already holds turn
+//!                      t's prompt prefix in its KV cache: the affine run
+//!                      must land ≥1.5× the prefix-cache hit-token rate
+//!                      of the random run.
+//!   scale_from_zero    a cold model group idling at zero replicas: the
+//!                      first request wakes it and pays exactly one
+//!                      modeled weight load; follow-ups inside the
+//!                      keep-alive window pay none.
+//!
+//! Each sweep runs twice and byte-compares its traces (the in-process
+//! half of the determinism contract; CI also byte-compares two full
+//! BENCH_fleet.json + trace artifacts across processes via
+//! `FLEET_TRACE_OUT`), then applies shape checks. Any failed check fails
+//! the bench with a nonzero exit after writing the report.
+//!
+//!   cargo bench --bench fleet_routing [-- --smoke] [-- --seed N]
+
+use std::time::Duration;
+
+use chat_hpc::scheduler::ServiceSpec;
+use chat_hpc::stack::{SimRecord, SimRequest, StackBuilder};
+use chat_hpc::util::bench::stats;
+use chat_hpc::util::json::Json;
+use chat_hpc::workload::MultiTurnChat;
+
+/// Warm 3-replica group the affinity sweep routes across.
+const MODEL: &str = "intel-neural-7b";
+/// Scale-from-zero group (35 virtual-second weight load).
+const COLD_MODEL: &str = "llama3-8b";
+
+struct RunOut {
+    trace: String,
+    records: Vec<SimRecord>,
+    affinity_hits: u64,
+}
+
+fn completed(records: &[SimRecord]) -> Vec<&SimRecord> {
+    records
+        .iter()
+        .filter(|r| r.finish_reason == "stop" || r.finish_reason == "length")
+        .collect()
+}
+
+/// Prefix-cache hit-token rate: cached prompt tokens / total prompt
+/// tokens over completed requests — the fraction of prompt work the KV
+/// cache absorbed instead of re-prefilling.
+fn hit_token_rate(records: &[SimRecord]) -> f64 {
+    let done = completed(records);
+    let prompt: usize = done.iter().map(|r| r.prompt_tokens).sum();
+    let cached: usize = done.iter().map(|r| r.cached_tokens).sum();
+    if prompt == 0 {
+        0.0
+    } else {
+        cached as f64 / prompt as f64
+    }
+}
+
+struct DrillMetrics {
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    ttft_ms: f64,
+}
+
+/// Latency/throughput shape of a sweep, from virtual-time numbers only —
+/// the wall clock never leaks into the report.
+fn metrics(records: &[SimRecord]) -> DrillMetrics {
+    let done = completed(records);
+    assert!(!done.is_empty(), "sweep completed no requests");
+    let lats: Vec<f64> =
+        done.iter().map(|r| (r.finish_us - r.submit_us) as f64 / 1e3).collect();
+    let ttfts: Vec<f64> =
+        done.iter().filter_map(|r| r.ttft_us.map(|t| t as f64 / 1e3)).collect();
+    let first = done.iter().map(|r| r.submit_us).min().unwrap();
+    let last = done.iter().map(|r| r.finish_us).max().unwrap();
+    let window = ((last - first) as f64 / 1e6).max(1e-9);
+    let ls = stats(&lats);
+    let ts = if ttfts.is_empty() { None } else { Some(stats(&ttfts)) };
+    DrillMetrics {
+        rps: done.len() as f64 / window,
+        p50_ms: ls.p50,
+        p99_ms: ls.p99,
+        ttft_ms: ts.map(|t| t.p50).unwrap_or(0.0),
+    }
+}
+
+/// The multi-turn conversation workload: each user's turn t resends the
+/// whole conversation (turn t's prompt strictly extends turn t-1's), under
+/// one session id per user — the shape session-affine routing exists for.
+fn run_affinity(seed: u64, affine: bool, users: usize, turns: usize) -> RunOut {
+    let mut spec = ServiceSpec::sim(MODEL, 1.0);
+    // Pin the group at 3 replicas so both routing policies face the same
+    // fleet; autoscaling churn would confound the comparison.
+    spec.min_instances = 3;
+    spec.max_instances = 3;
+    let stack = StackBuilder::new()
+        .with_seed(seed)
+        .with_services(vec![spec])
+        .with_session_affinity(affine)
+        .build_sim();
+    let wl = MultiTurnChat {
+        users,
+        turns,
+        system_prompt: "you are the kisski cluster assistant; answer tersely \
+                        and cite slurm job ids where relevant"
+            .into(),
+        turn_chars: 160,
+    };
+    for user in 0..users {
+        for turn in 0..turns {
+            // Arrivals start past the 30 s cold start; turns are spaced so
+            // turn t-1 has finished (and warmed its replica's cache)
+            // before turn t arrives, with users staggered inside a turn.
+            let at = 40_000_000
+                + turn as u64 * 20_000_000
+                + user as u64 * 250_000;
+            stack.submit_chat_at(
+                at,
+                SimRequest {
+                    user: format!("user-{user}"),
+                    model: MODEL.into(),
+                    session: Some(format!("conv-{user}")),
+                    prompt: wl.sim_prompt(user, turn),
+                    max_tokens: 16,
+                    deadline_ms: None,
+                },
+            );
+        }
+    }
+    assert!(
+        stack.run_until_settled(Duration::from_secs(3600)),
+        "affinity sweep never settled: {} requests still open",
+        stack.open_requests()
+    );
+    let affinity_hits = stack
+        .metrics()
+        .counter("sched_affinity_hits_total", &[("service", MODEL)])
+        .get();
+    RunOut { trace: stack.trace(), records: stack.records(), affinity_hits }
+}
+
+/// The scale-from-zero drill: a cold model group (min_instances = 0), one
+/// request to wake it, four follow-ups inside the keep-alive window.
+fn run_scale_from_zero(seed: u64) -> RunOut {
+    let mut cold = ServiceSpec::sim(COLD_MODEL, 1.0);
+    cold.min_instances = 0;
+    cold.max_instances = 1;
+    cold.keep_alive = Duration::from_secs(300);
+    let stack = StackBuilder::new()
+        .with_seed(seed)
+        .with_services(vec![cold])
+        // The default 30 s queue budget is shorter than llama3-8b's 35 s
+        // weight load: the waker must be allowed to wait the load out.
+        .with_queue_timeout(Duration::from_secs(120))
+        .build_sim();
+    // Request 1 wakes the group at t=10 s (ready ≈ 10 s + tick + 35 s
+    // load); 2..5 arrive after it completed, well inside keep-alive.
+    for (i, &at) in [10_000_000u64, 70_000_000, 80_000_000, 90_000_000, 100_000_000]
+        .iter()
+        .enumerate()
+    {
+        stack.submit_chat_at(
+            at,
+            SimRequest {
+                user: format!("user-{i}"),
+                model: COLD_MODEL.into(),
+                session: Some("conv-cold".into()),
+                max_tokens: 8,
+                ..Default::default()
+            },
+        );
+    }
+    assert!(
+        stack.run_until_settled(Duration::from_secs(1800)),
+        "scale-from-zero drill never settled: {} requests still open",
+        stack.open_requests()
+    );
+    let affinity_hits = stack
+        .metrics()
+        .counter("sched_affinity_hits_total", &[("service", COLD_MODEL)])
+        .get();
+    RunOut { trace: stack.trace(), records: stack.records(), affinity_hits }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let seed: u64 = args
+        .iter()
+        .position(|a| a == "--seed")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    // Smoke shrinks the conversation load, not the drill structure: the
+    // affinity comparison and the cold-start accounting both still run.
+    let (users, turns) = if smoke { (6, 4) } else { (12, 8) };
+
+    println!(
+        "fleet routing: seed {seed}, {users} users x {turns} turns{}\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+    println!(
+        "{:<18} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "sweep", "rps", "p50 ms", "p99 ms", "ttft ms", "hit rate", "pass"
+    );
+
+    let mut fails: Vec<String> = Vec::new();
+    let mut traces = String::new();
+
+    // --- affinity: session-affine vs. random least-loaded ----------------
+    let affine_a = run_affinity(seed, true, users, turns);
+    let affine_b = run_affinity(seed, true, users, turns);
+    if affine_a.trace != affine_b.trace {
+        fails.push("affine: replay diverged (trace not byte-identical)".into());
+    }
+    let random_a = run_affinity(seed, false, users, turns);
+    let random_b = run_affinity(seed, false, users, turns);
+    if random_a.trace != random_b.trace {
+        fails.push("random: replay diverged (trace not byte-identical)".into());
+    }
+
+    let n = users * turns;
+    for (name, out) in [("affine", &affine_a), ("random", &random_a)] {
+        let done = completed(&out.records).len();
+        if done != n {
+            fails.push(format!("{name}: {done}/{n} conversations turns completed"));
+        }
+    }
+    let affine_rate = hit_token_rate(&affine_a.records);
+    let random_rate = hit_token_rate(&random_a.records);
+    let ratio =
+        if random_rate > 0.0 { affine_rate / random_rate } else { f64::INFINITY };
+    if affine_rate <= 0.0 {
+        fails.push("affine: prefix cache never hit across multi-turn chats".into());
+    }
+    if ratio < 1.5 {
+        fails.push(format!(
+            "affine hit-token rate {affine_rate:.3} is only {ratio:.2}x the random \
+             baseline {random_rate:.3} (need >= 1.5x)"
+        ));
+    }
+    if affine_a.affinity_hits == 0 {
+        fails.push("affine: sched_affinity_hits_total never incremented".into());
+    }
+    if random_a.affinity_hits != 0 {
+        fails.push(format!(
+            "random: affinity counter moved ({}) with session_affinity off",
+            random_a.affinity_hits
+        ));
+    }
+
+    // --- scale_from_zero: one wake, one weight load ----------------------
+    let cold_a = run_scale_from_zero(seed);
+    let cold_b = run_scale_from_zero(seed);
+    if cold_a.trace != cold_b.trace {
+        fails.push("scale_from_zero: replay diverged (trace not byte-identical)".into());
+    }
+    let loads = cold_a
+        .trace
+        .lines()
+        .filter(|l| l.starts_with("load ") && l.contains(&format!("service={COLD_MODEL}")))
+        .count();
+    if loads != 1 {
+        fails.push(format!(
+            "scale_from_zero: {loads} weight loads for 5 requests (want exactly 1):\n{}",
+            cold_a.trace
+        ));
+    }
+    let cold_done = completed(&cold_a.records).len();
+    if cold_done != 5 {
+        fails.push(format!("scale_from_zero: {cold_done}/5 requests completed"));
+    }
+    if let Some(first) = cold_a.records.iter().min_by_key(|r| r.submit_us) {
+        // The waker pays the full 35 s modeled load in its latency...
+        if first.finish_us - first.submit_us < 35_000_000 {
+            fails.push(format!(
+                "scale_from_zero: waker finished in {} us — never paid the load",
+                first.finish_us - first.submit_us
+            ));
+        }
+        // ...and nobody else does.
+        for r in cold_a.records.iter().filter(|r| r.id != first.id) {
+            if r.finish_us - r.submit_us > 5_000_000 {
+                fails.push(format!(
+                    "scale_from_zero: follow-up {} paid {} us — keep-alive let \
+                     the replica go cold",
+                    r.id,
+                    r.finish_us - r.submit_us
+                ));
+            }
+        }
+    }
+
+    // --- report ----------------------------------------------------------
+    let round = |v: f64| (v * 1000.0).round() / 1000.0;
+    let mut report = Json::obj();
+    for (name, out, hit_rate) in [
+        ("affine", &affine_a, affine_rate),
+        ("random", &random_a, random_rate),
+        ("scale_from_zero", &cold_a, hit_token_rate(&cold_a.records)),
+    ] {
+        let m = metrics(&out.records);
+        let passed = !fails.iter().any(|f| f.starts_with(name));
+        println!(
+            "{name:<18} {:>8.2} {:>10.2} {:>10.2} {:>10.2} {:>10.3} {:>8}",
+            m.rps,
+            m.p50_ms,
+            m.p99_ms,
+            m.ttft_ms,
+            hit_rate,
+            if passed { "ok" } else { "FAIL" }
+        );
+        report = report.set(
+            name,
+            Json::obj()
+                .set("rps", round(m.rps))
+                .set("p50_ms", round(m.p50_ms))
+                .set("p99_ms", round(m.p99_ms))
+                .set("ttft_ms", round(m.ttft_ms))
+                .set("hit_token_rate", round(hit_rate))
+                .set("affinity_hits", out.affinity_hits)
+                .set("passed", if passed { 1.0 } else { 0.0 }),
+        );
+        traces.push_str(&format!("=== {name} ===\n"));
+        traces.push_str(&out.trace);
+    }
+    report = report
+        .set("affinity_ratio", round(if ratio.is_finite() { ratio } else { 1000.0 }))
+        .set("cold_loads", loads);
+
+    std::fs::write("BENCH_fleet.json", report.dump())?;
+    println!(
+        "\nwrote BENCH_fleet.json (affine/random hit-token rate {:.3}/{:.3}, \
+         ratio {ratio:.2}x, {loads} cold load)",
+        affine_rate, random_rate
+    );
+    // Cross-process determinism artifact for CI (mirrors SIM_TRACE_OUT).
+    if let Some(path) = std::env::var_os("FLEET_TRACE_OUT") {
+        std::fs::write(path, &traces)?;
+    }
+    if !fails.is_empty() {
+        for f in &fails {
+            println!("  !! {f}");
+        }
+        println!("fleet routing FAILED");
+        std::process::exit(1);
+    }
+    println!("all sweeps passed");
+    Ok(())
+}

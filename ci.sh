@@ -84,6 +84,18 @@ mv BENCH_chaos.json target/BENCH_chaos_a.json
 cargo bench --bench chaos_drills -- --smoke --seed 7
 cmp target/BENCH_chaos_a.json BENCH_chaos.json
 
+# Fleet routing: session-affine vs. random placement over a 3-replica
+# group (affine must land >= 1.5x the prefix-cache hit-token rate) plus
+# the scale-from-zero drill (exactly one weight load for five requests).
+# Deterministic by contract: two runs with the same seed must emit
+# byte-identical traces and a byte-identical BENCH_fleet.json.
+echo "==> fleet-smoke: fleet_routing determinism diff"
+FLEET_TRACE_OUT="$PWD/target/fleet_trace_a.txt" cargo bench --bench fleet_routing -- --smoke --seed 7
+mv BENCH_fleet.json target/BENCH_fleet_a.json
+FLEET_TRACE_OUT="$PWD/target/fleet_trace_b.txt" cargo bench --bench fleet_routing -- --smoke --seed 7
+cmp target/fleet_trace_a.txt target/fleet_trace_b.txt
+cmp target/BENCH_fleet_a.json BENCH_fleet.json
+
 echo "==> validate BENCH_*.json schemas"
 if python3 --version >/dev/null 2>&1; then
     python3 scripts/check_bench.py BENCH_table1.json \
@@ -101,6 +113,8 @@ if python3 --version >/dev/null 2>&1; then
         single_channel dual_channel dual_zero_copy
     python3 scripts/check_bench.py BENCH_chaos.json \
         preemption_storm lane_flap gray_node upstream_outage
+    python3 scripts/check_bench.py BENCH_fleet.json \
+        affine random scale_from_zero
 else
     echo "    python3 not installed; skipping schema validation (CI runs it)"
 fi

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         mem_gb: 256,
         walltime: Duration::from_secs(12 * 3600),
         max_scavengers: 0,
+        keep_alive: Duration::ZERO,
         backend: BackendKind::Sim { profile: "llama3-70b".into(), time_scale: 0.0 },
     };
     let sched = ServiceScheduler::new(

@@ -15,6 +15,10 @@
 //!   request log feeding the analytics pipeline (timestamp, user, model —
 //!   and deliberately nothing else, §6.2).
 
+pub mod registry;
+
+pub use registry::{ModelRegistry, ModelStatus};
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -79,18 +83,81 @@ const MAX_BUCKETS: usize = 4096;
 /// the O(map) walk then runs once per EVICT_BATCH inserts, not per insert.
 const EVICT_BATCH: usize = 64;
 
+/// Per-upstream state of one route: URLs, capacity weights, the smooth-WRR
+/// counters, and circuit breakers keyed by upstream *identity* (URL). The
+/// whole bundle swaps atomically via [`Route::set_upstreams`], so a proxy
+/// scale event can add or remove upstreams at runtime — and a breaker that
+/// tripped for URL X stays attached to X, rather than to whatever upstream
+/// happens to occupy X's old index after the set shifts (the positional
+/// scheme this replaces ejected innocent neighbours and readmitted dead
+/// ones on every swap).
+struct UpstreamSet {
+    urls: Vec<String>,
+    /// Relative capacity per upstream, parallel to `urls`.
+    weights: Vec<usize>,
+    /// Smooth-WRR running weights, parallel to `urls`.
+    wrr: Vec<i64>,
+    /// Breaker per upstream, keyed by URL.
+    breakers: std::collections::BTreeMap<String, Arc<CircuitBreaker>>,
+}
+
+impl UpstreamSet {
+    /// Build a set, carrying breaker state over from `prev` for URLs that
+    /// survive; new URLs start with a fresh closed breaker.
+    fn build(
+        urls: Vec<String>,
+        weights: Vec<usize>,
+        cfg: BreakerConfig,
+        prev: Option<&std::collections::BTreeMap<String, Arc<CircuitBreaker>>>,
+    ) -> UpstreamSet {
+        let mut breakers = std::collections::BTreeMap::new();
+        for u in &urls {
+            let b = prev
+                .and_then(|m| m.get(u).cloned())
+                .unwrap_or_else(|| Arc::new(CircuitBreaker::new(cfg)));
+            breakers.insert(u.clone(), b);
+        }
+        let n = urls.len();
+        UpstreamSet { urls, weights, wrr: vec![0; n], breakers }
+    }
+
+    /// Smooth weighted round-robin (the nginx algorithm): add each weight
+    /// to its running total, pick the max, subtract the weight sum. Equal
+    /// weights reduce to plain round-robin.
+    fn next_idx(&mut self) -> usize {
+        let mut best = 0;
+        let mut total: i64 = 0;
+        for (i, w) in self.weights.iter().enumerate() {
+            let w = (*w).max(1) as i64;
+            total += w;
+            self.wrr[i] += w;
+            if self.wrr[i] > self.wrr[best] {
+                best = i;
+            }
+        }
+        self.wrr[best] -= total;
+        best
+    }
+}
+
+/// One attempt's upstream choice. Carries the breaker *handle*, not an
+/// index: the outcome of an in-flight request reports to the breaker it
+/// was actually sent through, even if the route's upstream set was swapped
+/// (or the URL removed entirely) while the request was in the air.
+struct UpstreamPick {
+    url: String,
+    breaker: Arc<CircuitBreaker>,
+}
+
 /// One gateway route.
 pub struct Route {
     /// Route (= model/service) name, used for metrics + logging.
     pub name: String,
     /// Path prefix to match, e.g. `/v1/m/intel-neural-7b/`.
     pub prefix: String,
-    /// Upstream base URLs; requests are spread across them by weight.
-    pub upstreams: Vec<String>,
-    /// Relative capacity per upstream (an HPC proxy advertises pooled
-    /// connections × channels per connection). Defaults to all-equal,
-    /// which degrades to plain round-robin.
-    pub weights: Vec<usize>,
+    /// Upstream base URLs + weights + WRR state + per-identity breakers;
+    /// swappable at runtime (see [`Route::set_upstreams`]).
+    upstreams: Mutex<UpstreamSet>,
     /// Strip the prefix before forwarding and prepend this instead.
     pub rewrite: String,
     /// Requests/second per consumer (None = unlimited). The paper rate-
@@ -113,16 +180,15 @@ pub struct Route {
     /// the route's handler is idempotent or the duplicate is an acceptable
     /// trade (model inference is; a paid external call is not).
     pub retry: RetryPolicy,
-    /// Per-upstream circuit breakers: a tripped upstream is ejected from
+    /// Breaker tuning applied to every upstream, including ones added
+    /// later through `set_upstreams`. A tripped upstream is ejected from
     /// the WRR rotation until its `open_for` window expires, then probed
     /// half-open and reinstated on the first success.
-    breakers: Vec<CircuitBreaker>,
+    breaker_cfg: BreakerConfig,
     /// Load-shedding priority under admission control: 2 (default) sheds
     /// only at the full `max_inflight` watermark, 1 at half, 0 at a
     /// quarter — low-priority routes brown out first (§ overload).
     pub shed_priority: u32,
-    /// Smooth weighted-round-robin state (one current weight per upstream).
-    wrr: Mutex<Vec<i64>>,
 }
 
 impl Route {
@@ -131,16 +197,19 @@ impl Route {
         Route {
             name: name.into(),
             prefix: prefix.into(),
-            upstreams,
-            weights: vec![1; n],
+            upstreams: Mutex::new(UpstreamSet::build(
+                upstreams,
+                vec![1; n],
+                BreakerConfig::default(),
+                None,
+            )),
             rewrite: rewrite.into(),
             rate_limit_per_sec: None,
             allowed_groups: None,
             require_auth: true,
             retry: RetryPolicy::new(1, Duration::from_millis(10), Duration::from_millis(200)),
-            breakers: (0..n).map(|_| CircuitBreaker::new(BreakerConfig::default())).collect(),
+            breaker_cfg: BreakerConfig::default(),
             shed_priority: 2,
-            wrr: Mutex::new(vec![0; n]),
         }
     }
 
@@ -173,7 +242,9 @@ impl Route {
 
     /// Re-tune the per-upstream circuit breakers (rebuilds them closed).
     pub fn with_breaker(mut self, cfg: BreakerConfig) -> Route {
-        self.breakers = (0..self.upstreams.len()).map(|_| CircuitBreaker::new(cfg)).collect();
+        self.breaker_cfg = cfg;
+        let set = self.upstreams.get_mut().unwrap();
+        *set = UpstreamSet::build(set.urls.clone(), set.weights.clone(), cfg, None);
         self
     }
 
@@ -191,53 +262,54 @@ impl Route {
     /// is rejected (all breakers open at once), the last roll is used
     /// anyway: sending the request somewhere keeps probing the fleet and
     /// cannot livelock, whereas failing fast here would mask recovery.
-    fn attempt_upstream(&self, last_failed: Option<&str>, now_us: u64) -> (usize, String) {
+    fn attempt_upstream(&self, last_failed: Option<&str>, now_us: u64) -> UpstreamPick {
+        let mut set = self.upstreams.lock().unwrap();
         // Smooth WRR visits every upstream within one period (= the
         // weight sum), so that bounds the re-roll.
-        let bound: usize = self.weights.iter().map(|w| (*w).max(1)).sum();
-        let mut pick = self.next_upstream_idx();
+        let bound: usize = set.weights.iter().map(|w| (*w).max(1)).sum();
+        let mut pick = set.next_idx();
         let mut rolls = 0;
         // Order matters: check `last_failed` first so a re-roll past the
         // upstream that just failed does not consume a half-open probe.
         while rolls < bound
-            && (last_failed == Some(self.upstreams[pick].as_str())
-                || !self.breakers[pick].allow(now_us))
+            && (last_failed == Some(set.urls[pick].as_str())
+                || !set.breakers[&set.urls[pick]].allow(now_us))
         {
-            pick = self.next_upstream_idx();
+            pick = set.next_idx();
             rolls += 1;
         }
-        (pick, self.upstreams[pick].clone())
+        let url = set.urls[pick].clone();
+        let breaker = set.breakers[&url].clone();
+        UpstreamPick { url, breaker }
     }
 
-    /// Set per-upstream capacity weights (must match `upstreams` length).
+    /// Replace the upstream set at runtime (a proxy joined or left).
+    /// Breakers are keyed by upstream identity, so URLs present in both
+    /// the old and new set keep their breaker state — an open breaker
+    /// stays with the dead upstream, and a freshly added upstream starts
+    /// closed. Weights reset to all-equal; WRR state restarts.
+    pub fn set_upstreams(&self, urls: Vec<String>) {
+        let mut set = self.upstreams.lock().unwrap();
+        let n = urls.len();
+        *set = UpstreamSet::build(urls, vec![1; n], self.breaker_cfg, Some(&set.breakers));
+    }
+
+    /// Current upstream base URLs, in WRR order.
+    pub fn upstream_urls(&self) -> Vec<String> {
+        self.upstreams.lock().unwrap().urls.clone()
+    }
+
+    /// Set per-upstream capacity weights (must match the upstream count).
     pub fn with_weights(mut self, weights: Vec<usize>) -> Route {
+        let set = self.upstreams.get_mut().unwrap();
         assert_eq!(
             weights.len(),
-            self.upstreams.len(),
+            set.urls.len(),
             "one weight per upstream on route {}",
             self.name
         );
-        self.weights = weights;
+        set.weights = weights;
         self
-    }
-
-    /// Smooth weighted round-robin (the nginx algorithm): add each weight
-    /// to its running total, pick the max, subtract the weight sum. Equal
-    /// weights reduce to plain round-robin.
-    fn next_upstream_idx(&self) -> usize {
-        let mut cur = self.wrr.lock().unwrap();
-        let mut best = 0;
-        let mut total: i64 = 0;
-        for (i, w) in self.weights.iter().enumerate() {
-            let w = (*w).max(1) as i64;
-            total += w;
-            cur[i] += w;
-            if cur[i] > cur[best] {
-                best = i;
-            }
-        }
-        cur[best] -= total;
-        best
     }
 }
 
@@ -420,6 +492,10 @@ pub struct Gateway {
     /// Requests currently admitted and being forwarded (drives shedding
     /// and brownout decisions).
     inflight: AtomicUsize,
+    /// Model registry backing the model-addressable API: `POST
+    /// /v1/chat/completions` resolves the body `model` here, and `GET
+    /// /v1/models` lists it. `None` = static prefix routes only.
+    registry: Mutex<Option<Arc<ModelRegistry>>>,
 }
 
 impl Gateway {
@@ -471,29 +547,34 @@ impl Gateway {
             buckets: Mutex::new(Default::default()),
             admission,
             inflight: AtomicUsize::new(0),
+            registry: Mutex::new(None),
         })
     }
 
+    /// Attach the model registry that makes the unified
+    /// `POST /v1/chat/completions` endpoint and `GET /v1/models` live.
+    pub fn set_model_registry(&self, registry: Arc<ModelRegistry>) {
+        *self.registry.lock().unwrap() = Some(registry);
+    }
+
     /// Report an attempt's outcome to the upstream's breaker and publish
-    /// the trip counter + state gauge.
-    fn report_upstream(&self, route: &Route, idx: usize, ok: bool) {
-        let breaker = &route.breakers[idx];
+    /// the trip counter + state gauge. The pick carries the breaker handle
+    /// itself, so a late report lands on the right breaker even after the
+    /// route's upstream set was swapped mid-flight.
+    fn report_upstream(&self, route: &Route, pick: &UpstreamPick, ok: bool) {
         if ok {
-            breaker.on_success();
-        } else if breaker.on_failure(self.clock.now_us()) {
+            pick.breaker.on_success();
+        } else if pick.breaker.on_failure(self.clock.now_us()) {
             self.metrics
                 .counter(
                     "gw_breaker_trips_total",
-                    &[("route", &route.name), ("upstream", &route.upstreams[idx])],
+                    &[("route", &route.name), ("upstream", &pick.url)],
                 )
                 .inc();
         }
         self.metrics
-            .gauge(
-                "gw_breaker_state",
-                &[("route", &route.name), ("upstream", &route.upstreams[idx])],
-            )
-            .set(breaker.state_code());
+            .gauge("gw_breaker_state", &[("route", &route.name), ("upstream", &pick.url)])
+            .set(pick.breaker.state_code());
     }
 
     /// Sleep the next backoff delay, bounded by the request's remaining
@@ -589,15 +670,64 @@ impl Gateway {
         if req.path == "/health" {
             return Reply::full(Response::json(200, &Json::obj().set("status", "ok")));
         }
+        // Fleet discovery is public, like /health: clients consult it to
+        // pick a model *before* they have anything to authenticate for.
+        if req.method == "GET" && req.path == "/v1/models" {
+            if let Some(reg) = self.registry.lock().unwrap().clone() {
+                return Reply::full(Response::json(200, &reg.list()));
+            }
+        }
 
-        let Some(route_idx) = self
-            .routes
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| req.path.starts_with(&r.prefix))
-            .max_by_key(|(_, r)| r.prefix.len())
-            .map(|(i, _)| i)
-        else {
+        // --- route resolution: the model-addressable endpoint first (body
+        //     `model` against the dynamic registry), then static prefixes ---
+        let mut via_registry = false;
+        let mut resolved_idx = None;
+        if req.path == "/v1/chat/completions" {
+            if let Some(reg) = self.registry.lock().unwrap().clone() {
+                let model = Json::parse(req.body_str())
+                    .ok()
+                    .and_then(|j| j.get("model").and_then(|m| m.as_str().map(String::from)));
+                match model.as_deref().and_then(|m| reg.resolve(m)) {
+                    Some(route_name) => {
+                        resolved_idx = self.routes.iter().position(|r| r.name == route_name);
+                        via_registry = resolved_idx.is_some();
+                    }
+                    None => {
+                        let what = model.as_deref().unwrap_or("(none given)");
+                        self.metrics
+                            .counter(
+                                "gw_requests_total",
+                                &[("route", "none"), ("status", "404")],
+                            )
+                            .inc();
+                        return Reply::full(Response::json(
+                            404,
+                            &Json::obj().set(
+                                "error",
+                                Json::obj()
+                                    .set(
+                                        "message",
+                                        format!(
+                                            "model {what} is not served here \
+                                             (GET /v1/models lists the fleet)"
+                                        ),
+                                    )
+                                    .set("type", "model_not_found")
+                                    .set("code", 404),
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        let Some(route_idx) = resolved_idx.or_else(|| {
+            self.routes
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| req.path.starts_with(&r.prefix))
+                .max_by_key(|(_, r)| r.prefix.len())
+                .map(|(i, _)| i)
+        }) else {
             self.metrics.counter("gw_requests_total", &[("route", "none"), ("status", "404")]).inc();
             return Reply::full(Response::json(404, &Json::obj().set("error", "no route")));
         };
@@ -668,7 +798,14 @@ impl Gateway {
         let t0 = self.clock.now_us();
 
         // --- forward ---
-        let suffix = req.path[route.prefix.len()..].to_string();
+        // A registry-resolved request forwards to the route's rewrite
+        // alone (the rewrite is the complete upstream path); a
+        // prefix-matched request carries its path suffix along.
+        let suffix = if via_registry {
+            String::new()
+        } else {
+            req.path[route.prefix.len()..].to_string()
+        };
         let parsed_body = Json::parse(req.body_str()).ok();
         let is_stream =
             parsed_body.as_ref().map(|j| j.bool_or("stream", false)).unwrap_or(false);
@@ -738,9 +875,9 @@ impl Gateway {
                 let mut attempt = 0u32;
                 let mut last_failed: Option<String> = None;
                 loop {
-                    let (up_idx, upstream) =
+                    let pick =
                         route.attempt_upstream(last_failed.as_deref(), gw.clock.now_us());
-                    let url = format!("{}{}{}", upstream, route.rewrite, suffix);
+                    let url = format!("{}{}{}", pick.url, route.rewrite, suffix);
                     let res = http::request_stream_coalesced(
                         &method,
                         &url,
@@ -776,13 +913,13 @@ impl Gateway {
                                 && !forwarded
                                 && attempt + 1 < max_attempts =>
                         {
-                            gw.report_upstream(route, up_idx, false);
+                            gw.report_upstream(route, &pick, false);
                             if gw.retry_pause(&mut backoff, deadline_us) {
                                 metrics
                                     .counter("gw_retries_total", &[("route", &route_name)])
                                     .inc();
                                 attempt += 1;
-                                last_failed = Some(upstream);
+                                last_failed = Some(pick.url);
                                 continue;
                             }
                             // Deadline budget exhausted: the failure is
@@ -795,7 +932,7 @@ impl Gateway {
                             return Ok(());
                         }
                         Ok((status, aborted, saved)) => {
-                            gw.report_upstream(route, up_idx, !retryable_status(status));
+                            gw.report_upstream(route, &pick, !retryable_status(status));
                             metrics
                                 .histogram("gw_latency_seconds", &[("route", &route_name)])
                                 .observe(gw.clock.now_us().saturating_sub(t0) as f64 / 1e6);
@@ -831,13 +968,13 @@ impl Gateway {
                             return Ok(());
                         }
                         Err(_) if !forwarded && attempt + 1 < max_attempts => {
-                            gw.report_upstream(route, up_idx, false);
+                            gw.report_upstream(route, &pick, false);
                             if gw.retry_pause(&mut backoff, deadline_us) {
                                 metrics
                                     .counter("gw_retries_total", &[("route", &route_name)])
                                     .inc();
                                 attempt += 1;
-                                last_failed = Some(upstream);
+                                last_failed = Some(pick.url);
                                 continue;
                             }
                             sink.send_event(
@@ -846,7 +983,7 @@ impl Gateway {
                             return Ok(());
                         }
                         Err(e) => {
-                            gw.report_upstream(route, up_idx, false);
+                            gw.report_upstream(route, &pick, false);
                             metrics
                                 .histogram("gw_latency_seconds", &[("route", &route_name)])
                                 .observe(gw.clock.now_us().saturating_sub(t0) as f64 / 1e6);
@@ -865,9 +1002,8 @@ impl Gateway {
             let mut reply = None;
             let mut last_failed: Option<String> = None;
             for attempt in 0..max_attempts {
-                let (up_idx, upstream) =
-                    route.attempt_upstream(last_failed.as_deref(), self.clock.now_us());
-                let url = format!("{}{}{}", upstream, route.rewrite, suffix);
+                let pick = route.attempt_upstream(last_failed.as_deref(), self.clock.now_us());
+                let url = format!("{}{}{}", pick.url, route.rewrite, suffix);
                 match http::pooled_request(&method, &url, &h, &body) {
                     // A dead or instance-less upstream answers 502/503; the
                     // next attempt may land on a healthy path (a different
@@ -876,7 +1012,7 @@ impl Gateway {
                     Ok(resp)
                         if attempt + 1 < max_attempts && retryable_status(resp.status) =>
                     {
-                        self.report_upstream(route, up_idx, false);
+                        self.report_upstream(route, &pick, false);
                         if !self.retry_pause(&mut backoff, deadline_us) {
                             // Deadline budget exhausted: surface the last
                             // failure instead of pausing past it.
@@ -895,14 +1031,14 @@ impl Gateway {
                         metrics
                             .counter("gw_retries_total", &[("route", &route_name)])
                             .inc();
-                        last_failed = Some(upstream);
+                        last_failed = Some(pick.url);
                     }
                     // An upstream 429 is overload, not death: honor its
                     // Retry-After pacing hint instead of burning the retry
                     // budget against a neighbour in the same instant. No
                     // hint = no pacing information → the 429 is final.
                     Ok(resp) if resp.status == 429 && attempt + 1 < max_attempts => {
-                        self.report_upstream(route, up_idx, true);
+                        self.report_upstream(route, &pick, true);
                         match resp
                             .header_value("retry-after")
                             .and_then(|v| v.trim().parse::<u64>().ok())
@@ -932,7 +1068,7 @@ impl Gateway {
                         }
                     }
                     Ok(resp) => {
-                        self.report_upstream(route, up_idx, !retryable_status(resp.status));
+                        self.report_upstream(route, &pick, !retryable_status(resp.status));
                         metrics
                             .counter(
                                 "gw_requests_total",
@@ -958,7 +1094,7 @@ impl Gateway {
                         break;
                     }
                     Err(_) if attempt + 1 < max_attempts => {
-                        self.report_upstream(route, up_idx, false);
+                        self.report_upstream(route, &pick, false);
                         if !self.retry_pause(&mut backoff, deadline_us) {
                             metrics
                                 .counter(
@@ -976,10 +1112,10 @@ impl Gateway {
                         metrics
                             .counter("gw_retries_total", &[("route", &route_name)])
                             .inc();
-                        last_failed = Some(upstream);
+                        last_failed = Some(pick.url);
                     }
                     Err(e) => {
-                        self.report_upstream(route, up_idx, false);
+                        self.report_upstream(route, &pick, false);
                         metrics
                             .counter(
                                 "gw_requests_total",
@@ -1749,5 +1885,100 @@ mod tests {
         // Requests already under the clamp are left alone.
         assert_eq!(ask(b"{\"max_tokens\":4}"), 4);
         assert_eq!(metrics.counter("gw_brownout_total", &[("route", "m")]).get(), 1);
+    }
+
+    #[test]
+    fn breaker_state_survives_upstream_set_swap() {
+        // Regression: breaker state used to be positional (one Vec slot per
+        // upstream index), so swapping the upstream set handed upstream A's
+        // open breaker to whatever URL landed on A's old index. State is
+        // now keyed by upstream identity.
+        let route =
+            Route::new("m", "/c/", vec!["http://a".into(), "http://b".into()], "/x");
+        let a_breaker = route.upstreams.lock().unwrap().breakers["http://a"].clone();
+        for _ in 0..3 {
+            a_breaker.on_failure(1_000); // default threshold: 3 consecutive
+        }
+        assert_eq!(a_breaker.state_code(), 1, "A should be open");
+        // C joins at index 0 — exactly where A used to sit.
+        route.set_upstreams(vec!["http://c".into(), "http://a".into(), "http://b".into()]);
+        {
+            let set = route.upstreams.lock().unwrap();
+            assert_eq!(
+                set.breakers["http://a"].state_code(),
+                1,
+                "A's open breaker must survive the swap"
+            );
+            assert_eq!(set.breakers["http://c"].state_code(), 0, "new upstream starts closed");
+            assert_eq!(set.breakers["http://b"].state_code(), 0);
+        }
+        // The rotation keeps ejecting A (still inside its open window) and
+        // serves C and B — under the positional scheme C would have
+        // inherited the open state and A would be readmitted.
+        for _ in 0..6 {
+            let pick = route.attempt_upstream(None, 2_000);
+            assert_ne!(pick.url, "http://a", "open breaker readmitted after the swap");
+        }
+        // A pick taken before a swap still reports to the right breaker
+        // even once its URL is gone from the set.
+        let pick = route.attempt_upstream(None, 2_000);
+        route.set_upstreams(vec!["http://a".into()]);
+        pick.breaker.on_success();
+        assert_eq!(pick.breaker.state_code(), 0, "late report lost its breaker");
+    }
+
+    #[test]
+    fn model_addressable_endpoint_resolves_body_model() {
+        let up = upstream_echo();
+        let routes = vec![Route::new(
+            "intel-neural-7b",
+            "/v1/m/intel-neural-7b/",
+            vec![up.url()],
+            "/infer/intel-neural-7b",
+        )];
+        let (gateway, server) = gw(routes, None);
+        let reg = ModelRegistry::new();
+        reg.register("intel-neural-7b", "intel-neural-7b", || ModelStatus {
+            ready: 1,
+            total: 1,
+            scale_from_zero: false,
+        });
+        gateway.set_model_registry(reg);
+        // The body `model` picks the route; the route's rewrite alone
+        // forms the upstream path (no path suffix to carry).
+        let r = http::request(
+            "POST",
+            &format!("{}/v1/chat/completions", server.url()),
+            &[("authorization", "Bearer key-abc")],
+            b"{\"model\":\"intel-neural-7b\"}",
+        )
+        .unwrap();
+        assert_eq!(r.status, 200);
+        let j = r.json_body().unwrap();
+        assert_eq!(j.str_or("path", ""), "/infer/intel-neural-7b");
+        assert_eq!(j.str_or("user", ""), "api-user-1");
+        // Unknown model: a structured, machine-readable 404 — before auth,
+        // matching the public fleet listing below.
+        let r = http::request(
+            "POST",
+            &format!("{}/v1/chat/completions", server.url()),
+            &[("authorization", "Bearer key-abc")],
+            b"{\"model\":\"gpt-9000\"}",
+        )
+        .unwrap();
+        assert_eq!(r.status, 404);
+        let j = r.json_body().unwrap();
+        assert_eq!(j.at(&["error", "type"]).unwrap().as_str().unwrap(), "model_not_found");
+        assert!(j.at(&["error", "message"]).unwrap().as_str().unwrap().contains("gpt-9000"));
+        // GET /v1/models is public and reports per-model fleet state.
+        let r = http::get(&format!("{}/v1/models", server.url())).unwrap();
+        assert_eq!(r.status, 200);
+        let j = r.json_body().unwrap();
+        assert_eq!(j.str_or("object", ""), "list");
+        assert_eq!(
+            j.at(&["data", "0", "id"]).unwrap().as_str().unwrap(),
+            "intel-neural-7b"
+        );
+        assert_eq!(j.at(&["data", "0", "state"]).unwrap().as_str().unwrap(), "ready");
     }
 }

@@ -1,0 +1,183 @@
+//! Model registry: the dynamic model → route resolution behind the
+//! gateway's model-addressable API.
+//!
+//! The paper's deployment pins one URL path per model
+//! (`/v1/m/<model>/…`), which makes adding a model a gateway config
+//! change. The registry inverts that: clients POST to the single
+//! `/v1/chat/completions` endpoint and name the model in the request
+//! body, OpenAI-style; the gateway resolves the name here and forwards
+//! through the named route. `GET /v1/models` lists the fleet with live
+//! replica-group state, so clients can discover what is served — and
+//! whether a request will be answered warm, after a cold start, or only
+//! after waking a scaled-to-zero group.
+//!
+//! Status is pulled, not pushed: each entry carries a closure the stack
+//! wires to the scheduler's routing table, so the listing always reflects
+//! the replica groups as they are *now*, with no cache to invalidate.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Point-in-time status of one model's replica group.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelStatus {
+    /// Replicas past their readiness probe (serving now).
+    pub ready: usize,
+    /// Replicas that exist, ready or still weight-loading.
+    pub total: usize,
+    /// The group may idle at zero replicas (`min_instances == 0`): the
+    /// first request wakes it and pays the weight-load cold start.
+    pub scale_from_zero: bool,
+}
+
+impl ModelStatus {
+    /// State label for `GET /v1/models`: `ready` (≥1 replica answers
+    /// immediately), `cold` (replicas exist but none finished loading —
+    /// requests queue behind the weight load), or `scale_from_zero` (no
+    /// replicas at all; the first request starts one).
+    pub fn state(&self) -> &'static str {
+        if self.ready > 0 {
+            "ready"
+        } else if self.total > 0 || !self.scale_from_zero {
+            "cold"
+        } else {
+            "scale_from_zero"
+        }
+    }
+}
+
+type StatusFn = Arc<dyn Fn() -> ModelStatus + Send + Sync>;
+
+/// One addressable model.
+struct ModelEntry {
+    name: String,
+    /// Gateway route (by name) this model's requests forward through.
+    route: String,
+    status: StatusFn,
+}
+
+/// The model name → route table. Shared by the gateway (resolution and
+/// listing) and the stack assembly (registration); registration order is
+/// listing order.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Mutex<Vec<ModelEntry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry::default())
+    }
+
+    /// Register a model (replacing any previous entry of the same name):
+    /// requests naming `name` forward through the route named `route`,
+    /// and `status` is polled for the `/v1/models` listing.
+    pub fn register(
+        &self,
+        name: &str,
+        route: &str,
+        status: impl Fn() -> ModelStatus + Send + Sync + 'static,
+    ) {
+        let mut models = self.models.lock().unwrap();
+        models.retain(|e| e.name != name);
+        models.push(ModelEntry {
+            name: name.into(),
+            route: route.into(),
+            status: Arc::new(status),
+        });
+    }
+
+    /// Resolve a request-body `model` to its route name. `None` = unknown
+    /// model (the gateway answers a structured 404).
+    pub fn resolve(&self, model: &str) -> Option<String> {
+        self.models
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|e| e.name == model)
+            .map(|e| e.route.clone())
+    }
+
+    /// Registered model names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.models.lock().unwrap().iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// The `GET /v1/models` body: an OpenAI-style list, each entry
+    /// annotated with live replica-group state.
+    pub fn list(&self) -> Json {
+        let data: Vec<Json> = self
+            .models
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| {
+                let st = (e.status)();
+                Json::obj()
+                    .set("id", e.name.as_str())
+                    .set("object", "model")
+                    .set("state", st.state())
+                    .set("ready", st.ready)
+                    .set("total", st.total)
+                    .set("scale_from_zero", st.scale_from_zero)
+            })
+            .collect();
+        Json::obj().set("object", "list").set("data", data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_labels_cover_the_lifecycle() {
+        let s = |ready, total, sfz| ModelStatus { ready, total, scale_from_zero: sfz };
+        assert_eq!(s(2, 3, false).state(), "ready");
+        assert_eq!(s(0, 2, false).state(), "cold", "booting replicas are cold");
+        assert_eq!(s(0, 0, true).state(), "scale_from_zero");
+        // min_instances > 0 with no replicas yet: the scheduler is about
+        // to start one — that is a cold start, not scale-from-zero.
+        assert_eq!(s(0, 0, false).state(), "cold");
+    }
+
+    #[test]
+    fn resolve_and_replace() {
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.resolve("m"), None);
+        reg.register("m", "route-a", || ModelStatus {
+            ready: 0,
+            total: 0,
+            scale_from_zero: true,
+        });
+        assert_eq!(reg.resolve("m").as_deref(), Some("route-a"));
+        // Re-registration replaces, not duplicates.
+        reg.register("m", "route-b", || ModelStatus {
+            ready: 1,
+            total: 1,
+            scale_from_zero: false,
+        });
+        assert_eq!(reg.resolve("m").as_deref(), Some("route-b"));
+        assert_eq!(reg.names(), vec!["m".to_string()]);
+    }
+
+    #[test]
+    fn listing_polls_live_status() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let reg = ModelRegistry::new();
+        let ready = Arc::new(AtomicUsize::new(0));
+        let r2 = ready.clone();
+        reg.register("m", "m", move || ModelStatus {
+            ready: r2.load(Ordering::SeqCst),
+            total: 1,
+            scale_from_zero: false,
+        });
+        let state_of = |j: &Json| {
+            j.at(&["data", "0", "state"]).unwrap().as_str().unwrap().to_string()
+        };
+        assert_eq!(state_of(&reg.list()), "cold");
+        ready.store(1, Ordering::SeqCst);
+        assert_eq!(state_of(&reg.list()), "ready", "listing must not cache status");
+    }
+}

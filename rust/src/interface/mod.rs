@@ -38,6 +38,11 @@ pub const EXIT_OK: i32 = 0;
 pub const EXIT_NO_INSTANCE: i32 = 3;
 pub const EXIT_BAD_REQUEST: i32 = 2;
 
+/// Load gap (in-flight requests) past the fleet minimum at which a
+/// session abandons its affine home replica for the least-loaded one:
+/// a hot prefix cache saves prefill, not a queue wait.
+const AFFINITY_SPILL_MARGIN: i64 = 2;
+
 pub struct CloudInterface {
     scheduler: Arc<ServiceScheduler>,
     metrics: Registry,
@@ -133,11 +138,24 @@ impl CloudInterface {
     }
 
     fn handle_models(&self, out: &mut dyn FnMut(&[u8]) -> Result<()>) -> i32 {
+        // Iterate the configured specs, not the routing table: a group
+        // scaled to zero has no instances but is still addressable (the
+        // first request wakes it), so it must appear in the listing.
         let mut list = Vec::new();
-        for s in self.scheduler.routing.services() {
-            let ready = self.scheduler.routing.ready_instances(&s).len();
-            let total = self.scheduler.routing.instances(&s).len();
-            list.push(Json::obj().set("id", s.as_str()).set("ready", ready).set("total", total));
+        for spec in self.scheduler.services() {
+            let status = crate::gateway::ModelStatus {
+                ready: self.scheduler.routing.ready_instances(&spec.name).len(),
+                total: self.scheduler.routing.instances(&spec.name).len(),
+                scale_from_zero: spec.min_instances == 0,
+            };
+            list.push(
+                Json::obj()
+                    .set("id", spec.name.as_str())
+                    .set("state", status.state())
+                    .set("ready", status.ready)
+                    .set("total", status.total)
+                    .set("scale_from_zero", status.scale_from_zero),
+            );
         }
         let _ = Self::reply_status(out, 200);
         let _ = out(Json::obj().set("object", "list").set("data", list).dump().as_bytes());
@@ -218,12 +236,19 @@ impl CloudInterface {
         let arrived_us = self.clock.now_us();
         let parsed = Json::parse(std::str::from_utf8(stdin).unwrap_or("")).ok();
         let budget_ms = parsed.as_ref().map_or(0, |j| j.u64_or("deadline_ms", 0));
+        // Conversation id for cache-affine routing: a multi-turn chat that
+        // keeps landing on the same replica re-prefills nothing but its
+        // newest turn (the prefix cache holds the rest).
+        let session = parsed
+            .as_ref()
+            .and_then(|j| j.get("session").and_then(|s| s.as_str().map(String::from)));
 
-        // Least-loaded balancing over ready instances (random tie-break:
-        // §5.6's random balancing as the degenerate case), waiting out a
-        // cold start up to queue_timeout (§7.1.3 scale-to-zero queueing) —
-        // but never past the request's own deadline budget: a request that
-        // can no longer be answered in time must not keep waiting.
+        // Session-affine placement when the body names a conversation,
+        // least-loaded with random tie-break otherwise (§5.6's random
+        // balancing as the degenerate case) — waiting out a cold start up
+        // to queue_timeout (§7.1.3 scale-to-zero queueing), but never past
+        // the request's own deadline budget: a request that can no longer
+        // be answered in time must not keep waiting.
         let max_wait = match budget_ms {
             0 => self.queue_timeout,
             ms => self.queue_timeout.min(Duration::from_millis(ms)),
@@ -236,10 +261,29 @@ impl CloudInterface {
         let inst = loop {
             let picked = {
                 let mut rng = self.rng.lock().unwrap();
-                self.scheduler.routing.pick_least_loaded(service, &mut rng)
+                match session.as_deref() {
+                    Some(sess) => self.scheduler.routing.pick_affine(
+                        service,
+                        sess,
+                        AFFINITY_SPILL_MARGIN,
+                        &mut rng,
+                    ),
+                    None => self
+                        .scheduler
+                        .routing
+                        .pick_least_loaded(service, &mut rng)
+                        .map(|i| (i, false)),
+                }
             };
             match picked {
-                Some(i) => break Some(i),
+                Some((i, affine_hit)) => {
+                    if affine_hit {
+                        self.metrics
+                            .counter("sched_affinity_hits_total", &[("service", service)])
+                            .inc();
+                    }
+                    break Some(i);
+                }
                 None if self.clock.now_us() < deadline_us => {
                     queued_gauge.add(1);
                     self.clock.sleep(Duration::from_millis(20));
@@ -483,6 +527,7 @@ mod tests {
             mem_gb: 16,
             walltime: Duration::from_secs(3600),
             max_scavengers: 0,
+            keep_alive: Duration::ZERO,
             backend: BackendKind::Sim { profile: "intel-neural-7b".into(), time_scale: 0.0 },
         }
     }

@@ -113,6 +113,9 @@ impl InstanceLauncher for RealLauncher {
                     .unwrap_or(10.0),
                 BackendKind::Pjrt { .. } => 2.0,
             };
+            metrics
+                .counter("launcher_model_load_total", &[("service", &service_name)])
+                .inc();
             let delay = Duration::from_secs_f64(load_secs * load_scale);
             if !delay.is_zero() {
                 clock.sleep(delay);

@@ -68,6 +68,13 @@ pub struct ServiceSpec {
     /// into schedule gaps when demand exceeds what `max_instances`
     /// guaranteed replicas cover. 0 disables the tier.
     pub max_scavengers: u32,
+    /// Scale-from-zero keep-alive (dslab-faas-style): after the service
+    /// last saw demand, at least one replica is kept warm for this long
+    /// even when the windowed average rounds to zero — so a returning
+    /// conversation does not pay a full weight-load cold start. Only
+    /// meaningful for `min_instances == 0` groups; `Duration::ZERO`
+    /// disables the floor.
+    pub keep_alive: Duration,
     pub backend: BackendKind,
 }
 
@@ -86,6 +93,7 @@ impl ServiceSpec {
             mem_gb: 64,
             walltime: Duration::from_secs(12 * 3600),
             max_scavengers: 0,
+            keep_alive: Duration::from_secs(300),
             backend: BackendKind::Sim { profile: name.to_string(), time_scale },
         }
     }
@@ -102,6 +110,7 @@ impl ServiceSpec {
             mem_gb: 16,
             walltime: Duration::from_secs(12 * 3600),
             max_scavengers: 0,
+            keep_alive: Duration::from_secs(300),
             backend: BackendKind::Pjrt { model: "tiny".into() },
         }
     }
@@ -190,6 +199,9 @@ pub struct ServiceScheduler {
     /// Resubmit holdoff per service: (backoff schedule, next-allowed-us).
     /// Populated only when `cfg.resubmit_backoff` is set.
     resubmit: Mutex<BTreeMap<String, (Backoff, u64)>>,
+    /// Last time each service had demand (in-flight or a non-zero windowed
+    /// average) — the anchor the keep-alive floor measures from.
+    last_busy: Mutex<BTreeMap<String, u64>>,
 }
 
 impl ServiceScheduler {
@@ -219,6 +231,7 @@ impl ServiceScheduler {
             metrics,
             drains: Mutex::new(BTreeMap::new()),
             resubmit: Mutex::new(BTreeMap::new()),
+            last_busy: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -349,7 +362,30 @@ impl ServiceScheduler {
             // tier covers up to `max_instances`; overflow (capped by
             // `max_scavengers`) is served opportunistically from gaps.
             let desired_total = (avg / spec.target_concurrency).ceil() as u32;
-            let desired = desired_total.clamp(spec.min_instances, spec.max_instances);
+            let mut desired = desired_total.clamp(spec.min_instances, spec.max_instances);
+            // Keep-alive floor (scale-from-zero groups): a service that saw
+            // demand within `keep_alive` of now keeps one replica warm even
+            // after the windowed average decays to zero, so a returning
+            // conversation skips the weight-load cold start.
+            if avg > 0.0 || self.demand.inflight(&spec.name) > 0 {
+                self.last_busy.lock().unwrap().insert(spec.name.clone(), now);
+            }
+            let keep_alive_us = spec.keep_alive.as_micros() as u64;
+            if desired == 0 && keep_alive_us > 0 && spec.max_instances > 0 {
+                let warm = self
+                    .last_busy
+                    .lock()
+                    .unwrap()
+                    .get(&spec.name)
+                    .map(|&t| now.saturating_sub(t) <= keep_alive_us)
+                    .unwrap_or(false);
+                if warm {
+                    desired = 1;
+                    self.metrics
+                        .counter("sched_keepalive_warm_total", &[("service", &spec.name)])
+                        .inc();
+                }
+            }
             self.metrics
                 .gauge("sched_desired_instances", &[("service", &spec.name)])
                 .set(desired as i64);
@@ -756,6 +792,7 @@ mod tests {
             mem_gb: 64,
             walltime: Duration::from_secs(3600),
             max_scavengers: 0,
+            keep_alive: Duration::ZERO,
             backend: BackendKind::Sim { profile: "intel-neural-7b".into(), time_scale: 0.0 },
         }
     }
@@ -859,6 +896,47 @@ mod tests {
         }
         assert_eq!(sched.routing.instances("m").len(), 1);
         assert!(!launcher.terminated.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn keep_alive_floors_scale_from_zero_until_idle_timeout() {
+        // A scale-from-zero group (min 0) with a 60 s keep-alive: demand
+        // wakes it, and after demand drains one replica stays warm until
+        // the keep-alive window expires — then the group returns to zero.
+        let mut spec = svc("m", 0, 2);
+        spec.keep_alive = Duration::from_secs(60);
+        let (sched, clock, launcher, _s) = setup(vec![spec]);
+        sched.run_once();
+        assert!(sched.routing.instances("m").is_empty(), "idle group must stay at zero");
+
+        let guard = sched.demand.begin("m");
+        let r = cycle(&sched, &clock);
+        assert_eq!(r.submitted.len(), 1, "demand did not wake the group");
+        launcher.all_healthy();
+        cycle(&sched, &clock);
+
+        // Demand drains. The windowed average decays over demand_window
+        // (60 s = 12 cycles); the keep-alive floor holds one replica for a
+        // further 60 s past the last busy sample.
+        drop(guard);
+        for _ in 0..20 {
+            cycle(&sched, &clock);
+            launcher.all_healthy();
+            assert!(
+                !sched.routing.instances("m").is_empty(),
+                "replica reaped inside the keep-alive window"
+            );
+        }
+        // Past the keep-alive window: scale back to zero.
+        let mut emptied = false;
+        for _ in 0..20 {
+            cycle(&sched, &clock);
+            if sched.routing.instances("m").is_empty() {
+                emptied = true;
+                break;
+            }
+        }
+        assert!(emptied, "keep-alive floor never released the warm replica");
     }
 
     #[test]

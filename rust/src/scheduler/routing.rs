@@ -166,6 +166,47 @@ impl RoutingTable {
         rng.choose(&min_set).cloned()
     }
 
+    /// Session-affine placement (DESIGN.md §Multi-model fleet): a returning
+    /// conversation lands on the replica whose prefix cache still holds its
+    /// history. The affine target is chosen by rendezvous (highest-random-
+    /// weight) hashing of the session key over the routable set, so replicas
+    /// joining or dying re-home only the sessions that mapped to them —
+    /// unlike modulo hashing, which reshuffles everything. Load-aware spill:
+    /// when the target is running more than `spill_margin` requests above
+    /// the least-loaded replica, the request spills to least-loaded instead
+    /// (a hot conversation must not pile onto an already-drowning replica).
+    /// Returns the instance plus whether the affine target was used — the
+    /// caller counts hits as `sched_affinity_hits_total`.
+    pub fn pick_affine(
+        &self,
+        service: &str,
+        session: &str,
+        spill_margin: i64,
+        rng: &mut Rng,
+    ) -> Option<(Instance, bool)> {
+        let ready = self.routable_instances(service);
+        if ready.is_empty() {
+            return None;
+        }
+        let target = ready
+            .iter()
+            .max_by_key(|i| (rendezvous_weight(session, i.job_id), i.job_id))
+            .cloned()?;
+        let over_spill = {
+            let loads = self.loads.lock().unwrap();
+            let load_of = |i: &Instance| {
+                loads.get(&i.job_id).map(|c| c.load(Ordering::SeqCst)).unwrap_or(0)
+            };
+            let min = ready.iter().map(load_of).min().unwrap_or(0);
+            load_of(&target) > min + spill_margin
+        };
+        if over_spill {
+            self.pick_least_loaded(service, rng).map(|i| (i, false))
+        } else {
+            Some((target, true))
+        }
+    }
+
     /// Is a port already reserved anywhere in the table?
     pub fn port_in_use(&self, port: u16) -> bool {
         self.inner
@@ -186,6 +227,20 @@ impl RoutingTable {
             }
         }
     }
+}
+
+/// FNV-1a over the session key, folded with the candidate's job id — the
+/// per-(session, replica) score rendezvous hashing maximizes. Pure and
+/// seedless: the same session over the same replica set always scores the
+/// same, which is what makes affinity replayable under virtual time.
+fn rendezvous_weight(session: &str, job: JobId) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in session.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h ^= job;
+    h.wrapping_mul(0x0100_0000_01b3)
 }
 
 /// Sliding-window concurrency tracking per service.
@@ -370,6 +425,94 @@ mod tests {
         // Removal forgets the drained instance entirely.
         t.remove(1);
         assert_eq!(t.instances("m").len(), 1);
+    }
+
+    #[test]
+    fn affine_pick_is_sticky_per_session() {
+        let t = RoutingTable::new();
+        for j in 1..=4 {
+            t.upsert(inst(j, "m", 20000 + j as u16, true));
+        }
+        let mut rng = Rng::new(11);
+        // Same conversation ⇒ same replica, every time, across many picks.
+        for session in ["conv-a", "conv-b", "conv-c", "conv-d", "conv-e"] {
+            let (first, hit) = t.pick_affine("m", session, 0, &mut rng).unwrap();
+            assert!(hit, "unloaded table must serve the affine target");
+            for _ in 0..20 {
+                let (again, hit) = t.pick_affine("m", session, 0, &mut rng).unwrap();
+                assert_eq!(again.job_id, first.job_id, "session {session} bounced");
+                assert!(hit);
+            }
+        }
+        // Sessions spread over the fleet rather than piling on one replica.
+        let mut homes = BTreeMap::new();
+        for s in 0..64 {
+            let (i, _) = t.pick_affine("m", &format!("conv-{s}"), 0, &mut rng).unwrap();
+            *homes.entry(i.job_id).or_insert(0u32) += 1;
+        }
+        assert!(homes.len() >= 3, "rendezvous hash collapsed the fleet: {homes:?}");
+        assert!(t.pick_affine("missing", "conv-a", 0, &mut rng).is_none());
+    }
+
+    #[test]
+    fn affine_session_rehomes_cleanly_on_replica_death() {
+        let t = RoutingTable::new();
+        for j in 1..=3 {
+            t.upsert(inst(j, "m", 20000 + j as u16, true));
+        }
+        let mut rng = Rng::new(13);
+        // Record every session's home, kill one replica, and require that
+        // only the dead replica's sessions move (minimal-disruption
+        // property of rendezvous hashing) — and that they move to a live
+        // replica deterministically.
+        let sessions: Vec<String> = (0..48).map(|s| format!("conv-{s}")).collect();
+        let before: BTreeMap<&str, JobId> = sessions
+            .iter()
+            .map(|s| (s.as_str(), t.pick_affine("m", s, 0, &mut rng).unwrap().0.job_id))
+            .collect();
+        let victim = before["conv-0"];
+        t.remove(victim);
+        for s in &sessions {
+            let (new_home, hit) = t.pick_affine("m", s, 0, &mut rng).unwrap();
+            assert!(hit);
+            assert_ne!(new_home.job_id, victim, "routed to a dead replica");
+            if before[s.as_str()] != victim {
+                assert_eq!(new_home.job_id, before[s.as_str()], "unaffected session {s} moved");
+            }
+        }
+        // Draining a replica re-homes its sessions just like death does.
+        let survivors: Vec<JobId> =
+            t.routable_instances("m").iter().map(|i| i.job_id).collect();
+        t.mark_draining(survivors[0]);
+        for s in &sessions {
+            let (home, _) = t.pick_affine("m", s, 0, &mut rng).unwrap();
+            assert_ne!(home.job_id, survivors[0], "routed to a draining replica");
+        }
+    }
+
+    #[test]
+    fn affine_pick_spills_to_least_loaded_when_target_is_hot() {
+        let t = RoutingTable::new();
+        t.upsert(inst(1, "m", 20001, true));
+        t.upsert(inst(2, "m", 20002, true));
+        let mut rng = Rng::new(17);
+        let (target, hit) = t.pick_affine("m", "conv-x", 1, &mut rng).unwrap();
+        assert!(hit);
+        let other = if target.job_id == 1 { 2 } else { 1 };
+        // Load the affine target past the spill margin: the session spills
+        // to the least-loaded replica and the pick reports a miss.
+        let _g1 = t.begin_request(target.job_id);
+        let _g2 = t.begin_request(target.job_id);
+        let (picked, hit) = t.pick_affine("m", "conv-x", 1, &mut rng).unwrap();
+        assert!(!hit, "overloaded target must not count as an affinity hit");
+        assert_eq!(picked.job_id, other);
+        // Within the margin the target keeps its sessions (cache beats a
+        // one-request imbalance).
+        let _g3 = t.begin_request(other);
+        let _g4 = t.begin_request(other);
+        let (picked, hit) = t.pick_affine("m", "conv-x", 1, &mut rng).unwrap();
+        assert!(hit);
+        assert_eq!(picked.job_id, target.job_id);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! One builder for both stacks.
+//!
+//! The wall-clock stack ([`ChatAiStack`]) and the virtual-time stack
+//! ([`SimStack`]) grew parallel configuration surfaces — `StackConfig`,
+//! `SimStackConfig`, and a sprawl of `with_clock` / `with_seed` /
+//! `with_engine_config` / `with_artifacts`-style knobs on the components
+//! underneath. They describe the *same* deployment (cluster, replica
+//! groups, scheduler tuning, engine tuning), differing only in which clock
+//! drives it; keeping two hand-maintained copies of that description is how
+//! a bench ends up measuring a config its paired test never ran.
+//!
+//! [`StackBuilder`] is the single description. Set the shared knobs once,
+//! then pick the clock at the end:
+//!
+//! ```no_run
+//! use chat_hpc::stack::StackBuilder;
+//! use chat_hpc::scheduler::ServiceSpec;
+//!
+//! let b = StackBuilder::new()
+//!     .with_services(vec![ServiceSpec::sim("intel-neural-7b", 1.0)])
+//!     .with_seed(42);
+//! let sim = b.build_sim();            // virtual time, deterministic
+//! # let b2 = StackBuilder::new();
+//! let real = b2.build().unwrap();     // wall clock, real sockets
+//! ```
+//!
+//! Flavor-specific defaults stay flavor-specific: unless overridden,
+//! `build()` keeps the wall-clock defaults (milliseconds-scaled cold
+//! starts, 50 ms keepalive) and `build_sim()` keeps the virtual-time
+//! defaults (realistic cold starts, 5 s keepalive) — virtual seconds are
+//! free, so there is nothing to speed up. Knobs that only exist on one
+//! side (SSH pool shape, shed/brownout watermarks) are reachable through
+//! the [`StackBuilder::real_config`] / [`StackBuilder::sim_config`] escape
+//! hatches, which return the fully-mapped config for further tweaking.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::llmserver::EngineConfig;
+use crate::scheduler::{SchedulerConfig, ServiceSpec};
+use crate::slurm::ClusterSpec;
+use crate::util::faults::FaultPlan;
+
+use super::{ChatAiStack, SimStack, SimStackConfig, StackConfig};
+
+/// Shared deployment description for [`ChatAiStack`] and [`SimStack`].
+///
+/// Every setter is chainable and optional; terminals are [`build`]
+/// ([`ChatAiStack`], wall clock) and [`build_sim`] ([`SimStack`], virtual
+/// time).
+///
+/// [`build`]: StackBuilder::build
+/// [`build_sim`]: StackBuilder::build_sim
+pub struct StackBuilder {
+    cluster: ClusterSpec,
+    /// Empty = the flavor's default single-service fleet.
+    services: Vec<ServiceSpec>,
+    scheduler: SchedulerConfig,
+    engine: EngineConfig,
+    seed: u64,
+    /// `None` = flavor default (real 50 ms, sim 5 s).
+    keepalive: Option<Duration>,
+    /// `None` = flavor default (real 1e-3, sim 1.0).
+    load_time_scale: Option<f64>,
+    queue_timeout: Duration,
+    dual_channel: bool,
+    session_affinity: bool,
+    with_external: bool,
+    rate_limit_rps: Option<f64>,
+    faults: FaultPlan,
+}
+
+impl Default for StackBuilder {
+    fn default() -> StackBuilder {
+        StackBuilder::new()
+    }
+}
+
+impl StackBuilder {
+    pub fn new() -> StackBuilder {
+        StackBuilder {
+            cluster: ClusterSpec::kisski(),
+            services: Vec::new(),
+            scheduler: SchedulerConfig::default(),
+            engine: EngineConfig::default(),
+            seed: 7,
+            keepalive: None,
+            load_time_scale: None,
+            queue_timeout: Duration::from_secs(30),
+            dual_channel: false,
+            session_affinity: true,
+            with_external: true,
+            rate_limit_rps: None,
+            faults: FaultPlan::new(),
+        }
+    }
+
+    pub fn with_cluster(mut self, cluster: ClusterSpec) -> StackBuilder {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Replace the fleet (one [`ServiceSpec`] per replica group / model).
+    pub fn with_services(mut self, services: Vec<ServiceSpec>) -> StackBuilder {
+        self.services = services;
+        self
+    }
+
+    /// Append one replica group to the fleet.
+    pub fn with_service(mut self, spec: ServiceSpec) -> StackBuilder {
+        self.services.push(spec);
+        self
+    }
+
+    pub fn with_scheduler(mut self, cfg: SchedulerConfig) -> StackBuilder {
+        self.scheduler = cfg;
+        self
+    }
+
+    /// Engine tuning applied to every instance core. The wall-clock stack
+    /// threads the deployment-relevant subset (`abort_on_disconnect`,
+    /// `prefill_chunk`, `prefix_cache`, `zero_copy_sse`); the sim stack
+    /// takes the config whole.
+    pub fn with_engine_config(mut self, cfg: EngineConfig) -> StackBuilder {
+        self.engine = cfg;
+        self
+    }
+
+    /// Root seed ([`SimStack`] only: wall-clock runs are not replayable).
+    pub fn with_seed(mut self, seed: u64) -> StackBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Scheduler tick / keepalive interval (paper: 5 s).
+    pub fn with_keepalive(mut self, keepalive: Duration) -> StackBuilder {
+        self.keepalive = Some(keepalive);
+        self
+    }
+
+    /// Cold-start (weight-load) time scale: 1.0 = the paper's minutes-long
+    /// 70B loads.
+    pub fn with_load_time_scale(mut self, scale: f64) -> StackBuilder {
+        self.load_time_scale = Some(scale);
+        self
+    }
+
+    /// How long a request may wait for a routable instance (e.g. through a
+    /// scale-from-zero cold start) before failing with `queue_timeout`.
+    pub fn with_queue_timeout(mut self, timeout: Duration) -> StackBuilder {
+        self.queue_timeout = timeout;
+        self
+    }
+
+    pub fn with_dual_channel(mut self, on: bool) -> StackBuilder {
+        self.dual_channel = on;
+        self
+    }
+
+    /// Session-affine placement ([`SimStack`] honours this; the wall-clock
+    /// interface reads the request's `session` key unconditionally).
+    pub fn with_session_affinity(mut self, on: bool) -> StackBuilder {
+        self.session_affinity = on;
+        self
+    }
+
+    /// Also stand up the external GPT-4 wrapper route ([`ChatAiStack`]
+    /// only).
+    pub fn with_external(mut self, on: bool) -> StackBuilder {
+        self.with_external = on;
+        self
+    }
+
+    /// Per-user token-bucket rate limit at the gateway hop ([`SimStack`]
+    /// only; the wall-clock gateway rate-limits per route).
+    pub fn with_rate_limit_rps(mut self, rps: Option<f64>) -> StackBuilder {
+        self.rate_limit_rps = rps;
+        self
+    }
+
+    /// Deterministic fault schedule ([`SimStack`] only).
+    pub fn with_faults(mut self, plan: FaultPlan) -> StackBuilder {
+        self.faults = plan;
+        self
+    }
+
+    /// Map onto a wall-clock [`StackConfig`] — the escape hatch for
+    /// real-stack-only knobs (SSH pool shape, frame delays): tweak the
+    /// returned config and pass it to [`ChatAiStack::start`] yourself.
+    pub fn real_config(&self) -> StackConfig {
+        let defaults = StackConfig::default();
+        StackConfig {
+            cluster: self.cluster.clone(),
+            services: if self.services.is_empty() {
+                defaults.services.clone()
+            } else {
+                self.services.clone()
+            },
+            load_time_scale: self.load_time_scale.unwrap_or(defaults.load_time_scale),
+            keepalive: self.keepalive.unwrap_or(defaults.keepalive),
+            queue_timeout: self.queue_timeout,
+            with_external: self.with_external,
+            dual_channel: self.dual_channel,
+            abort_on_disconnect: self.engine.abort_on_disconnect,
+            prefill_chunk: self.engine.prefill_chunk,
+            prefix_cache: self.engine.prefix_cache,
+            zero_copy_sse: self.engine.zero_copy_sse,
+            scheduler: self.scheduler.clone(),
+            ..defaults
+        }
+    }
+
+    /// Map onto a virtual-time [`SimStackConfig`] — the escape hatch for
+    /// sim-only knobs (shed/brownout watermarks, placement poll): tweak
+    /// the returned config and pass it to [`SimStack::start`] yourself.
+    pub fn sim_config(&self) -> SimStackConfig {
+        let defaults = SimStackConfig::default();
+        SimStackConfig {
+            seed: self.seed,
+            cluster: self.cluster.clone(),
+            services: if self.services.is_empty() {
+                defaults.services.clone()
+            } else {
+                self.services.clone()
+            },
+            load_time_scale: self.load_time_scale.unwrap_or(defaults.load_time_scale),
+            keepalive: self.keepalive.unwrap_or(defaults.keepalive),
+            queue_timeout: self.queue_timeout,
+            rate_limit_rps: self.rate_limit_rps,
+            engine: self.engine.clone(),
+            scheduler: self.scheduler.clone(),
+            dual_channel: self.dual_channel,
+            faults: self.faults.clone(),
+            session_affinity: self.session_affinity,
+            ..defaults
+        }
+    }
+
+    /// Start the wall-clock stack (real sockets, SSH sim, threads).
+    pub fn build(self) -> Result<ChatAiStack> {
+        ChatAiStack::start(self.real_config())
+    }
+
+    /// Start the virtual-time stack (discrete events, seed-replayable).
+    pub fn build_sim(self) -> SimStack {
+        SimStack::start(self.sim_config())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stack::SimRequest;
+
+    #[test]
+    fn flavor_defaults_survive_the_shared_description() {
+        let b = StackBuilder::new();
+        let real = b.real_config();
+        let sim = b.sim_config();
+        // The same untouched builder keeps each flavor's own scales.
+        assert_eq!(real.load_time_scale, StackConfig::default().load_time_scale);
+        assert_eq!(sim.load_time_scale, 1.0);
+        assert_eq!(real.keepalive, Duration::from_millis(50));
+        assert_eq!(sim.keepalive, Duration::from_secs(5));
+        assert_eq!(real.queue_timeout, Duration::from_secs(30));
+        assert_eq!(sim.queue_timeout, Duration::from_secs(30));
+        assert_eq!(sim.seed, 7);
+        assert!(sim.session_affinity);
+        // Empty fleet = flavor default fleet.
+        assert_eq!(real.services.len(), 1);
+        assert_eq!(sim.services.len(), 1);
+    }
+
+    #[test]
+    fn shared_knobs_reach_both_configs() {
+        let b = StackBuilder::new()
+            .with_seed(42)
+            .with_keepalive(Duration::from_millis(100))
+            .with_load_time_scale(0.25)
+            .with_queue_timeout(Duration::from_secs(120))
+            .with_dual_channel(true)
+            .with_session_affinity(false)
+            .with_engine_config(EngineConfig { prefix_cache: false, ..Default::default() });
+        let real = b.real_config();
+        let sim = b.sim_config();
+        assert_eq!(real.keepalive, Duration::from_millis(100));
+        assert_eq!(sim.keepalive, Duration::from_millis(100));
+        assert_eq!(real.load_time_scale, 0.25);
+        assert_eq!(sim.load_time_scale, 0.25);
+        assert_eq!(real.queue_timeout, Duration::from_secs(120));
+        assert_eq!(sim.queue_timeout, Duration::from_secs(120));
+        assert!(real.dual_channel && sim.dual_channel);
+        assert!(!real.prefix_cache);
+        assert!(!sim.engine.prefix_cache);
+        assert_eq!(sim.seed, 42);
+        assert!(!sim.session_affinity);
+    }
+
+    #[test]
+    fn builder_built_sim_replays_identically_to_direct_config() {
+        let run = |via_builder: bool| {
+            let stack = if via_builder {
+                StackBuilder::new().with_seed(11).build_sim()
+            } else {
+                SimStack::start(SimStackConfig { seed: 11, ..Default::default() })
+            };
+            for i in 0..5u64 {
+                stack.submit_chat_at(40_000_000 + i * 250_000, SimRequest::default());
+            }
+            assert!(stack.run_until_settled(Duration::from_secs(300)));
+            stack.trace()
+        };
+        assert_eq!(
+            run(true),
+            run(false),
+            "builder must describe exactly the config it replaces"
+        );
+    }
+}

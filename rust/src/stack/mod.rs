@@ -18,8 +18,10 @@
 //!
 //! Examples, integration tests and every bench build on this.
 
+pub mod builder;
 pub mod sim;
 
+pub use builder::StackBuilder;
 pub use sim::{SimRecord, SimRequest, SimStack, SimStackConfig};
 
 use std::sync::{Arc, Mutex};
@@ -30,7 +32,7 @@ use anyhow::{anyhow, Result};
 use crate::analytics::RequestLog;
 use crate::auth::SsoProvider;
 use crate::external::ExternalLlmService;
-use crate::gateway::{Consumer, Gateway, Route};
+use crate::gateway::{Consumer, Gateway, ModelRegistry, ModelStatus, Route};
 use crate::hpcproxy::{HpcProxy, ProxyConfig};
 use crate::interface::CloudInterface;
 use crate::scheduler::{RealLauncher, SchedulerConfig, ServiceScheduler, ServiceSpec};
@@ -54,6 +56,10 @@ pub struct StackConfig {
     pub load_time_scale: f64,
     /// Keepalive/tick interval (paper: 5 s; tests use tens of ms).
     pub keepalive: Duration,
+    /// How long the cloud interface queues a request waiting for a
+    /// routable instance (e.g. through a scale-from-zero cold start)
+    /// before failing it with `queue_timeout`.
+    pub queue_timeout: Duration,
     /// Also stand up the external GPT-4 wrapper route.
     pub with_external: bool,
     /// Emulated ESX↔HPC wire time per SSH frame (Table 1/2 benches set
@@ -102,6 +108,7 @@ impl Default for StackConfig {
             services: vec![ServiceSpec::sim("intel-neural-7b", 0.0)],
             load_time_scale: 0.001,
             keepalive: Duration::from_millis(50),
+            queue_timeout: Duration::from_secs(30),
             with_external: true,
             ssh_link_frame_delay: Duration::ZERO,
             ssh_pool_size: 1,
@@ -129,6 +136,8 @@ pub struct ChatAiStack {
     pub proxy: Arc<HpcProxy>,
     pub proxy_http: Server,
     pub gateway_server: Server,
+    /// Model-addressable API: name → route resolution + `GET /v1/models`.
+    pub registry: Arc<ModelRegistry>,
     pub webapp: WebApp,
     pub external: Option<ExternalLlmService>,
     /// Research-group API key provisioned by default.
@@ -138,6 +147,11 @@ pub struct ChatAiStack {
 }
 
 impl ChatAiStack {
+    /// Start from a raw [`StackConfig`]. Prefer [`super::StackBuilder`]
+    /// for new code — it shares one deployment description with
+    /// [`SimStack`] so a bench and its paired test cannot drift apart;
+    /// this remains the underlying entry point (and the escape hatch for
+    /// real-stack-only knobs).
     pub fn start(cfg: StackConfig) -> Result<ChatAiStack> {
         let metrics = Registry::new();
         let log = RequestLog::new();
@@ -171,7 +185,7 @@ impl ChatAiStack {
         let interface = Arc::new(
             CloudInterface::new(scheduler.clone(), metrics.clone())
                 .with_platform_key(e2ee_key.clone())
-                .with_queue_timeout(Duration::from_secs(30)),
+                .with_queue_timeout(cfg.queue_timeout),
         );
 
         // --- the circuit breaker -----------------------------------------
@@ -264,6 +278,32 @@ impl ChatAiStack {
             },
         ];
         let gateway = Gateway::new(routes, consumers, Some(sso.clone()), metrics.clone(), log.clone());
+
+        // Model-addressable API: every configured replica group registers
+        // under its own name, with live status pulled straight from the
+        // scheduler's routing table — `/v1/chat/completions` resolves the
+        // body `model` here, and `GET /v1/models` lists the fleet.
+        let registry = ModelRegistry::new();
+        for spec in &cfg.services {
+            let sched = scheduler.clone();
+            let name = spec.name.clone();
+            let scale_from_zero = spec.min_instances == 0;
+            registry.register(&spec.name, &spec.name, move || ModelStatus {
+                ready: sched.routing.ready_instances(&name).len(),
+                total: sched.routing.instances(&name).len(),
+                scale_from_zero,
+            });
+        }
+        if external.is_some() {
+            // The external wrapper is always addressable; capacity is the
+            // provider's concern, not this fleet's.
+            registry.register("gpt-4", "gpt-4", || ModelStatus {
+                ready: 1,
+                total: 1,
+                scale_from_zero: false,
+            });
+        }
+        gateway.set_model_registry(registry.clone());
         let gateway_server = gateway.start()?;
 
         Ok(ChatAiStack {
@@ -276,6 +316,7 @@ impl ChatAiStack {
             proxy,
             proxy_http,
             gateway_server,
+            registry,
             webapp,
             external,
             api_key,
@@ -300,7 +341,8 @@ impl ChatAiStack {
         Err(anyhow!("service {service} not ready within {timeout:?}"))
     }
 
-    /// One chat completion through the entire stack.
+    /// One chat completion through the entire stack, via the unified
+    /// model-addressable endpoint (the body `model` picks the route).
     pub fn chat(&self, model: &str, message: &str) -> Result<(u16, Json)> {
         let body = Json::obj()
             .set("model", model)
@@ -311,7 +353,7 @@ impl ChatAiStack {
             .set("stream", false);
         let resp = http::request(
             "POST",
-            &format!("{}/v1/m/{model}/", self.gateway_url()),
+            &format!("{}/v1/chat/completions", self.gateway_url()),
             &[
                 ("authorization", &format!("Bearer {}", self.api_key)),
                 ("content-type", "application/json"),
@@ -335,7 +377,7 @@ impl ChatAiStack {
         let mut text = String::new();
         http::request_stream(
             "POST",
-            &format!("{}/v1/m/{model}/", self.gateway_url()),
+            &format!("{}/v1/chat/completions", self.gateway_url()),
             &[
                 ("authorization", &format!("Bearer {}", self.api_key)),
                 ("content-type", "application/json"),
@@ -361,6 +403,8 @@ impl ChatAiStack {
 
     /// §7.1.4: end-to-end-encrypted chat — the body is sealed for the HPC
     /// platform; the gateway, proxy and SSH layers forward ciphertext only.
+    /// Sealed bodies are opaque to the gateway, so the model rides the URL
+    /// (the per-model path route), not the encrypted body.
     pub fn chat_sealed(&self, model: &str, message: &str) -> Result<(u16, Json)> {
         let body = Json::obj()
             .set("model", model)

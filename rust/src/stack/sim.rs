@@ -94,7 +94,18 @@ pub struct SimStackConfig {
     pub brownout_watermark: u32,
     /// The degraded token budget handed out under brownout.
     pub brownout_max_tokens: usize,
+    /// Session-affine placement: route a request to the replica whose
+    /// prefix cache most likely holds its conversation (rendezvous hash on
+    /// the session id, load-aware spill). Off ⇒ the seed behaviour,
+    /// least-loaded placement for every request.
+    pub session_affinity: bool,
 }
+
+/// How far above the least-loaded replica the affinity target may run
+/// before a request spills to least-loaded placement instead (in in-flight
+/// requests). Small: a hot home loses its cache win to queueing long
+/// before this many requests stack up.
+const AFFINITY_SPILL_MARGIN: i64 = 2;
 
 impl Default for SimStackConfig {
     fn default() -> SimStackConfig {
@@ -115,6 +126,7 @@ impl Default for SimStackConfig {
             shed_watermark: 0,
             brownout_watermark: 0,
             brownout_max_tokens: 8,
+            session_affinity: true,
         }
     }
 }
@@ -124,6 +136,10 @@ impl Default for SimStackConfig {
 pub struct SimRequest {
     pub user: String,
     pub model: String,
+    /// Conversation id the affinity hash keys on (multi-turn chats reuse
+    /// one id across turns). `None` falls back to the user id, so a user's
+    /// turns still share a home replica.
+    pub session: Option<String>,
     pub prompt: String,
     pub max_tokens: usize,
     /// End-to-end deadline budget in ms (queue wait counts toward it).
@@ -135,6 +151,7 @@ impl Default for SimRequest {
         SimRequest {
             user: "user-0".into(),
             model: "intel-neural-7b".into(),
+            session: None,
             prompt: "hello".into(),
             max_tokens: 16,
             deadline_ms: None,
@@ -205,6 +222,18 @@ struct SimLauncher {
     /// every live instance on the node and to later launches there, so a
     /// replacement replica placed on a still-gray node starts slow too.
     gray: Mutex<BTreeMap<String, u64>>,
+    /// Every modeled weight load, in launch order — folded into
+    /// [`SimStack::trace`] as `load …` lines so seed-replay pins the
+    /// cold-start accounting, not just request outcomes.
+    loads: Mutex<Vec<LoadRecord>>,
+}
+
+/// One modeled weight load (cold start) charged onto virtual time.
+struct LoadRecord {
+    job: JobId,
+    service: String,
+    start_us: u64,
+    ready_us: u64,
 }
 
 struct SimInstance {
@@ -273,10 +302,17 @@ impl InstanceLauncher for SimLauncher {
             self.metrics.clone(),
             self.clock.clone(),
         );
-        let ready_at_us = self
-            .clock
-            .now_us()
-            .saturating_add((load_secs * self.load_time_scale * 1e6) as u64);
+        let now = self.clock.now_us();
+        let ready_at_us = now.saturating_add((load_secs * self.load_time_scale * 1e6) as u64);
+        self.metrics
+            .counter("launcher_model_load_total", &[("service", &service.name)])
+            .inc();
+        self.loads.lock().unwrap().push(LoadRecord {
+            job: job_id,
+            service: service.name.clone(),
+            start_us: now,
+            ready_us: ready_at_us,
+        });
         self.instances.lock().unwrap().insert(
             job_id,
             Arc::new(SimInstance {
@@ -325,10 +361,16 @@ struct PendingReq {
     id: u64,
     user: String,
     model: String,
+    session: Option<String>,
     prompt: String,
     max_tokens: usize,
     deadline_ms: Option<u64>,
     submit_us: u64,
+    /// Demand guard held from gateway arrival (matching the cloud
+    /// interface): a scale-from-zero group must see demand while the
+    /// request is still queued, not only once placement succeeds —
+    /// otherwise nothing ever wakes a 0-instance model.
+    demand: InflightGuard,
 }
 
 struct SimInner {
@@ -373,6 +415,8 @@ struct SimInner {
     brownout_max_tokens: usize,
     /// Applied fault events, folded into `trace()` after the records.
     fault_log: RefCell<Vec<String>>,
+    /// Session-affine placement toggle (`SimStackConfig::session_affinity`).
+    session_affinity: bool,
 }
 
 /// The discrete-event serving stack. Schedule stimuli (`submit_chat_at`,
@@ -383,6 +427,11 @@ pub struct SimStack {
 }
 
 impl SimStack {
+    /// Start from a raw [`SimStackConfig`]. Prefer
+    /// [`crate::stack::StackBuilder`] for new code — it shares one
+    /// deployment description with [`super::ChatAiStack`]; this remains
+    /// the underlying entry point (and the escape hatch for sim-only
+    /// knobs like the shed/brownout watermarks).
     pub fn start(cfg: SimStackConfig) -> SimStack {
         let exec = Rc::new(SimExecutor::new(cfg.seed));
         let clock = exec.clock();
@@ -397,6 +446,7 @@ impl SimStack {
             engine_cfg: cfg.engine.clone(),
             instances: Mutex::new(BTreeMap::new()),
             gray: Mutex::new(BTreeMap::new()),
+            loads: Mutex::new(Vec::new()),
         });
         let scheduler = Arc::new(
             ServiceScheduler::new(
@@ -441,6 +491,7 @@ impl SimStack {
             brownout_watermark: cfg.brownout_watermark,
             brownout_max_tokens: cfg.brownout_max_tokens,
             fault_log: RefCell::new(Vec::new()),
+            session_affinity: cfg.session_affinity,
         });
         // Boot: the first scheduler pass (t = 0) submits min_instances.
         {
@@ -605,6 +656,15 @@ impl SimStack {
             out.push_str(line);
             out.push('\n');
         }
+        // Modeled weight loads close the trace: replaying a seed must
+        // reproduce the cold-start schedule (which job loaded which model,
+        // and how long the load took) byte-for-byte.
+        for l in self.inner.launcher.loads.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "load job={} service={} start_us={} ready_us={}\n",
+                l.job, l.service, l.start_us, l.ready_us
+            ));
+        }
         out
     }
 }
@@ -694,14 +754,20 @@ fn arrive(inner: &Rc<SimInner>, ex: &SimExecutor, id: u64, req: SimRequest) {
         max_tokens = inner.brownout_max_tokens;
         inner.metrics.counter("sim_brownout_total", &[]).inc();
     }
+    // Admitted: signal demand NOW, so a scale-from-zero replica group sees
+    // the queued request and wakes. The guard rides the pending request
+    // through placement retries and into its in-flight record.
+    let demand = inner.scheduler.demand.begin(&req.model);
     let p = PendingReq {
         id,
         user: req.user,
         model: req.model,
+        session: req.session,
         prompt: req.prompt,
         max_tokens,
         deadline_ms: req.deadline_ms,
         submit_us: now,
+        demand,
     };
     if inner.gateway_latency.is_zero() {
         try_place(inner, ex, p);
@@ -739,9 +805,17 @@ fn try_place(inner: &Rc<SimInner>, ex: &SimExecutor, p: PendingReq) {
     }
     let pick = {
         let mut rng = inner.route_rng.borrow_mut();
-        inner.scheduler.routing.pick_least_loaded(&p.model, &mut rng)
+        if inner.session_affinity {
+            let key = p.session.as_deref().unwrap_or(&p.user);
+            inner
+                .scheduler
+                .routing
+                .pick_affine(&p.model, key, AFFINITY_SPILL_MARGIN, &mut rng)
+        } else {
+            inner.scheduler.routing.pick_least_loaded(&p.model, &mut rng).map(|i| (i, false))
+        }
     };
-    let Some(target) = pick else {
+    let Some((target, affine_hit)) = pick else {
         retry_place(inner, ex, p);
         return;
     };
@@ -749,7 +823,12 @@ fn try_place(inner: &Rc<SimInner>, ex: &SimExecutor, p: PendingReq) {
         retry_place(inner, ex, p);
         return;
     };
-    let demand = inner.scheduler.demand.begin(&p.model);
+    if affine_hit {
+        inner
+            .metrics
+            .counter("sched_affinity_hits_total", &[("service", &p.model)])
+            .inc();
+    }
     let load = inner.scheduler.routing.begin_request(target.job_id);
     // Forward the *remaining* budget: transit and queue wait count.
     let remaining_ms = p.deadline_ms.map(|ms| ms.saturating_sub(waited_us / 1000));
@@ -773,7 +852,7 @@ fn try_place(inner: &Rc<SimInner>, ex: &SimExecutor, p: PendingReq) {
             job_id: target.job_id,
             submit_us: p.submit_us,
             rx,
-            _demand: demand,
+            _demand: p.demand,
             _load: load,
         },
     );
@@ -1013,14 +1092,117 @@ mod tests {
         let a = run();
         let b = run();
         assert_eq!(a, b, "same seed + same scenario => byte-identical traces");
-        assert_eq!(a.lines().count(), 5);
-        for line in a.lines() {
+        assert_eq!(a.lines().filter(|l| l.starts_with("req=")).count(), 5);
+        for line in a.lines().filter(|l| l.starts_with("req=")) {
             assert!(
                 line.contains("reason=length") || line.contains("reason=stop"),
                 "request should complete normally: {line}"
             );
             assert!(!line.contains("ttft_us=-"), "completed request has a TTFT: {line}");
         }
+        // The replica's weight load is part of the canonical trace.
+        assert!(a.lines().any(|l| l.starts_with("load job=")), "no load line in trace");
+    }
+
+    #[test]
+    fn cold_start_charges_size_proportional_load_before_first_token() {
+        // Two models cold-start side by side: intel-neural-7b loads in
+        // 30 s, mixtral-8x7b in 120 s (SimProfile.load_secs). The trace
+        // must show each group's weight load taking exactly its modeled
+        // time, and no first token before the load finished.
+        let stack = SimStack::start(SimStackConfig {
+            seed: 5,
+            services: vec![
+                ServiceSpec::sim("intel-neural-7b", 1.0),
+                ServiceSpec::sim("mixtral-8x7b", 1.0),
+            ],
+            // Queue budget must cover the longest cold start (120 s).
+            queue_timeout: Duration::from_secs(300),
+            ..Default::default()
+        });
+        stack.submit_chat_at(
+            1_000_000,
+            SimRequest { user: "u-small".into(), max_tokens: 4, ..Default::default() },
+        );
+        stack.submit_chat_at(
+            1_000_000,
+            SimRequest {
+                user: "u-big".into(),
+                model: "mixtral-8x7b".into(),
+                max_tokens: 4,
+                ..Default::default()
+            },
+        );
+        assert!(stack.run_until_settled(Duration::from_secs(1200)));
+        let trace = stack.trace();
+        let load_of = |svc: &str| -> (u64, u64) {
+            let line = trace
+                .lines()
+                .find(|l| l.starts_with("load ") && l.contains(&format!("service={svc} ")))
+                .unwrap_or_else(|| panic!("no load line for {svc}: {trace}"));
+            let field = |key: &str| -> u64 {
+                line.split_whitespace()
+                    .find_map(|kv| kv.strip_prefix(key))
+                    .and_then(|v| v.parse().ok())
+                    .unwrap()
+            };
+            (field("start_us="), field("ready_us="))
+        };
+        let (s_small, r_small) = load_of("intel-neural-7b");
+        let (s_big, r_big) = load_of("mixtral-8x7b");
+        assert_eq!(r_small - s_small, 30_000_000, "7B load is 30 s");
+        assert_eq!(r_big - s_big, 120_000_000, "8x7B load is 120 s");
+        // No request finished before its model's load did: the queue wait
+        // absorbs the cold start (`ttft_us` is engine-side and excludes it).
+        for r in stack.records() {
+            let ready = if r.model == "intel-neural-7b" { r_small } else { r_big };
+            assert_eq!(r.finish_reason, "length", "{r:?}");
+            assert!(
+                r.finish_us >= ready,
+                "request finished at {} before {} was loaded at {ready}",
+                r.finish_us,
+                r.model,
+            );
+        }
+    }
+
+    #[test]
+    fn scale_from_zero_pays_one_load_and_keep_alive_skips_the_second() {
+        // A 0-instance group: the first request wakes it and pays the
+        // weight load; a second request inside the keep-alive window finds
+        // the replica warm and pays none.
+        let mut spec = ServiceSpec::sim("intel-neural-7b", 1.0);
+        spec.min_instances = 0;
+        spec.keep_alive = Duration::from_secs(600);
+        let stack = SimStack::start(SimStackConfig {
+            seed: 9,
+            services: vec![spec],
+            queue_timeout: Duration::from_secs(120),
+            ..Default::default()
+        });
+        stack.submit_chat_at(
+            10_000_000,
+            SimRequest { user: "u-0".into(), max_tokens: 4, ..Default::default() },
+        );
+        stack.submit_chat_at(
+            90_000_000,
+            SimRequest { user: "u-1".into(), max_tokens: 4, ..Default::default() },
+        );
+        assert!(stack.run_until_settled(Duration::from_secs(600)));
+        let trace = stack.trace();
+        assert_eq!(
+            trace.lines().filter(|l| l.starts_with("load ")).count(),
+            1,
+            "exactly one weight load for two requests: {trace}"
+        );
+        let recs = stack.records();
+        assert_eq!(recs.len(), 2);
+        let first = recs.iter().find(|r| r.user == "u-0").unwrap();
+        let second = recs.iter().find(|r| r.user == "u-1").unwrap();
+        // First request waits out scheduler tick + 30 s load; the second
+        // lands on the still-warm replica and turns around in seconds.
+        assert!(first.finish_us - first.submit_us > 30_000_000, "{first:?}");
+        assert!(second.finish_us - second.submit_us < 5_000_000, "{second:?}");
     }
 
     #[test]

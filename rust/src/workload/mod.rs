@@ -218,6 +218,25 @@ impl MultiTurnChat {
         s
     }
 
+    /// Flat prompt for the virtual-time harness ([`crate::stack::SimRequest`]
+    /// carries a single prompt string, not a message list): turn `t`'s
+    /// prompt is the shared system prompt plus this user's messages
+    /// `0..=t` concatenated, so each turn strictly extends the previous
+    /// one. That prefix-chain shape is what the KV prefix cache — and
+    /// session-affine routing, which keeps a conversation on the replica
+    /// holding its chain — converts into cached prompt tokens.
+    pub fn sim_prompt(&self, user: usize, turn: usize) -> String {
+        let mut s = String::with_capacity(
+            self.system_prompt.len() + (turn + 1) * (self.turn_chars + 1),
+        );
+        s.push_str(&self.system_prompt);
+        for t in 0..=turn {
+            s.push(' ');
+            s.push_str(&self.user_message(user, t));
+        }
+        s
+    }
+
     /// OpenAI-style message list for `user`'s turn given prior exchanges.
     pub fn messages(&self, user: usize, turn: usize, history: &[(String, String)]) -> Vec<Json> {
         let mut msgs = Vec::with_capacity(2 + 2 * history.len());
@@ -343,6 +362,30 @@ mod tests {
         // Distinct users/turns never collide in message text.
         assert_ne!(wl.user_message(0, 1), wl.user_message(1, 1));
         assert_ne!(wl.user_message(0, 1), wl.user_message(0, 2));
+    }
+
+    #[test]
+    fn sim_prompts_form_a_strict_prefix_chain_per_user() {
+        let wl = MultiTurnChat {
+            users: 2,
+            turns: 5,
+            system_prompt: "shared system preamble".into(),
+            turn_chars: 40,
+        };
+        for user in 0..wl.users {
+            for turn in 1..wl.turns {
+                let prev = wl.sim_prompt(user, turn - 1);
+                let cur = wl.sim_prompt(user, turn);
+                assert!(
+                    cur.starts_with(&prev) && cur.len() > prev.len(),
+                    "turn {turn} must strictly extend turn {}",
+                    turn - 1
+                );
+            }
+        }
+        // Different users share only the system prompt, not the chain.
+        assert_ne!(wl.sim_prompt(0, 2), wl.sim_prompt(1, 2));
+        assert!(wl.sim_prompt(0, 0).starts_with("shared system preamble"));
     }
 
     #[test]

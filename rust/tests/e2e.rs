@@ -667,3 +667,66 @@ fn sim_scavenger_preemption_drains_without_dropping_requests() {
     let job = stack.slurm().lock().unwrap().job(batch_id).unwrap();
     assert_eq!(job.state, JobState::Running, "batch job never started: {job:?}");
 }
+
+#[test]
+fn model_addressable_api_lists_fleet_and_resolves_body_model() {
+    // The model-addressable surface end-to-end: one POST endpoint where
+    // the body names the model, plus a public fleet listing with live
+    // replica-group state. Built through StackBuilder — the same
+    // deployment description the sim benches use.
+    let stack = chat_hpc::stack::StackBuilder::new()
+        .with_services(vec![
+            ServiceSpec::sim("intel-neural-7b", 0.0),
+            ServiceSpec::sim("mixtral-8x7b", 0.0),
+        ])
+        .build()
+        .expect("stack start");
+    stack.wait_ready("intel-neural-7b", Duration::from_secs(15)).unwrap();
+
+    // GET /v1/models is public (like /health) and lists the whole fleet.
+    let r = http::request("GET", &format!("{}/v1/models", stack.gateway_url()), &[], b"")
+        .unwrap();
+    assert_eq!(r.status, 200);
+    let listing = r.json_body().unwrap();
+    assert_eq!(listing.str_or("object", ""), "list");
+    let data = listing.get("data").and_then(|d| d.as_arr().map(<[Json]>::to_vec)).unwrap();
+    let ids: Vec<&str> = data.iter().map(|m| m.str_or("id", "")).collect();
+    assert!(ids.contains(&"intel-neural-7b"), "{ids:?}");
+    assert!(ids.contains(&"mixtral-8x7b"), "{ids:?}");
+    assert!(ids.contains(&"gpt-4"), "external wrapper missing: {ids:?}");
+    let intel = data.iter().find(|m| m.str_or("id", "") == "intel-neural-7b").unwrap();
+    assert_eq!(intel.str_or("state", ""), "ready", "{intel:?}");
+    assert!(intel.u64_or("ready", 0) >= 1);
+
+    // POST /v1/chat/completions resolves the body `model` via the
+    // registry — no per-model path — and the usage log records the
+    // resolved model.
+    let body = Json::obj()
+        .set("model", "mixtral-8x7b")
+        .set("messages", vec![Json::obj().set("role", "user").set("content", "count")]);
+    let r = http::request(
+        "POST",
+        &format!("{}/v1/chat/completions", stack.gateway_url()),
+        &[("authorization", "Bearer key-research-0001")],
+        body.dump().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "{:?}", r.json_body());
+    assert!(stack.log.entries().iter().any(|e| e.model == "mixtral-8x7b"));
+
+    // An unknown model gets a structured 404 naming the discovery
+    // endpoint, not a bare route miss.
+    let bad = Json::obj().set("model", "gpt-9000").set("messages", Vec::<Json>::new());
+    let r = http::request(
+        "POST",
+        &format!("{}/v1/chat/completions", stack.gateway_url()),
+        &[("authorization", "Bearer key-research-0001")],
+        bad.dump().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(r.status, 404);
+    let err = r.json_body().unwrap();
+    assert_eq!(err.at(&["error", "type"]).unwrap().as_str().unwrap(), "model_not_found");
+    let msg = err.at(&["error", "message"]).unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("gpt-9000") && msg.contains("/v1/models"), "{msg}");
+}

@@ -101,7 +101,15 @@ fn same_seed_replays_byte_identical_traces() {
         b.executed_events(),
         "replay executed a different number of events"
     );
-    assert_eq!(ta.lines().count(), submitted, "every request must leave a record");
+    assert_eq!(
+        ta.lines().filter(|l| l.starts_with("req=")).count(),
+        submitted,
+        "every request must leave a record"
+    );
+    assert!(
+        ta.lines().any(|l| l.starts_with("load job=")),
+        "cold starts must fold into the trace"
+    );
 
     // The scenario really exercised the paths it claims to (a trivially
     // empty trace would also be "deterministic").
