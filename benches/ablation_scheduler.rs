@@ -24,7 +24,7 @@ use chat_hpc::scheduler::{
     BackendKind, MockLauncher, RoutingTable, SchedulerConfig, ServiceScheduler, ServiceSpec,
 };
 use chat_hpc::slurm::{ClusterSpec, JobSpec, SlurmSim};
-use chat_hpc::util::bench::{table_header, table_row, BenchReport};
+use chat_hpc::util::bench::{table_header, table_row, BenchArgs, BenchReport};
 use chat_hpc::util::clock::{Clock, SimClock};
 use chat_hpc::util::metrics::Registry;
 use chat_hpc::util::rng::Rng;
@@ -64,7 +64,7 @@ fn build(
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = BenchArgs::parse().smoke;
     let mut report = BenchReport::new();
 
     // ---------------- A: target-concurrency sweep -------------------------

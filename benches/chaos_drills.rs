@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{SimRecord, SimRequest, SimStack, SimStackConfig};
-use chat_hpc::util::bench::stats;
+use chat_hpc::util::bench::{stats, BenchArgs};
 use chat_hpc::util::faults::{FaultEvent, FaultPlan};
 use chat_hpc::util::json::Json;
 
@@ -126,14 +126,8 @@ fn drill(
 }
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let seed: u64 = args
-        .iter()
-        .position(|a| a == "--seed")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(7);
+    let args = BenchArgs::parse();
+    let (smoke, seed) = (args.smoke, args.seed);
     // Smoke shrinks the workloads, not the drill structure: every fault
     // still fires mid-burst and every shape check still runs.
     let n: u64 = if smoke { 30 } else { 120 };

@@ -15,20 +15,14 @@ use chat_hpc::analytics::adoption::{date_label, DAY_AD_CAMPAIGN, EXTERNAL_MODELS
 use chat_hpc::analytics::{aggregate_daily, AdoptionConfig, AdoptionSim, RequestLog};
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{SimRequest, SimStack, SimStackConfig};
-use chat_hpc::util::bench::{table_header, table_row, BenchReport};
+use chat_hpc::util::bench::{table_header, table_row, BenchArgs, BenchReport};
 use chat_hpc::util::rng::Rng;
 use chat_hpc::workload::DiurnalArrivals;
 
 fn main() {
-    let args: Vec<String> = std::env::args().collect();
-    if args.iter().any(|a| a == "--serving") {
-        let seed = args
-            .iter()
-            .position(|a| a == "--seed")
-            .and_then(|i| args.get(i + 1))
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(7);
-        serving_sweep(seed);
+    let args = BenchArgs::parse();
+    if args.flag("--serving") {
+        serving_sweep(args.seed);
         return;
     }
     adoption_curve();

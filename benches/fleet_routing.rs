@@ -30,7 +30,7 @@ use std::time::Duration;
 
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{SimRecord, SimRequest, StackBuilder};
-use chat_hpc::util::bench::stats;
+use chat_hpc::util::bench::{stats, BenchArgs};
 use chat_hpc::util::json::Json;
 use chat_hpc::workload::MultiTurnChat;
 
@@ -194,14 +194,8 @@ fn run_scale_from_zero(seed: u64) -> RunOut {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let seed: u64 = args
-        .iter()
-        .position(|a| a == "--seed")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(7);
+    let args = BenchArgs::parse();
+    let (smoke, seed) = (args.smoke, args.seed);
     // Smoke shrinks the conversation load, not the drill structure: the
     // affinity comparison and the cold-start accounting both still run.
     let (users, turns) = if smoke { (6, 4) } else { (12, 8) };

@@ -1,0 +1,90 @@
+//! Scenario matrix: the trace-replay acceptance suite (DESIGN.md
+//! §Workloads), run entirely under virtual time so every scenario is
+//! deterministic — the same `--seed` produces a byte-identical
+//! BENCH_scenarios.json on every machine.
+//!
+//! Five scenarios over `workload::scenarios::ScenarioMatrix`:
+//!
+//!   diurnal_scavenger  a diurnal chat day whose peak outgrows the one
+//!                      guaranteed replica; scavengers absorb the crest
+//!   flash_crowd        10× arrivals for one minute against a
+//!                      scale-from-zero keep-alive group
+//!   tiered_deadlines   interactive chat under a 20 s deadline budget
+//!                      sharing the fleet with no-deadline batch items
+//!   prefill_flood      long-document prefill pressure vs chat latency
+//!   failure_drill      node loss in the lull, preemption storm
+//!                      mid-second-wave; zero dropped requests
+//!
+//! Each scenario runs twice and byte-compares its traces (the in-process
+//! half of the determinism contract; CI also byte-compares two full
+//! BENCH_scenarios.json + trace artifacts across processes via
+//! `SCENARIO_TRACE_OUT`), then applies its shape check. Any failed check
+//! fails the bench with a nonzero exit after writing the report.
+//!
+//!   cargo bench --bench scenario_matrix [-- --smoke] [-- --seed N]
+
+use chat_hpc::util::bench::BenchArgs;
+use chat_hpc::util::json::Json;
+use chat_hpc::workload::scenarios::{ScenarioMatrix, SCENARIO_NAMES};
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let matrix = ScenarioMatrix::new(args.seed, args.smoke);
+
+    println!(
+        "scenario matrix: seed {}, {} scenarios{}\n",
+        args.seed,
+        SCENARIO_NAMES.len(),
+        if args.smoke { " (smoke)" } else { "" }
+    );
+    println!(
+        "{:<20} {:>6} {:>8} {:>10} {:>10} {:>10} {:>8}",
+        "scenario", "reqs", "rps", "p50 ms", "p99 ms", "ttft ms", "pass"
+    );
+
+    let mut report = Json::obj();
+    let mut traces = String::new();
+    let mut all_pass = true;
+
+    for name in SCENARIO_NAMES {
+        let out = matrix.run(name);
+        all_pass &= out.passed;
+        println!(
+            "{:<20} {:>6} {:>8.2} {:>10.2} {:>10.2} {:>10.2} {:>8}",
+            out.name,
+            out.requests,
+            out.rps,
+            out.p50_ms,
+            out.p99_ms,
+            out.ttft_ms,
+            if out.passed { "ok" } else { "FAIL" }
+        );
+        for f in &out.failures {
+            println!("  !! {f}");
+        }
+        let round = |v: f64| (v * 1000.0).round() / 1000.0;
+        report = report.set(
+            out.name,
+            Json::obj()
+                .set("rps", round(out.rps))
+                .set("p50_ms", round(out.p50_ms))
+                .set("p99_ms", round(out.p99_ms))
+                .set("ttft_ms", round(out.ttft_ms))
+                .set("passed", if out.passed { 1.0 } else { 0.0 }),
+        );
+        traces.push_str(&format!("=== {} ===\n{}", out.name, out.trace));
+    }
+
+    std::fs::write("BENCH_scenarios.json", report.dump())?;
+    println!("\nwrote BENCH_scenarios.json ({} scenarios)", SCENARIO_NAMES.len());
+    // Cross-process determinism artifact for CI (mirrors SIM_TRACE_OUT).
+    if let Some(path) = std::env::var_os("SCENARIO_TRACE_OUT") {
+        std::fs::write(path, &traces)?;
+    }
+    if !all_pass {
+        println!("scenario matrix FAILED");
+        std::process::exit(1);
+    }
+    println!("all scenarios passed");
+    Ok(())
+}

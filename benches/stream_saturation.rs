@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{ChatAiStack, StackConfig};
-use chat_hpc::util::bench::stats;
+use chat_hpc::util::bench::{stats, BenchArgs};
 use chat_hpc::util::http;
 use chat_hpc::util::json::Json;
 
@@ -142,7 +142,7 @@ fn run_mode(
 }
 
 fn main() -> anyhow::Result<()> {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = BenchArgs::parse().smoke;
     // The wire slot dominates the per-stream budget; smoke keeps the same
     // regime with a shorter window so CI just checks the plumbing.
     let (wire_slot, workers, secs) = if smoke {

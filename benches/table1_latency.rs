@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{ChatAiStack, StackConfig};
-use chat_hpc::util::bench::{fmt_ms, table_header, table_row, BenchReport};
+use chat_hpc::util::bench::{fmt_ms, table_header, table_row, BenchArgs, BenchReport};
 use chat_hpc::util::http;
 use chat_hpc::util::json::Json;
 use chat_hpc::workload::probe_stage;
@@ -24,7 +24,7 @@ use chat_hpc::workload::probe_stage;
 fn main() -> anyhow::Result<()> {
     // `--smoke`: a tiny CI-sized sweep — fewer probes, same stages, same
     // BENCH_table1.json schema.
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = BenchArgs::parse().smoke;
     let n: usize = if smoke { 10 } else { 50 }; // full run = paper's sample count
 
     // Sim profile with realistic per-token pacing scaled so the LLM stage

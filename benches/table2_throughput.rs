@@ -19,7 +19,7 @@ use chat_hpc::llmserver::{Engine, EngineConfig, LlmHttpServer, SimBackend};
 use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::sshsim::KeyPair;
 use chat_hpc::stack::{ChatAiStack, StackConfig};
-use chat_hpc::util::bench::{table_header, table_row, BenchReport};
+use chat_hpc::util::bench::{table_header, table_row, BenchArgs, BenchReport};
 use chat_hpc::util::http;
 use chat_hpc::util::json::Json;
 use chat_hpc::util::metrics::Registry;
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     // `--smoke`: a tiny CI-sized sweep — every row and sweep still runs
     // (so BENCH_table2.json keeps its schema, minus the larger pool
     // sizes), but for load windows of a second or two instead of minutes.
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let smoke = BenchArgs::parse().smoke;
     let paper: &[(&str, &str)] = &[
         ("Kong API Gateway", "3000+"),
         ("Chat AI Web Interface", "1300-1800"),

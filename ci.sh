@@ -84,6 +84,18 @@ mv BENCH_chaos.json target/BENCH_chaos_a.json
 cargo bench --bench chaos_drills -- --smoke --seed 7
 cmp target/BENCH_chaos_a.json BENCH_chaos.json
 
+# Scenario matrix: five trace-driven drills (diurnal + scavenger, flash
+# crowd vs scale-from-zero, tiered deadlines, prefill flood, coordinated
+# failure drill) under virtual time. Each drill already replays in-process;
+# here the whole matrix runs twice in separate processes and both the
+# concatenated trace artifact and BENCH_scenarios.json are byte-compared.
+echo "==> scenario-smoke: scenario_matrix determinism diff"
+SCENARIO_TRACE_OUT="$PWD/target/scenario_trace_a.txt" cargo bench --bench scenario_matrix -- --smoke --seed 7
+mv BENCH_scenarios.json target/BENCH_scenarios_a.json
+SCENARIO_TRACE_OUT="$PWD/target/scenario_trace_b.txt" cargo bench --bench scenario_matrix -- --smoke --seed 7
+cmp target/scenario_trace_a.txt target/scenario_trace_b.txt
+cmp target/BENCH_scenarios_a.json BENCH_scenarios.json
+
 # Fleet routing: session-affine vs. random placement over a 3-replica
 # group (affine must land >= 1.5x the prefix-cache hit-token rate) plus
 # the scale-from-zero drill (exactly one weight load for five requests).
@@ -111,10 +123,12 @@ if python3 --version >/dev/null 2>&1; then
         hour_q1 hour_q2 hour_q3 hour_q4 overall
     python3 scripts/check_bench.py BENCH_stream.json \
         single_channel dual_channel dual_zero_copy
-    python3 scripts/check_bench.py BENCH_chaos.json \
+    python3 scripts/check_bench.py --passed BENCH_chaos.json \
         preemption_storm lane_flap gray_node upstream_outage
     python3 scripts/check_bench.py BENCH_fleet.json \
         affine random scale_from_zero
+    python3 scripts/check_bench.py --passed BENCH_scenarios.json \
+        diurnal_scavenger flash_crowd tiered_deadlines prefill_flood failure_drill
 else
     echo "    python3 not installed; skipping schema validation (CI runs it)"
 fi

@@ -129,6 +129,51 @@ impl BenchReport {
     }
 }
 
+/// Shared CLI contract for the executable benches. Every bench accepts
+/// `--smoke` (CI-sized run) and `--seed N` (default 7, the CI seed);
+/// bench-specific switches go through [`BenchArgs::flag`] so a bench
+/// never re-implements arg scanning.
+#[derive(Debug, Clone)]
+pub struct BenchArgs {
+    pub smoke: bool,
+    pub seed: u64,
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    /// Parse from the process arguments (skips `argv[0]`; tolerates the
+    /// `--bench` flag cargo appends to bench binaries).
+    pub fn parse() -> BenchArgs {
+        BenchArgs::from_args(std::env::args().skip(1).collect())
+    }
+
+    /// Parse from an explicit argument list (the testable entry point).
+    pub fn from_args(args: Vec<String>) -> BenchArgs {
+        let smoke = args.iter().any(|a| a == "--smoke");
+        let seed = args
+            .iter()
+            .position(|a| a == "--seed")
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(7);
+        BenchArgs { smoke, seed, args }
+    }
+
+    /// Whether a bench-specific switch (e.g. `--serving`) was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name)
+    }
+
+    /// Value of a bench-specific `--key value` option.
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.args.get(i + 1))
+            .map(String::as_str)
+    }
+}
+
 /// Print a table header like the paper's tables.
 pub fn table_header(title: &str, cols: &[&str]) {
     println!("\n## {title}");
@@ -182,6 +227,29 @@ mod tests {
                 .abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn bench_args_parse_smoke_seed_and_flags() {
+        let strs = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        let a = BenchArgs::from_args(strs(&["--bench", "--smoke", "--seed", "42", "--serving"]));
+        assert!(a.smoke);
+        assert_eq!(a.seed, 42);
+        assert!(a.flag("--serving"));
+        assert!(!a.flag("--chaos"));
+        assert_eq!(a.value("--seed"), Some("42"));
+        assert_eq!(a.value("--missing"), None);
+
+        let d = BenchArgs::from_args(vec![]);
+        assert!(!d.smoke, "smoke defaults off");
+        assert_eq!(d.seed, 7, "seed defaults to the CI seed");
+
+        // Malformed --seed falls back to the default instead of panicking.
+        let bad = BenchArgs::from_args(strs(&["--seed", "banana"]));
+        assert_eq!(bad.seed, 7);
+        let dangling = BenchArgs::from_args(strs(&["--smoke", "--seed"]));
+        assert!(dangling.smoke);
+        assert_eq!(dangling.seed, 7);
     }
 
     #[test]

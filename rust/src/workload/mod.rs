@@ -6,6 +6,9 @@
 //! and [`LoadGen`] runs closed-loop multi-worker load like a Locust user
 //! swarm.
 
+pub mod scenarios;
+pub mod trace;
+
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -423,6 +426,94 @@ mod tests {
         let mid = a.iter().filter(|&&(t, _)| t >= q && t < 3 * q).count();
         let edge = a.len() - mid;
         assert!(mid > edge, "diurnal peak not visible: mid={mid} edge={edge}");
+    }
+
+    mod props {
+        use super::*;
+        use crate::prop_assert;
+        use crate::util::prop::run_prop;
+
+        #[test]
+        fn diurnal_thinning_never_exceeds_peak_and_replays_per_seed() {
+            run_prop("diurnal_peak_bound", 0xD1, 40, |rng| {
+                let wl = DiurnalArrivals {
+                    users: rng.range(1, 500) as usize,
+                    mean_rps: 0.5 + rng.f64() * 30.0,
+                    amplitude: rng.f64() * 0.95,
+                    period: Duration::from_secs(rng.range(60, 7200)),
+                };
+                let peak = wl.mean_rps * (1.0 + wl.amplitude.abs());
+                // The modulated rate is bounded by the thinning envelope
+                // everywhere (sampled across two periods), never negative.
+                for _ in 0..64 {
+                    let t = rng.f64() * 2.0 * wl.period.as_secs_f64();
+                    let r = wl.rate_at(t);
+                    prop_assert!(
+                        r <= peak + 1e-9,
+                        "rate_at({t:.1}) = {r:.4} exceeds peak envelope {peak:.4}"
+                    );
+                    prop_assert!(r >= -1e-9, "rate_at({t:.1}) = {r:.4} went negative");
+                }
+
+                let horizon = Duration::from_secs(rng.range(30, 600));
+                let seed = rng.next_u64();
+                let a = wl.generate(horizon, &mut Rng::new(seed));
+                let b = wl.generate(horizon, &mut Rng::new(seed));
+                prop_assert!(a == b, "same seed {seed} produced different schedules");
+                prop_assert!(
+                    a.windows(2).all(|w| w[0].0 <= w[1].0),
+                    "arrivals out of order"
+                );
+                prop_assert!(
+                    a.iter().all(|&(t, u)| {
+                        t < horizon.as_micros() as u64 && u < wl.users
+                    }),
+                    "arrival outside horizon or user range"
+                );
+                // Volume can't beat the peak envelope by more than Poisson
+                // noise: the thinning acceptance ratio is at most 1.
+                let budget = peak * horizon.as_secs_f64();
+                prop_assert!(
+                    (a.len() as f64) <= budget + 6.0 * budget.sqrt() + 10.0,
+                    "{} arrivals beats the peak-rate budget {budget:.1}",
+                    a.len()
+                );
+                Ok(())
+            });
+        }
+
+        #[test]
+        fn multiturn_sim_prompts_are_strict_prefix_chains() {
+            run_prop("multiturn_prefix_chain", 0xC4, 40, |rng| {
+                let wl = MultiTurnChat {
+                    users: rng.range(1, 8) as usize,
+                    turns: rng.range(2, 10) as usize,
+                    system_prompt: "sys ".repeat(rng.range(1, 20) as usize),
+                    // >= 2 so the `u{user}` stamp survives truncation and
+                    // distinct users stay distinguishable.
+                    turn_chars: rng.range(2, 120) as usize,
+                };
+                let user = rng.below(wl.users as u64) as usize;
+                for turn in 1..wl.turns {
+                    let prev = wl.sim_prompt(user, turn - 1);
+                    let cur = wl.sim_prompt(user, turn);
+                    prop_assert!(
+                        cur.starts_with(&prev) && cur.len() > prev.len(),
+                        "user {user} turn {turn} does not strictly extend turn {}",
+                        turn - 1
+                    );
+                }
+                // Chains never collide across users past the shared prefix.
+                if wl.users > 1 {
+                    let t = wl.turns - 1;
+                    prop_assert!(
+                        wl.sim_prompt(0, t) != wl.sim_prompt(1, t),
+                        "distinct users produced identical histories"
+                    );
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]

@@ -1,0 +1,570 @@
+//! The scenario matrix (DESIGN.md §Workloads): named, shape-checked
+//! serving drills composed from trace replay + the virtual-time stack.
+//!
+//! Each scenario is a full-stack story the paper's deployment has to
+//! survive — diurnal load riding scavenger elasticity, a 10× flash crowd
+//! against scale-from-zero, interactive/batch tiers under deadline
+//! priorities, a long-document prefill flood sharing engines with chat,
+//! and a coordinated failure drill — expressed as a [`Trace`] replayed
+//! into [`SimStack`] under virtual time. [`ScenarioMatrix::run`] executes
+//! a scenario **twice** and byte-compares the traces (the determinism
+//! contract), then applies the scenario's explicit shape check; the
+//! result carries latency/throughput metrics plus a `passed` flag, so
+//! `benches/scenario_matrix.rs` and CI turn the whole stack into a
+//! pass/fail regression surface.
+//!
+//! Scenarios are deterministic in `(seed, smoke)`: all randomness flows
+//! from salted [`Rng`] children of the matrix seed, and the stack itself
+//! replays bit-identically per seed. Smoke mode shrinks populations and
+//! horizons, never the scenario *structure* — every fault still fires and
+//! every shape check still runs.
+
+use std::time::Duration;
+
+use crate::scheduler::ServiceSpec;
+use crate::stack::{SimRecord, StackBuilder};
+use crate::util::bench::stats;
+use crate::util::faults::{FaultEvent, FaultPlan};
+use crate::util::rng::Rng;
+use crate::workload::trace::{PromptClass, Trace, TraceReplay};
+use crate::workload::DiurnalArrivals;
+
+const MODEL: &str = "intel-neural-7b";
+
+/// The five scenarios, in report order. These names are the
+/// `BENCH_scenarios.json` keys CI validates.
+pub const SCENARIO_NAMES: [&str; 5] = [
+    "diurnal_scavenger",
+    "flash_crowd",
+    "tiered_deadlines",
+    "prefill_flood",
+    "failure_drill",
+];
+
+/// One execution of a scenario: the canonical stack trace plus the
+/// per-request records the shape checks read.
+pub struct ScenarioRun {
+    pub trace: String,
+    pub records: Vec<SimRecord>,
+}
+
+/// The verdict on one scenario: metrics from the first execution, the
+/// replay comparison, and every shape-check failure (empty = `passed`).
+pub struct ScenarioOutcome {
+    pub name: &'static str,
+    pub requests: usize,
+    pub completed: usize,
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub ttft_ms: f64,
+    pub passed: bool,
+    pub failures: Vec<String>,
+    pub trace: String,
+}
+
+/// The scenario matrix driver: `(seed, smoke)` fully determine every run.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioMatrix {
+    pub seed: u64,
+    pub smoke: bool,
+}
+
+fn finished_ok(r: &SimRecord) -> bool {
+    r.finish_reason == "stop" || r.finish_reason == "length"
+}
+
+fn completed(records: &[SimRecord]) -> Vec<&SimRecord> {
+    records.iter().filter(|r| finished_ok(r)).collect()
+}
+
+/// Client-perceived latencies (finish − submit, ms) of completed
+/// records whose user starts with `prefix` ("" = all).
+fn latencies_ms(records: &[SimRecord], prefix: &str) -> Vec<f64> {
+    records
+        .iter()
+        .filter(|r| finished_ok(r) && r.user.starts_with(prefix))
+        .map(|r| (r.finish_us - r.submit_us) as f64 / 1e3)
+        .collect()
+}
+
+fn p99(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        stats(samples).p99
+    }
+}
+
+/// Count `load job=…` weight-load lines in a stack trace.
+fn load_lines(trace: &str) -> usize {
+    trace.lines().filter(|l| l.starts_with("load ")).count()
+}
+
+/// Push a failure message unless `cond` holds.
+fn expect(fails: &mut Vec<String>, cond: bool, msg: impl FnOnce() -> String) {
+    if !cond {
+        fails.push(msg());
+    }
+}
+
+/// Require every record to have drained as stop/length; name the
+/// stragglers by finish reason when they didn't.
+fn expect_zero_drops(fails: &mut Vec<String>, name: &str, records: &[SimRecord]) {
+    let dropped: Vec<&SimRecord> = records.iter().filter(|r| !finished_ok(r)).collect();
+    expect(fails, dropped.is_empty(), || {
+        let mut reasons: std::collections::BTreeMap<&str, usize> = Default::default();
+        for r in &dropped {
+            *reasons.entry(r.finish_reason.as_str()).or_default() += 1;
+        }
+        format!(
+            "{name}: {} of {} requests dropped ({reasons:?})",
+            dropped.len(),
+            records.len()
+        )
+    });
+}
+
+impl ScenarioMatrix {
+    pub fn new(seed: u64, smoke: bool) -> ScenarioMatrix {
+        ScenarioMatrix { seed, smoke }
+    }
+
+    /// Per-scenario workload RNG: salted so scenarios draw independent
+    /// streams from the one matrix seed.
+    fn rng(&self, salt: u64) -> Rng {
+        Rng::new(self.seed ^ (salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+    }
+
+    /// Execute one scenario once. Public so the seed-replay suite can
+    /// byte-compare executions across processes; panics on an unknown
+    /// name ([`SCENARIO_NAMES`] is the registry).
+    pub fn run_once(&self, name: &str) -> ScenarioRun {
+        match name {
+            "diurnal_scavenger" => self.run_diurnal(),
+            "flash_crowd" => self.run_flash_crowd(),
+            "tiered_deadlines" => self.run_tiered(),
+            "prefill_flood" => self.run_prefill_flood(),
+            "failure_drill" => self.run_failure_drill(),
+            other => panic!("unknown scenario {other:?} (see SCENARIO_NAMES)"),
+        }
+    }
+
+    /// Execute a scenario twice (replay must be byte-identical), then
+    /// apply its shape check and fold metrics from the first execution.
+    pub fn run(&self, name: &str) -> ScenarioOutcome {
+        let a = self.run_once(name);
+        let b = self.run_once(name);
+        let mut fails = Vec::new();
+        expect(&mut fails, a.trace == b.trace, || {
+            format!("{name}: replay diverged (trace not byte-identical)")
+        });
+        self.check(name, &a, &mut fails);
+
+        let done = completed(&a.records);
+        let lats = latencies_ms(&a.records, "");
+        let ttfts: Vec<f64> = done
+            .iter()
+            .filter_map(|r| r.ttft_us.map(|t| t as f64 / 1e3))
+            .collect();
+        let (rps, p50_ms, p99_ms) = if done.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            let first = done.iter().map(|r| r.submit_us).min().unwrap();
+            let last = done.iter().map(|r| r.finish_us).max().unwrap();
+            let window = ((last - first) as f64 / 1e6).max(1e-9);
+            let ls = stats(&lats);
+            (done.len() as f64 / window, ls.p50, ls.p99)
+        };
+        ScenarioOutcome {
+            name: SCENARIO_NAMES
+                .into_iter()
+                .find(|n| *n == name)
+                .expect("run_once accepted the name"),
+            requests: a.records.len(),
+            completed: done.len(),
+            rps,
+            p50_ms,
+            p99_ms,
+            ttft_ms: if ttfts.is_empty() { 0.0 } else { stats(&ttfts).p50 },
+            passed: fails.is_empty(),
+            failures: fails,
+            trace: a.trace,
+        }
+    }
+
+    /// Run the full matrix in report order.
+    pub fn run_all(&self) -> Vec<ScenarioOutcome> {
+        SCENARIO_NAMES.iter().map(|n| self.run(n)).collect()
+    }
+
+    fn check(&self, name: &str, out: &ScenarioRun, fails: &mut Vec<String>) {
+        match name {
+            "diurnal_scavenger" => self.check_diurnal(out, fails),
+            "flash_crowd" => self.check_flash_crowd(out, fails),
+            "tiered_deadlines" => self.check_tiered(out, fails),
+            "prefill_flood" => self.check_prefill_flood(out, fails),
+            "failure_drill" => self.check_failure_drill(out, fails),
+            _ => unreachable!("run_once validated the name"),
+        }
+    }
+
+    // -- diurnal_scavenger --------------------------------------------------
+    //
+    // A single guaranteed replica, scavenger tier enabled: a diurnal chat
+    // day whose peak demands more than the guaranteed tier, so the
+    // overflow must ride schedule-gap scavenger replicas. Shape: nothing
+    // drops, and the stack visibly scaled past its guaranteed floor
+    // (> min_instances weight loads in the trace).
+
+    fn diurnal_horizon(&self) -> Duration {
+        Duration::from_secs(if self.smoke { 180 } else { 600 })
+    }
+
+    fn run_diurnal(&self) -> ScenarioRun {
+        let horizon = self.diurnal_horizon();
+        let wl = DiurnalArrivals {
+            users: if self.smoke { 16 } else { 64 },
+            mean_rps: if self.smoke { 3.0 } else { 4.0 },
+            amplitude: 0.8,
+            period: horizon,
+        };
+        let mut rng = self.rng(1);
+        let trace =
+            Trace::from_diurnal(&wl, horizon, "diurnal", MODEL, PromptClass::Chat, 24, &mut rng);
+        let spec = ServiceSpec {
+            max_instances: 1,
+            max_scavengers: 2,
+            target_concurrency: 1.0,
+            ..ServiceSpec::sim(MODEL, 1.0)
+        };
+        self.execute(spec, Duration::from_secs(60), FaultPlan::new(), &trace, TraceReplay::new(40_000_000))
+    }
+
+    fn check_diurnal(&self, out: &ScenarioRun, fails: &mut Vec<String>) {
+        expect_zero_drops(fails, "diurnal_scavenger", &out.records);
+        let loads = load_lines(&out.trace);
+        expect(fails, loads >= 2, || {
+            format!(
+                "diurnal_scavenger: peak never engaged the scavenger tier \
+                 ({loads} weight loads for a 1-guaranteed-replica group)"
+            )
+        });
+        let p = p99(&latencies_ms(&out.records, ""));
+        expect(fails, p < 30_000.0, || {
+            format!("diurnal_scavenger: p99 latency {p:.0} ms breaches the 30 s bound")
+        });
+    }
+
+    // -- flash_crowd --------------------------------------------------------
+    //
+    // A scale-from-zero keep-alive group hit by a flash crowd: a trickle
+    // wakes the group, then arrivals jump 10× for one simulated minute.
+    // Shape: the cold start is visible on the waker, nothing drops
+    // through the surge, the group scaled past one replica, and once the
+    // crowd's replicas are warm the tail of the surge sees bounded p99.
+
+    /// (trickle start, burst start, burst end) in trace-relative µs.
+    fn flash_windows(&self) -> (u64, u64, u64) {
+        (0, 60_000_000, 120_000_000)
+    }
+
+    fn run_flash_crowd(&self) -> ScenarioRun {
+        let (t0, burst, burst_end) = self.flash_windows();
+        let base_rps = if self.smoke { 0.5 } else { 0.8 };
+        let users = if self.smoke { 12 } else { 32 };
+        let mut rng = self.rng(2);
+        let trickle = Trace::poisson(
+            base_rps, t0, burst, users, "fc", MODEL, PromptClass::Chat, 32, &mut rng,
+        );
+        // The flash crowd: 10× the base arrival rate for one minute.
+        let crowd = Trace::poisson(
+            base_rps * 10.0, burst, burst_end, users, "fc", MODEL, PromptClass::Chat, 32, &mut rng,
+        );
+        let tail = Trace::poisson(
+            base_rps, burst_end, burst_end + 30_000_000, users, "fc", MODEL, PromptClass::Chat,
+            32, &mut rng,
+        );
+        let trace = Trace::merge(vec![trickle, crowd, tail]);
+        let spec = ServiceSpec {
+            min_instances: 0,
+            max_instances: 3,
+            target_concurrency: 1.0,
+            keep_alive: Duration::from_secs(600),
+            ..ServiceSpec::sim(MODEL, 1.0)
+        };
+        // Arrivals start at 5 s on a cold group: the first request pays
+        // the wake (tick + 30 s load), so the queue budget must cover it.
+        self.execute(spec, Duration::from_secs(150), FaultPlan::new(), &trace, TraceReplay::new(5_000_000))
+    }
+
+    fn check_flash_crowd(&self, out: &ScenarioRun, fails: &mut Vec<String>) {
+        expect_zero_drops(fails, "flash_crowd", &out.records);
+        let loads = load_lines(&out.trace);
+        expect(fails, loads >= 2, || {
+            format!("flash_crowd: the 10× surge never scaled past one replica ({loads} loads)")
+        });
+        // The waker pays the scale-from-zero cold start (≥ 30 s load).
+        let first = out.records.iter().min_by_key(|r| r.submit_us);
+        if let Some(first) = first {
+            expect(fails, first.finish_us - first.submit_us > 30_000_000, || {
+                format!(
+                    "flash_crowd: first request finished in {} ms — no cold start on a \
+                     min_instances=0 group?",
+                    (first.finish_us - first.submit_us) / 1000
+                )
+            });
+        }
+        // Once warm replicas have landed, the surge tail is bounded: p99
+        // over arrivals in the last 30 s of the burst and after.
+        let (_, burst, burst_end) = self.flash_windows();
+        let offset = 5_000_000;
+        let warm_cut = offset + burst + (burst_end - burst) / 2;
+        let warm: Vec<f64> = out
+            .records
+            .iter()
+            .filter(|r| finished_ok(r) && r.submit_us >= warm_cut)
+            .map(|r| (r.finish_us - r.submit_us) as f64 / 1e3)
+            .collect();
+        expect(fails, !warm.is_empty(), || {
+            "flash_crowd: no completed arrivals in the warm half of the surge".into()
+        });
+        let p = p99(&warm);
+        expect(fails, p < 20_000.0, || {
+            format!("flash_crowd: warm-phase p99 {p:.0} ms breaches the 20 s bound")
+        });
+    }
+
+    // -- tiered_deadlines ---------------------------------------------------
+    //
+    // Interactive chat and offline batch share a fixed two-replica fleet.
+    // Interactive arrivals carry a 20 s end-to-end deadline budget; batch
+    // items are long completions with no budget. Shape: no interactive
+    // request misses its deadline, and the batch tier still drains.
+
+    fn run_tiered(&self) -> ScenarioRun {
+        let horizon = if self.smoke { 60_000_000 } else { 120_000_000 };
+        let mut rng = self.rng(3);
+        let interactive = Trace::poisson(
+            4.0,
+            0,
+            horizon,
+            if self.smoke { 12 } else { 24 },
+            "int",
+            MODEL,
+            PromptClass::Chat,
+            16,
+            &mut rng,
+        );
+        let batch = Trace::poisson(
+            0.4, 0, horizon, 4, "bat", MODEL, PromptClass::Batch, 96, &mut rng,
+        );
+        let trace = Trace::merge(vec![interactive, batch]);
+        let spec = ServiceSpec {
+            min_instances: 2,
+            max_instances: 2,
+            ..ServiceSpec::sim(MODEL, 1.0)
+        };
+        let replay = TraceReplay::new(40_000_000).with_deadline(PromptClass::Chat, 20_000);
+        self.execute(spec, Duration::from_secs(60), FaultPlan::new(), &trace, replay)
+    }
+
+    fn check_tiered(&self, out: &ScenarioRun, fails: &mut Vec<String>) {
+        let missed = out
+            .records
+            .iter()
+            .filter(|r| r.user.starts_with("int") && r.finish_reason == "deadline")
+            .count();
+        expect(fails, missed == 0, || {
+            format!("tiered_deadlines: {missed} interactive requests missed their 20 s deadline")
+        });
+        expect_zero_drops(fails, "tiered_deadlines", &out.records);
+        let batch = out.records.iter().filter(|r| r.user.starts_with("bat")).count();
+        expect(fails, batch > 0, || "tiered_deadlines: no batch arrivals generated".into());
+        let p = p99(&latencies_ms(&out.records, "int"));
+        expect(fails, p < 20_000.0, || {
+            format!("tiered_deadlines: interactive p99 {p:.0} ms at the deadline edge")
+        });
+    }
+
+    // -- prefill_flood ------------------------------------------------------
+    //
+    // Long-document summarizations (prompts ~5× the chat class, decoded
+    // long) flood a fixed fleet that is simultaneously serving interactive
+    // chat. Chunked prefill admission is what keeps chat alive. Shape:
+    // both classes drain, and chat p99 stays bounded despite the flood.
+
+    fn run_prefill_flood(&self) -> ScenarioRun {
+        let horizon = if self.smoke { 60_000_000 } else { 120_000_000 };
+        let mut rng = self.rng(4);
+        // Documents arrive on a metronome (one per 2.5 s): a steady flood
+        // whose per-engine co-residency is structurally bounded — a doc
+        // takes well under the spacing to serve, so prefill pressure never
+        // stacks deep enough to exhaust the paged-KV pool.
+        let docs = Trace::new(
+            (0..horizon / 2_500_000)
+                .map(|i| crate::workload::trace::TraceEvent {
+                    at_us: i * 2_500_000,
+                    user: format!("doc{}", i % 6),
+                    session: None,
+                    model: MODEL.to_string(),
+                    class: PromptClass::LongDoc,
+                    out_tokens: 48,
+                })
+                .collect(),
+        );
+        let chat = Trace::poisson(
+            3.0,
+            0,
+            horizon,
+            if self.smoke { 10 } else { 20 },
+            "chat",
+            MODEL,
+            PromptClass::Chat,
+            16,
+            &mut rng,
+        );
+        let trace = Trace::merge(vec![docs, chat]);
+        let spec = ServiceSpec {
+            min_instances: 2,
+            max_instances: 2,
+            ..ServiceSpec::sim(MODEL, 1.0)
+        };
+        self.execute(spec, Duration::from_secs(60), FaultPlan::new(), &trace, TraceReplay::new(40_000_000))
+    }
+
+    fn check_prefill_flood(&self, out: &ScenarioRun, fails: &mut Vec<String>) {
+        expect_zero_drops(fails, "prefill_flood", &out.records);
+        let docs = out.records.iter().filter(|r| r.user.starts_with("doc")).count();
+        let chats = out.records.iter().filter(|r| r.user.starts_with("chat")).count();
+        expect(fails, docs > 0 && chats > 0, || {
+            format!("prefill_flood: degenerate mix ({docs} docs, {chats} chats)")
+        });
+        let p = p99(&latencies_ms(&out.records, "chat"));
+        expect(fails, p < 10_000.0, || {
+            format!("prefill_flood: chat p99 {p:.0} ms — the doc flood starved interactive traffic")
+        });
+    }
+
+    // -- failure_drill ------------------------------------------------------
+    //
+    // The coordinated drill: a wave of traffic builds scavenger capacity,
+    // then a node dies in the lull and a priority-10 preemption storm
+    // lands mid-second-wave, preempting the scavenger tier while the
+    // replacement replica is still loading. Shape: graceful drain +
+    // gateway retry keep it at zero drops, and both fault lines fold into
+    // the canonical trace.
+
+    fn run_failure_drill(&self) -> ScenarioRun {
+        let mut rng = self.rng(5);
+        let users = if self.smoke { 10 } else { 24 };
+        let rate = if self.smoke { 3.0 } else { 4.0 };
+        // Wave 1: [40 s, 80 s) builds demand (and scavengers); the lull
+        // [80 s, 130 s) lets in-flight work drain before the node dies.
+        let wave1 = Trace::poisson(
+            rate, 40_000_000, 80_000_000, users, "fd", MODEL, PromptClass::Chat, 16, &mut rng,
+        );
+        // Wave 2: [130 s, 170 s) rides the replacement replica while the
+        // storm (135 s) is preempting scavengers mid-burst.
+        let wave2 = Trace::poisson(
+            rate, 130_000_000, 170_000_000, users, "fd", MODEL, PromptClass::Chat, 16, &mut rng,
+        );
+        let trace = Trace::merge(vec![wave1, wave2]);
+        let plan = FaultPlan::new()
+            .at(95_000_000, FaultEvent::NodeFail { node: "ggpu01".into() })
+            .at(
+                135_000_000,
+                FaultEvent::PreemptionStorm {
+                    jobs: 8,
+                    gpus_per_job: 4,
+                    walltime: Duration::from_secs(60),
+                },
+            )
+            .at(200_000_000, FaultEvent::NodeRestore { node: "ggpu01".into() });
+        // target_concurrency 0.4: the waves' ~1 in-flight request demands
+        // ceil(1/0.4) = 3 replicas — two guaranteed plus one scavenger for
+        // the storm to preempt.
+        let spec = ServiceSpec {
+            min_instances: 2,
+            max_instances: 2,
+            max_scavengers: 2,
+            target_concurrency: 0.4,
+            ..ServiceSpec::sim(MODEL, 1.0)
+        };
+        self.execute(spec, Duration::from_secs(120), plan, &trace, TraceReplay::new(0))
+    }
+
+    fn check_failure_drill(&self, out: &ScenarioRun, fails: &mut Vec<String>) {
+        expect_zero_drops(fails, "failure_drill", &out.records);
+        expect(fails, out.trace.contains("fault") && out.trace.contains("node_fail"), || {
+            "failure_drill: node_fail missing from the canonical trace".into()
+        });
+        expect(fails, out.trace.contains("preemption_storm jobs=8"), || {
+            "failure_drill: preemption storm missing from the canonical trace".into()
+        });
+        // Wave 2 actually completed (the fleet recovered).
+        let wave2_done = out
+            .records
+            .iter()
+            .filter(|r| finished_ok(r) && r.submit_us >= 130_000_000)
+            .count();
+        expect(fails, wave2_done > 0, || {
+            "failure_drill: nothing completed after the node loss".into()
+        });
+    }
+
+    // -- shared execution ---------------------------------------------------
+
+    /// Build the stack, replay the trace, run to quiescence.
+    fn execute(
+        &self,
+        spec: ServiceSpec,
+        queue_timeout: Duration,
+        faults: FaultPlan,
+        trace: &Trace,
+        replay: TraceReplay,
+    ) -> ScenarioRun {
+        assert!(!trace.is_empty(), "scenario generated an empty trace");
+        let stack = StackBuilder::new()
+            .with_seed(self.seed)
+            .with_services(vec![spec])
+            .with_queue_timeout(queue_timeout)
+            .with_faults(faults)
+            .build_sim();
+        replay.submit(&stack, trace);
+        assert!(
+            stack.run_until_settled(Duration::from_secs(3600)),
+            "scenario never settled: {} requests still open",
+            stack.open_requests()
+        );
+        ScenarioRun { trace: stack.trace(), records: stack.records() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_registry_is_the_five_named_drills() {
+        assert_eq!(SCENARIO_NAMES.len(), 5);
+        let unique: std::collections::BTreeSet<_> = SCENARIO_NAMES.iter().collect();
+        assert_eq!(unique.len(), 5, "scenario names must be unique JSON keys");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown scenario")]
+    fn unknown_scenario_names_panic() {
+        ScenarioMatrix::new(7, true).run_once("no_such_drill");
+    }
+
+    #[test]
+    fn tiered_scenario_replays_and_holds_its_deadline_shape() {
+        // One full in-tree scenario execution (the cheapest drill) so the
+        // matrix is exercised by `cargo test` and not only by the bench.
+        let out = ScenarioMatrix::new(7, true).run("tiered_deadlines");
+        assert!(out.passed, "failures: {:?}", out.failures);
+        assert!(out.requests > 0 && out.completed == out.requests);
+        assert!(out.rps > 0.0);
+    }
+}

@@ -1,0 +1,701 @@
+//! Trace-driven workload replay (DESIGN.md §Workloads).
+//!
+//! The synthetic generators in [`super`] (Poisson, diurnal thinning,
+//! multi-turn chat) answer "does the stack survive a *shape* of load";
+//! this module answers "does it survive *this recorded morning*". It has
+//! three parts, mirroring dslab's `cloud-plugin-traces` /
+//! `faas-synthetic-trace` split:
+//!
+//! - a tiny line-oriented **arrival-trace format** ([`Trace::parse`] /
+//!   [`Trace::serialize`]) — timestamp, user/session, model, prompt
+//!   class, output length — with a bundled skeleton recorded-trace file
+//!   ([`Trace::bundled_university_morning`]);
+//! - a **synthetic scaler** ([`Trace::scaled`]): deterministic,
+//!   seed-jittered user multiplication that grows a real trace skeleton
+//!   to an arbitrary population without losing its burst structure, plus
+//!   Poisson/diurnal segment builders for scenarios no recording covers;
+//! - the **replay driver** ([`TraceReplay`]): feeds a trace into
+//!   [`SimStack`] through the same event-driven gateway arrival path as
+//!   every other virtual-time workload, so a replayed trace is exactly as
+//!   seed-deterministic as a generated one.
+//!
+//! Format (one event per line; `#` comments and blank lines ignored):
+//!
+//! ```text
+//! # at_us user[/session] model class out_tokens
+//! 12500000 u42/s42 intel-neural-7b chat 32
+//! 13000000 crawler-3 mixtral-8x7b longdoc 64
+//! ```
+//!
+//! Timestamps are non-decreasing virtual microseconds from trace start.
+//! [`Trace::serialize`] emits the canonical form; parse→serialize
+//! round-trips canonical traces bit-exactly, and malformed input is
+//! rejected with a 1-based line number (`tests` + `workload` property
+//! tests pin both).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::stack::{SimRequest, SimStack};
+use crate::util::rng::Rng;
+use crate::workload::DiurnalArrivals;
+
+/// What kind of prompt an arrival carries. The class picks the prompt
+/// *shape* (the trace records only the class, never the text): `chat` is a
+/// short interactive turn under a shared assistant preamble, `longdoc` is
+/// a prefill-heavy document summarization, `batch` is an offline
+/// batch-inference item with a long completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PromptClass {
+    Chat,
+    LongDoc,
+    Batch,
+}
+
+impl PromptClass {
+    pub const ALL: [PromptClass; 3] = [PromptClass::Chat, PromptClass::LongDoc, PromptClass::Batch];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PromptClass::Chat => "chat",
+            PromptClass::LongDoc => "longdoc",
+            PromptClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PromptClass> {
+        match s {
+            "chat" => Some(PromptClass::Chat),
+            "longdoc" => Some(PromptClass::LongDoc),
+            "batch" => Some(PromptClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Prompt length in characters (≈ tokens under the byte tokenizer):
+    /// chat is a handful of KV pages, longdoc is a prefill-heavy page run,
+    /// batch sits between. Sized against the sim engines' paged-KV pool
+    /// (`16·batch + 1` pages of 16 tokens): even a worst-case co-resident
+    /// mix of classes plus their completions stays inside the pool, so a
+    /// well-formed trace can never be killed `kv_exhausted` mid-decode.
+    pub fn prompt_chars(&self) -> usize {
+        match self {
+            PromptClass::Chat => 96,
+            PromptClass::LongDoc => 512,
+            PromptClass::Batch => 224,
+        }
+    }
+
+    /// Deterministic prompt text for one arrival. Every class shares a
+    /// per-class preamble (cross-user prefix-cache reuse, like a system
+    /// prompt), then diverges per `(user, tag)` so only the preamble —
+    /// never the payload — can hit another user's cache.
+    pub fn prompt(&self, user: &str, tag: u64) -> String {
+        let (preamble, stamp) = match self {
+            PromptClass::Chat => (
+                "you are the kisski cluster assistant; answer tersely. ",
+                format!("{user} q{tag}: what is the state of my slurm jobs and the gpu queue "),
+            ),
+            PromptClass::LongDoc => (
+                "summarize the following incident report for the operations log. ",
+                format!("{user} doc{tag}: at the indicated time the scheduler observed \
+                         elevated queue depth across the gpu partition and began draining "),
+            ),
+            PromptClass::Batch => (
+                "offline batch inference; no interactivity required. ",
+                format!("{user} item{tag}: classify the following job script excerpt "),
+            ),
+        };
+        let target = self.prompt_chars();
+        let mut s = String::with_capacity(target + stamp.len());
+        s.push_str(preamble);
+        while s.len() < target {
+            s.push_str(&stamp);
+        }
+        s.truncate(target.max(preamble.len()));
+        s
+    }
+}
+
+impl fmt::Display for PromptClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One recorded arrival.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Virtual microseconds from trace start (non-decreasing).
+    pub at_us: u64,
+    pub user: String,
+    /// Conversation id for session-affine routing (`user/session` in the
+    /// file; `None` = the bare-user form).
+    pub session: Option<String>,
+    pub model: String,
+    pub class: PromptClass,
+    /// Requested completion length in tokens (`max_tokens` on replay).
+    pub out_tokens: usize,
+}
+
+impl TraceEvent {
+    /// Canonical one-line form (the serialize/parse currency).
+    pub fn to_line(&self) -> String {
+        let who = match &self.session {
+            Some(s) => format!("{}/{}", self.user, s),
+            None => self.user.clone(),
+        };
+        format!("{} {} {} {} {}", self.at_us, who, self.model, self.class, self.out_tokens)
+    }
+}
+
+/// Parse failure, pointing at the offending line (1-based).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TraceParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "trace line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TraceParseError {}
+
+/// An ordered arrival trace: the unit the replay driver consumes and the
+/// scenario matrix composes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+/// Identifier charset for users/sessions/models in the trace file: one
+/// whitespace-free token, `/` reserved as the user/session separator.
+fn valid_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | '~'))
+}
+
+impl Trace {
+    pub fn new(events: Vec<TraceEvent>) -> Trace {
+        Trace { events }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Last arrival time (0 for an empty trace).
+    pub fn horizon_us(&self) -> u64 {
+        self.events.last().map(|e| e.at_us).unwrap_or(0)
+    }
+
+    /// Parse the line format. Comments (`#`) and blank lines are skipped;
+    /// anything else must be a well-formed event line, or the whole parse
+    /// fails with the 1-based line number.
+    pub fn parse(text: &str) -> Result<Trace, TraceParseError> {
+        let mut events = Vec::new();
+        let mut prev_us = 0u64;
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let err = |msg: String| TraceParseError { line, msg };
+            let trimmed = raw.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = trimmed.split_whitespace().collect();
+            if fields.len() != 5 {
+                return Err(err(format!(
+                    "expected 5 fields (at_us user[/session] model class out_tokens), got {}",
+                    fields.len()
+                )));
+            }
+            let at_us: u64 = fields[0]
+                .parse()
+                .map_err(|_| err(format!("bad timestamp {:?}", fields[0])))?;
+            if at_us < prev_us {
+                return Err(err(format!(
+                    "timestamps must be non-decreasing ({at_us} after {prev_us})"
+                )));
+            }
+            let (user, session) = match fields[1].split_once('/') {
+                Some((u, s)) => (u, Some(s)),
+                None => (fields[1], None),
+            };
+            if !valid_ident(user) {
+                return Err(err(format!("bad user {user:?}")));
+            }
+            if let Some(s) = session {
+                if !valid_ident(s) {
+                    return Err(err(format!("bad session {s:?}")));
+                }
+            }
+            if !valid_ident(fields[2]) {
+                return Err(err(format!("bad model {:?}", fields[2])));
+            }
+            let class = PromptClass::parse(fields[3])
+                .ok_or_else(|| err(format!("unknown prompt class {:?}", fields[3])))?;
+            let out_tokens: usize = fields[4]
+                .parse()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| err(format!("bad out_tokens {:?}", fields[4])))?;
+            prev_us = at_us;
+            events.push(TraceEvent {
+                at_us,
+                user: user.to_string(),
+                session: session.map(str::to_string),
+                model: fields[2].to_string(),
+                class,
+                out_tokens,
+            });
+        }
+        Ok(Trace { events })
+    }
+
+    /// Canonical text form: `parse(serialize(t)) == t` and
+    /// `serialize(parse(s)) == s` for canonical `s`, bit-exactly.
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The bundled recorded-trace skeleton: a quarter hour of university
+    /// morning traffic (ramping chat load, a longdoc tail, sporadic batch
+    /// items across three model groups). Scenarios scale it up with
+    /// [`Trace::scaled`] instead of shipping megabytes of recording.
+    pub fn bundled_university_morning() -> Trace {
+        Trace::parse(include_str!("traces/university_morning.trace"))
+            .expect("bundled trace must parse")
+    }
+
+    /// Deterministic synthetic segment: homogeneous Poisson arrivals at
+    /// `rate_rps` over `[start_us, end_us)`, drawn from `rng`. Users are
+    /// `<prefix><i>` over a pool of `users`; chat arrivals carry their
+    /// user as the session (one conversation per user), other classes
+    /// carry none.
+    #[allow(clippy::too_many_arguments)]
+    pub fn poisson(
+        rate_rps: f64,
+        start_us: u64,
+        end_us: u64,
+        users: usize,
+        user_prefix: &str,
+        model: &str,
+        class: PromptClass,
+        out_tokens: usize,
+        rng: &mut Rng,
+    ) -> Trace {
+        let mut events = Vec::new();
+        if rate_rps <= 0.0 || users == 0 || end_us <= start_us {
+            return Trace { events };
+        }
+        let mut t = start_us as f64;
+        loop {
+            t += rng.exp(rate_rps) * 1e6;
+            if t >= end_us as f64 {
+                break;
+            }
+            let user = format!("{user_prefix}{}", rng.below(users as u64));
+            events.push(TraceEvent {
+                at_us: t as u64,
+                user: user.clone(),
+                session: (class == PromptClass::Chat).then_some(user),
+                model: model.to_string(),
+                class,
+                out_tokens,
+            });
+        }
+        Trace { events }
+    }
+
+    /// Deterministic synthetic segment from the diurnal thinning
+    /// generator: [`DiurnalArrivals::generate`] mapped onto trace events.
+    pub fn from_diurnal(
+        wl: &DiurnalArrivals,
+        horizon: std::time::Duration,
+        user_prefix: &str,
+        model: &str,
+        class: PromptClass,
+        out_tokens: usize,
+        rng: &mut Rng,
+    ) -> Trace {
+        let events = wl
+            .generate(horizon, rng)
+            .into_iter()
+            .map(|(at_us, u)| {
+                let user = format!("{user_prefix}{u}");
+                TraceEvent {
+                    at_us,
+                    user: user.clone(),
+                    session: (class == PromptClass::Chat).then_some(user),
+                    model: model.to_string(),
+                    class,
+                    out_tokens,
+                }
+            })
+            .collect();
+        Trace { events }
+    }
+
+    /// Merge segments into one ordered trace. The sort is stable, so
+    /// same-microsecond events keep their segment order — merging the
+    /// same segments always yields the same trace.
+    pub fn merge(segments: Vec<Trace>) -> Trace {
+        let mut events: Vec<TraceEvent> =
+            segments.into_iter().flat_map(|t| t.events).collect();
+        events.sort_by_key(|e| e.at_us);
+        Trace { events }
+    }
+
+    /// Scale the user population `mult`× (the dslab
+    /// `faas-synthetic-trace` move): every recorded arrival is replayed
+    /// by `mult` users — clone 0 keeps the recorded identity, clones
+    /// `k ≥ 1` become `user~k` with their arrival jittered by a seeded
+    /// uniform draw in `[0, jitter_us]`, so the copies spread instead of
+    /// stacking on one microsecond while the recording's burst structure
+    /// survives. Deterministic: same trace + `mult` + `seed` ⇒ the same
+    /// scaled trace, byte-for-byte.
+    pub fn scaled(&self, mult: u32, jitter_us: u64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::with_capacity(self.events.len() * mult.max(1) as usize);
+        for e in &self.events {
+            for k in 0..mult.max(1) {
+                let mut clone = e.clone();
+                if k > 0 {
+                    clone.user = format!("{}~{k}", e.user);
+                    clone.session = e.session.as_ref().map(|s| format!("{s}~{k}"));
+                    clone.at_us = e.at_us.saturating_add(rng.below(jitter_us + 1));
+                }
+                events.push(clone);
+            }
+        }
+        events.sort_by_key(|e| e.at_us);
+        Trace { events }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay driver
+// ---------------------------------------------------------------------------
+
+/// Feeds a [`Trace`] into a [`SimStack`] through `submit_chat_at` — the
+/// same event-driven arrival path every generated workload uses, so a
+/// replayed recording inherits the full determinism contract (same seed +
+/// same trace ⇒ byte-identical `SimRecord` traces).
+#[derive(Debug, Clone, Default)]
+pub struct TraceReplay {
+    /// Added to every event's `at_us` (recordings start at 0; scenarios
+    /// shift them past the cold start).
+    pub offset_us: u64,
+    /// Per-class end-to-end deadline budgets attached on submit (the
+    /// trace records demand, not SLOs — tiers are a replay policy).
+    pub class_deadline_ms: BTreeMap<PromptClass, u64>,
+}
+
+impl TraceReplay {
+    pub fn new(offset_us: u64) -> TraceReplay {
+        TraceReplay { offset_us, class_deadline_ms: BTreeMap::new() }
+    }
+
+    /// Attach a deadline budget to every arrival of `class`.
+    pub fn with_deadline(mut self, class: PromptClass, deadline_ms: u64) -> TraceReplay {
+        self.class_deadline_ms.insert(class, deadline_ms);
+        self
+    }
+
+    /// Materialize one event as the request the gateway will see. `tag`
+    /// disambiguates prompt payloads between a user's arrivals (the trace
+    /// index on replay).
+    pub fn request(&self, e: &TraceEvent, tag: u64) -> SimRequest {
+        SimRequest {
+            user: e.user.clone(),
+            model: e.model.clone(),
+            session: e.session.clone(),
+            prompt: e.class.prompt(&e.user, tag),
+            max_tokens: e.out_tokens,
+            deadline_ms: self.class_deadline_ms.get(&e.class).copied(),
+        }
+    }
+
+    /// Schedule every event; returns the submitted request ids, in trace
+    /// order.
+    pub fn submit(&self, stack: &SimStack, trace: &Trace) -> Vec<u64> {
+        trace
+            .events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                stack.submit_chat_at(self.offset_us + e.at_us, self.request(e, i as u64))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ev(at_us: u64, user: &str, session: Option<&str>) -> TraceEvent {
+        TraceEvent {
+            at_us,
+            user: user.into(),
+            session: session.map(Into::into),
+            model: "intel-neural-7b".into(),
+            class: PromptClass::Chat,
+            out_tokens: 16,
+        }
+    }
+
+    #[test]
+    fn parse_serialize_round_trips_bit_exactly() {
+        let text = "0 u0/s0 intel-neural-7b chat 16\n\
+                    1500000 crawler mixtral-8x7b longdoc 64\n\
+                    1500000 u1 intel-neural-7b batch 128\n";
+        let t = Trace::parse(text).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.serialize(), text, "canonical text survives a round trip");
+        assert_eq!(Trace::parse(&t.serialize()).unwrap(), t);
+        assert_eq!(t.events[0].session.as_deref(), Some("s0"));
+        assert_eq!(t.events[1].session, None);
+        assert_eq!(t.events[1].class, PromptClass::LongDoc);
+        assert_eq!(t.horizon_us(), 1_500_000);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank_lines() {
+        let t = Trace::parse("# header\n\n  \n10 u0 m chat 4\n# tail\n").unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.events[0].at_us, 10);
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_line_numbers() {
+        let cases: &[(&str, usize, &str)] = &[
+            ("10 u0 m chat\n", 1, "expected 5 fields"),
+            ("# ok\nnope u0 m chat 4\n", 2, "bad timestamp"),
+            ("10 u0 m chat 4\n5 u1 m chat 4\n", 2, "non-decreasing"),
+            ("10 u/0/x m chat 4\n", 1, "bad session"),
+            ("10 u0 m telepathy 4\n", 1, "unknown prompt class"),
+            ("10 u0 m chat 0\n", 1, "bad out_tokens"),
+            ("10 u0 m chat -3\n", 1, "bad out_tokens"),
+            ("# c\n\n10 u0 m chat 4\n11 u!me m chat 4\n", 4, "bad user"),
+        ];
+        for (text, line, needle) in cases {
+            let err = Trace::parse(text).expect_err(text);
+            assert_eq!(err.line, *line, "{text:?} -> {err}");
+            assert!(err.to_string().contains(needle), "{text:?} -> {err}");
+            assert!(err.to_string().contains(&format!("line {line}")), "{err}");
+        }
+    }
+
+    #[test]
+    fn bundled_trace_parses_and_round_trips() {
+        let t = Trace::bundled_university_morning();
+        assert!(t.len() >= 100, "skeleton should carry a real morning: {}", t.len());
+        assert_eq!(Trace::parse(&t.serialize()).unwrap(), t);
+        // The recording exercises every class and more than one model.
+        for class in PromptClass::ALL {
+            assert!(t.events.iter().any(|e| e.class == class), "no {class} events");
+        }
+        let models: std::collections::BTreeSet<_> =
+            t.events.iter().map(|e| e.model.as_str()).collect();
+        assert!(models.len() >= 2, "single-model recording: {models:?}");
+        // Non-decreasing by construction (parse would have failed).
+        assert!(t.events.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+    }
+
+    #[test]
+    fn scaled_multiplies_users_deterministically() {
+        let base = Trace::new(vec![ev(0, "u0", Some("s0")), ev(1_000_000, "u1", None)]);
+        let a = base.scaled(3, 500_000, 9);
+        let b = base.scaled(3, 500_000, 9);
+        assert_eq!(a, b, "same seed scales identically");
+        assert_ne!(a, base.scaled(3, 500_000, 10), "different seeds jitter differently");
+        assert_eq!(a.len(), 6);
+        // Clone 0 keeps the recorded identity and timestamp.
+        assert!(a.events.iter().any(|e| e.user == "u0" && e.at_us == 0));
+        assert!(a.events.iter().any(|e| e.user == "u0~1"));
+        assert!(a.events.iter().any(|e| e.user == "u0~2"));
+        // Sessions scale with their users.
+        let clone = a.events.iter().find(|e| e.user == "u0~1").unwrap();
+        assert_eq!(clone.session.as_deref(), Some("s0~1"));
+        // Jitter never reorders the trace out of canonical form.
+        assert!(a.events.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        assert_eq!(Trace::parse(&a.serialize()).unwrap(), a);
+        // mult == 1 is the identity.
+        assert_eq!(base.scaled(1, 500_000, 9), base);
+    }
+
+    #[test]
+    fn poisson_and_diurnal_segments_merge_ordered() {
+        let mut rng = Rng::new(7);
+        let chat = Trace::poisson(
+            5.0,
+            0,
+            10_000_000,
+            8,
+            "c",
+            "intel-neural-7b",
+            PromptClass::Chat,
+            16,
+            &mut rng,
+        );
+        assert!(!chat.is_empty());
+        assert!(chat.events.iter().all(|e| e.at_us < 10_000_000));
+        assert!(chat.events.iter().all(|e| e.session.as_deref() == Some(e.user.as_str())));
+        let docs = Trace::poisson(
+            1.0,
+            2_000_000,
+            8_000_000,
+            2,
+            "d",
+            "intel-neural-7b",
+            PromptClass::LongDoc,
+            32,
+            &mut rng,
+        );
+        assert!(docs.events.iter().all(|e| e.session.is_none()));
+        let wl = DiurnalArrivals {
+            users: 5,
+            mean_rps: 2.0,
+            amplitude: 0.5,
+            period: Duration::from_secs(10),
+        };
+        let diurnal = Trace::from_diurnal(
+            &wl,
+            Duration::from_secs(10),
+            "u",
+            "mixtral-8x7b",
+            PromptClass::Chat,
+            8,
+            &mut rng,
+        );
+        let merged = Trace::merge(vec![chat.clone(), docs.clone(), diurnal.clone()]);
+        assert_eq!(merged.len(), chat.len() + docs.len() + diurnal.len());
+        assert!(merged.events.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        // Canonical after merge: serialize→parse round-trips.
+        assert_eq!(Trace::parse(&merged.serialize()).unwrap(), merged);
+    }
+
+    #[test]
+    fn prompts_are_class_shaped_and_deterministic() {
+        for class in PromptClass::ALL {
+            let p = class.prompt("u0", 3);
+            assert_eq!(p.len(), class.prompt_chars());
+            assert_eq!(p, class.prompt("u0", 3), "same (user, tag) => same prompt");
+            assert_ne!(p, class.prompt("u1", 3), "users diverge past the preamble");
+            assert_ne!(p, class.prompt("u0", 4), "tags diverge past the preamble");
+            // Shared preamble: the first KV block can cross-user hit.
+            let shared = p
+                .chars()
+                .zip(class.prompt("u1", 9).chars())
+                .take_while(|(a, b)| a == b)
+                .count();
+            assert!(shared >= 16, "{class}: only {shared} shared preamble chars");
+        }
+        assert!(PromptClass::LongDoc.prompt_chars() >= 5 * PromptClass::Chat.prompt_chars());
+    }
+
+    mod props {
+        use super::*;
+        use crate::prop_assert;
+        use crate::util::prop::run_prop;
+        use crate::util::rng::Rng;
+
+        const IDENT: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789._~-";
+
+        fn ident(rng: &mut Rng) -> String {
+            (0..rng.range(1, 12)).map(|_| *rng.choose(IDENT).unwrap() as char).collect()
+        }
+
+        /// A random canonical trace: sorted timestamps, valid idents,
+        /// every class, optional sessions.
+        fn arbitrary(rng: &mut Rng) -> Trace {
+            let mut at = 0u64;
+            let events = (0..rng.range(1, 40))
+                .map(|_| {
+                    at += rng.below(2_000_000);
+                    TraceEvent {
+                        at_us: at,
+                        user: ident(rng),
+                        session: if rng.chance(0.4) { Some(ident(rng)) } else { None },
+                        model: ident(rng),
+                        class: *rng.choose(&PromptClass::ALL).unwrap(),
+                        out_tokens: rng.range(1, 256) as usize,
+                    }
+                })
+                .collect();
+            Trace::new(events)
+        }
+
+        #[test]
+        fn random_canonical_traces_round_trip_bit_exactly() {
+            run_prop("trace_round_trip", 0x7A, 60, |rng| {
+                let t = arbitrary(rng);
+                let text = t.serialize();
+                let back = Trace::parse(&text)
+                    .map_err(|e| format!("canonical text failed to parse: {e}"))?;
+                prop_assert!(back == t, "parse(serialize(t)) != t");
+                prop_assert!(
+                    back.serialize() == text,
+                    "serialize is not a fixed point of parse . serialize"
+                );
+                Ok(())
+            });
+        }
+
+        #[test]
+        fn corrupting_any_line_reports_that_line_number() {
+            run_prop("trace_error_line_numbers", 0x7B, 60, |rng| {
+                let t = arbitrary(rng);
+                let mut lines: Vec<String> =
+                    t.serialize().lines().map(str::to_string).collect();
+                let j = rng.below(lines.len() as u64) as usize;
+                // Two corruptions no valid line can contain: a non-numeric
+                // timestamp, or too few fields.
+                lines[j] = if rng.chance(0.5) {
+                    format!("x {}", &lines[j][lines[j].find(' ').unwrap() + 1..])
+                } else {
+                    "only three fields".into()
+                };
+                let err = Trace::parse(&(lines.join("\n") + "\n"))
+                    .err()
+                    .ok_or_else(|| format!("corrupted line {j} still parsed"))?;
+                prop_assert!(
+                    err.line == j + 1,
+                    "corrupted line {} but error names line {}: {err}",
+                    j + 1,
+                    err.line
+                );
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn replay_requests_carry_trace_fields_and_class_deadlines() {
+        let replay = TraceReplay::new(1_000_000).with_deadline(PromptClass::Chat, 15_000);
+        let chat = replay.request(&ev(5, "u7", Some("s7")), 2);
+        assert_eq!(chat.user, "u7");
+        assert_eq!(chat.session.as_deref(), Some("s7"));
+        assert_eq!(chat.model, "intel-neural-7b");
+        assert_eq!(chat.max_tokens, 16);
+        assert_eq!(chat.deadline_ms, Some(15_000));
+        assert_eq!(chat.prompt, PromptClass::Chat.prompt("u7", 2));
+        let mut doc_ev = ev(5, "u7", None);
+        doc_ev.class = PromptClass::LongDoc;
+        assert_eq!(replay.request(&doc_ev, 0).deadline_ms, None, "only chat has a deadline");
+    }
+}

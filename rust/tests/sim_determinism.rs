@@ -12,6 +12,7 @@ use chat_hpc::scheduler::ServiceSpec;
 use chat_hpc::stack::{SimRequest, SimStack, SimStackConfig};
 use chat_hpc::util::faults::{FaultEvent, FaultPlan};
 use chat_hpc::util::rng::Rng;
+use chat_hpc::workload::scenarios::ScenarioMatrix;
 use chat_hpc::workload::DiurnalArrivals;
 
 /// A deliberately messy scenario: two models with different cold starts,
@@ -200,6 +201,46 @@ fn fault_plan_laden_scenario_replays_byte_identical_traces() {
     assert!(
         a.contains("reason=stop") || a.contains("reason=length"),
         "some requests still complete through the chaos:\n{a}"
+    );
+}
+
+/// The scenario matrix rides the same contract: a full flash-crowd drill —
+/// scale-from-zero cold start, 10x burst, autoscale to extra replicas —
+/// replays byte-identically, weight-load lines included, and a different
+/// seed lands different arrivals.
+#[test]
+fn flash_crowd_scenario_replays_byte_identical_traces() {
+    let matrix = ScenarioMatrix::new(42, true);
+    let a = matrix.run_once("flash_crowd");
+    let b = matrix.run_once("flash_crowd");
+    assert_eq!(a.trace, b.trace, "flash crowd must replay byte-identically");
+    assert!(
+        a.trace.lines().filter(|l| l.starts_with("load job=")).count() >= 2,
+        "burst never scaled past the first replica:\n{}",
+        a.trace
+    );
+    assert!(
+        a.records.iter().any(|r| r.finish_reason == "stop" || r.finish_reason == "length"),
+        "flash crowd completed nothing"
+    );
+    let c = ScenarioMatrix::new(43, true).run_once("flash_crowd");
+    assert_ne!(a.trace, c.trace, "distinct seeds must not collide");
+}
+
+/// Fault lines are trace content too: the coordinated failure drill (node
+/// loss + preemption storm) replays byte-identically with its scripted
+/// faults folded into the trace at the same virtual instants.
+#[test]
+fn failure_drill_scenario_replays_fault_lines_byte_identically() {
+    let matrix = ScenarioMatrix::new(7, true);
+    let a = matrix.run_once("failure_drill");
+    let b = matrix.run_once("failure_drill");
+    assert_eq!(a.trace, b.trace, "failure drill must replay byte-identically");
+    assert!(a.trace.contains("node_fail node=ggpu01"), "node loss missing:\n{}", a.trace);
+    assert!(
+        a.trace.contains("preemption_storm jobs=8"),
+        "storm missing:\n{}",
+        a.trace
     );
 }
 

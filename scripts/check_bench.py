@@ -1,13 +1,16 @@
 #!/usr/bin/env python3
 """Validate a BENCH_*.json paper-figure report.
 
-Usage: check_bench.py <file.json> <required-key> [<required-key> ...]
+Usage: check_bench.py [--passed] <file.json> <required-key> [<required-key> ...]
 
 Fails (exit 1) when the file is missing, unparseable, lacks a required
 sweep key, or a sweep lacks the four numeric fields of the BenchReport
-schema ({rps, p50_ms, p99_ms, ttft_ms}). CI runs this after the --smoke
-bench runs so a paper-figure reproduction that silently stops emitting
-results breaks the build instead of rotting.
+schema ({rps, p50_ms, p99_ms, ttft_ms}). With --passed, every required
+sweep must additionally carry `"passed": 1` — used by shape-checked
+reports (BENCH_chaos.json, BENCH_scenarios.json) where a sweep can emit
+metrics and still have failed its acceptance checks. CI runs this after
+the --smoke bench runs so a paper-figure reproduction that silently
+stops emitting results breaks the build instead of rotting.
 """
 
 import json
@@ -17,10 +20,16 @@ FIELDS = ("rps", "p50_ms", "p99_ms", "ttft_ms")
 
 
 def main() -> int:
-    if len(sys.argv) < 3:
-        print("usage: check_bench.py <file.json> <required-key>...", file=sys.stderr)
+    args = sys.argv[1:]
+    require_passed = "--passed" in args
+    args = [a for a in args if a != "--passed"]
+    if len(args) < 2:
+        print(
+            "usage: check_bench.py [--passed] <file.json> <required-key>...",
+            file=sys.stderr,
+        )
         return 2
-    path, keys = sys.argv[1], sys.argv[2:]
+    path, keys = args[0], args[1:]
     try:
         with open(path, encoding="utf-8") as fh:
             data = json.load(fh)
@@ -41,6 +50,12 @@ def main() -> int:
             if not isinstance(row.get(field), (int, float)):
                 print(f"FAIL {path}: {key}.{field} missing or non-numeric", file=sys.stderr)
                 bad = True
+        if require_passed and row.get("passed") != 1:
+            print(
+                f"FAIL {path}: {key}.passed != 1 (shape checks failed)",
+                file=sys.stderr,
+            )
+            bad = True
     if bad:
         return 1
     print(f"OK {path}: {len(keys)} required sweeps present")
